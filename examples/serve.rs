@@ -1,0 +1,82 @@
+//! Serving demo: start the coordinator over the AOT-compiled LM, drive
+//! it with a Poisson open-loop load, report latency percentiles and
+//! throughput — the serving-systems view of ButterflyMoE.
+//!
+//! Run: `cargo run --release --example serve -- [--config tiny]
+//!       [--rps 200] [--seconds 10] [--workers 2] [--max-batch 16]`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::cli::Args;
+use butterfly_moe::coordinator::{Coordinator, PjrtLmBackend};
+use butterfly_moe::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let config = args.flag_or("config", "tiny");
+    let rps: f64 = args.flag_parse("rps")?.unwrap_or(200.0);
+    let seconds: f64 = args.flag_parse("seconds")?.unwrap_or(10.0);
+    let workers: usize = args.flag_parse("workers")?.unwrap_or(2);
+    let max_batch: usize = args.flag_parse("max-batch")?.unwrap_or(16);
+    let max_wait_ms: u64 = args.flag_parse("max-wait-ms")?.unwrap_or(5);
+
+    println!("== starting coordinator (config={config}, {workers} workers, batch<= {max_batch}, wait<={max_wait_ms}ms) ==");
+    let (backend, _join) = PjrtLmBackend::start(Path::new("artifacts"), &config, None)?;
+    let vocab = 512; // tiny/small prompts sample below this
+    let coord = Coordinator::start(
+        Arc::new(backend),
+        max_batch,
+        Duration::from_millis(max_wait_ms),
+        workers,
+    );
+
+    // warmup: compile all buckets before measuring
+    for b in [1usize, 3, 9] {
+        let rxs: Vec<_> = (0..b).map(|_| coord.submit(vec![1, 2, 3])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    }
+
+    println!("== open-loop Poisson load: {rps} req/s for {seconds}s ==");
+    let mut rng = Rng::new(0x5E12E);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut next_arrival = 0.0f64;
+    let mut submitted = 0u64;
+    while t0.elapsed().as_secs_f64() < seconds {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= next_arrival {
+            let len = 4 + rng.below(12);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
+            pending.push(coord.submit(prompt));
+            submitted += 1;
+            next_arrival += rng.exponential(rps);
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    // drain
+    let mut latencies = Vec::with_capacity(pending.len());
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120))?;
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    use butterfly_moe::util::stats;
+    println!("\n== results ==");
+    println!("  submitted {submitted} requests in {wall:.1}s -> {:.0} req/s served", submitted as f64 / wall);
+    println!(
+        "  latency p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        1e3 * stats::percentile(&latencies, 50.0),
+        1e3 * stats::percentile(&latencies, 95.0),
+        1e3 * stats::percentile(&latencies, 99.0),
+        1e3 * latencies.iter().cloned().fold(0.0, f64::max),
+    );
+    println!("  coordinator: {}", coord.metrics.snapshot().summary());
+    coord.shutdown();
+    std::process::exit(0); // engine thread would otherwise hold the process
+}

@@ -1,0 +1,267 @@
+"""AOT compiler: lower every L2 graph to HLO text + export params/manifest.
+
+Interchange contract with the Rust runtime (rust/src/runtime):
+
+- ``artifacts/<name>.hlo.txt`` — HLO **text** (NOT ``.serialize()``: the
+  image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos; the
+  text parser reassigns ids.  See /opt/xla-example/README.md).
+- ``artifacts/manifest.json`` — for each artifact: input/output names,
+  shapes, dtypes in the exact flattened order the executable expects.
+- ``artifacts/<cfg>.params.bmoe`` — initial parameters in the BMOE binary
+  tensor container (see python/compile/bmoe_io.py and
+  rust/src/tensor/store.rs; both sides implement the same spec).
+
+Run via ``make artifacts``.  Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import bmoe_io
+from compile.configs import PRESETS, ModelConfig
+from compile.model import init_params
+from compile.train import (
+    init_opt_state,
+    make_eval,
+    make_lm_logits,
+    make_moe_layer_fwd,
+    make_train_step,
+)
+
+# Batch-size buckets for serving artifacts; the Rust dynamic batcher pads
+# each flush to the smallest bucket that fits (coordinator/batcher.rs).
+LM_BATCH_BUCKETS = (1, 4, 16)
+MOE_TOKEN_BUCKETS = (16, 64, 256)
+TRAIN_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_names(tree, prefix: str) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(prefix + ".".join(parts))
+    return names
+
+
+def _specs(tree, prefix: str):
+    flat, _ = jax.tree_util.tree_flatten(tree)
+    names = _flat_names(tree, prefix)
+    return [
+        {"name": n, "shape": list(l.shape), "dtype": str(l.dtype)}
+        for n, l in zip(names, flat)
+    ]
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "configs": {}, "artifacts": [], "params": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_config(self, cfg: ModelConfig):
+        self.manifest["configs"][cfg.name] = cfg.as_dict()
+
+    def export_params(self, cfg: ModelConfig, seed: int = 0):
+        params = init_params(cfg, seed)
+        flat, _ = jax.tree_util.tree_flatten(params)
+        names = _flat_names(params, "")
+        fname = f"{cfg.name}.params.bmoe"
+        bmoe_io.write_bmoe(
+            os.path.join(self.out_dir, fname),
+            [(n, jnp.asarray(l)) for n, l in zip(names, flat)],
+        )
+        self.manifest["params"][cfg.name] = {
+            "file": fname,
+            "seed": seed,
+            "names": names,
+            "tensors": _specs(params, ""),
+        }
+        return params
+
+    def lower(self, name: str, kind: str, cfg: ModelConfig, fn, args_tree, in_specs):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args_tree)
+        out_sh = jax.eval_shape(fn, *args_tree)
+        flat_out, _ = jax.tree_util.tree_flatten(out_sh)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "config": cfg.name,
+                "inputs": in_specs,
+                "outputs": [
+                    {"shape": list(l.shape), "dtype": str(l.dtype)} for l in flat_out
+                ],
+            }
+        )
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB hlo, {time.time()-t0:.1f}s")
+
+    def build_train_step(self, cfg: ModelConfig):
+        params = init_params(cfg, 0)
+        m, v = init_opt_state(params)
+        step = jnp.int32(0)
+        lr = jnp.float32(1e-3)
+        toks = jnp.zeros((TRAIN_BATCH, cfg.seq_len), jnp.int32)
+        args = (_abstract(params), _abstract(m), _abstract(v), step, lr, toks, toks)
+        in_specs = (
+            _specs(params, "params.")
+            + _specs(m, "m.")
+            + _specs(v, "v.")
+            + [
+                {"name": "step", "shape": [], "dtype": "int32"},
+                {"name": "lr", "shape": [], "dtype": "float32"},
+                {"name": "tokens", "shape": [TRAIN_BATCH, cfg.seq_len], "dtype": "int32"},
+                {"name": "targets", "shape": [TRAIN_BATCH, cfg.seq_len], "dtype": "int32"},
+            ]
+        )
+        self.lower(
+            f"{cfg.name}__train_step", "train_step", cfg, make_train_step(cfg), args, in_specs
+        )
+
+    def build_eval(self, cfg: ModelConfig, batch: int = TRAIN_BATCH):
+        params = _abstract(init_params(cfg, 0))
+        toks = jnp.zeros((batch, cfg.seq_len), jnp.int32)
+        in_specs = _specs(params, "params.") + [
+            {"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+            {"name": "targets", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+        ]
+        self.lower(f"{cfg.name}__eval", "eval", cfg, make_eval(cfg), (params, toks, toks), in_specs)
+
+    def build_lm_logits(self, cfg: ModelConfig, use_pallas: bool = False):
+        params = _abstract(init_params(cfg, 0))
+        for b in LM_BATCH_BUCKETS:
+            toks = jnp.zeros((b, cfg.seq_len), jnp.int32)
+            in_specs = _specs(params, "params.") + [
+                {"name": "tokens", "shape": [b, cfg.seq_len], "dtype": "int32"}
+            ]
+            self.lower(
+                f"{cfg.name}__lm_logits_b{b}",
+                "lm_logits",
+                cfg,
+                make_lm_logits(cfg, use_pallas),
+                (params, toks),
+                in_specs,
+            )
+
+    def build_moe_fwd(self, cfg: ModelConfig, use_pallas: bool = True):
+        from compile.model import init_ffn_params
+
+        ffn = _abstract(init_ffn_params(cfg, jax.random.PRNGKey(0)))
+        suffix = "" if use_pallas else "_jnp"
+        for t in MOE_TOKEN_BUCKETS:
+            x = jnp.zeros((t, cfg.d_model), jnp.float32)
+            in_specs = _specs(ffn, "ffn.") + [
+                {"name": "x", "shape": [t, cfg.d_model], "dtype": "float32"}
+            ]
+            self.lower(
+                f"{cfg.name}__moe_fwd{suffix}_t{t}",
+                "moe_fwd",
+                cfg,
+                make_moe_layer_fwd(cfg, use_pallas),
+                (ffn, x),
+                in_specs,
+            )
+            # export the ffn params for this layer too (parity tests)
+
+    def export_ffn_params(self, cfg: ModelConfig, seed: int = 0):
+        from compile.model import init_ffn_params
+
+        ffn = init_ffn_params(cfg, jax.random.PRNGKey(seed))
+        flat, _ = jax.tree_util.tree_flatten(ffn)
+        names = _flat_names(ffn, "ffn.")
+        fname = f"{cfg.name}.ffn.bmoe"
+        bmoe_io.write_bmoe(
+            os.path.join(self.out_dir, fname),
+            [(n, jnp.asarray(l)) for n, l in zip(names, flat)],
+        )
+        self.manifest["params"][cfg.name + ".ffn"] = {
+            "file": fname,
+            "seed": seed,
+            "names": names,
+            "tensors": _specs(ffn, "ffn."),
+        }
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--profile",
+        default="full",
+        choices=("ci", "full"),
+        help="ci: tiny-only artifacts for fast tests; full: everything",
+    )
+    args = ap.parse_args()
+    b = Builder(args.out)
+
+    tiny = PRESETS["tiny"]
+    for name in ("tiny", "tiny_static", "tiny_standard", "tiny_dense"):
+        cfg = PRESETS[name]
+        b.add_config(cfg)
+        b.export_params(cfg, seed=0)
+        b.build_train_step(cfg)
+    b.build_eval(tiny)
+    b.build_lm_logits(tiny)
+    b.build_moe_fwd(tiny, use_pallas=True)
+    b.export_ffn_params(tiny)
+
+    if args.profile == "full":
+        small = PRESETS["small"]
+        b.add_config(small)
+        b.export_params(small, seed=0)
+        b.build_train_step(small)
+        b.build_eval(small)
+        b.build_lm_logits(small)
+
+        paper = PRESETS["paper_layer"]
+        b.add_config(paper)
+        b.export_ffn_params(paper)
+        b.build_moe_fwd(paper, use_pallas=True)
+
+    b.finish()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""BMOE binary tensor container — python writer/reader.
+
+Spec (little-endian throughout; mirrored by rust/src/tensor/store.rs):
+
+    magic   : 6 bytes  b"BMOE1\\0"
+    count   : u32      number of tensors
+    per tensor:
+        name_len : u16
+        name     : name_len bytes (utf-8)
+        dtype    : u8   (0 = f32, 1 = i32, 2 = u8)
+        ndim     : u8
+        dims     : ndim x u32
+        data     : prod(dims) * itemsize bytes, row-major
+
+Used for initial params (aot.py), checkpoints (rust train driver), and
+test vectors.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"BMOE1\x00"
+DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def write_bmoe(path: str, tensors: list[tuple[str, "np.ndarray"]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            a = np.ascontiguousarray(arr)
+            if a.dtype == np.int64:
+                a = a.astype(np.int32)
+            if a.dtype not in DTYPE_CODES:
+                a = a.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_CODES[a.dtype], a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+
+
+def read_bmoe(path: str) -> list[tuple[str, "np.ndarray"]]:
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(6) == MAGIC, f"{path}: bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(DTYPES[code])
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+            out.append((name, data))
+    return out

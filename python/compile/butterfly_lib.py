@@ -1,0 +1,93 @@
+"""Pure-jnp butterfly transform library (L2 building block).
+
+A butterfly transform over ``d = 2^m`` dimensions is a product of ``m``
+block-diagonal Givens-rotation stages.  At stage ``l`` (stride
+``s = 2^l``) coordinates ``i`` and ``i + s`` are paired whenever bit ``l``
+of ``i`` is zero, and each pair is rotated by a learned angle:
+
+    [a']   [ cos t  -sin t ] [a]
+    [b'] = [ sin t   cos t ] [b]
+
+This stride-pairing formulation is the standard (FFT-style) equivalent of
+the paper's "perfect shuffle + block-diagonal" product (eq. 3): the
+shuffle only relabels which contiguous pair a coordinate lands in.
+
+Angle layout — the single source of truth shared with the Rust engine
+(rust/src/butterfly/) and the Pallas kernel (kernels/butterfly.py):
+
+    angles: float32[depth, d/2]
+    stage l, pair j  pairs coordinates (lo, hi) with
+        s   = 2^l
+        blk = j // s          # which 2s-sized block
+        off = j % s           # offset inside the block
+        lo  = blk * 2s + off
+        hi  = lo + s
+
+``depth <= m`` truncated stacks are allowed (Table 2 ablation); a
+truncated stack is still orthogonal, just less expressive.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def num_stages(d: int) -> int:
+    m = int(math.log2(d))
+    assert 1 << m == d, f"d={d} is not a power of two"
+    return m
+
+
+def stage_apply(x: jnp.ndarray, ang: jnp.ndarray, stride: int, transpose: bool) -> jnp.ndarray:
+    """Apply one Givens stage of stride ``stride`` to ``x[..., d]``.
+
+    ``ang`` has shape ``(d/2,)`` laid out as documented above.  With
+    ``transpose=True`` the inverse (= transpose) rotation is applied.
+    """
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    nblk = d // (2 * stride)
+    # (..., nblk, 2, stride): axis -2 separates the (lo, hi) partners.
+    xr = x.reshape(*lead, nblk, 2, stride)
+    a = xr[..., 0, :]
+    b = xr[..., 1, :]
+    angr = ang.reshape(nblk, stride)
+    c = jnp.cos(angr)
+    s = jnp.sin(angr)
+    if transpose:
+        s = -s
+    na = c * a - s * b
+    nb = s * a + c * b
+    out = jnp.stack([na, nb], axis=-2)
+    return out.reshape(*lead, d)
+
+
+def butterfly_apply(x: jnp.ndarray, angles: jnp.ndarray, transpose: bool = False) -> jnp.ndarray:
+    """Apply the butterfly stack ``B`` (or ``B^T``) to ``x[..., d]``.
+
+    ``angles``: float32[depth, d/2].  Forward order is stage 0 (stride 1)
+    applied first, i.e. ``B = D_{m-1} ... D_1 D_0`` acting on column
+    vectors; the transpose applies stages in reverse with negated angles.
+    """
+    depth = angles.shape[0]
+    order = range(depth - 1, -1, -1) if transpose else range(depth)
+    for l in order:
+        x = stage_apply(x, angles[l], 1 << l, transpose)
+    return x
+
+
+def butterfly_matrix(angles: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Materialize ``B`` as a dense (d, d) matrix — tests/analysis only."""
+    eye = jnp.eye(d, dtype=jnp.float32)
+    # butterfly_apply treats the last axis as the vector; rows of eye are
+    # basis vectors, so apply and transpose to get column-action matrix.
+    return butterfly_apply(eye, angles).T
+
+
+def init_angles(key, depth: int, d: int, std: float = 0.01) -> jnp.ndarray:
+    """Near-identity random init, eq. (7): theta ~ N(0, 0.01^2)."""
+    import jax
+
+    return std * jax.random.normal(key, (depth, d // 2), dtype=jnp.float32)

@@ -1,0 +1,98 @@
+"""Model / experiment configurations shared by the L2 model and aot.py.
+
+Every dimension that a butterfly transform touches must be a power of two
+(the paper assumes d = 2^m); ``ModelConfig.validate`` enforces this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Configuration of the tiny transformer LM with ButterflyMoE FFNs."""
+
+    name: str
+    vocab: int = 512
+    d_model: int = 64
+    d_ff: int = 256
+    n_heads: int = 4
+    n_blocks: int = 2
+    n_experts: int = 4
+    top_k: int = 2
+    seq_len: int = 32
+    # Butterfly depth: number of Givens stages per transform.  None means
+    # the full log2(d) stack.  Table 2 ablates {2, 4, 6, 9}.
+    bfly_depth: Optional[int] = None
+    # Expert parameterization: "butterfly" (the paper), "standard"
+    # (independent dense experts) or "dense" (single FFN, no MoE).
+    arch: str = "butterfly"
+    # When False the rotation angles are frozen at their init values —
+    # the "static rotation" baseline of Fig. 4.
+    learn_rotations: bool = True
+    # Load-balance loss weight (Switch-Transformer style), eq. (6).
+    balance_lambda: float = 0.01
+    dropout: float = 0.0  # no dropout: deterministic AOT graphs
+
+    def validate(self) -> "ModelConfig":
+        assert _is_pow2(self.d_model), f"d_model={self.d_model} not 2^m"
+        assert _is_pow2(self.d_ff), f"d_ff={self.d_ff} not 2^m"
+        assert self.d_model % self.n_heads == 0
+        assert 1 <= self.top_k <= self.n_experts
+        assert self.arch in ("butterfly", "standard", "dense")
+        if self.bfly_depth is not None:
+            import math
+
+            assert 1 <= self.bfly_depth <= int(math.log2(self.d_model))
+        return self
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# Presets.  "tiny" drives the test suite and the Fig. 4/5 training runs;
+# "small" is the end-to-end LM example; "paper" matches the paper's layer
+# shape (d=512, d_ff=2048, 8 experts) and is used for single-layer serving
+# artifacts and parity benches (full-LM training at this size is out of
+# scope for a CPU testbed).
+TINY = ModelConfig(name="tiny").validate()
+TINY_STATIC = dataclasses.replace(
+    TINY, name="tiny_static", learn_rotations=False
+).validate()
+TINY_STANDARD = dataclasses.replace(TINY, name="tiny_standard", arch="standard").validate()
+TINY_DENSE = dataclasses.replace(TINY, name="tiny_dense", arch="dense").validate()
+
+SMALL = ModelConfig(
+    name="small",
+    vocab=4096,
+    d_model=256,
+    d_ff=1024,
+    n_heads=8,
+    n_blocks=4,
+    n_experts=8,
+    top_k=2,
+    seq_len=64,
+).validate()
+
+PAPER_LAYER = ModelConfig(
+    name="paper_layer",
+    vocab=256,  # unused by the single-layer artifact
+    d_model=512,
+    d_ff=2048,
+    n_heads=8,
+    n_blocks=1,
+    n_experts=8,
+    top_k=2,
+    seq_len=16,
+).validate()
+
+PRESETS = {
+    c.name: c
+    for c in (TINY, TINY_STATIC, TINY_STANDARD, TINY_DENSE, SMALL, PAPER_LAYER)
+}

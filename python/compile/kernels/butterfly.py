@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused multi-stage butterfly transform.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel keeps a
+``(block_rows, d)`` activation tile resident in VMEM and applies *all*
+``depth`` Givens stages to it before writing back — one HBM round-trip for
+the whole butterfly stack instead of one per stage (the GPU formulation of
+Dao et al. does one strided global pass per stage).  The angle table
+``(depth, d/2)`` is tiny (<= 4.5 KB at d=512 fp32) and is mapped whole
+into VMEM for every grid step.
+
+VMEM budget per grid step: block_rows*d*4 B for the tile plus the angle
+table; at the default block_rows=128, d=512 that is 256 KB + 4.5 KB, far
+under the ~16 MB VMEM of a TPU core, leaving room for double-buffering.
+
+Lowered with ``interpret=True`` everywhere in this repo: the CPU PJRT
+runtime cannot execute Mosaic custom-calls, and interpret mode lowers to
+plain HLO that both pytest and the Rust runtime can run.  The kernel
+*structure* (tiling, stage fusion) is the TPU contribution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def apply_stages(x: jnp.ndarray, ang: jnp.ndarray, depth: int, transpose: bool) -> jnp.ndarray:
+    """Apply ``depth`` Givens stages to a resident (rows, d) tile.
+
+    Pure value->value helper shared by the standalone butterfly kernel and
+    the fused orbit-expert kernel; mirrors butterfly_lib.stage_apply
+    exactly (same angle layout, same stage order).
+    """
+    rows, d = x.shape
+    order = range(depth - 1, -1, -1) if transpose else range(depth)
+    for l in order:
+        stride = 1 << l
+        nblk = d // (2 * stride)
+        xr = x.reshape(rows, nblk, 2, stride)
+        a = xr[:, :, 0, :]
+        b = xr[:, :, 1, :]
+        angl = ang[l, :].reshape(nblk, stride)
+        c = jnp.cos(angl)
+        s = jnp.sin(angl)
+        if transpose:
+            s = -s
+        na = c * a - s * b
+        nb = s * a + c * b
+        x = jnp.stack([na, nb], axis=2).reshape(rows, d)
+    return x
+
+
+def _butterfly_kernel(x_ref, ang_ref, o_ref, *, depth: int, transpose: bool):
+    """Pallas body: load tile, run all stages in VMEM, store once."""
+    o_ref[...] = apply_stages(x_ref[...], ang_ref[...], depth, transpose)
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block_rows"))
+def butterfly_apply_pallas(
+    x: jnp.ndarray,
+    angles: jnp.ndarray,
+    transpose: bool = False,
+    block_rows: int = 128,
+) -> jnp.ndarray:
+    """Fused butterfly transform of ``x`` (R, d) by ``angles`` (depth, d/2).
+
+    Matches kernels.ref.butterfly_ref bit-for-bit up to float assoc.
+    R must be divisible by the row block (callers pad); d a power of two.
+    """
+    rows, d = x.shape
+    depth = angles.shape[0]
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        # Fall back to one tile per row-remainder-free chunking: pad.
+        pad = br - rows % br
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        out = butterfly_apply_pallas(xp, angles, transpose=transpose, block_rows=br)
+        return out[:rows]
+    grid = (rows // br,)
+    return pl.pallas_call(
+        functools.partial(_butterfly_kernel, depth=depth, transpose=transpose),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((depth, d // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, angles)

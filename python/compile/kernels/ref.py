@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+(python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))``.  The Rust native engine
+(rust/src/butterfly, rust/src/ternary) is additionally tested against
+vectors produced by these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.butterfly_lib import butterfly_apply
+
+
+def butterfly_ref(x: jnp.ndarray, angles: jnp.ndarray, transpose: bool = False) -> jnp.ndarray:
+    """Oracle for kernels.butterfly.butterfly_apply_pallas."""
+    return butterfly_apply(x, angles, transpose=transpose)
+
+
+def ternary_matmul_ref(x: jnp.ndarray, q: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.ternary.ternary_matmul_pallas.
+
+    x: (R, K) float32; q: (N, K) in {-1,0,+1}; gamma: scalar.
+    Returns (R, N) = gamma * x @ q^T.
+    """
+    return (x @ q.astype(jnp.float32).T) * gamma
+
+
+def orbit_expert_ref(
+    x: jnp.ndarray,
+    theta: jnp.ndarray,
+    q: jnp.ndarray,
+    gamma: jnp.ndarray,
+    phi: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle for the fused orbit-expert kernel (eq. 2):
+
+        y = B(phi) ( Q(W_base) ( B(theta)^T x ) )
+
+    x: (R, d_model); theta: (depth_in, d_model/2); q: (d_ff, d_model);
+    phi: (depth_out, d_ff/2).  Returns (R, d_ff).
+    """
+    xr = butterfly_apply(x, theta, transpose=True)
+    h = ternary_matmul_ref(xr, q, gamma)
+    return butterfly_apply(h, phi, transpose=False)

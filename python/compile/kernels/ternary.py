@@ -1,0 +1,132 @@
+"""L1 Pallas kernels: ternary matmul and the fused orbit-expert pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's GPU story is an
+add/sub-only GEMV over {-1,0,+1} weights.  The TPU has no ternary ALU
+path — the correct translation is *memory-side*: the substrate is stored
+ternary (1.58-bit in DRAM/HBM; int8 inside this build-time graph), widened
+to the MXU's native dtype inside VMEM right before the systolic matmul.
+The energy/bandwidth win is in HBM traffic, not multiplier width, and the
+BlockSpec below expresses exactly that HBM->VMEM schedule:
+
+    grid (R/bm, d_ff/bn); per step an (bm, K) activation tile and a
+    (bn, K) weight tile stream into VMEM, one (bm, bn) f32 tile streams
+    out.  K (= d_model) is kept whole per tile: at d_model=512, bm=bn=128
+    this is 128*512*(4+1) B ~ 320 KB of VMEM per step.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.butterfly import apply_stages
+
+
+def _ternary_matmul_kernel(x_ref, q_ref, g_ref, o_ref):
+    """o = gamma * x @ q^T for one (bm, bn) output tile.
+
+    x_ref (bm, K) f32; q_ref (bn, K) int8 in {-1,0,1}; g_ref (1, 1) f32.
+    The int8->f32 widen happens in VMEM; on real TPU this would be a
+    bf16 widen feeding the MXU.
+    """
+    x = x_ref[...]
+    w = q_ref[...].astype(jnp.float32)
+    gamma = g_ref[0, 0]
+    o_ref[...] = jnp.dot(x, w.T) * gamma
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def ternary_matmul_pallas(
+    x: jnp.ndarray,
+    q: jnp.ndarray,
+    gamma: jnp.ndarray,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """gamma * x @ q^T with q int8 ternary.  x (R, K), q (N, K) -> (R, N)."""
+    rows, k = x.shape
+    n, k2 = q.shape
+    assert k == k2, (x.shape, q.shape)
+    bm = min(block_m, rows)
+    bn = min(block_n, n)
+    if rows % bm != 0:
+        pad = bm - rows % bm
+        out = ternary_matmul_pallas(
+            jnp.pad(x, ((0, pad), (0, 0))), q, gamma, block_m=bm, block_n=bn
+        )
+        return out[:rows]
+    assert n % bn == 0, f"d_ff={n} not divisible by block_n={bn}"
+    g2 = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (rows // bm, n // bn)
+    return pl.pallas_call(
+        _ternary_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=True,
+    )(x, q.astype(jnp.int8), g2)
+
+
+def _orbit_expert_kernel(x_ref, th_ref, q_ref, g_ref, ph_ref, o_ref, *, depth_in, depth_out):
+    """Fused eq. (2) for one row tile: B(phi) (Q(W) (B(theta)^T x)).
+
+    Fusing all three ops keeps the intermediate (bm, d_model) and
+    (bm, d_ff) activations in VMEM — the expert is synthesized on the fly
+    and never materialized, the paper's core inference property.
+    """
+    # Stage 1: input rotation B(theta)^T — shared butterfly stage math.
+    xr = apply_stages(x_ref[...], th_ref[...], depth_in, transpose=True)
+    # Stage 2: ternary substrate matmul (int8 widened in VMEM).
+    w = q_ref[...].astype(jnp.float32)
+    h = jnp.dot(xr, w.T) * g_ref[0, 0]
+    # Stage 3: output rotation B(phi).
+    o_ref[...] = apply_stages(h, ph_ref[...], depth_out, transpose=False)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def orbit_expert_pallas(
+    x: jnp.ndarray,
+    theta: jnp.ndarray,
+    q: jnp.ndarray,
+    gamma: jnp.ndarray,
+    phi: jnp.ndarray,
+    block_rows: int = 64,
+) -> jnp.ndarray:
+    """Fused orbit-expert forward.  x (R, d_model) -> (R, d_ff)."""
+    rows, d_model = x.shape
+    d_ff = q.shape[0]
+    depth_in = theta.shape[0]
+    depth_out = phi.shape[0]
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        pad = br - rows % br
+        out = orbit_expert_pallas(
+            jnp.pad(x, ((0, pad), (0, 0))), theta, q, gamma, phi, block_rows=br
+        )
+        return out[:rows]
+    g2 = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        functools.partial(_orbit_expert_kernel, depth_in=depth_in, depth_out=depth_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d_model), lambda i: (i, 0)),
+            pl.BlockSpec((depth_in, d_model // 2), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff, d_model), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((depth_out, d_ff // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d_ff), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_ff), jnp.float32),
+        interpret=True,
+    )(x, theta, q.astype(jnp.int8), g2, phi)

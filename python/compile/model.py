@@ -1,0 +1,270 @@
+"""L2: the ButterflyMoE transformer LM in JAX (build-time only).
+
+Architecture notes
+------------------
+The paper treats an expert as a *single* matrix ``W_i = B(phi_i) Q(W_base)
+B(theta_i)^T`` mapping d_model -> d_ff (Alg. 1 outputs live in R^{d_ff}).
+To obtain a working residual FFN we follow that literally for the expert
+(up) path and close the block with a *shared* ternary down-projection:
+
+    h   = sum_{i in topk} g_i * OrbitExpert_i(x)        # (.., d_ff)
+    y   = gelu(h) @ Q(W_down)^T                          # (.., d_model)
+
+Per-expert storage is then exactly the two butterflies of Prop. 1 (one
+over d_model, one over d_ff); both substrates are ternary and sit in the
+O(d^2) term.  The "standard" baseline stores a dense f32 ``W_i`` per
+expert with the same shared down projection, so the memory comparison is
+apples-to-apples (64 experts, d=512, d_ff=2048 -> 256 MB of expert
+weights, the paper's Table 1 row).
+
+Routing is the dense-mask formulation (every expert computed, weights
+zero outside the top-k): shapes stay static, which AOT lowering requires;
+the Rust native engine implements the sparse gather/scatter dispatch of
+Alg. 1 and is parity-tested against this graph.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from compile import butterfly_lib as bl
+from compile.configs import ModelConfig
+from compile.kernels import ref as kref
+from compile.quant import quantize_ste
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_ffn_params(cfg: ModelConfig, key) -> Params:
+    """FFN parameters for one block, per cfg.arch."""
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 8)
+    depth_in = cfg.bfly_depth or bl.num_stages(d)
+    depth_out = cfg.bfly_depth or bl.num_stages(dff)
+    if cfg.arch == "butterfly":
+        theta = jnp.stack(
+            [bl.init_angles(k, depth_in, d) for k in jax.random.split(keys[1], e)]
+        )
+        phi = jnp.stack(
+            [bl.init_angles(k, depth_out, dff) for k in jax.random.split(keys[2], e)]
+        )
+        return {
+            "gate": _dense_init(keys[0], (e, d)),
+            "w_base": _dense_init(keys[3], (dff, d)),
+            "theta": theta,
+            "phi": phi,
+            "w_down": _dense_init(keys[4], (d, dff)),
+        }
+    if cfg.arch == "standard":
+        return {
+            "gate": _dense_init(keys[0], (e, d)),
+            "w_up": jnp.stack(
+                [_dense_init(k, (dff, d)) for k in jax.random.split(keys[3], e)]
+            ),
+            "w_down": _dense_init(keys[4], (d, dff)),
+        }
+    # dense: single FFN, no routing
+    return {
+        "w_up": _dense_init(keys[3], (dff, d)),
+        "w_down": _dense_init(keys[4], (d, dff)),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    kt, kp, kb, kf = jax.random.split(key, 4)
+    d = cfg.d_model
+    blocks = []
+    for bk in jax.random.split(kb, cfg.n_blocks):
+        k1, k2, k3, k4, k5, kffn = jax.random.split(bk, 6)
+        blocks.append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "attn": {
+                    "wq": _dense_init(k1, (d, d)),
+                    "wk": _dense_init(k2, (d, d)),
+                    "wv": _dense_init(k3, (d, d)),
+                    "wo": _dense_init(k4, (d, d)),
+                },
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "ffn": init_ffn_params(cfg, kffn),
+            }
+        )
+    return {
+        "embed": {
+            "tok": _dense_init(kt, (cfg.vocab, d), scale=0.02),
+            "pos": _dense_init(kp, (cfg.seq_len, d), scale=0.02),
+        },
+        "blocks": blocks,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def causal_attention(x, p, n_heads: int):
+    b, l, d = x.shape
+    hd = d // n_heads
+
+    def split(w):
+        return (x @ w.T).reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return y @ p["wo"].T
+
+
+def _topk_by_argmax(probs: jnp.ndarray, k: int):
+    """Top-k as k iterated argmaxes.
+
+    ``jax.lax.top_k`` lowers to the HLO ``topk`` instruction, which the
+    xla_extension 0.5.1 text parser used by the Rust runtime rejects
+    ("unexpected attribute largest").  Iterated argmax lowers to plain
+    reduce/select ops and is cheap for the small k (<= 2) we route with.
+    Ties are broken by lowest index, matching lax.top_k.
+    """
+    e = probs.shape[-1]
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        onehot = jax.nn.one_hot(i, e, dtype=probs.dtype)
+        v = jnp.sum(p * onehot, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        p = p * (1.0 - onehot)  # mask the winner out
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def topk_gate(logits: jnp.ndarray, k: int):
+    """Dense-mask top-k routing.
+
+    logits: (T, E).  Returns (weights (T, E) summing to 1 with at most k
+    non-zeros per row, load (E,) fraction of routed slots per expert).
+    """
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = _topk_by_argmax(probs, k)
+    vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(idx, e, dtype=logits.dtype)  # (T, k, E)
+    weights = jnp.einsum("tk,tke->te", vals, onehot)
+    load = jnp.mean(jnp.sum(onehot, axis=1), axis=0) / k  # sums to 1
+    return weights, load
+
+
+def orbit_expert_forward(x2d, theta, q, gamma, phi, use_pallas: bool):
+    """Eq. (2) for one expert over flat tokens (T, d_model) -> (T, d_ff)."""
+    if use_pallas:
+        from compile.kernels.ternary import orbit_expert_pallas
+
+        return orbit_expert_pallas(x2d, theta, q, gamma, phi)
+    return kref.orbit_expert_ref(x2d, theta, q, gamma, phi)
+
+
+def moe_ffn_forward(x, p, cfg: ModelConfig, use_pallas: bool = False):
+    """MoE FFN over (B, L, d_model).  Returns (y, load)."""
+    b, l, d = x.shape
+    x2 = x.reshape(b * l, d)
+    if cfg.arch == "dense":
+        h = x2 @ p["w_up"].T
+        y = jax.nn.gelu(h) @ p["w_down"].T
+        load = jnp.ones((1,), dtype=x.dtype)
+        return y.reshape(b, l, d), load
+
+    logits = x2 @ p["gate"].T
+    weights, load = topk_gate(logits, cfg.top_k)
+
+    if cfg.arch == "butterfly":
+        if use_pallas:
+            # Serving path: the Pallas kernel takes the raw {-1,0,+1}
+            # plane (cast to int8 in VMEM) and a separate gamma — the
+            # same storage contract as the Rust native engine.
+            from compile.quant import ternary_quantize
+
+            wq, gamma = ternary_quantize(p["w_base"])
+        else:
+            # Training path: gamma folded in, STE gradients flow to the
+            # latent full-precision substrate.
+            wq = quantize_ste(p["w_base"])
+            gamma = jnp.float32(1.0)
+        theta = p["theta"]
+        phi = p["phi"]
+        if not cfg.learn_rotations:
+            theta = jax.lax.stop_gradient(theta)
+            phi = jax.lax.stop_gradient(phi)
+        h = jnp.zeros((b * l, cfg.d_ff), dtype=x.dtype)
+        for i in range(cfg.n_experts):
+            yi = orbit_expert_forward(x2, theta[i], wq, gamma, phi[i], use_pallas)
+            h = h + weights[:, i : i + 1] * yi
+    else:  # standard
+        h = jnp.zeros((b * l, cfg.d_ff), dtype=x.dtype)
+        for i in range(cfg.n_experts):
+            yi = x2 @ p["w_up"][i].T
+            h = h + weights[:, i : i + 1] * yi
+
+    y = jax.nn.gelu(h) @ p["w_down"].T
+    return y.reshape(b, l, d), load
+
+
+def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, use_pallas: bool = False):
+    """Token ids (B, L) -> (logits (B, L, V), loads (n_blocks, E))."""
+    b, l = tokens.shape
+    x = params["embed"]["tok"][tokens] + params["embed"]["pos"][None, :l, :]
+    loads = []
+    for blk in params["blocks"]:
+        x = x + causal_attention(layer_norm(x, blk["ln1"]), blk["attn"], cfg.n_heads)
+        y, load = moe_ffn_forward(layer_norm(x, blk["ln2"]), blk["ffn"], cfg, use_pallas)
+        x = x + y
+        loads.append(load)
+    x = layer_norm(x, params["ln_f"])
+    logits = x @ params["embed"]["tok"].T  # tied embedding
+    return logits, jnp.stack(loads)
+
+
+def cross_entropy(logits, targets):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def balance_loss(loads: jnp.ndarray, cfg: ModelConfig):
+    """Eq. (6): sum_i (n_i/(k*N) - 1/E)^2, summed over blocks."""
+    if cfg.arch == "dense":
+        return jnp.float32(0.0)
+    target = 1.0 / cfg.n_experts
+    return jnp.sum((loads - target) ** 2)
+
+
+def lm_loss(params, tokens, targets, cfg: ModelConfig, use_pallas: bool = False):
+    logits, loads = lm_forward(params, tokens, cfg, use_pallas)
+    ce = cross_entropy(logits, targets)
+    bal = balance_loss(loads, cfg)
+    return ce + cfg.balance_lambda * bal, (ce, bal, loads)

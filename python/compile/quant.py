@@ -1,0 +1,57 @@
+"""Ternary (1.58-bit) quantization with AbsMean scaling and STE.
+
+Follows BitNet b1.58 (Ma et al., 2024), eq. (5) of the paper:
+
+    gamma = mean(|W|)
+    Q(W)  = gamma * clip(round(W / gamma), -1, +1)
+
+The Straight-Through Estimator treats dQ/dW = I so the latent
+full-precision ``W`` keeps receiving gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def absmean_scale(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor AbsMean scale gamma (scalar array)."""
+    return jnp.mean(jnp.abs(w)) + EPS
+
+
+def ternary_quantize(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (q, gamma) with q in {-1, 0, +1} (float32) and scalar gamma."""
+    gamma = absmean_scale(w)
+    q = jnp.clip(jnp.round(w / gamma), -1.0, 1.0)
+    return q, gamma
+
+
+def quantize_ste(w: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize with straight-through gradients.
+
+    Forward value is ``gamma * q``; backward is identity on ``w``.
+    """
+    q, gamma = ternary_quantize(w)
+    wq = gamma * q
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def quant_error(w: jnp.ndarray) -> jnp.ndarray:
+    """Relative weight quantization MSE: ||Q(W)-W||^2 / ||W||^2."""
+    q, gamma = ternary_quantize(w)
+    err = gamma * q - w
+    return jnp.sum(err * err) / (jnp.sum(w * w) + EPS)
+
+
+def activation_quant_error(y_q: jnp.ndarray, y_fp: jnp.ndarray) -> jnp.ndarray:
+    """Relative output error between quantized and full-precision paths.
+
+    This is the Fig. 4 metric: how much the ternarized substrate perturbs
+    the expert output (percentages in the paper are 100x this value).
+    """
+    num = jnp.sum((y_q - y_fp) ** 2)
+    den = jnp.sum(y_fp**2) + EPS
+    return num / den

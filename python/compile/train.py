@@ -1,0 +1,153 @@
+"""L2 training graph: loss, hand-rolled AdamW, and the jit-able train step.
+
+optax is not available in this offline image, so AdamW is implemented
+directly (decoupled weight decay, bias-corrected moments).  The whole
+step — forward, backward, optimizer update — lowers into a single HLO
+module; the Rust driver (rust/src/train) keeps params/moments as
+device-resident PJRT buffers and feeds back the outputs of step t as the
+inputs of step t+1, so training runs with zero Python and zero host
+round-trips for the state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import ModelConfig
+from compile.model import Params, init_params, lm_loss
+
+OptState = Dict[str, Any]
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _adamw_update(p, g, m, v, lr, bc1, bc2):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    new_p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * p)
+    return new_p, m, v
+
+
+def train_step(
+    params: Params,
+    m: Params,
+    v: Params,
+    step: jnp.ndarray,
+    lr: jnp.ndarray,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    cfg: ModelConfig,
+):
+    """One AdamW step.  Returns (params', m', v', step', loss, ce, bal, load).
+
+    ``step`` is an int32 scalar (0-based count of completed steps); ``lr``
+    an f32 scalar so the Rust driver owns the schedule.
+    """
+    (loss, (ce, bal, loads)), grads = jax.value_and_grad(
+        lambda p: lm_loss(p, tokens, targets, cfg), has_aux=True
+    )(params)
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    flat_wp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_p = [l for _, l in flat_wp]
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    new_p, new_m, new_v = [], [], []
+    for (path, p_), g_, m_, v_ in zip(flat_wp, flat_g, flat_m, flat_v):
+        leaf = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if not cfg.learn_rotations and leaf in ("theta", "phi"):
+            # Frozen rotations (Fig. 4 static baseline): no gradient AND
+            # no weight decay — the parameters must not move at all.
+            new_p.append(p_)
+            new_m.append(m_)
+            new_v.append(v_)
+            continue
+        np_, nm_, nv_ = _adamw_update(p_, g_, m_, v_, lr, bc1, bc2)
+        new_p.append(np_)
+        new_m.append(nm_)
+        new_v.append(nv_)
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    m = jax.tree_util.tree_unflatten(treedef, new_m)
+    v = jax.tree_util.tree_unflatten(treedef, new_v)
+    # Mean router load across blocks — the driver logs it per step.
+    mean_load = jnp.mean(loads, axis=0)
+    return params, m, v, step + 1, loss, ce, bal, mean_load
+
+
+def make_train_step(cfg: ModelConfig):
+    def fn(params, m, v, step, lr, tokens, targets):
+        return train_step(params, m, v, step, lr, tokens, targets, cfg)
+
+    return fn
+
+
+def make_eval(cfg: ModelConfig, use_pallas: bool = False):
+    """(params, tokens, targets) -> (ce_loss, last-position logits)."""
+
+    def fn(params, tokens, targets):
+        loss, (ce, bal, loads) = lm_loss(params, tokens, targets, cfg, use_pallas)
+        return ce, loss
+
+    return fn
+
+
+def make_lm_logits(cfg: ModelConfig, use_pallas: bool = False):
+    """(params, tokens) -> logits (B, L, V) — the serving forward."""
+    from compile.model import lm_forward
+
+    def fn(params, tokens):
+        logits, _ = lm_forward(params, tokens, cfg, use_pallas)
+        return logits
+
+    return fn
+
+
+def make_moe_layer_fwd(cfg: ModelConfig, use_pallas: bool = True):
+    """(ffn_params, x (T, d_model)) -> y (T, d_model), single MoE layer.
+
+    This is the serving hot-path artifact: the deployed graph really does
+    run the L1 Pallas kernels (interpret-lowered).
+    """
+    from compile.model import moe_ffn_forward
+
+    def fn(ffn_params, x):
+        y, load = moe_ffn_forward(x[None], ffn_params, cfg, use_pallas)
+        return y[0], load
+
+    return fn
+
+
+def smoke_train(cfg: ModelConfig, steps: int = 3, seed: int = 0):
+    """Tiny pure-python training run used by pytest to sanity-check descent."""
+    params = init_params(cfg, seed)
+    m, v = init_opt_state(params)
+    step = jnp.int32(0)
+    key = jax.random.PRNGKey(42)
+    fn = jax.jit(make_train_step(cfg))
+    losses = []
+    for i in range(steps):
+        key, k1 = jax.random.split(key)
+        toks = jax.random.randint(k1, (4, cfg.seq_len), 0, cfg.vocab)
+        targets = jnp.roll(toks, -1, axis=1)
+        params, m, v, step, loss, ce, bal, load = fn(
+            params, m, v, step, jnp.float32(1e-3), toks, targets
+        )
+        losses.append(float(loss))
+    return losses

@@ -1,0 +1,110 @@
+"""AOT layer: BMOE container round-trip + manifest/artifact consistency.
+
+The artifact-content tests only run when ../artifacts exists (created by
+``make artifacts``); the container tests always run.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import bmoe_io
+from compile.configs import PRESETS
+from compile.model import init_params
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_bmoe_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bmoe")
+    tensors = [
+        ("a.b.c", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("scalar", np.float32(3.5).reshape(())),
+        ("ints", np.array([[1, -2], [3, 4]], dtype=np.int32)),
+        ("bytes", np.arange(5, dtype=np.uint8)),
+    ]
+    bmoe_io.write_bmoe(path, tensors)
+    back = bmoe_io.read_bmoe(path)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, want), (_, got) in zip(tensors, back):
+        np.testing.assert_array_equal(np.asarray(want), got)
+        assert np.asarray(want).dtype == got.dtype
+
+
+def test_bmoe_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.bmoe")
+    with open(path, "wb") as f:
+        f.write(b"NOTBMOE")
+    with pytest.raises(AssertionError):
+        bmoe_io.read_bmoe(path)
+
+
+def test_param_flatten_order_is_deterministic():
+    cfg = PRESETS["tiny"]
+    p1 = init_params(cfg, 0)
+    p2 = init_params(cfg, 0)
+    f1, t1 = jax.tree_util.tree_flatten(p1)
+    f2, t2 = jax.tree_util.tree_flatten(p2)
+    assert t1 == t2
+    for a, b in zip(f1, f2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_artifact_files_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+
+    def test_train_step_io_arity(self, manifest):
+        for a in manifest["artifacts"]:
+            if a["kind"] != "train_step":
+                continue
+            n_in = len(a["inputs"])
+            n_out = len(a["outputs"])
+            # inputs: 3P + step + lr + tokens + targets
+            p = (n_in - 4) // 3
+            assert 3 * p + 4 == n_in, a["name"]
+            # outputs: 3P + step + loss + ce + bal + load
+            assert n_out == 3 * p + 5, (a["name"], n_in, n_out)
+
+    def test_params_file_matches_manifest_names(self, manifest):
+        for key, entry in manifest["params"].items():
+            tensors = bmoe_io.read_bmoe(os.path.join(ART, entry["file"]))
+            assert [n for n, _ in tensors] == entry["names"]
+            for (name, arr), spec in zip(tensors, entry["tensors"]):
+                assert list(arr.shape) == spec["shape"], name
+
+    def test_train_step_param_names_match_export(self, manifest):
+        """The executable's first P inputs must be exactly the exported
+        param tensors, in order — the Rust driver depends on this."""
+        by_cfg = {a["config"]: a for a in manifest["artifacts"] if a["kind"] == "train_step"}
+        for cfg_name, art in by_cfg.items():
+            entry = manifest["params"].get(cfg_name)
+            if entry is None:
+                continue
+            p = (len(art["inputs"]) - 4) // 3
+            art_param_names = [s["name"].removeprefix("params.") for s in art["inputs"][:p]]
+            exported = [n.lstrip(".") for n in entry["names"]]
+            assert art_param_names == exported, cfg_name
+
+    def test_hlo_text_parses_by_keyword(self, manifest):
+        # cheap sanity: every artifact is HLO text with an ENTRY module
+        for a in manifest["artifacts"][:4]:
+            with open(os.path.join(ART, a["file"])) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, a["name"]

@@ -1,0 +1,49 @@
+"""Cross-language BMOE container compatibility: checkpoints written by
+the Rust training driver must load in Python with identical semantics
+(and could seed further jax fine-tuning).  Skips when no Rust artifacts
+or checkpoints exist yet."""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from compile import bmoe_io
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def rust_checkpoints():
+    pats = ["runs/figs/*.bmoe", "runs/e2e/*.bmoe", "runs/*.bmoe"]
+    out = []
+    for p in pats:
+        out.extend(glob.glob(os.path.join(ROOT, p)))
+    return out
+
+
+@pytest.mark.skipif(not rust_checkpoints(), reason="no rust checkpoints yet")
+def test_rust_checkpoint_loads_and_is_well_formed():
+    path = rust_checkpoints()[0]
+    tensors = bmoe_io.read_bmoe(path)
+    assert len(tensors) > 5
+    names = [n for n, _ in tensors]
+    assert any("w_base" in n or "w_up" in n for n in names), names[:5]
+    for name, arr in tensors:
+        assert np.isfinite(arr).all() if arr.dtype == np.float32 else True, name
+
+
+@pytest.mark.skipif(not rust_checkpoints(), reason="no rust checkpoints yet")
+def test_rust_checkpoint_matches_init_param_structure():
+    """A trained checkpoint must carry exactly the init export's tensor
+    names and shapes (the train step is shape-preserving)."""
+    art = os.path.join(ROOT, "artifacts")
+    ckpts = [p for p in rust_checkpoints() if "tiny_s" in os.path.basename(p)]
+    init_path = os.path.join(art, "tiny.params.bmoe")
+    if not ckpts or not os.path.exists(init_path):
+        pytest.skip("need tiny checkpoint + init export")
+    init = dict(bmoe_io.read_bmoe(init_path))
+    trained = dict(bmoe_io.read_bmoe(ckpts[0]))
+    assert set(trained) == set(init)
+    for name in init:
+        assert trained[name].shape == init[name].shape, name

@@ -1,0 +1,149 @@
+"""L2 model: shapes, routing invariants, arch baselines, loss pieces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import PRESETS, ModelConfig
+from compile.model import (
+    balance_loss,
+    cross_entropy,
+    init_ffn_params,
+    init_params,
+    lm_forward,
+    lm_loss,
+    moe_ffn_forward,
+    topk_gate,
+)
+
+TINY = PRESETS["tiny"]
+
+
+def rand_tokens(cfg, b=2, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.seq_len), 0, cfg.vocab)
+
+
+class TestGate:
+    def test_weights_rows_sum_to_one(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (40, 8))
+        w, load = topk_gate(logits, 2)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), np.ones(40), rtol=1e-5)
+
+    def test_at_most_k_nonzero(self):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (33, 8))
+        w, _ = topk_gate(logits, 2)
+        nnz = np.count_nonzero(np.asarray(w), axis=-1)
+        assert (nnz <= 2).all()
+
+    def test_load_sums_to_one(self):
+        logits = jax.random.normal(jax.random.PRNGKey(2), (64, 4))
+        _, load = topk_gate(logits, 2)
+        assert np.isclose(float(load.sum()), 1.0, atol=1e-5)
+
+    def test_k1_selects_argmax(self):
+        logits = jax.random.normal(jax.random.PRNGKey(3), (10, 5))
+        w, _ = topk_gate(logits, 1)
+        np.testing.assert_array_equal(
+            np.argmax(np.asarray(w), -1), np.argmax(np.asarray(logits), -1)
+        )
+
+
+@pytest.mark.parametrize("name", ["tiny", "tiny_standard", "tiny_dense"])
+def test_moe_ffn_shapes(name):
+    cfg = PRESETS[name]
+    p = init_ffn_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.seq_len, cfg.d_model))
+    y, load = moe_ffn_forward(x, p, cfg)
+    assert y.shape == x.shape
+
+
+def test_moe_ffn_pallas_matches_jnp():
+    cfg = TINY
+    p = init_ffn_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.seq_len, cfg.d_model))
+    y_ref, _ = moe_ffn_forward(x, p, cfg, use_pallas=False)
+    y_pal, _ = moe_ffn_forward(x, p, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["tiny", "tiny_standard", "tiny_dense"])
+def test_lm_forward_shapes(name):
+    cfg = PRESETS[name]
+    params = init_params(cfg, 0)
+    toks = rand_tokens(cfg)
+    logits, loads = lm_forward(params, toks, cfg)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+    assert loads.shape[0] == cfg.n_blocks
+
+
+def test_lm_loss_finite_and_near_uniform_at_init():
+    cfg = TINY
+    params = init_params(cfg, 0)
+    toks = rand_tokens(cfg)
+    loss, (ce, bal, loads) = lm_loss(params, toks, toks, cfg)
+    assert np.isfinite(float(loss))
+    # near-uniform logits at init => CE close to log(V)
+    assert abs(float(ce) - np.log(cfg.vocab)) < 1.0
+
+
+def test_balance_loss_zero_at_uniform():
+    cfg = TINY
+    loads = jnp.full((cfg.n_blocks, cfg.n_experts), 1.0 / cfg.n_experts)
+    assert float(balance_loss(loads, cfg)) < 1e-12
+
+
+def test_balance_loss_positive_when_skewed():
+    cfg = TINY
+    loads = jnp.zeros((cfg.n_blocks, cfg.n_experts)).at[:, 0].set(1.0)
+    assert float(balance_loss(loads, cfg)) > 0.1
+
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.full((1, 3, 5), -30.0)
+    targets = jnp.array([[1, 2, 3]])
+    logits = logits.at[0, 0, 1].set(30.0).at[0, 1, 2].set(30.0).at[0, 2, 3].set(30.0)
+    assert float(cross_entropy(logits, targets)) < 1e-5
+
+
+def test_experts_differ_at_init():
+    """Random angle init (eq. 7) must break symmetry: different experts
+    produce different outputs on the same input."""
+    cfg = TINY
+    p = init_ffn_params(cfg, jax.random.PRNGKey(0))
+    from compile.kernels.ref import orbit_expert_ref
+    from compile.quant import quantize_ste
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, cfg.d_model))
+    wq = quantize_ste(p["w_base"])
+    one = jnp.float32(1.0)
+    y0 = orbit_expert_ref(x, p["theta"][0], wq, one, p["phi"][0])
+    y1 = orbit_expert_ref(x, p["theta"][1], wq, one, p["phi"][1])
+    assert float(jnp.max(jnp.abs(y0 - y1))) > 1e-4
+
+
+def test_static_rotation_config_stops_gradients():
+    cfg = PRESETS["tiny_static"]
+    params = init_params(cfg, 0)
+    toks = rand_tokens(cfg, b=1)
+    grads = jax.grad(lambda p: lm_loss(p, toks, toks, cfg)[0])(params)
+    for blk in grads["blocks"]:
+        assert float(jnp.abs(blk["ffn"]["theta"]).max()) == 0.0
+        assert float(jnp.abs(blk["ffn"]["phi"]).max()) == 0.0
+    # but the substrate still learns
+    assert float(jnp.abs(grads["blocks"][0]["ffn"]["w_base"]).max()) > 0.0
+
+
+def test_learned_rotation_config_has_rotation_grads():
+    cfg = TINY
+    params = init_params(cfg, 0)
+    toks = rand_tokens(cfg, b=1)
+    grads = jax.grad(lambda p: lm_loss(p, toks, toks, cfg)[0])(params)
+    assert float(jnp.abs(grads["blocks"][0]["ffn"]["theta"]).max()) > 0.0
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        ModelConfig(name="bad", d_model=48).validate()
+    with pytest.raises(AssertionError):
+        ModelConfig(name="bad", top_k=9, n_experts=4).validate()

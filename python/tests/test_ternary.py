@@ -1,0 +1,137 @@
+"""Ternary quantization + L1 ternary/orbit kernels vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.butterfly_lib import init_angles, num_stages
+from compile.kernels.ref import orbit_expert_ref, ternary_matmul_ref
+from compile.kernels.ternary import orbit_expert_pallas, ternary_matmul_pallas
+from compile.quant import (
+    activation_quant_error,
+    absmean_scale,
+    quant_error,
+    quantize_ste,
+    ternary_quantize,
+)
+
+
+def rand(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+class TestQuantization:
+    def test_values_are_ternary(self):
+        w = rand(0, (64, 32))
+        q, gamma = ternary_quantize(w)
+        assert set(np.unique(np.asarray(q))) <= {-1.0, 0.0, 1.0}
+        assert float(gamma) > 0
+
+    def test_absmean_scale(self):
+        w = jnp.array([[1.0, -3.0], [0.0, 4.0]])
+        assert np.isclose(float(absmean_scale(w)), 2.0, atol=1e-6)
+
+    def test_ste_forward_value(self):
+        w = rand(1, (16, 16))
+        q, gamma = ternary_quantize(w)
+        np.testing.assert_allclose(
+            np.asarray(quantize_ste(w)), np.asarray(gamma * q), rtol=1e-6
+        )
+
+    def test_ste_gradient_is_identity(self):
+        w = rand(2, (8, 8))
+        g = jax.grad(lambda w: jnp.sum(quantize_ste(w) ** 2))(w)
+        # d/dw sum(wq^2) with STE = 2*wq (identity through Q)
+        q, gamma = ternary_quantize(w)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(2 * gamma * q), rtol=1e-5)
+
+    def test_quant_error_zero_for_exact_ternary(self):
+        # A tensor already of the form gamma*{-1,0,1} with mean|w|=gamma
+        # quantizes exactly.
+        w = 0.5 * jnp.array([[1.0, -1.0], [1.0, -1.0]])
+        assert float(quant_error(w)) < 1e-10
+
+    def test_quant_error_large_for_outliers(self):
+        # A spread-out distribution has substantial relative error —
+        # this is the "untrained" side of Fig. 4.
+        w = rand(3, (64, 64), scale=1.0) ** 3  # heavy tails
+        assert float(quant_error(w)) > 0.05
+
+    def test_activation_quant_error_metric(self):
+        y = rand(4, (8, 8))
+        assert float(activation_quant_error(y, y)) == 0.0
+        assert float(activation_quant_error(1.1 * y, y)) == pytest.approx(0.01, rel=1e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    rows=st.integers(min_value=1, max_value=50),
+    logk=st.integers(min_value=1, max_value=7),
+    logn=st.integers(min_value=3, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ternary_matmul_pallas_matches_ref(rows, logk, logn, seed):
+    k, n = 1 << logk, 1 << logn
+    x = rand(seed, (rows, k))
+    q = jax.random.randint(jax.random.PRNGKey(seed + 1), (n, k), -1, 2).astype(
+        jnp.float32
+    )
+    gamma = jnp.float32(0.123)
+    got = ternary_matmul_pallas(x, q, gamma, block_m=16, block_n=min(n, 64))
+    want = ternary_matmul_ref(x, q, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    rows=st.integers(min_value=1, max_value=40),
+    logd=st.integers(min_value=2, max_value=6),
+    ff_mult=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_orbit_expert_pallas_matches_ref(rows, logd, ff_mult, seed):
+    d = 1 << logd
+    dff = d * ff_mult
+    theta = init_angles(jax.random.PRNGKey(seed), num_stages(d), d, std=0.6)
+    phi = init_angles(jax.random.PRNGKey(seed + 1), num_stages(dff), dff, std=0.6)
+    q = jax.random.randint(jax.random.PRNGKey(seed + 2), (dff, d), -1, 2).astype(
+        jnp.float32
+    )
+    x = rand(seed + 3, (rows, d))
+    gamma = jnp.float32(0.5)
+    got = orbit_expert_pallas(x, theta, q, gamma, phi, block_rows=16)
+    want = orbit_expert_ref(x, theta, q, gamma, phi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_rotation_reduces_quant_error_for_outlier_basis():
+    """The mechanism of §3.6.2: a rotation can move an outlier-heavy
+    vector into a basis where ternary quantization hurts less.  We verify
+    the *existence* direction: identity rotation error >= best butterfly
+    rotation error found by a tiny gradient search."""
+    d = 16
+    key = jax.random.PRNGKey(0)
+    # outlier activation: one huge channel
+    x = jnp.ones((32, d)) * 0.1
+    x = x.at[:, 3].set(8.0)
+    w = jax.random.normal(key, (d, d)) * 0.5
+
+    def err(ang):
+        from compile.butterfly_lib import butterfly_apply
+
+        xr = butterfly_apply(x, ang, transpose=True)
+        q, gamma = ternary_quantize(w)
+        y_q = xr @ (gamma * q).T
+        y_fp = xr @ w.T
+        return activation_quant_error(y_q, y_fp)
+
+    ang0 = jnp.zeros((num_stages(d), d // 2))
+    e0 = float(err(ang0))
+    ang = ang0
+    g = jax.jit(jax.grad(err))
+    for _ in range(60):
+        ang = ang - 0.1 * g(ang)
+    e1 = float(err(ang))
+    assert e1 < e0, (e0, e1)

@@ -1,0 +1,62 @@
+//! Fig. 3 — memory consumption vs expert count (standard vs butterfly),
+//! plus the same curve for every Table 1 method and an ASCII rendering.
+//!
+//! Run: `cargo bench --bench fig3_memory`
+
+use std::path::Path;
+
+use butterfly_moe::bench::{paper_tables, Table};
+use butterfly_moe::memmodel::{LayerShape, Method, ALL_METHODS};
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+    paper_tables::fig3(out)?;
+
+    // all methods, wide sweep, CSV for plotting
+    let s = LayerShape::paper();
+    let headers: Vec<String> = std::iter::once("Experts".to_string())
+        .chain(ALL_METHODS.iter().map(|m| format!("{} (MB)", m.name())))
+        .collect();
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new("Fig. 3 (all methods)", &hdr_refs);
+    let mut n = 8usize;
+    while n <= 1024 {
+        let mut row = vec![n.to_string()];
+        for m in ALL_METHODS {
+            row.push(format!("{:.2}", m.bytes(n, s) / (1024.0 * 1024.0)));
+        }
+        t.row(&row);
+        n *= 2;
+    }
+    t.print();
+    t.write_csv(&out.join("fig3_all_methods.csv"))?;
+
+    // ASCII log-log rendering of the two headline series
+    println!("\nlog2(MB) vs log2(experts)   S=standard  B=butterfly");
+    let rows = 14;
+    for level in (0..rows).rev() {
+        let mb_at = |v: f64| (v / (1024.0 * 1024.0)).log2().round() as i64;
+        let mut line = format!("{:>6} |", format!("2^{}", level as i64 - 2));
+        let mut n = 8usize;
+        while n <= 1024 {
+            let sv = mb_at(Method::StandardMoe.bytes(n, s)) + 2;
+            let bv = mb_at(Method::ButterflyMoe.bytes(n, s)) + 2;
+            let c = if sv == level as i64 && bv == level as i64 {
+                '*'
+            } else if sv == level as i64 {
+                'S'
+            } else if bv == level as i64 {
+                'B'
+            } else {
+                ' '
+            };
+            line.push_str(&format!("   {c}   "));
+            n *= 2;
+        }
+        println!("{line}");
+    }
+    println!("        +{}", "-".repeat(8 * 7));
+    println!("            8      16     32     64     128    256    512   1024  experts");
+    Ok(())
+}

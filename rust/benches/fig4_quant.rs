@@ -1,0 +1,155 @@
+//! Fig. 4 — quantization stability via learned rotations.
+//!
+//! Reproduces all four panels' quantities:
+//!   * scaled-weight histograms of the substrate, untrained vs trained
+//!     (top panels: trained weights cluster on the ternary grid),
+//!   * relative weight quantization MSE (bottom right: the paper's
+//!     51.3% -> 1.43%, a 97.2% reduction),
+//!   * the activation-aware variant: relative *output* error of the
+//!     ternarized substrate vs full precision, for learned-rotation
+//!     training vs frozen-rotation ("static") training.
+//!
+//! Trains tiny checkpoints on first run (cached in runs/figs/).
+//! Run: `cargo bench --bench fig4_quant` (env BMOE_FIG_STEPS to change
+//! the training budget, default 150).
+
+use std::path::Path;
+
+use butterfly_moe::bench::Table;
+use butterfly_moe::butterfly::Butterfly;
+use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::quant::{output_quant_error, scaled_weight_histogram, weight_quant_error};
+use butterfly_moe::runtime::Engine;
+use butterfly_moe::tensor::store::TensorStore;
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::train::ensure_checkpoint;
+use butterfly_moe::util::Rng;
+
+fn steps() -> usize {
+    std::env::var("BMOE_FIG_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150)
+}
+
+/// Mean relative output error of ternary-vs-fp substrate across experts.
+fn layer_output_error(store: &TensorStore, prefix: &str, top_k: usize) -> anyhow::Result<f64> {
+    let layer = ButterflyMoeLayer::from_store(store, prefix, top_k)?;
+    let w_base = store.get_f32(&format!("{prefix}w_base"))?;
+    let (dff, d) = (w_base.shape[0], w_base.shape[1]);
+    let mut rng = Rng::new(0xF16);
+    let t = 64usize;
+    let x = Tensor::rand_normal(&[t, d], 1.0, &mut rng);
+
+    let theta = store.get_f32(&format!("{prefix}theta"))?;
+    let phi = store.get_f32(&format!("{prefix}phi"))?;
+    let e = theta.shape[0];
+    let (din, hin) = (theta.shape[1], theta.shape[2]);
+    let (dout, hout) = (phi.shape[1], phi.shape[2]);
+
+    let mut scratch = vec![0.0f32; d];
+    let mut y_q = vec![0.0f32; dff];
+    let mut total = 0.0f64;
+    for ei in 0..e {
+        let bt = Butterfly::from_angles(d, din, &theta.data[ei * din * hin..(ei + 1) * din * hin]);
+        let bp = Butterfly::from_angles(dff, dout, &phi.data[ei * dout * hout..(ei + 1) * dout * hout]);
+        let mut qs = Vec::with_capacity(t * dff);
+        let mut fs = Vec::with_capacity(t * dff);
+        for ti in 0..t {
+            let xi = &x.data[ti * d..(ti + 1) * d];
+            // quantized path (the deployed one)
+            layer.expert_forward(ei, xi, &mut scratch, &mut y_q);
+            qs.extend_from_slice(&y_q);
+            // full-precision path: same rotations, dense latent substrate
+            scratch.copy_from_slice(xi);
+            bt.apply_transpose(&mut scratch);
+            let mut y_fp = vec![0.0f32; dff];
+            for r in 0..dff {
+                let row = w_base.row(r);
+                let mut acc = 0.0f32;
+                for c in 0..d {
+                    acc += row[c] * scratch[c];
+                }
+                y_fp[r] = acc;
+            }
+            bp.apply(&mut y_fp);
+            fs.extend_from_slice(&y_fp);
+        }
+        total += output_quant_error(&qs, &fs);
+    }
+    Ok(total / e as f64)
+}
+
+fn print_histogram(name: &str, w: &Tensor) {
+    let bins = 19;
+    let h = scaled_weight_histogram(w, bins, -3.0, 3.0);
+    let max = *h.iter().max().unwrap() as f64;
+    println!("  {name} (w/gamma in [-3,3], {} weights):", w.len());
+    for (i, &c) in h.iter().enumerate() {
+        let center = -3.0 + (i as f32 + 0.5) * 6.0 / bins as f32;
+        let bar = "#".repeat((40.0 * c as f64 / max).round() as usize);
+        let grid = if (center.abs() - 1.0).abs() < 0.16 || center.abs() < 0.16 {
+            "<- grid"
+        } else {
+            ""
+        };
+        println!("   {center:>5.1} | {bar:<40} {grid}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("runs/figs");
+    std::fs::create_dir_all(out)?;
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let n = steps();
+
+    let trained = ensure_checkpoint(&engine, "tiny", n, out)?;
+    let static_ck = ensure_checkpoint(&engine, "tiny_static", n, out)?;
+
+    let init = TensorStore::read(&engine.manifest.dir.join("tiny.params.bmoe"))?;
+    let trained = TensorStore::read(&trained)?;
+    let static_s = TensorStore::read(&static_ck)?;
+
+    // weight histograms (block 0 substrate)
+    println!("== Fig. 4 top panels: substrate weight distribution ==");
+    print_histogram("untrained", init.get_f32("blocks.0.ffn.w_base")?);
+    print_histogram(&format!("trained {n} steps (learned rotations + STE)"),
+        trained.get_f32("blocks.0.ffn.w_base")?);
+
+    // quantization error table
+    let mut t = Table::new(
+        "Fig. 4 bottom-right — relative quantization error (%)",
+        &["Model state", "Weight rel-MSE %", "Output rel-MSE %"],
+    );
+    let cfg = engine.manifest.config("tiny")?.clone();
+    for (name, store) in [
+        ("untrained", &init),
+        ("trained (learned rotations)", &trained),
+        ("trained (static rotations)", &static_s),
+    ] {
+        // mean across blocks
+        let mut werr = 0.0;
+        let mut oerr = 0.0;
+        let mut blocks = 0;
+        for b in 0.. {
+            let prefix = format!("blocks.{b}.ffn.");
+            if store.get(&format!("{prefix}w_base")).is_none() {
+                break;
+            }
+            werr += weight_quant_error(store.get_f32(&format!("{prefix}w_base"))?);
+            oerr += layer_output_error(store, &prefix, cfg.top_k)?;
+            blocks += 1;
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", 100.0 * werr / blocks as f64),
+            format!("{:.2}", 100.0 * oerr / blocks as f64),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("fig4_quant.csv"))?;
+    println!("\npaper: 51.3% (untrained) -> 1.43% (trained), a 97.2% reduction.");
+    println!("The reproduced claim is the *drop* from training with STE +");
+    println!("learned rotations, and learned < static on the output metric.");
+    Ok(())
+}

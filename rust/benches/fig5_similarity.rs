@@ -1,0 +1,161 @@
+//! Fig. 5 — expert specialization: pairwise cosine similarity between
+//! expert outputs and the diversity score, ButterflyMoE vs standard MoE.
+//!
+//! Expert outputs are computed on embedded tokens from the synthetic
+//! corpus (the checkpoint's own embedding table), block-0 FFN, per
+//! expert with gating disabled — the paper's "expert output similarity"
+//! quantity.  diversity = 1 - mean off-diagonal cosine.
+//!
+//! Trains checkpoints on first run (cached in runs/figs/).
+//! Run: `cargo bench --bench fig5_similarity`
+
+use std::path::Path;
+
+use butterfly_moe::bench::Table;
+use butterfly_moe::data::{CorpusConfig, SyntheticCorpus};
+use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::runtime::Engine;
+use butterfly_moe::tensor::store::TensorStore;
+use butterfly_moe::train::ensure_checkpoint;
+use butterfly_moe::util::stats::cosine_similarity;
+
+fn steps() -> usize {
+    std::env::var("BMOE_FIG_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150)
+}
+
+/// Embed `t` corpus tokens with the checkpoint's embedding table.
+fn embedded_batch(store: &TensorStore, vocab: usize, t: usize) -> anyhow::Result<Vec<f32>> {
+    let embed = store.get_f32("embed.tok")?;
+    let d = embed.shape[1];
+    let mut corpus = SyntheticCorpus::new(CorpusConfig {
+        vocab,
+        seed: 0x515,
+        ..CorpusConfig::default()
+    });
+    let mut x = vec![0.0f32; t * d];
+    for i in 0..t {
+        let tok = corpus.next_token() as usize % vocab;
+        x[i * d..(i + 1) * d].copy_from_slice(embed.row(tok));
+    }
+    Ok(x)
+}
+
+/// Per-expert outputs (flattened over the batch) for a butterfly layer.
+fn butterfly_expert_outputs(
+    store: &TensorStore,
+    x: &[f32],
+    t: usize,
+    top_k: usize,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let layer = ButterflyMoeLayer::from_store(store, "blocks.0.ffn.", top_k)?;
+    let (d, dff) = (store.get_f32("blocks.0.ffn.w_base")?.shape[1],
+                    store.get_f32("blocks.0.ffn.w_base")?.shape[0]);
+    let e = layer.experts.len();
+    let mut outs = vec![Vec::with_capacity(t * dff); e];
+    let mut scratch = vec![0.0f32; d];
+    let mut y = vec![0.0f32; dff];
+    for ei in 0..e {
+        for ti in 0..t {
+            layer.expert_forward(ei, &x[ti * d..(ti + 1) * d], &mut scratch, &mut y);
+            outs[ei].extend_from_slice(&y);
+        }
+    }
+    Ok(outs)
+}
+
+/// Per-expert outputs for the standard-MoE baseline (dense w_up (E,dff,d)).
+fn standard_expert_outputs(
+    store: &TensorStore,
+    x: &[f32],
+    t: usize,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let w = store.get_f32("blocks.0.ffn.w_up")?;
+    let (e, dff, d) = (w.shape[0], w.shape[1], w.shape[2]);
+    let mut outs = vec![Vec::with_capacity(t * dff); e];
+    for ei in 0..e {
+        let we = &w.data[ei * dff * d..(ei + 1) * dff * d];
+        for ti in 0..t {
+            let xi = &x[ti * d..(ti + 1) * d];
+            for r in 0..dff {
+                let row = &we[r * d..(r + 1) * d];
+                let mut acc = 0.0f32;
+                for c in 0..d {
+                    acc += row[c] * xi[c];
+                }
+                outs[ei].push(acc);
+            }
+        }
+    }
+    Ok(outs)
+}
+
+fn report(name: &str, outs: &[Vec<f32>]) -> (f64, f64) {
+    let e = outs.len();
+    println!("\n== {name}: pairwise |cosine| matrix ==");
+    let mut sum = 0.0;
+    let mut count = 0;
+    let mut max_od: f64 = 0.0;
+    for i in 0..e {
+        let mut row = String::new();
+        for j in 0..e {
+            let c = cosine_similarity(&outs[i], &outs[j]).abs();
+            row.push_str(&format!(" {c:.3}"));
+            if i != j {
+                sum += c;
+                count += 1;
+                max_od = max_od.max(c);
+            }
+        }
+        println!("  e{i}:{row}");
+    }
+    let mean_od = sum / count as f64;
+    let diversity = 1.0 - mean_od;
+    println!("  mean off-diag {mean_od:.3}, max {max_od:.3}, diversity {diversity:.3}");
+    (mean_od, diversity)
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("runs/figs");
+    std::fs::create_dir_all(out)?;
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let cfg = engine.manifest.config("tiny")?.clone();
+    let n = steps();
+    let t = 128usize;
+
+    let bf_ck = TensorStore::read(&ensure_checkpoint(&engine, "tiny", n, out)?)?;
+    let std_ck = TensorStore::read(&ensure_checkpoint(&engine, "tiny_standard", n, out)?)?;
+    let init = TensorStore::read(&engine.manifest.dir.join("tiny.params.bmoe"))?;
+
+    let x = embedded_batch(&bf_ck, cfg.vocab, t)?;
+    let (_, div_bf) = report(
+        &format!("ButterflyMoE (trained {n} steps)"),
+        &butterfly_expert_outputs(&bf_ck, &x, t, cfg.top_k)?,
+    );
+    let x0 = embedded_batch(&init, cfg.vocab, t)?;
+    let (_, div_init) = report(
+        "ButterflyMoE (untrained init)",
+        &butterfly_expert_outputs(&init, &x0, t, cfg.top_k)?,
+    );
+    let xs = embedded_batch(&std_ck, cfg.vocab, t)?;
+    let (_, div_std) = report(
+        &format!("Standard MoE (trained {n} steps)"),
+        &standard_expert_outputs(&std_ck, &xs, t)?,
+    );
+
+    let mut tab = Table::new(
+        "Fig. 5 summary — expert diversity (1 - mean off-diag cosine)",
+        &["Model", "Diversity"],
+    );
+    tab.row(&["ButterflyMoE trained".into(), format!("{div_bf:.3}")]);
+    tab.row(&["ButterflyMoE init".into(), format!("{div_init:.3}")]);
+    tab.row(&["Standard MoE trained".into(), format!("{div_std:.3}")]);
+    tab.print();
+    tab.write_csv(&out.join("fig5_similarity.csv"))?;
+    println!("\npaper: off-diag 0.08-0.14; diversity 0.87 (butterfly) vs 0.912");
+    println!("(standard) — a ~5% gap.  The claim under test: orbit experts do");
+    println!("not collapse (diversity stays close to the standard baseline).");
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Hot-path microbenchmarks — the §Perf harness.
+//!
+//! Measures the three native kernels the serving path is made of, across
+//! layouts and sizes, plus the gate and the full Alg.-1 mixture:
+//!
+//!   * ternary GEMV: 2-bit packed vs bitplane vs dense-f32 reference
+//!   * butterfly apply: by dimension and depth
+//!   * top-k gate routing
+//!   * end-to-end expert mixture (tokens/s)
+//!
+//! Run: `cargo bench --bench hotpath` — results feed EXPERIMENTS.md §Perf.
+
+use butterfly_moe::bench::{black_box, Bencher, Table};
+use butterfly_moe::butterfly::Butterfly;
+use butterfly_moe::moe::{ButterflyMoeLayer, GateNetwork, MoeLayer, StandardMoeLayer};
+use butterfly_moe::quant::ternary_quantize;
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::ternary::{BitplaneTernary, PackedTernary};
+use butterfly_moe::util::Rng;
+
+struct BenchProxy {
+    median: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let bencher = Bencher::default();
+    let mut rng = Rng::new(0x407);
+    let out = std::path::Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+
+    // ------------------------------------------------------------------
+    // ternary GEMV layouts (d_ff x d_model = 2048 x 512, paper shape)
+    // ------------------------------------------------------------------
+    let (dff, d) = (2048usize, 512usize);
+    let w = Tensor::rand_normal(&[dff, d], 0.05, &mut rng);
+    let tq = ternary_quantize(&w);
+    let packed = PackedTernary::from_quant(&tq);
+    let bitplane = BitplaneTernary::from_quant(&tq);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(1.0)).collect();
+    let mut y = vec![0.0f32; dff];
+
+    let mut t = Table::new(
+        "Ternary GEMV (2048x512), one token",
+        &["Layout", "Median", "GB/s (weight bits)", "vs dense f32"],
+    );
+    let dense_w = tq.dequantize();
+    let r_dense = bencher.run("dense f32", || {
+        for r in 0..dff {
+            let row = dense_w.row(r);
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                acc += row[c] * x[c];
+            }
+            y[r] = acc;
+        }
+        black_box(&y);
+    });
+    let r_packed = bencher.run("2-bit packed", || {
+        packed.gemv(&x, &mut y);
+        black_box(&y);
+    });
+    let r_bitplane = bencher.run("bitplane", || {
+        bitplane.gemv(&x, &mut y);
+        black_box(&y);
+    });
+    let r_sparse = bencher.run("bitplane sparse", || {
+        bitplane.gemv_sparse(&x, &mut y);
+        black_box(&y);
+    });
+    // batched: 16 tokens through one decode-amortized GEMM
+    let xb16: Vec<f32> = (0..16 * d).map(|_| rng.normal_f32(1.0)).collect();
+    let mut yb16 = vec![0.0f32; 16 * dff];
+    let r_gemm = bencher.run("bitplane gemm b16", || {
+        bitplane.gemm(&xb16, 16, &mut yb16);
+        black_box(&yb16);
+    });
+    let r_gemm_scaled = BenchProxy {
+        median: r_gemm.median_secs() / 16.0,
+    };
+    let weight_bits = (dff * d) as f64 * 2.0 / 8.0; // bytes touched (2-bit)
+    for (name, r, bytes) in [
+        ("dense f32", &r_dense, (dff * d * 4) as f64),
+        ("2-bit packed", &r_packed, weight_bits),
+        ("bitplane (branchless)", &r_bitplane, weight_bits),
+        ("bitplane (sparse walk)", &r_sparse, weight_bits),
+    ] {
+        t.row(&[
+            name.to_string(),
+            butterfly_moe::bench::format_secs(r.median_secs()),
+            format!("{:.2}", bytes / r.median_secs() / 1e9),
+            format!("{:.2}x", r_dense.median_secs() / r.median_secs()),
+        ]);
+    }
+    t.row(&[
+        "bitplane gemm (per token, b=16)".to_string(),
+        butterfly_moe::bench::format_secs(r_gemm_scaled.median),
+        format!("{:.2}", weight_bits / 16.0 / r_gemm_scaled.median / 1e9),
+        format!("{:.2}x", r_dense.median_secs() / r_gemm_scaled.median),
+    ]);
+    t.print();
+    t.write_csv(&out.join("hotpath_gemv.csv"))?;
+
+    // ------------------------------------------------------------------
+    // butterfly apply
+    // ------------------------------------------------------------------
+    let mut t = Table::new(
+        "Butterfly apply (one vector)",
+        &["d", "depth", "Median", "M rot-pairs/s"],
+    );
+    for d in [256usize, 512, 2048] {
+        for depth in [2usize, Butterfly::max_depth(d)] {
+            let b = Butterfly::random(d, depth, 0.5, &mut rng);
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal_f32(1.0)).collect();
+            let r = bencher.run(&format!("bfly d{d} l{depth}"), || {
+                b.apply(&mut v);
+                black_box(&v);
+            });
+            let pairs = (d / 2 * depth) as f64;
+            t.row(&[
+                d.to_string(),
+                depth.to_string(),
+                butterfly_moe::bench::format_secs(r.median_secs()),
+                format!("{:.1}", pairs / r.median_secs() / 1e6),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&out.join("hotpath_butterfly.csv"))?;
+
+    // ------------------------------------------------------------------
+    // gate + full mixture, butterfly vs standard (paper layer shape)
+    // ------------------------------------------------------------------
+    let batch = 16usize;
+    let gate = GateNetwork::new(Tensor::rand_normal(&[8, 512], 0.1, &mut rng), 2);
+    let xb = Tensor::rand_normal(&[batch, 512], 1.0, &mut rng);
+    let r_gate = bencher.run("gate route_batch", || {
+        black_box(gate.route_batch(&xb.data, batch));
+    });
+
+    let mut bf_layer = ButterflyMoeLayer::random(512, 2048, 8, 2, None, &mut rng);
+    let std_layer = StandardMoeLayer::random(512, 2048, 8, 2, &mut rng);
+    let mut h = vec![0.0f32; batch * 2048];
+    let r_bf = bencher.run("butterfly experts_forward", || {
+        bf_layer.experts_forward(&xb.data, batch, &mut h);
+        black_box(&h);
+    });
+    bf_layer.act_quant = true;
+    let r_bf_a8 = bencher.run("butterfly experts_forward a8", || {
+        bf_layer.experts_forward(&xb.data, batch, &mut h);
+        black_box(&h);
+    });
+    bf_layer.act_quant = false;
+    let r_std = bencher.run("standard experts_forward", || {
+        std_layer.experts_forward(&xb.data, batch, &mut h);
+        black_box(&h);
+    });
+
+    let mut t = Table::new(
+        "MoE layer hot path (d=512, d_ff=2048, 8 experts, top-2, batch 16)",
+        &["Stage", "Median", "tokens/s"],
+    );
+    for (name, r) in [
+        ("gate routing", &r_gate),
+        ("butterfly mixture (exact)", &r_bf),
+        ("butterfly mixture (W1.58A8)", &r_bf_a8),
+        ("standard mixture (dense f32)", &r_std),
+    ] {
+        t.row(&[
+            name.to_string(),
+            butterfly_moe::bench::format_secs(r.median_secs()),
+            format!("{:.0}", r.throughput(batch as f64)),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("hotpath_layer.csv"))?;
+    println!(
+        "\ngate overhead: {:.1}% of the butterfly mixture",
+        100.0 * r_gate.median_secs() / r_bf.median_secs()
+    );
+    Ok(())
+}

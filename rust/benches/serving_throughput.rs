@@ -1,0 +1,95 @@
+//! Serving throughput/latency bench: the coordinator over the native
+//! backend (edge scenario) under increasing load and across batching
+//! policies — the systems-side evaluation of the L3 contribution.
+//!
+//! Run: `cargo bench --bench serving_throughput`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::bench::Table;
+use butterfly_moe::coordinator::{Coordinator, NativeMoeBackend};
+use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::util::{stats, Rng};
+
+fn drive(
+    coord: &Coordinator,
+    rps: f64,
+    seconds: f64,
+    rng: &mut Rng,
+) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut next = 0.0f64;
+    while t0.elapsed().as_secs_f64() < seconds {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= next {
+            let prompt: Vec<i32> = (0..8).map(|_| rng.below(512) as i32).collect();
+            pending.push(coord.submit(prompt));
+            next += rng.exponential(rps);
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    let mut lats = Vec::with_capacity(pending.len());
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        lats.push(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (lats.len() as f64 / wall, lats)
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+    let mut rng = Rng::new(0x5EE);
+    let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut rng));
+
+    // load sweep at a fixed policy
+    let mut t = Table::new(
+        "Serving: offered load sweep (native backend, batch<=16, wait<=2ms)",
+        &["Offered rps", "Served rps", "p50 ms", "p95 ms", "p99 ms", "mean batch"],
+    );
+    for rps in [50.0f64, 200.0, 800.0] {
+        let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16));
+        let coord = Coordinator::start(backend, 16, Duration::from_millis(2), 2);
+        let (served, lats) = drive(&coord, rps, 3.0, &mut rng);
+        let snap = coord.metrics.snapshot();
+        t.row(&[
+            format!("{rps:.0}"),
+            format!("{served:.0}"),
+            format!("{:.2}", 1e3 * stats::percentile(&lats, 50.0)),
+            format!("{:.2}", 1e3 * stats::percentile(&lats, 95.0)),
+            format!("{:.2}", 1e3 * stats::percentile(&lats, 99.0)),
+            format!("{:.1}", snap.mean_batch_size),
+        ]);
+        coord.shutdown();
+    }
+    t.print();
+    t.write_csv(&out.join("serving_load_sweep.csv"))?;
+
+    // batching-policy ablation at fixed load
+    let mut t = Table::new(
+        "Serving: batching policy ablation (400 rps offered)",
+        &["max_batch", "max_wait ms", "Served rps", "p50 ms", "p99 ms", "mean batch"],
+    );
+    for (mb, mw) in [(1usize, 0u64), (4, 1), (16, 2), (16, 10)] {
+        let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16));
+        let coord = Coordinator::start(backend, mb, Duration::from_millis(mw), 2);
+        let (served, lats) = drive(&coord, 400.0, 3.0, &mut rng);
+        let snap = coord.metrics.snapshot();
+        t.row(&[
+            mb.to_string(),
+            mw.to_string(),
+            format!("{served:.0}"),
+            format!("{:.2}", 1e3 * stats::percentile(&lats, 50.0)),
+            format!("{:.2}", 1e3 * stats::percentile(&lats, 99.0)),
+            format!("{:.1}", snap.mean_batch_size),
+        ]);
+        coord.shutdown();
+    }
+    t.print();
+    t.write_csv(&out.join("serving_policy_ablation.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Table 2 — butterfly-depth ablation: params/expert, throughput
+//! (tokens/s) and speedup vs the full-depth (9-layer) stack.
+//!
+//! Paper setup: d=512, batch 16, depths {2,4,6,9}.  We report two
+//! measurements per depth on the native engine:
+//!
+//!   * the **rotation stage alone** (B(theta)^T then B(phi) per routed
+//!     token) — the cost the ablation actually varies, where the paper's
+//!     "fewer layers => faster" shape must show; and
+//!   * the **full Alg.-1 mixture** (gate + rotations + ternary GEMV) —
+//!     where we find the bitplane GEMV dominates at d=512 on CPU, so
+//!     end-to-end depth sensitivity is small (an honest finding recorded
+//!     in EXPERIMENTS.md; the paper's 1.9x presumably reflects a
+//!     rotation-bound GPU implementation).
+//!
+//! Run: `cargo bench --bench table2_layers`
+
+use std::path::Path;
+
+use butterfly_moe::bench::{black_box, Bencher, Table};
+use butterfly_moe::butterfly::Butterfly;
+use butterfly_moe::memmodel::{butterfly_bytes_depth, LayerShape};
+use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::util::{human_bytes, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+    let (d, n_experts, top_k, batch) = (512usize, 8usize, 2usize, 16usize);
+    let depths = [2usize, 4, 6, 9];
+
+    let mut rng = Rng::new(0x7AB1E2);
+    let x = Tensor::rand_normal(&[batch, d], 1.0, &mut rng);
+    let bencher = Bencher::default();
+
+    // Global warmup: get clocks/caches hot before any measured sweep so
+    // the first depth isn't penalized (observed 2x cold-start skew).
+    {
+        let warm = ButterflyMoeLayer::random(d, d, n_experts, top_k, None, &mut rng);
+        let mut h = vec![0.0f32; batch * d];
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            warm.experts_forward(&x.data, batch, &mut h);
+            black_box(&h);
+        }
+    }
+
+    struct Row {
+        depth: usize,
+        params: usize,
+        rot_tps: f64,
+        full_tps: f64,
+    }
+    let mut rows = Vec::new();
+    for &depth in &depths {
+        let layer = ButterflyMoeLayer::random(d, d, n_experts, top_k, Some(depth), &mut rng);
+        // rotation stage alone: k experts' theta^T + phi per token
+        let theta = Butterfly::random(d, depth, 0.5, &mut rng);
+        let phi = Butterfly::random(d, depth, 0.5, &mut rng);
+        let mut buf = x.data.clone();
+        let r_rot = bencher.run(&format!("rot d{depth}"), || {
+            for row in buf.chunks_exact_mut(d) {
+                for _ in 0..top_k {
+                    theta.apply_transpose(row);
+                    phi.apply(row);
+                }
+            }
+            black_box(&buf);
+        });
+        let mut h = vec![0.0f32; batch * d];
+        let r_full = bencher.run(&format!("full d{depth}"), || {
+            layer.experts_forward(&x.data, batch, &mut h);
+            black_box(&h);
+        });
+        rows.push(Row {
+            depth,
+            params: 2 * depth * d / 2,
+            rot_tps: r_rot.throughput(batch as f64),
+            full_tps: r_full.throughput(batch as f64),
+        });
+    }
+    let base_rot = rows.last().unwrap().rot_tps;
+    let base_full = rows.last().unwrap().full_tps;
+
+    let mut t = Table::new(
+        "Table 2 — butterfly-depth ablation (d=512, batch 16, top-2, native engine)",
+        &[
+            "Layers",
+            "Params/Expert",
+            "Rotation tok/s",
+            "Rot speedup",
+            "Full-layer tok/s",
+            "Full speedup",
+            "Expert mem (64E)",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.depth.to_string(),
+            r.params.to_string(),
+            format!("{:.0}", r.rot_tps),
+            format!("{:.2}x", r.rot_tps / base_rot),
+            format!("{:.0}", r.full_tps),
+            format!("{:.2}x", r.full_tps / base_full),
+            human_bytes(butterfly_bytes_depth(
+                64,
+                LayerShape { d_model: d, d_ff: d },
+                r.depth,
+            )),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("table2_layers.csv"))?;
+    println!("\npaper rows (T4 GPU, WikiText-2): 2->71594 tok/s (1.90x), 4->76026");
+    println!("(1.42x), 6->58495 (1.25x), 9->45383 (1.0x).  Shape check: the");
+    println!("rotation stage reproduces 'fewer layers => proportionally faster';");
+    println!("end-to-end, our bitplane ternary GEMV dominates at d=512 so the");
+    println!("full-layer column is depth-insensitive on this CPU testbed.");
+    Ok(())
+}

@@ -1,0 +1,293 @@
+//! Working implementations of the Table 1 comparator compression methods,
+//! applied to *real* expert weight tensors.
+//!
+//! The paper's Table 1 cites each method's published compression ratio;
+//! `memmodel::Method` reproduces those numbers analytically.  This module
+//! additionally *builds* a faithful-in-spirit version of each pipeline so
+//! the repo can measure real bytes and real reconstruction error on the
+//! same weights (bench `table1_compression` prints both):
+//!
+//! * [`moqe_compress`] — 2-bit weight-only groupwise quantization
+//!   (MoQE, Kim et al. 2023).
+//! * [`qmoe_compress`] — aggressive ternarization + entropy coding
+//!   (QMoE, Frantar & Alistarh 2023, modeled as ternary + DEFLATE; QMoE's
+//!   custom dictionary codec achieves sub-1-bit on *trained sparse*
+//!   weights — DEFLATE recovers most of that entropy gap).
+//! * [`puzzlemoe_compress`] — expert pair merging + per-expert sign/delta
+//!   masks (PuzzleMoE, Zhao et al. 2025, simplified).
+//! * [`mc_compress`] — mixed-precision assignment by expert importance
+//!   (Mixture Compressor, Huang et al. 2024, simplified).
+
+use std::io::Write as _;
+
+use crate::tensor::Tensor;
+
+/// Result of compressing a set of expert matrices.
+#[derive(Clone, Debug)]
+pub struct CompressionResult {
+    pub method: &'static str,
+    pub bytes: usize,
+    /// mean relative reconstruction MSE across experts
+    pub recon_error: f64,
+}
+
+impl CompressionResult {
+    pub fn ratio_vs_fp32(&self, experts: &[Tensor]) -> f64 {
+        let raw: usize = experts.iter().map(Tensor::nbytes).sum();
+        raw as f64 / self.bytes as f64
+    }
+}
+
+fn rel_mse(a: &Tensor, b: &Tensor) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&x, &y) in a.data.iter().zip(&b.data) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    num / den.max(1e-12)
+}
+
+// ---------------------------------------------------------------------------
+// MoQE: 2-bit groupwise
+// ---------------------------------------------------------------------------
+
+/// 2-bit quantization with per-group (row) absmax scaling: 4 levels
+/// {-1, -1/3, +1/3, +1} * scale.
+pub fn moqe_compress(experts: &[Tensor]) -> CompressionResult {
+    let mut bytes = 0usize;
+    let mut err = 0.0;
+    for w in experts {
+        let rows = w.shape[0];
+        let cols = w.shape[1];
+        let mut recon = Tensor::zeros(&w.shape);
+        for r in 0..rows {
+            let row = w.row(r);
+            let scale = row.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+            for (c, &v) in row.iter().enumerate() {
+                // quantize to nearest of {-1,-1/3,1/3,1}
+                let q = (v / scale).clamp(-1.0, 1.0);
+                let lvl = ((q + 1.0) * 1.5).round().clamp(0.0, 3.0); // 0..3
+                let deq = lvl / 1.5 - 1.0;
+                recon.data[r * cols + c] = deq * scale;
+            }
+            bytes += cols.div_ceil(4) + 2; // 2 bits/w + fp16 scale
+        }
+        err += rel_mse(&recon, w);
+    }
+    CompressionResult {
+        method: "MoQE (2-bit)",
+        bytes,
+        recon_error: err / experts.len() as f64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QMoE: ternary + entropy coding
+// ---------------------------------------------------------------------------
+
+pub fn qmoe_compress(experts: &[Tensor]) -> CompressionResult {
+    let mut bytes = 0usize;
+    let mut err = 0.0;
+    for w in experts {
+        let tq = crate::quant::ternary_quantize(w);
+        let packed = crate::ternary::PackedTernary::from_quant(&tq);
+        // DEFLATE the 2-bit stream: trained ternary weights are ~1/3
+        // zeros, so entropy < 2 bits/weight.
+        let mut enc =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::best());
+        enc.write_all(&packed.data).unwrap();
+        let compressed = enc.finish().unwrap();
+        bytes += compressed.len() + 4;
+        err += rel_mse(&tq.dequantize(), w);
+    }
+    CompressionResult {
+        method: "QMoE",
+        bytes,
+        recon_error: err / experts.len() as f64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PuzzleMoE: merge expert pairs + per-expert 3-bit delta
+// ---------------------------------------------------------------------------
+
+pub fn puzzlemoe_compress(experts: &[Tensor]) -> CompressionResult {
+    let n = experts.len();
+    let mut bytes = 0usize;
+    let mut err = 0.0;
+    let cols = experts[0].shape[1];
+    for pair in experts.chunks(2) {
+        let a = &pair[0];
+        if pair.len() == 1 {
+            bytes += a.len() * 2; // unpaired expert kept at fp16
+            continue;
+        }
+        let b = &pair[1];
+        // shared mean at fp16
+        bytes += a.len() * 2;
+        // per-expert 3-bit delta codes
+        bytes += 2 * (a.len() * 3).div_ceil(8);
+        // reconstruction: mean + 8-level delta of (w - mean)
+        let mut recon_a = Tensor::zeros(&a.shape);
+        let mut recon_b = Tensor::zeros(&b.shape);
+        let mut delta_scale = 0.0f32;
+        for i in 0..a.len() {
+            delta_scale = delta_scale.max((a.data[i] - b.data[i]).abs() / 2.0);
+        }
+        let delta_scale = delta_scale.max(1e-12);
+        for i in 0..a.len() {
+            let mean = 0.5 * (a.data[i] + b.data[i]);
+            for (src, dst) in [(a, &mut recon_a), (b, &mut recon_b)] {
+                let d = src.data[i] - mean;
+                let lvl = ((d / delta_scale + 1.0) * 3.5).round().clamp(0.0, 7.0);
+                let deq = (lvl / 3.5 - 1.0) * delta_scale;
+                dst.data[i] = mean + deq;
+            }
+        }
+        let _ = cols;
+        err += rel_mse(&recon_a, a) + rel_mse(&recon_b, b);
+    }
+    CompressionResult {
+        method: "PuzzleMoE",
+        bytes,
+        recon_error: err / n as f64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixture Compressor: mixed precision by importance
+// ---------------------------------------------------------------------------
+
+/// Importance = expert weight-norm rank; top third gets 4 bits, middle
+/// 3 bits, rest 2 bits (avg ~2.5-3 bits as MC reports ~2.54).
+pub fn mc_compress(experts: &[Tensor]) -> CompressionResult {
+    let n = experts.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = experts
+        .iter()
+        .map(|w| w.data.iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let mut bits = vec![2u32; n];
+    for (rank, &e) in order.iter().enumerate() {
+        bits[e] = if rank < n / 3 {
+            4
+        } else if rank < 2 * n / 3 {
+            3
+        } else {
+            2
+        };
+    }
+    let mut bytes = 0usize;
+    let mut err = 0.0;
+    for (w, &b) in experts.iter().zip(&bits) {
+        bytes += (w.len() * b as usize).div_ceil(8) + 2 * w.shape[0]; // + row scales
+        // uniform quantizer at b bits, per-row absmax
+        let levels = (1u32 << b) as f32 - 1.0;
+        let rows = w.shape[0];
+        let cols = w.shape[1];
+        let mut recon = Tensor::zeros(&w.shape);
+        for r in 0..rows {
+            let row = w.row(r);
+            let scale = row.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+            for (c, &v) in row.iter().enumerate() {
+                let q = ((v / scale + 1.0) / 2.0 * levels).round().clamp(0.0, levels);
+                recon.data[r * cols + c] = (q / levels * 2.0 - 1.0) * scale;
+            }
+        }
+        err += rel_mse(&recon, w);
+    }
+    CompressionResult {
+        method: "MC",
+        bytes,
+        recon_error: err / n as f64,
+    }
+}
+
+/// ButterflyMoE's own measured storage for the same expert count: packed
+/// substrate + fp16 angles (the real deployable bytes, not the formula).
+pub fn butterfly_measured_bytes(
+    n_experts: usize,
+    d_model: usize,
+    d_ff: usize,
+    packed_substrate_bytes: usize,
+) -> usize {
+    let angles = d_model / 2 * crate::util::log2_exact(d_model) as usize
+        + d_ff / 2 * crate::util::log2_exact(d_ff) as usize;
+    packed_substrate_bytes + n_experts * angles * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn experts(n: usize, rows: usize, cols: usize) -> Vec<Tensor> {
+        let mut rng = Rng::new(42);
+        (0..n)
+            .map(|_| Tensor::rand_normal(&[rows, cols], 0.05, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn moqe_is_about_16x() {
+        let e = experts(4, 64, 128);
+        let r = moqe_compress(&e);
+        let ratio = r.ratio_vs_fp32(&e);
+        // 2 bits + scales ~ 15-16x vs fp32
+        assert!(ratio > 12.0 && ratio < 17.0, "ratio {ratio}");
+        // absmax row scaling of gaussian weights at 4 levels: ~0.3 rel MSE
+        assert!(r.recon_error < 0.5, "err {}", r.recon_error);
+    }
+
+    #[test]
+    fn qmoe_beats_2bit_packing() {
+        let e = experts(4, 64, 128);
+        let r = qmoe_compress(&e);
+        let packed_2bit: usize = e.iter().map(|w| w.len() / 4).sum();
+        assert!(r.bytes < packed_2bit, "{} vs {}", r.bytes, packed_2bit);
+        let ratio = r.ratio_vs_fp32(&e);
+        assert!(ratio > 16.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn puzzlemoe_is_about_2x_to_4x() {
+        let e = experts(4, 64, 128);
+        let r = puzzlemoe_compress(&e);
+        let ratio = r.ratio_vs_fp32(&e);
+        assert!(ratio > 1.5 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn mc_between_moqe_and_puzzle() {
+        let e = experts(6, 64, 128);
+        let mc = mc_compress(&e).ratio_vs_fp32(&e);
+        let pz = puzzlemoe_compress(&e).ratio_vs_fp32(&e);
+        assert!(mc > pz, "mc {mc} vs puzzle {pz}");
+    }
+
+    #[test]
+    fn better_precision_less_error() {
+        let e = experts(6, 32, 64);
+        let mc = mc_compress(&e);
+        let qm = qmoe_compress(&e);
+        // ternary (1.58 bit) loses more than mixed 2-4 bit
+        assert!(qm.recon_error > mc.recon_error);
+    }
+
+    #[test]
+    fn butterfly_measured_smaller_than_all() {
+        let e = experts(8, 64, 128);
+        let sub = 64 * 128 / 4; // 2-bit packed substrate
+        let bf = butterfly_measured_bytes(8, 64, 128, sub);
+        for r in [
+            moqe_compress(&e),
+            qmoe_compress(&e),
+            puzzlemoe_compress(&e),
+            mc_compress(&e),
+        ] {
+            assert!(bf < r.bytes, "{}: {} vs butterfly {}", r.method, r.bytes, bf);
+        }
+    }
+}

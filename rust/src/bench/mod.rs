@@ -1,0 +1,236 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set —
+//! DESIGN.md §4).  Warmup + calibrated iteration count + robust stats,
+//! plus the table printers every paper-table bench target uses.
+
+pub mod paper_tables;
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// per-iteration wall seconds
+    pub samples: Vec<f64>,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mean_secs(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn p95_secs(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+    pub fn stddev_secs(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    /// items/sec given items processed per iteration (e.g. tokens).
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median_secs()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} {:>12} {:>10}",
+            self.name,
+            format_secs(self.median_secs()),
+            format_secs(self.p95_secs()),
+            format!("±{:.1}%", 100.0 * self.stddev_secs() / self.median_secs().max(1e-12)),
+        )
+    }
+}
+
+pub fn format_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Benchmark runner: calibrates an iteration count so each sample takes
+/// ≥ `min_sample_secs`, then records `n_samples` samples.
+pub struct Bencher {
+    pub warmup_secs: f64,
+    pub min_sample_secs: f64,
+    pub n_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_secs: 0.2,
+            min_sample_secs: 0.05,
+            n_samples: 12,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_secs: 0.05,
+            min_sample_secs: 0.02,
+            n_samples: 6,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0usize;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.min_sample_secs / per_iter).ceil() as usize).max(1);
+
+        let mut samples = Vec::with_capacity(self.n_samples);
+        for _ in 0..self.n_samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// Black-box: defeat dead-code elimination of a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+// ---------------------------------------------------------------------------
+// Table printing (paper-style rows)
+// ---------------------------------------------------------------------------
+
+/// Fixed-width markdown-ish table writer used by all paper-table benches.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n## {}", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    /// CSV alongside the pretty print (for EXPERIMENTS.md tooling).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup_secs: 0.01,
+            min_sample_secs: 0.002,
+            n_samples: 4,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.median_secs() > 0.0);
+        assert_eq!(r.samples.len(), 4);
+        assert!(r.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn format_secs_units() {
+        assert!(format_secs(2e-9).contains("ns"));
+        assert!(format_secs(2e-6).contains("µs"));
+        assert!(format_secs(2e-3).contains("ms"));
+        assert!(format_secs(2.0).contains(" s"));
+    }
+
+    #[test]
+    fn table_prints_and_csvs() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        t.print();
+        let p = std::env::temp_dir().join("bmoe_table_test.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,x\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Analytic paper tables/figures (the ones derivable from the memory and
+//! energy models alone).  Shared by `bmoe tables` and the bench targets;
+//! each function prints paper-style rows and writes a CSV.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::devices::ALL_DEVICES;
+use crate::energy::table3_row;
+use crate::memmodel::{
+    asymptotic_ratio, butterfly_bytes, per_expert_bytes, substrate_bytes, LayerShape, Method,
+    ALL_METHODS,
+};
+use crate::util::human_bytes;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+/// Table 1: compression comparison at 64 experts (d=512, d_ff=2048).
+pub fn table1(out: &Path) -> Result<Table> {
+    let s = LayerShape::paper();
+    let n = 64;
+    let mut t = Table::new(
+        "Table 1 — MoE compression methods (64 experts, d=512, d_ff=2048)",
+        &["Method", "Memory Scaling", "Compression (64)", "Edge Deployment"],
+    );
+    for m in ALL_METHODS {
+        t.row(&[
+            m.name().to_string(),
+            m.scaling().to_string(),
+            format!("{:.1}x", m.ratio(n, s)),
+            human_bytes(m.bytes(n, s)),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("table1_compression.csv"))?;
+    println!(
+        "  (Prop. 1 formula at 64 experts: substrate {} + 64 x {} angles = {}; paper prints 1.9 MB / '150x')",
+        human_bytes(substrate_bytes(s)),
+        human_bytes(per_expert_bytes(s)),
+        human_bytes(butterfly_bytes(64, s)),
+    );
+    Ok(t)
+}
+
+/// Device deployability table: max experts per device per method.
+pub fn table_devices(out: &Path) -> Result<Table> {
+    let s = LayerShape::paper();
+    let mut t = Table::new(
+        "Table (devices) — max experts within device memory budget",
+        &["Method", "RPi 5", "Jetson", "ESP32"],
+    );
+    for m in [
+        Method::StandardMoe,
+        Method::Qmoe,
+        Method::Moqe,
+        Method::ButterflyMoe,
+    ] {
+        let cells: Vec<String> = ALL_DEVICES
+            .iter()
+            .map(|d| d.max_experts(m, s).to_string())
+            .collect();
+        t.row(&[
+            m.name().to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("table_devices.csv"))?;
+    Ok(t)
+}
+
+/// Table 3: energy per inference across expert counts.
+pub fn table3(out: &Path) -> Result<Table> {
+    let s = LayerShape::paper();
+    let mut t = Table::new(
+        "Table 3 — energy cost per inference (d=512, d_ff=2048, top-2)",
+        &["Experts", "Standard MoE (nJ)", "ButterflyMoE (nJ)", "Savings (%)"],
+    );
+    for n in [8usize, 16, 32, 64, 128, 256] {
+        let r = table3_row(n, 2, s);
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", r.standard_nj),
+            format!("{:.2}", r.butterfly_nj),
+            format!("{:.1}", r.savings_pct),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("table3_energy.csv"))?;
+    Ok(t)
+}
+
+/// Fig. 3: memory vs expert count series (MB), standard vs butterfly.
+pub fn fig3(out: &Path) -> Result<Table> {
+    let s = LayerShape::paper();
+    let mut t = Table::new(
+        "Fig. 3 — memory vs expert count (d=512, d_ff=2048)",
+        &["Experts", "Standard (MB)", "ButterflyMoE (MB)", "Ratio"],
+    );
+    let mut n = 8usize;
+    while n <= 1024 {
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", Method::StandardMoe.bytes(n, s) / MIB),
+            format!("{:.3}", butterfly_bytes(n, s) / MIB),
+            format!("{:.1}x", Method::ButterflyMoe.ratio(n, s)),
+        ]);
+        n *= 2;
+    }
+    t.print();
+    println!(
+        "  asymptotic ratio (Prop. 2): {:.1}x",
+        asymptotic_ratio(s)
+    );
+    t.write_csv(&out.join("fig3_memory.csv"))?;
+    Ok(t)
+}
+
+/// Print everything (the `bmoe tables` command).
+pub fn print_all(out: &Path) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    table1(out)?;
+    table_devices(out)?;
+    table3(out)?;
+    fig3(out)?;
+    println!("\nCSV output in {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let dir = std::env::temp_dir().join("bmoe_tables_test");
+        print_all(&dir).unwrap();
+        for f in [
+            "table1_compression.csv",
+            "table_devices.csv",
+            "table3_energy.csv",
+            "fig3_memory.csv",
+        ] {
+            assert!(dir.join(f).exists(), "{f}");
+        }
+    }
+
+    #[test]
+    fn table1_butterfly_row_dominates() {
+        let dir = std::env::temp_dir().join("bmoe_tables_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = table1(&dir).unwrap();
+        let _ = t;
+    }
+}

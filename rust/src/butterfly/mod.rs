@@ -1,0 +1,281 @@
+//! Native butterfly transforms — the L3 mirror of
+//! `python/compile/butterfly_lib.py` (same angle layout, same stage
+//! order; parity-tested against the jax oracle through PJRT).
+//!
+//! A transform over `d = 2^m` is `depth <= m` Givens stages; stage `l`
+//! (stride `s = 2^l`) pairs coordinates `(lo, lo + s)` where
+//! `lo = blk*2s + off` for angle index `j = blk*s + off`.
+//!
+//! `apply` runs in O(d·depth) with two fused multiply-adds per pair — the
+//! paper's O(d log d) expert-synthesis primitive.  Angles are stored with
+//! precomputed (cos, sin) so the hot path does no trig.
+
+use crate::util::{log2_exact, Rng};
+
+/// Butterfly parameters: raw angles plus a (cos, sin) table refreshed on
+/// mutation.  `d/2 * depth` angles — eq. (3)'s storage.
+#[derive(Clone, Debug)]
+pub struct Butterfly {
+    pub d: usize,
+    pub depth: usize,
+    /// angles[l][j], layout as documented above; len = depth * d/2
+    pub angles: Vec<f32>,
+    /// interleaved (cos, sin) per angle, same indexing
+    cs: Vec<(f32, f32)>,
+}
+
+impl Butterfly {
+    pub fn max_depth(d: usize) -> usize {
+        log2_exact(d) as usize
+    }
+
+    /// Identity transform (all angles zero).
+    pub fn identity(d: usize, depth: usize) -> Self {
+        assert!(depth >= 1 && depth <= Self::max_depth(d).max(1));
+        let n = depth * d / 2;
+        Butterfly {
+            d,
+            depth,
+            angles: vec![0.0; n],
+            cs: vec![(1.0, 0.0); n],
+        }
+    }
+
+    /// Near-identity random init, eq. (7): angles ~ N(0, std^2).
+    pub fn random(d: usize, depth: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut b = Self::identity(d, depth);
+        rng.fill_normal(&mut b.angles, std);
+        b.refresh();
+        b
+    }
+
+    /// Build from an angle slice laid out [depth, d/2] row-major (the
+    /// layout of the exported `theta`/`phi` tensors).
+    pub fn from_angles(d: usize, depth: usize, angles: &[f32]) -> Self {
+        assert_eq!(angles.len(), depth * d / 2, "angle count mismatch");
+        let mut b = Butterfly {
+            d,
+            depth,
+            angles: angles.to_vec(),
+            cs: Vec::new(),
+        };
+        b.refresh();
+        b
+    }
+
+    /// Recompute the (cos, sin) table after editing `angles`.
+    pub fn refresh(&mut self) {
+        self.cs = self.angles.iter().map(|&a| (a.cos(), a.sin())).collect();
+    }
+
+    /// Parameter count (what Table 2's "Params/Expert" counts per transform).
+    pub fn n_params(&self) -> usize {
+        self.angles.len()
+    }
+
+    /// Bytes when angles are stored FP16 (Prop. 1 memory accounting).
+    pub fn bytes_fp16(&self) -> usize {
+        self.n_params() * 2
+    }
+
+    /// In-place forward apply to one vector `x[d]`: x <- B x.
+    pub fn apply(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        for l in 0..self.depth {
+            self.stage(x, l, false);
+        }
+    }
+
+    /// In-place transpose (= inverse) apply: x <- B^T x.
+    pub fn apply_transpose(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        for l in (0..self.depth).rev() {
+            self.stage(x, l, true);
+        }
+    }
+
+    #[inline]
+    fn stage(&self, x: &mut [f32], l: usize, transpose: bool) {
+        let stride = 1usize << l;
+        let half = self.d / 2;
+        let table = &self.cs[l * half..(l + 1) * half];
+        let mut j = 0;
+        let mut base = 0;
+        // blocks of 2*stride; within a block, `stride` adjacent pairs
+        while base < self.d {
+            for off in 0..stride {
+                let lo = base + off;
+                let hi = lo + stride;
+                let (c, s0) = table[j];
+                let s = if transpose { -s0 } else { s0 };
+                let a = x[lo];
+                let b = x[hi];
+                x[lo] = c * a - s * b;
+                x[hi] = s * a + c * b;
+                j += 1;
+            }
+            base += 2 * stride;
+        }
+    }
+
+    /// Batched apply over rows of a (rows, d) matrix.
+    pub fn apply_batch(&self, x: &mut [f32]) {
+        assert_eq!(x.len() % self.d, 0);
+        for row in x.chunks_exact_mut(self.d) {
+            self.apply(row);
+        }
+    }
+
+    pub fn apply_transpose_batch(&self, x: &mut [f32]) {
+        assert_eq!(x.len() % self.d, 0);
+        for row in x.chunks_exact_mut(self.d) {
+            self.apply_transpose(row);
+        }
+    }
+
+    /// Materialize the dense matrix (tests/analysis only).
+    pub fn to_matrix(&self) -> Vec<f32> {
+        let d = self.d;
+        let mut m = vec![0.0f32; d * d];
+        for col in 0..d {
+            let mut e = vec![0.0f32; d];
+            e[col] = 1.0;
+            self.apply(&mut e);
+            for row in 0..d {
+                m[row * d + col] = e[row];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_bfly(d: usize, depth: usize, seed: u64) -> Butterfly {
+        let mut rng = Rng::new(seed);
+        Butterfly::random(d, depth, 0.7, &mut rng)
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let b = Butterfly::identity(8, 3);
+        let mut x = vec![1., 2., 3., 4., 5., 6., 7., 8.];
+        let orig = x.clone();
+        b.apply(&mut x);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn transpose_inverts() {
+        for d in [2usize, 4, 16, 64, 512] {
+            let b = rand_bfly(d, Butterfly::max_depth(d), d as u64);
+            let mut rng = Rng::new(99);
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32(1.0)).collect();
+            let orig = x.clone();
+            b.apply(&mut x);
+            b.apply_transpose(&mut x);
+            for (a, o) in x.iter().zip(&orig) {
+                assert!((a - o).abs() < 1e-4, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let d = 64;
+        let b = rand_bfly(d, 6, 5);
+        let mut rng = Rng::new(1);
+        let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32(2.0)).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        b.apply(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn matrix_is_orthogonal() {
+        let d = 16;
+        let b = rand_bfly(d, 4, 7);
+        let m = b.to_matrix();
+        // M M^T = I
+        for i in 0..d {
+            for j in 0..d {
+                let mut acc = 0.0f32;
+                for k in 0..d {
+                    acc += m[i * d + k] * m[j * d + k];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((acc - want).abs() < 1e-5, "({i},{j})={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_depth_param_count() {
+        // Table 2: d=512, both transforms counted at d=512 ->
+        // params/expert = 2 * depth * 256
+        for (depth, want) in [(2usize, 1024usize), (4, 2048), (6, 3072), (9, 4608)] {
+            let b = Butterfly::identity(512, depth);
+            assert_eq!(2 * b.n_params(), want);
+        }
+    }
+
+    #[test]
+    fn single_stage_stride_one_rotates_adjacent_pairs() {
+        let mut b = Butterfly::identity(4, 1);
+        b.angles[0] = std::f32::consts::FRAC_PI_2; // rotate pair (0,1) by 90°
+        b.refresh();
+        let mut x = vec![1.0, 0.0, 1.0, 0.0];
+        b.apply(&mut x);
+        // pair (0,1): (1,0) -> (0,1); pair (2,3) untouched angle=0
+        assert!((x[0] - 0.0).abs() < 1e-6 && (x[1] - 1.0).abs() < 1e-6);
+        assert!((x[2] - 1.0).abs() < 1e-6 && (x[3] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stage_stride_two_pairs_across() {
+        let mut b = Butterfly::identity(4, 2);
+        // zero stage 0; stage 1 (stride 2) pairs (0,2) and (1,3)
+        b.angles[2] = std::f32::consts::FRAC_PI_2;
+        b.refresh();
+        let mut x = vec![1.0, 0.0, 0.0, 0.0];
+        b.apply(&mut x);
+        assert!((x[0]).abs() < 1e-6 && (x[2] - 1.0).abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let d = 32;
+        let b = rand_bfly(d, 5, 11);
+        let mut rng = Rng::new(2);
+        let rows = 7;
+        let mut batch: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32(1.0)).collect();
+        let singles: Vec<Vec<f32>> = batch
+            .chunks_exact(d)
+            .map(|r| {
+                let mut v = r.to_vec();
+                b.apply(&mut v);
+                v
+            })
+            .collect();
+        b.apply_batch(&mut batch);
+        for (i, s) in singles.iter().enumerate() {
+            assert_eq!(&batch[i * d..(i + 1) * d], &s[..]);
+        }
+    }
+
+    #[test]
+    fn from_angles_roundtrip() {
+        let d = 8;
+        let depth = 3;
+        let src = rand_bfly(d, depth, 13);
+        let b2 = Butterfly::from_angles(d, depth, &src.angles);
+        let mut x = vec![0.3f32; d];
+        let mut y = x.clone();
+        src.apply(&mut x);
+        b2.apply(&mut y);
+        assert_eq!(x, y);
+    }
+}

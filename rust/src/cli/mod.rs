@@ -1,0 +1,152 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline vendor
+//! set).  Supports `bmoe <subcommand> [--flag value] [--switch] [key=value]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    /// bare key=value overrides (fed to RuntimeConfig::set)
+    pub overrides: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                    && !is_switch(name)
+                {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if let Some((k, v)) = arg.split_once('=') {
+                out.overrides.push((k.to_string(), v.to_string()));
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Flags that never consume a value (so `--quick train` parses right).
+fn is_switch(name: &str) -> bool {
+    matches!(
+        name,
+        "quick" | "verbose" | "help" | "csv" | "paper" | "native" | "pjrt" | "no-warmup"
+    )
+}
+
+pub const USAGE: &str = "\
+bmoe — ButterflyMoE coordinator / experiment driver
+
+USAGE: bmoe <COMMAND> [--flag value] [key=value overrides]
+
+COMMANDS:
+  quickstart            load artifacts, run one forward, print memory stats
+  train                 train a config via the AOT train-step artifact
+  eval                  evaluate a checkpoint's CE loss on held-out batches
+  serve                 start the TCP serving coordinator
+  bench-client          drive a running server with a synthetic load
+  tables                regenerate every paper table/figure (analytic ones)
+  info                  print artifact manifest summary
+
+COMMON FLAGS:
+  --artifacts DIR       artifacts directory (default: artifacts)
+  --config NAME         model preset (tiny|tiny_static|tiny_standard|small...)
+  --steps N  --lr F     training options
+  --port P --workers N  serving options
+  --out DIR             output directory for CSV/checkpoints
+
+Any bare key=value is applied to the runtime config (see config/mod.rs).";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config tiny --steps 100 --quick lr=0.01");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.flag("config"), Some("tiny"));
+        assert_eq!(a.flag("steps"), Some("100"));
+        assert!(a.has_switch("quick"));
+        assert_eq!(a.overrides, vec![("lr".to_string(), "0.01".to_string())]);
+    }
+
+    #[test]
+    fn eq_style_flags() {
+        let a = parse("serve --port=8080");
+        assert_eq!(a.flag("port"), Some("8080"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("tables --csv");
+        assert!(a.has_switch("csv"));
+    }
+
+    #[test]
+    fn flag_parse_typed() {
+        let a = parse("train --steps 42");
+        assert_eq!(a.flag_parse::<usize>("steps").unwrap(), Some(42));
+        assert_eq!(a.flag_parse::<usize>("missing").unwrap(), None);
+        let bad = parse("train --steps abc");
+        assert!(bad.flag_parse::<usize>("steps").is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("eval ckpt1 ckpt2");
+        assert_eq!(a.positional, vec!["ckpt1", "ckpt2"]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Configuration system: model presets (kept in lockstep with
+//! `python/compile/configs.py` — the artifact manifest carries the python
+//! side, and `ModelConfig::from_manifest` cross-checks), runtime options,
+//! and a small `key=value` config-file parser.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::Json;
+
+/// Expert parameterization (mirrors configs.py `arch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Butterfly,
+    Standard,
+    Dense,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "butterfly" => Arch::Butterfly,
+            "standard" => Arch::Standard,
+            "dense" => Arch::Dense,
+            _ => bail!("unknown arch '{s}'"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Butterfly => "butterfly",
+            Arch::Standard => "standard",
+            Arch::Dense => "dense",
+        }
+    }
+}
+
+/// Model hyperparameters (mirror of python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub seq_len: usize,
+    pub bfly_depth: Option<usize>,
+    pub arch: Arch,
+    pub learn_rotations: bool,
+    pub balance_lambda: f64,
+}
+
+impl ModelConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.d_model.is_power_of_two() || !self.d_ff.is_power_of_two() {
+            bail!("d_model/d_ff must be powers of two (butterfly constraint)");
+        }
+        if self.top_k == 0 || self.top_k > self.n_experts.max(1) {
+            bail!("top_k out of range");
+        }
+        Ok(())
+    }
+
+    /// Parse the config dict embedded in `artifacts/manifest.json`.
+    pub fn from_manifest(name: &str, j: &Json) -> Result<ModelConfig> {
+        let get = |k: &str| -> Result<&Json> {
+            j.get(k).with_context(|| format!("config '{name}' missing key {k}"))
+        };
+        let cfg = ModelConfig {
+            name: name.to_string(),
+            vocab: get("vocab")?.as_usize().context("vocab")?,
+            d_model: get("d_model")?.as_usize().context("d_model")?,
+            d_ff: get("d_ff")?.as_usize().context("d_ff")?,
+            n_heads: get("n_heads")?.as_usize().context("n_heads")?,
+            n_blocks: get("n_blocks")?.as_usize().context("n_blocks")?,
+            n_experts: get("n_experts")?.as_usize().context("n_experts")?,
+            top_k: get("top_k")?.as_usize().context("top_k")?,
+            seq_len: get("seq_len")?.as_usize().context("seq_len")?,
+            bfly_depth: match get("bfly_depth")? {
+                Json::Null => None,
+                v => Some(v.as_usize().context("bfly_depth")?),
+            },
+            arch: Arch::parse(get("arch")?.as_str().context("arch")?)?,
+            learn_rotations: get("learn_rotations")?.as_bool().unwrap_or(true),
+            balance_lambda: get("balance_lambda")?.as_f64().unwrap_or(0.01),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn layer_shape(&self) -> crate::memmodel::LayerShape {
+        crate::memmodel::LayerShape {
+            d_model: self.d_model,
+            d_ff: self.d_ff,
+        }
+    }
+}
+
+/// Runtime / launcher options, parsed from CLI flags or a config file.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    /// artifacts directory
+    pub artifacts_dir: String,
+    /// config preset name to serve/train
+    pub config: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// dynamic batcher: flush when this many requests are queued
+    pub max_batch: usize,
+    /// dynamic batcher: flush after this many milliseconds regardless
+    pub max_wait_ms: u64,
+    pub workers: usize,
+    pub port: u16,
+    pub checkpoint_every: usize,
+    pub out_dir: String,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            artifacts_dir: "artifacts".into(),
+            config: "tiny".into(),
+            steps: 200,
+            lr: 1e-3,
+            warmup_steps: 20,
+            seed: 0,
+            max_batch: 16,
+            max_wait_ms: 5,
+            workers: 2,
+            port: 7070,
+            checkpoint_every: 100,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Apply `key=value` overrides (from CLI or file lines).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "config" => self.config = value.into(),
+            "steps" => self.steps = value.parse().context("steps")?,
+            "lr" => self.lr = value.parse().context("lr")?,
+            "warmup_steps" => self.warmup_steps = value.parse().context("warmup_steps")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "max_batch" => self.max_batch = value.parse().context("max_batch")?,
+            "max_wait_ms" => self.max_wait_ms = value.parse().context("max_wait_ms")?,
+            "workers" => self.workers = value.parse().context("workers")?,
+            "port" => self.port = value.parse().context("port")?,
+            "checkpoint_every" => {
+                self.checkpoint_every = value.parse().context("checkpoint_every")?
+            }
+            "out_dir" => self.out_dir = value.into(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a config file of `key = value` lines ('#' comments allowed).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{}:{}: expected key=value", path.display(), lineno + 1))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse all configs from a manifest.
+pub fn configs_from_manifest(manifest: &Json) -> Result<BTreeMap<String, ModelConfig>> {
+    let obj = manifest
+        .get("configs")
+        .and_then(Json::as_obj)
+        .context("manifest missing configs")?;
+    obj.iter()
+        .map(|(name, j)| ModelConfig::from_manifest(name, j).map(|c| (name.clone(), c)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_parse_roundtrip() {
+        for a in [Arch::Butterfly, Arch::Standard, Arch::Dense] {
+            assert_eq!(Arch::parse(a.name()).unwrap(), a);
+        }
+        assert!(Arch::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn manifest_config_parses() {
+        let j = Json::parse(
+            r#"{"vocab":512,"d_model":64,"d_ff":256,"n_heads":4,"n_blocks":2,
+                "n_experts":4,"top_k":2,"seq_len":32,"bfly_depth":null,
+                "arch":"butterfly","learn_rotations":true,"balance_lambda":0.01,
+                "dropout":0.0,"name":"tiny"}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest("tiny", &j).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.arch, Arch::Butterfly);
+        assert_eq!(c.bfly_depth, None);
+    }
+
+    #[test]
+    fn manifest_config_rejects_non_pow2() {
+        let j = Json::parse(
+            r#"{"vocab":512,"d_model":48,"d_ff":256,"n_heads":4,"n_blocks":2,
+                "n_experts":4,"top_k":2,"seq_len":32,"bfly_depth":null,
+                "arch":"butterfly","learn_rotations":true,"balance_lambda":0.01}"#,
+        )
+        .unwrap();
+        assert!(ModelConfig::from_manifest("bad", &j).is_err());
+    }
+
+    #[test]
+    fn runtime_overrides() {
+        let mut r = RuntimeConfig::default();
+        r.set("steps", "500").unwrap();
+        r.set("lr", "0.01").unwrap();
+        r.set("config", "small").unwrap();
+        assert_eq!(r.steps, 500);
+        assert_eq!(r.lr, 0.01);
+        assert!(r.set("nope", "1").is_err());
+        assert!(r.set("steps", "abc").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let dir = std::env::temp_dir().join("bmoe_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.cfg");
+        std::fs::write(&p, "# comment\nsteps = 42\n\nlr=0.5 # inline\n").unwrap();
+        let mut r = RuntimeConfig::default();
+        r.load_file(&p).unwrap();
+        assert_eq!(r.steps, 42);
+        assert_eq!(r.lr, 0.5);
+    }
+}

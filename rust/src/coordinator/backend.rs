@@ -1,0 +1,269 @@
+//! Execution backends for the coordinator.
+//!
+//! * [`PjrtLmBackend`] — the full AOT-compiled LM (L2 graph with the L1
+//!   Pallas kernels inside).  Each flush is padded to the smallest
+//!   compiled batch bucket; returns argmax next-token per sequence.
+//! * [`NativeMoeBackend`] — the pure-rust edge engine serving a single
+//!   ButterflyMoE layer (the Alg.-1 hot path); used for edge-deployment
+//!   demos and throughput ablations where no LM wrapper is wanted.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::moe::MoeLayer;
+use crate::runtime::{spawn_engine_thread, EngineHandle, Manifest, Value};
+use crate::tensor::IntTensor;
+
+/// A serving backend turns a batch of token prompts into next tokens.
+pub trait Backend: Send + Sync {
+    /// Max sequences per forward (the largest compiled bucket).
+    fn max_batch(&self) -> usize;
+    /// Model context length; prompts are right-aligned / truncated to it.
+    fn seq_len(&self) -> usize;
+    /// Greedy next token for each prompt.
+    fn forward(&self, prompts: &[Vec<i32>]) -> Result<Vec<i32>>;
+    fn name(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct PjrtLmBackend {
+    handle: Arc<EngineHandle>,
+    config: String,
+    params: Vec<Value>,
+    /// (batch size, artifact name), ascending
+    buckets: Vec<(usize, String)>,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl PjrtLmBackend {
+    /// Read the manifest's `lm_logits` buckets and params (init export or
+    /// a trained checkpoint), then start the engine's execution thread.
+    /// Returns the backend plus the engine thread's join handle.
+    pub fn start(
+        artifacts_dir: &std::path::Path,
+        config: &str,
+        checkpoint: Option<&std::path::Path>,
+    ) -> Result<(Self, std::thread::JoinHandle<()>)> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mcfg = manifest.config(config)?.clone();
+        let mut buckets: Vec<(usize, String)> = manifest
+            .find(config, "lm_logits")
+            .into_iter()
+            .map(|a| (a.inputs.last().unwrap().shape[0], a.name.clone()))
+            .collect();
+        anyhow::ensure!(!buckets.is_empty(), "no lm_logits artifacts for '{config}'");
+        buckets.sort();
+        let names = manifest
+            .params
+            .get(config)
+            .context("params entry")?
+            .names
+            .clone();
+        let params = match checkpoint {
+            None => manifest.load_params(config)?,
+            Some(p) => crate::train::load_checkpoint_values(p, &names)?,
+        };
+        let (handle, join) = spawn_engine_thread(artifacts_dir)?;
+        Ok((
+            PjrtLmBackend {
+                handle,
+                config: config.to_string(),
+                params,
+                buckets,
+                seq_len: mcfg.seq_len,
+                vocab: mcfg.vocab,
+            },
+            join,
+        ))
+    }
+
+    fn bucket_for(&self, n: usize) -> &(usize, String) {
+        self.buckets
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+}
+
+impl Backend for PjrtLmBackend {
+    fn max_batch(&self) -> usize {
+        self.buckets.last().unwrap().0
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn name(&self) -> String {
+        format!("pjrt-lm:{}", self.config)
+    }
+
+    fn forward(&self, prompts: &[Vec<i32>]) -> Result<Vec<i32>> {
+        anyhow::ensure!(!prompts.is_empty());
+        anyhow::ensure!(prompts.len() <= self.max_batch(), "batch too large");
+        let (bucket, art) = self.bucket_for(prompts.len()).clone();
+        let l = self.seq_len;
+        // pad batch to bucket and every prompt to seq_len (left-aligned,
+        // argmax read at the prompt's last position)
+        let mut toks = IntTensor::zeros(&[bucket, l]);
+        for (i, p) in prompts.iter().enumerate() {
+            let take = p.len().min(l);
+            let src = &p[p.len() - take..];
+            toks.data[i * l..i * l + take].copy_from_slice(src);
+        }
+        let mut inputs = self.params.clone();
+        inputs.push(Value::I32(toks));
+        let out = self.handle.run(&art, inputs)?;
+        let logits = out[0].as_f32()?; // (bucket, l, vocab)
+        let v = self.vocab;
+        let next = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let pos = p.len().min(l) - 1;
+                let row = &logits.data[(i * l + pos) * v..(i * l + pos + 1) * v];
+                argmax(row) as i32
+            })
+            .collect();
+        Ok(next)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+
+/// Native single-layer backend: embeds tokens with a fixed random table,
+/// runs the ButterflyMoE layer, returns argmax over a random readout —
+/// a deterministic stand-in model that exercises the true edge hot path.
+pub struct NativeMoeBackend {
+    pub layer: Arc<dyn MoeLayer>,
+    embed: Vec<f32>, // (vocab, d_model)
+    readout: Vec<f32>, // (vocab, d_model)
+    vocab: usize,
+    seq_len: usize,
+    max_batch: usize,
+}
+
+impl NativeMoeBackend {
+    pub fn new(layer: Arc<dyn MoeLayer>, vocab: usize, seq_len: usize, max_batch: usize) -> Self {
+        let d = layer.d_model();
+        let mut rng = crate::util::Rng::new(0xE13BED);
+        let mut embed = vec![0.0f32; vocab * d];
+        rng.fill_normal(&mut embed, 0.1);
+        let mut readout = vec![0.0f32; vocab * d];
+        rng.fill_normal(&mut readout, 0.1);
+        NativeMoeBackend {
+            layer,
+            embed,
+            readout,
+            vocab,
+            seq_len,
+            max_batch,
+        }
+    }
+
+    /// Mean-pool the prompt's embeddings into one d_model vector.
+    fn pool(&self, prompt: &[i32], out: &mut [f32]) {
+        let d = self.layer.d_model();
+        out.fill(0.0);
+        let take = prompt.len().min(self.seq_len);
+        for &t in &prompt[prompt.len() - take..] {
+            let row = &self.embed[(t as usize % self.vocab) * d..][..d];
+            for (o, &e) in out.iter_mut().zip(row) {
+                *o += e;
+            }
+        }
+        let inv = 1.0 / take.max(1) as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+impl Backend for NativeMoeBackend {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn name(&self) -> String {
+        format!("native-moe:{}exp", self.layer.n_experts())
+    }
+
+    fn forward(&self, prompts: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let d = self.layer.d_model();
+        let t = prompts.len();
+        let mut x = vec![0.0f32; t * d];
+        for (i, p) in prompts.iter().enumerate() {
+            self.pool(p, &mut x[i * d..(i + 1) * d]);
+        }
+        let mut y = vec![0.0f32; t * d];
+        self.layer.forward(&x, t, &mut y);
+        Ok((0..t)
+            .map(|i| {
+                let yi = &y[i * d..(i + 1) * d];
+                let mut best = (0usize, f32::NEG_INFINITY);
+                for v in 0..self.vocab {
+                    let row = &self.readout[v * d..(v + 1) * d];
+                    let score: f32 = row.iter().zip(yi).map(|(a, b)| a * b).sum();
+                    if score > best.1 {
+                        best = (v, score);
+                    }
+                }
+                best.0 as i32
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ButterflyMoeLayer;
+    use crate::util::Rng;
+
+    fn native() -> NativeMoeBackend {
+        let mut rng = Rng::new(1);
+        let layer = Arc::new(ButterflyMoeLayer::random(16, 32, 4, 2, None, &mut rng));
+        NativeMoeBackend::new(layer, 64, 8, 4)
+    }
+
+    #[test]
+    fn native_backend_deterministic() {
+        let b = native();
+        let prompts = vec![vec![1, 2, 3], vec![9, 9]];
+        let a = b.forward(&prompts).unwrap();
+        let c = b.forward(&prompts).unwrap();
+        assert_eq!(a, c);
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn native_backend_distinguishes_prompts() {
+        let b = native();
+        let out = b
+            .forward(&vec![vec![1, 2, 3, 4], vec![60, 61, 62, 63]])
+            .unwrap();
+        // different prompts usually map to different tokens with random
+        // embeddings; accept equality but require valid range
+        assert!(out.iter().all(|&t| t >= 0));
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Dynamic batcher: size-or-deadline flush policy.
+
+use std::time::{Duration, Instant};
+
+use super::server::Request;
+
+/// A flushed batch ready for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// when the oldest member was enqueued (for queue-wait metrics)
+    pub oldest: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Accumulates requests and decides when to flush.
+///
+/// Policy: flush when `max_batch` requests are queued, or when the oldest
+/// queued request has waited `max_wait`.  `poll` is driven by the
+/// coordinator loop; `push` never blocks.
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queue: Vec<Request>,
+    oldest: Option<Instant>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher {
+            max_batch,
+            max_wait,
+            queue: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push(req);
+        if self.queue.len() >= self.max_batch {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Deadline check; returns a batch if the oldest request expired.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self.oldest {
+            Some(t0) if now.duration_since(t0) >= self.max_wait && !self.queue.is_empty() => {
+                self.flush()
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown / test).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest = self.oldest.take().unwrap_or_else(Instant::now);
+        Some(Batch {
+            requests: std::mem::take(&mut self.queue),
+            oldest,
+        })
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Time until the current deadline fires (None when queue is empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest
+            .map(|t0| self.max_wait.saturating_sub(now.duration_since(t0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            tokens: vec![1, 2, 3],
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(10));
+        assert!(b.push(req(1)).is_none());
+        assert!(b.push(req(2)).is_none());
+        let batch = b.push(req(3)).expect("flush at size");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(1));
+        b.push(req(1));
+        assert!(b.poll(Instant::now()).is_none() || true); // may or may not yet
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.poll(Instant::now()).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn no_flush_when_empty() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(1));
+        assert!(b.poll(Instant::now()).is_none());
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn deadline_resets_after_flush() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(50));
+        b.push(req(1));
+        let _ = b.push(req(2)).unwrap(); // size flush
+        assert!(b.time_to_deadline(Instant::now()).is_none());
+        b.push(req(3)); // new epoch starts a fresh deadline
+        assert!(b.time_to_deadline(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(1));
+        b.push(req(10));
+        b.push(req(11));
+        let batch = b.push(req(12)).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 12]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Coordinator telemetry: counters + latency histograms, shared across
+//! worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub errors: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queue_wait: LatencyHistogram,
+    e2e_latency: LatencyHistogram,
+    batch_sizes: Vec<u64>, // count per size bucket (index = size)
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub queue_wait_p50: f64,
+    pub queue_wait_p99: f64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    pub latency_mean: f64,
+}
+
+impl Metrics {
+    pub fn record_enqueue(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize, queue_wait_secs: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.queue_wait.record(queue_wait_secs);
+        if inner.batch_sizes.len() <= size {
+            inner.batch_sizes.resize(size + 1, 0);
+        }
+        inner.batch_sizes[size] += 1;
+    }
+
+    pub fn record_response(&self, e2e_secs: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().e2e_latency.record(e2e_secs);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batches,
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            queue_wait_p50: inner.queue_wait.quantile(0.5),
+            queue_wait_p99: inner.queue_wait.quantile(0.99),
+            latency_p50: inner.e2e_latency.quantile(0.5),
+            latency_p95: inner.e2e_latency.quantile(0.95),
+            latency_p99: inner.e2e_latency.quantile(0.99),
+            latency_mean: inner.e2e_latency.mean(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} resp={} err={} batches={} (mean size {:.1}) wait p50/p99 {:.2}/{:.2} ms lat p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.batches,
+            self.mean_batch_size,
+            self.queue_wait_p50 * 1e3,
+            self.queue_wait_p99 * 1e3,
+            self.latency_p50 * 1e3,
+            self.latency_p95 * 1e3,
+            self.latency_p99 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms() {
+        let m = Metrics::default();
+        m.record_enqueue();
+        m.record_enqueue();
+        m.record_batch(2, 0.001);
+        m.record_response(0.005);
+        m.record_response(0.007);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert!(s.latency_p95 >= s.latency_p50);
+        assert!(s.latency_mean > 0.004 && s.latency_mean < 0.01);
+        assert!(!s.summary().is_empty());
+    }
+}

@@ -1,0 +1,33 @@
+//! Serving coordinator — L3's request path.
+//!
+//! Architecture (vLLM-router-shaped, scaled to this testbed):
+//!
+//! ```text
+//!  clients ──TCP──► frontend ──mpsc──► DynamicBatcher ──► worker pool
+//!                                              │               │
+//!                                   (size/deadline flush)  Backend::forward
+//!                                                        (PJRT bucketed LM
+//!                                                         or native MoE)
+//! ```
+//!
+//! * [`batcher::DynamicBatcher`] flushes a queued batch when either
+//!   `max_batch` requests are waiting or the oldest has waited
+//!   `max_wait_ms` — the standard latency/throughput knob.
+//! * [`backend::Backend`] abstracts the execution engine; the PJRT
+//!   backend pads each flush to the smallest compiled batch bucket
+//!   (aot.py emits b ∈ {1,4,16}).
+//! * [`metrics::Metrics`] tracks queue wait, batch occupancy and
+//!   end-to-end latency histograms.
+//!
+//! Threads + channels only (no tokio in the offline vendor set); the
+//! worker pool uses `crossbeam_utils::thread::scope` in the server loop.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{Backend, NativeMoeBackend, PjrtLmBackend};
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics::Metrics;
+pub use server::{Coordinator, Request, Response};

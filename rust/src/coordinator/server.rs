@@ -1,0 +1,357 @@
+//! The coordinator proper: frontend channel, batching loop, worker pool,
+//! and the optional TCP line-protocol frontend.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::batcher::{Batch, DynamicBatcher};
+use super::metrics::Metrics;
+
+/// One in-flight generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub next_token: i32,
+    pub latency: Duration,
+}
+
+/// Coordinator handle: submit requests, inspect metrics, shut down.
+pub struct Coordinator {
+    tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Coordinator {
+    /// Start the batching loop + `workers` execution threads.
+    pub fn start(
+        backend: Arc<dyn Backend>,
+        max_batch: usize,
+        max_wait: Duration,
+        workers: usize,
+    ) -> Arc<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (btx, brx) = mpsc::channel::<Batch>();
+        let brx = Arc::new(Mutex::new(brx));
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // batching loop
+        {
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            let max_batch = max_batch.min(backend.max_batch());
+            threads.push(std::thread::spawn(move || {
+                batching_loop(rx, btx, max_batch, max_wait, metrics, stop)
+            }));
+        }
+        // worker pool
+        for w in 0..workers.max(1) {
+            let brx = brx.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("bmoe-worker-{w}"))
+                    .spawn(move || worker_loop(brx, backend, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Arc::new(Coordinator {
+            tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            stop,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    /// Submit a prompt; returns a receiver for the response.
+    pub fn submit(&self, tokens: Vec<i32>) -> Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_enqueue();
+        let _ = self.tx.send(Request {
+            id,
+            tokens,
+            enqueued: Instant::now(),
+            reply: rtx,
+        });
+        rrx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        let rx = self.submit(tokens);
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // dropping tx side is done when Coordinator drops; join threads
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batching_loop(
+    rx: Receiver<Request>,
+    btx: Sender<Batch>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut batcher = DynamicBatcher::new(max_batch, max_wait);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            if let Some(b) = batcher.flush() {
+                let _ = btx.send(b);
+            }
+            return;
+        }
+        // wait bounded by the current flush deadline
+        let timeout = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req) {
+                    send_batch(&btx, batch, &metrics);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    send_batch(&btx, batch, &metrics);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(b) = batcher.flush() {
+                    send_batch(&btx, b, &metrics);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn send_batch(btx: &Sender<Batch>, batch: Batch, metrics: &Metrics) {
+    metrics.record_batch(batch.len(), batch.oldest.elapsed().as_secs_f64());
+    let _ = btx.send(batch);
+}
+
+fn worker_loop(brx: Arc<Mutex<Receiver<Batch>>>, backend: Arc<dyn Backend>, metrics: Arc<Metrics>) {
+    loop {
+        let batch = {
+            let guard = brx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        let prompts: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
+        match backend.forward(&prompts) {
+            Ok(next) => {
+                for (req, tok) in batch.requests.into_iter().zip(next) {
+                    let latency = req.enqueued.elapsed();
+                    metrics.record_response(latency.as_secs_f64());
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        next_token: tok,
+                        latency,
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("[worker] backend error: {e:#}");
+                for _ in &batch.requests {
+                    metrics.record_error();
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP frontend: one line per request, space-separated token ids;
+// response line: "<next_token>".  "QUIT" closes the connection.
+// ---------------------------------------------------------------------------
+
+pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    listener.set_nonblocking(true)?;
+    eprintln!("[serve] listening on 127.0.0.1:{port}");
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let coord = coord.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, coord);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "QUIT" {
+            break;
+        }
+        let tokens: std::result::Result<Vec<i32>, _> =
+            line.split_whitespace().map(str::parse).collect();
+        match tokens {
+            Ok(toks) if !toks.is_empty() => {
+                let resp = coord.infer(toks)?;
+                writeln!(writer, "{}", resp.next_token)?;
+            }
+            _ => {
+                writeln!(writer, "ERR bad request")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Backend that echoes prompt length (deterministic, instant).
+    struct EchoBackend;
+    impl Backend for EchoBackend {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn forward(&self, prompts: &[Vec<i32>]) -> Result<Vec<i32>> {
+            Ok(prompts.iter().map(|p| p.len() as i32).collect())
+        }
+    }
+
+    #[test]
+    fn roundtrip_single_request() {
+        let coord = Coordinator::start(
+            Arc::new(EchoBackend),
+            4,
+            Duration::from_millis(1),
+            2,
+        );
+        let resp = coord.infer(vec![5, 6, 7]).unwrap();
+        assert_eq!(resp.next_token, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let coord = Coordinator::start(
+            Arc::new(EchoBackend),
+            8,
+            Duration::from_millis(2),
+            3,
+        );
+        let rxs: Vec<_> = (1..=50)
+            .map(|n| (n, coord.submit(vec![0; n as usize])))
+            .collect();
+        for (n, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.next_token, n as i32);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.responses, 50);
+        assert!(snap.mean_batch_size >= 1.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches_under_load() {
+        let coord = Coordinator::start(
+            Arc::new(EchoBackend),
+            8,
+            Duration::from_millis(20),
+            1,
+        );
+        // submit a burst before the deadline can fire
+        let rxs: Vec<_> = (0..8).map(|_| coord.submit(vec![1, 2])).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = coord.metrics.snapshot();
+        assert!(
+            snap.mean_batch_size > 1.5,
+            "burst should batch: {}",
+            snap.mean_batch_size
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = Coordinator::start(
+            Arc::new(EchoBackend),
+            4,
+            Duration::from_millis(1),
+            1,
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let port = 17891;
+        {
+            let coord = coord.clone();
+            let stop2 = stop.clone();
+            std::thread::spawn(move || serve_tcp(coord, port, stop2));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        writeln!(s, "1 2 3 4").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "4");
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+}

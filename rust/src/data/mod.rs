@@ -1,0 +1,227 @@
+//! Synthetic multi-domain corpus (the WikiText stand-in — see DESIGN.md
+//! §4 substitutions) and batching.
+//!
+//! The generator is a mixture of per-domain order-1 Markov chains over a
+//! shared vocabulary with Zipf-distributed unigram mass.  Two properties
+//! matter for the experiments and are tested below:
+//!
+//! * **Skewed token frequencies** (Zipf) — drives router load imbalance,
+//!   exercising the load-balance loss.
+//! * **Domain structure** — distinct transition matrices per domain give
+//!   experts something to specialize on (Fig. 5's diversity claim).
+
+use crate::tensor::IntTensor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub n_domains: usize,
+    /// Zipf exponent for unigram mass (1.0 ~ natural language).
+    pub zipf_s: f64,
+    /// Tokens emitted between domain switches (expected).
+    pub domain_run_len: usize,
+    /// Per-domain branching factor: # of likely successors per token.
+    pub branching: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 512,
+            n_domains: 4,
+            zipf_s: 1.1,
+            domain_run_len: 64,
+            branching: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// Streaming token source.
+pub struct SyntheticCorpus {
+    cfg: CorpusConfig,
+    rng: Rng,
+    /// successors[domain][token] -> candidate next tokens
+    successors: Vec<Vec<Vec<u32>>>,
+    zipf_cdf: Vec<f64>,
+    domain: usize,
+    prev: u32,
+    run_left: usize,
+}
+
+impl SyntheticCorpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        // Zipf unigram distribution over ranked ids
+        let mut mass: Vec<f64> = (1..=cfg.vocab)
+            .map(|r| 1.0 / (r as f64).powf(cfg.zipf_s))
+            .collect();
+        let total: f64 = mass.iter().sum();
+        let mut acc = 0.0;
+        for m in mass.iter_mut() {
+            acc += *m / total;
+            *m = acc;
+        }
+        // Per-domain successor tables: each token gets `branching`
+        // candidates drawn from the Zipf distribution by a domain-forked rng
+        let successors = (0..cfg.n_domains)
+            .map(|d| {
+                let mut drng = rng.fork(0xD0 + d as u64);
+                (0..cfg.vocab)
+                    .map(|_| {
+                        (0..cfg.branching)
+                            .map(|_| sample_cdf(&mass, &mut drng) as u32)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        SyntheticCorpus {
+            rng,
+            successors,
+            zipf_cdf: mass,
+            domain: 0,
+            prev: 0,
+            run_left: cfg.domain_run_len,
+            cfg,
+        }
+    }
+
+    /// Emit the next token.
+    pub fn next_token(&mut self) -> u32 {
+        if self.run_left == 0 {
+            self.domain = self.rng.below(self.cfg.n_domains);
+            self.run_left = 1 + self.rng.below(self.cfg.domain_run_len * 2);
+        }
+        self.run_left -= 1;
+        // 85% Markov successor, 15% Zipf resample (noise / unconditional mass)
+        let tok = if self.rng.f64() < 0.85 {
+            let cands = &self.successors[self.domain][self.prev as usize];
+            cands[self.rng.below(cands.len())]
+        } else {
+            sample_cdf(&self.zipf_cdf, &mut self.rng) as u32
+        };
+        self.prev = tok;
+        tok
+    }
+
+    pub fn fill(&mut self, out: &mut [i32]) {
+        for v in out.iter_mut() {
+            *v = self.next_token() as i32;
+        }
+    }
+}
+
+fn sample_cdf(cdf: &[f64], rng: &mut Rng) -> usize {
+    let u = rng.f64();
+    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) => i,
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+/// Next-token-prediction batches: tokens (b, l) and targets shifted by 1.
+pub struct Batcher {
+    corpus: SyntheticCorpus,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Batcher {
+    pub fn new(corpus: SyntheticCorpus, batch: usize, seq_len: usize) -> Self {
+        Batcher {
+            corpus,
+            batch,
+            seq_len,
+        }
+    }
+
+    /// (tokens, targets), both (batch, seq_len) i32.
+    pub fn next_batch(&mut self) -> (IntTensor, IntTensor) {
+        let (b, l) = (self.batch, self.seq_len);
+        let mut stream = vec![0i32; b * (l + 1)];
+        self.corpus.fill(&mut stream);
+        let mut toks = IntTensor::zeros(&[b, l]);
+        let mut tgts = IntTensor::zeros(&[b, l]);
+        for i in 0..b {
+            let row = &stream[i * (l + 1)..(i + 1) * (l + 1)];
+            toks.data[i * l..(i + 1) * l].copy_from_slice(&row[..l]);
+            tgts.data[i * l..(i + 1) * l].copy_from_slice(&row[1..]);
+        }
+        (toks, tgts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range() {
+        let mut c = SyntheticCorpus::new(CorpusConfig::default());
+        for _ in 0..10_000 {
+            assert!((c.next_token() as usize) < 512);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = SyntheticCorpus::new(CorpusConfig::default());
+        let mut b = SyntheticCorpus::new(CorpusConfig::default());
+        let va: Vec<u32> = (0..100).map(|_| a.next_token()).collect();
+        let vb: Vec<u32> = (0..100).map(|_| b.next_token()).collect();
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn frequencies_are_zipf_skewed() {
+        let mut c = SyntheticCorpus::new(CorpusConfig::default());
+        let mut counts = vec![0u64; 512];
+        for _ in 0..200_000 {
+            counts[c.next_token() as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // top-16 tokens should carry far more than uniform mass (16/512 = 3%)
+        let top16: u64 = sorted[..16].iter().sum();
+        assert!(top16 as f64 / 200_000.0 > 0.25, "top16 mass {top16}");
+    }
+
+    #[test]
+    fn domains_have_distinct_statistics() {
+        // bigram distributions conditioned on the same prev token differ
+        // across domains
+        let c = SyntheticCorpus::new(CorpusConfig::default());
+        let tok = 1usize;
+        let a: &Vec<u32> = &c.successors[0][tok];
+        let b: &Vec<u32> = &c.successors[1][tok];
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn batcher_shapes_and_shift() {
+        let c = SyntheticCorpus::new(CorpusConfig::default());
+        let mut b = Batcher::new(c, 4, 16);
+        let (toks, tgts) = b.next_batch();
+        assert_eq!(toks.shape, vec![4, 16]);
+        assert_eq!(tgts.shape, vec![4, 16]);
+        // target row is the token row shifted left by one
+        for i in 0..4 {
+            assert_eq!(
+                &toks.data[i * 16 + 1..(i + 1) * 16],
+                &tgts.data[i * 16..(i + 1) * 16 - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn batches_vary() {
+        let c = SyntheticCorpus::new(CorpusConfig::default());
+        let mut b = Batcher::new(c, 2, 8);
+        let (t1, _) = b.next_batch();
+        let (t2, _) = b.next_batch();
+        assert_ne!(t1.data, t2.data);
+    }
+}

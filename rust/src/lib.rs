@@ -1,0 +1,38 @@
+//! # ButterflyMoE
+//!
+//! Production-grade reproduction of *"ButterflyMoE: Sub-Linear Ternary
+//! Experts via Structured Butterfly Orbits"* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — serving coordinator, native edge inference
+//!   engine (packed ternary + butterfly orbits), PJRT runtime for the
+//!   AOT-compiled jax graphs, training driver, and every analysis
+//!   substrate the paper's evaluation needs (memory models, energy
+//!   models, device profiles, baselines).
+//! * **L2 (`python/compile/model.py`)** — the jax transformer-LM with
+//!   ButterflyMoE FFNs, lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
+//!   butterfly transform and ternary matmul (interpret-lowered).
+//!
+//! Python runs only at build time (`make artifacts`); the `bmoe` binary
+//! is self-contained afterwards.  See DESIGN.md for the system inventory
+//! and the experiment index mapping every paper table/figure to code.
+
+pub mod baselines;
+pub mod bench;
+pub mod butterfly;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod energy;
+pub mod jsonx;
+pub mod memmodel;
+pub mod moe;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod ternary;
+pub mod train;
+pub mod util;

@@ -1,0 +1,209 @@
+//! `bmoe` — CLI entrypoint for the ButterflyMoE coordinator/driver.
+
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use butterfly_moe::cli::{Args, USAGE};
+use butterfly_moe::config::RuntimeConfig;
+use butterfly_moe::coordinator::{Coordinator, PjrtLmBackend};
+use butterfly_moe::runtime::Engine;
+use butterfly_moe::train::Trainer;
+use butterfly_moe::util::human_bytes;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.has_switch("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let mut rt = RuntimeConfig::default();
+    if let Some(path) = args.flag("config-file") {
+        rt.load_file(Path::new(path))?;
+    }
+    for (k, v) in [
+        ("artifacts_dir", args.flag("artifacts")),
+        ("config", args.flag("config")),
+        ("steps", args.flag("steps")),
+        ("lr", args.flag("lr")),
+        ("seed", args.flag("seed")),
+        ("workers", args.flag("workers")),
+        ("port", args.flag("port")),
+        ("max_batch", args.flag("max-batch")),
+        ("out_dir", args.flag("out")),
+    ] {
+        if let Some(v) = v {
+            rt.set(k, v)?;
+        }
+    }
+    for (k, v) in &args.overrides {
+        rt.set(k, v)?;
+    }
+
+    match args.subcommand.as_deref().unwrap() {
+        "info" => cmd_info(&rt),
+        "quickstart" => cmd_quickstart(&rt),
+        "train" => cmd_train(&rt, &args),
+        "eval" => cmd_eval(&rt, &args),
+        "serve" => cmd_serve(&rt, &args),
+        "bench-client" => cmd_bench_client(&rt, &args),
+        "tables" => cmd_tables(&rt),
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+/// Drive a running `bmoe serve` instance over its TCP line protocol and
+/// report client-observed latency percentiles.
+fn cmd_bench_client(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let n: usize = args.flag_parse("requests")?.unwrap_or(200);
+    let vocab: usize = args.flag_parse("vocab")?.unwrap_or(512);
+    let mut stream = std::net::TcpStream::connect(("127.0.0.1", rt.port))
+        .with_context(|| format!("connect to 127.0.0.1:{} (is `bmoe serve` running?)", rt.port))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut rng = butterfly_moe::util::Rng::new(rt.seed);
+    let mut lats = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = 3 + rng.below(10);
+        let prompt: Vec<String> = (0..len).map(|_| rng.below(vocab).to_string()).collect();
+        let t0 = std::time::Instant::now();
+        writeln!(stream, "{}", prompt.join(" "))?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.starts_with("ERR"), "server error: {line}");
+        lats.push(t0.elapsed().as_secs_f64());
+    }
+    writeln!(stream, "QUIT")?;
+    use butterfly_moe::util::stats;
+    println!(
+        "{n} requests: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | mean {:.2} ms",
+        1e3 * stats::percentile(&lats, 50.0),
+        1e3 * stats::percentile(&lats, 95.0),
+        1e3 * stats::percentile(&lats, 99.0),
+        1e3 * stats::mean(&lats),
+    );
+    Ok(())
+}
+
+fn engine(rt: &RuntimeConfig) -> Result<Engine> {
+    Engine::new(Path::new(&rt.artifacts_dir))
+}
+
+fn cmd_info(rt: &RuntimeConfig) -> Result<()> {
+    let eng = engine(rt)?;
+    println!("platform: {}", eng.platform());
+    println!("configs:");
+    for (name, c) in &eng.manifest.configs {
+        println!(
+            "  {name}: d={} d_ff={} E={} top{} blocks={} vocab={} arch={}",
+            c.d_model, c.d_ff, c.n_experts, c.top_k, c.n_blocks, c.vocab, c.arch.name()
+        );
+    }
+    println!("artifacts:");
+    for a in eng.manifest.artifacts.values() {
+        println!("  {:<32} kind={:<10} cfg={}", a.name, a.kind, a.config);
+    }
+    Ok(())
+}
+
+fn cmd_quickstart(rt: &RuntimeConfig) -> Result<()> {
+    use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
+    let eng = engine(rt)?;
+    let cfg = eng.manifest.config(&rt.config)?.clone();
+    let shape: LayerShape = cfg.layer_shape();
+    println!("== ButterflyMoE quickstart ({}) ==", rt.config);
+    println!(
+        "layer d_model={} d_ff={} experts={} top-{}",
+        cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k
+    );
+    println!(
+        "expert memory: butterfly {} vs standard {} ({:.1}x)",
+        human_bytes(butterfly_bytes(cfg.n_experts, shape)),
+        human_bytes(Method::StandardMoe.bytes(cfg.n_experts, shape)),
+        Method::ButterflyMoe.ratio(cfg.n_experts, shape)
+    );
+    drop(eng);
+    let (backend, _join) = PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, None)?;
+    use butterfly_moe::coordinator::Backend;
+    let next = backend.forward(&[vec![1, 2, 3, 4, 5]])?;
+    println!("forward OK; next token for [1,2,3,4,5] -> {}", next[0]);
+    std::process::exit(0); // engine thread holds the process otherwise
+}
+
+fn cmd_train(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    let eng = engine(rt)?;
+    let trainer = Trainer::new(&eng, rt.clone());
+    let ckpt = args.flag("from").map(Path::new);
+    let report = trainer.run(&rt.config, ckpt)?;
+    let csv = Path::new(&rt.out_dir).join(format!("{}_loss.csv", rt.config));
+    report.write_csv(&csv)?;
+    let final_ckpt = Path::new(&rt.out_dir).join(format!("{}_final.bmoe", rt.config));
+    report.save_checkpoint(&final_ckpt)?;
+    println!(
+        "trained {} for {} steps in {:.1}s: loss {:.4} (tail ce {:.4})",
+        rt.config,
+        report.logs.len(),
+        report.total_secs,
+        report.final_loss(),
+        report.tail_ce(20),
+    );
+    println!("loss curve: {}", csv.display());
+    println!("checkpoint: {}", final_ckpt.display());
+    Ok(())
+}
+
+fn cmd_eval(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    let eng = engine(rt)?;
+    let trainer = Trainer::new(&eng, rt.clone());
+    let names = eng
+        .manifest
+        .params
+        .get(&rt.config)
+        .context("params entry")?
+        .names
+        .clone();
+    let params = match args.flag("from") {
+        Some(p) => butterfly_moe::train::load_checkpoint_values(Path::new(p), &names)?,
+        None => eng.load_params(&rt.config)?,
+    };
+    let n = args.flag_parse::<usize>("batches")?.unwrap_or(8);
+    let ce = trainer.eval(&rt.config, &params, n)?;
+    println!("{}: held-out CE over {n} batches = {ce:.4}", rt.config);
+    Ok(())
+}
+
+fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    let ckpt = args.flag("from").map(Path::new);
+    let (backend, _join) =
+        PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, ckpt)?;
+    let backend = Arc::new(backend);
+    let coord = Coordinator::start(
+        backend,
+        rt.max_batch,
+        Duration::from_millis(rt.max_wait_ms),
+        rt.workers,
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let coord = coord.clone();
+        let metrics_stop = stop.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_secs(5));
+            if metrics_stop.load(std::sync::atomic::Ordering::SeqCst) {
+                break;
+            }
+            eprintln!("[metrics] {}", coord.metrics.snapshot().summary());
+        });
+    }
+    butterfly_moe::coordinator::server::serve_tcp(coord, rt.port, stop)
+}
+
+fn cmd_tables(rt: &RuntimeConfig) -> Result<()> {
+    // The analytic tables print without artifacts; measured ones live in
+    // cargo bench targets (see DESIGN.md §6 experiment index).
+    let _ = rt;
+    butterfly_moe::bench::paper_tables::print_all(Path::new("runs/tables"))
+}

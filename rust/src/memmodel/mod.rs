@@ -1,0 +1,247 @@
+//! Closed-form memory models for every compression method in Table 1 and
+//! the Fig. 3 scaling curve (Props. 1 & 2 of the paper).
+//!
+//! All models count *expert-identity* storage only — the N weight
+//! matrices (or their compressed forms) — excluding the gate and shared
+//! down projection, exactly as the paper's 256 MB baseline does
+//! (64 × 2048 × 512 × 4 B).
+
+/// Layer shape for memory accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    pub d_model: usize,
+    pub d_ff: usize,
+}
+
+impl LayerShape {
+    pub const fn paper() -> Self {
+        LayerShape {
+            d_model: 512,
+            d_ff: 2048,
+        }
+    }
+    fn weights_per_expert(&self) -> f64 {
+        (self.d_model * self.d_ff) as f64
+    }
+}
+
+/// A compression method's memory model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// FP32 dense experts: N * d_ff * d_model * 4 B
+    StandardMoe,
+    /// Frantar & Alistarh 2023 — sub-1-bit codes; the paper's Table 1
+    /// credits it 10–20x vs FP32; we model the midpoint 16x.
+    Qmoe,
+    /// Kim et al. 2023 — 2-bit weight-only; paper credits 5x.
+    Moqe,
+    /// Zhao et al. 2025 — expert merging + 3-bit; paper credits 2x.
+    PuzzleMoe,
+    /// Huang et al. 2024 — mixed precision avg 2.54 bit; paper credits 4x.
+    MixtureCompressor,
+    /// This paper (Prop. 1): shared 1.58-bit substrate + FP16 butterfly
+    /// angles per expert.
+    ButterflyMoe,
+}
+
+pub const ALL_METHODS: [Method; 6] = [
+    Method::StandardMoe,
+    Method::Qmoe,
+    Method::Moqe,
+    Method::PuzzleMoe,
+    Method::MixtureCompressor,
+    Method::ButterflyMoe,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::StandardMoe => "Standard MoE",
+            Method::Qmoe => "QMoE",
+            Method::Moqe => "MoQE (2-bit)",
+            Method::PuzzleMoe => "PuzzleMoE",
+            Method::MixtureCompressor => "MC",
+            Method::ButterflyMoe => "ButterflyMoE",
+        }
+    }
+
+    /// Published compression ratio vs FP32 (used for the comparator rows
+    /// we cannot fully rebuild; ButterflyMoE/Standard are exact formulas).
+    pub fn paper_ratio(&self) -> Option<f64> {
+        match self {
+            Method::Qmoe => Some(16.0),
+            Method::Moqe => Some(5.0),
+            Method::PuzzleMoe => Some(2.0),
+            Method::MixtureCompressor => Some(4.0),
+            _ => None,
+        }
+    }
+
+    /// Asymptotic memory scaling as printed in Table 1.
+    pub fn scaling(&self) -> &'static str {
+        match self {
+            Method::ButterflyMoe => "O(d^2 + N*d*log d)",
+            Method::PuzzleMoe | Method::MixtureCompressor => "O(N*d^2) reduced",
+            _ => "O(N*d^2)",
+        }
+    }
+
+    /// Expert-identity bytes for `n` experts.
+    pub fn bytes(&self, n: usize, s: LayerShape) -> f64 {
+        let w = s.weights_per_expert();
+        match self {
+            Method::StandardMoe => n as f64 * w * 4.0,
+            Method::ButterflyMoe => butterfly_bytes(n, s),
+            m => n as f64 * w * 4.0 / m.paper_ratio().unwrap(),
+        }
+    }
+
+    /// Compression ratio vs standard FP32 at `n` experts.
+    pub fn ratio(&self, n: usize, s: LayerShape) -> f64 {
+        Method::StandardMoe.bytes(n, s) / self.bytes(n, s)
+    }
+}
+
+/// Prop. 1 exactly:
+/// M = 1.58/8 * d_ff * d_model
+///   + N * (d_model/2 * log2 d_model + d_ff/2 * log2 d_ff) * 2 bytes.
+pub fn butterfly_bytes(n: usize, s: LayerShape) -> f64 {
+    substrate_bytes(s) + n as f64 * per_expert_bytes(s)
+}
+
+pub fn substrate_bytes(s: LayerShape) -> f64 {
+    1.58 / 8.0 * (s.d_ff * s.d_model) as f64
+}
+
+/// FP16 butterfly angles for one expert (input + output transform).
+pub fn per_expert_bytes(s: LayerShape) -> f64 {
+    let angles = s.d_model as f64 / 2.0 * (s.d_model as f64).log2()
+        + s.d_ff as f64 / 2.0 * (s.d_ff as f64).log2();
+    angles * 2.0
+}
+
+/// Prop. 2: asymptotic compression ratio (substrate amortized away).
+pub fn asymptotic_ratio(s: LayerShape) -> f64 {
+    (s.d_model * s.d_ff) as f64 * 4.0 / per_expert_bytes(s)
+}
+
+/// Butterfly bytes with truncated depth (Table 2 ablation accounting;
+/// both transforms counted over d_model as the paper's params/expert
+/// column does).
+pub fn butterfly_bytes_depth(n: usize, s: LayerShape, depth: usize) -> f64 {
+    let angles_per_expert = 2.0 * depth as f64 * s.d_model as f64 / 2.0;
+    substrate_bytes(s) + n as f64 * angles_per_expert * 2.0
+}
+
+/// Max experts that fit in `budget_bytes` (Table "devices").  For
+/// ButterflyMoE the substrate is paid once; for others every expert pays
+/// full freight.
+pub fn max_experts(m: Method, budget_bytes: f64, s: LayerShape) -> usize {
+    match m {
+        Method::ButterflyMoe => {
+            let rem = budget_bytes - substrate_bytes(s);
+            if rem <= 0.0 {
+                0
+            } else {
+                (rem / per_expert_bytes(s)).floor() as usize
+            }
+        }
+        _ => (budget_bytes / m.bytes(1, s)).floor() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: LayerShape = LayerShape::paper();
+
+    #[test]
+    fn standard_moe_matches_paper_256mb() {
+        // 64 experts, d=512, d_ff=2048, FP32 -> 256 MB
+        let b = Method::StandardMoe.bytes(64, S);
+        assert_eq!(b, 64.0 * 2048.0 * 512.0 * 4.0);
+        assert!((b / 1048576.0 - 256.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn per_expert_angle_count_matches_prop1() {
+        // (512/2 * 9 + 2048/2 * 11) * 2 = (2304 + 11264) * 2 = 27136 B
+        assert_eq!(per_expert_bytes(S), 27136.0);
+    }
+
+    #[test]
+    fn butterfly_64_experts_close_to_paper_1_9mb() {
+        // Prop. 1 at N=64: 0.207 MB substrate + 64*27136 B = 1.86 MB; the
+        // paper rounds to 1.9 MB.
+        let mb = butterfly_bytes(64, S) / 1048576.0;
+        assert!((mb - 1.9).abs() < 0.1, "got {mb}");
+    }
+
+    #[test]
+    fn asymptotic_ratio_matches_prop2() {
+        // paper: ~154.5x
+        let r = asymptotic_ratio(S);
+        assert!((r - 154.5).abs() < 0.5, "got {r}");
+    }
+
+    #[test]
+    fn ratio_improves_with_expert_count() {
+        let r8 = Method::ButterflyMoe.ratio(8, S);
+        let r64 = Method::ButterflyMoe.ratio(64, S);
+        let r256 = Method::ButterflyMoe.ratio(256, S);
+        assert!(r8 < r64 && r64 < r256, "{r8} {r64} {r256}");
+        // at 256 experts the paper claims ~150x
+        assert!(r256 > 130.0 && r256 < 160.0, "r256={r256}");
+    }
+
+    #[test]
+    fn fig3_curve_values() {
+        // paper Fig. 3: 4.70 MB at 256 experts (vs 1024 MB standard)
+        let b = butterfly_bytes(256, S) / 1048576.0;
+        assert!((b - 6.8).abs() < 0.3, "formula gives {b} MB");
+        // note: Prop. 1 actually gives 6.8 MB at 256 experts; the paper's
+        // 4.70 MB figure matches a ~square-only accounting.  We report
+        // both (EXPERIMENTS.md).
+        let std = Method::StandardMoe.bytes(256, S) / 1048576.0;
+        assert!((std - 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantization_rows_match_table1() {
+        // QMoE 13–26 MB band (midpoint model: 16 MB), MoQE 51 MB,
+        // PuzzleMoE 128 MB, MC 64 MB.
+        let mb = |m: Method| m.bytes(64, S) / 1048576.0;
+        assert!((mb(Method::Qmoe) - 16.0).abs() < 0.1);
+        assert!((mb(Method::Moqe) - 51.2).abs() < 0.1);
+        assert!((mb(Method::PuzzleMoe) - 128.0).abs() < 0.1);
+        assert!((mb(Method::MixtureCompressor) - 64.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn max_experts_monotone_in_budget() {
+        for m in ALL_METHODS {
+            let small = max_experts(m, 512.0 * 1024.0, S);
+            let big = max_experts(m, 4e9, S);
+            assert!(big >= small, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn esp32_fits_butterfly_but_not_standard() {
+        // 512 KB budget: standard fits 0 experts, butterfly fits >=10
+        let budget = 512.0 * 1024.0;
+        assert_eq!(max_experts(Method::StandardMoe, budget, S), 0);
+        assert!(max_experts(Method::ButterflyMoe, budget, S) >= 10);
+    }
+
+    #[test]
+    fn depth_truncation_reduces_bytes() {
+        let b2 = butterfly_bytes_depth(64, S, 2);
+        let b9 = butterfly_bytes_depth(64, S, 9);
+        assert!(b2 < b9);
+        // params/expert at depth 2 (d=512 both sides): 2*2*256 = 1024
+        let per2 = (b2 - substrate_bytes(S)) / 64.0 / 2.0; // angles (fp16)
+        assert_eq!(per2, 1024.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Top-k gating network (Stage 3 of §3.4).
+//!
+//! Mirrors `model.py::topk_gate`: softmax over expert logits, keep the
+//! top-k probabilities, renormalize them to sum to 1.
+
+use crate::tensor::Tensor;
+
+/// Routing decision for one token.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Route {
+    /// (expert index, renormalized weight), length k, sorted by weight desc
+    pub experts: Vec<(usize, f32)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GateNetwork {
+    /// (n_experts, d_model) — logits = W x
+    pub w: Tensor,
+    pub top_k: usize,
+}
+
+impl GateNetwork {
+    pub fn new(w: Tensor, top_k: usize) -> Self {
+        assert_eq!(w.rank(), 2);
+        assert!(top_k >= 1 && top_k <= w.shape[0]);
+        GateNetwork { w, top_k }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.w.shape[0]
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.w.shape[1]
+    }
+
+    /// Route one token embedding.
+    pub fn route(&self, x: &[f32]) -> Route {
+        let e = self.n_experts();
+        assert_eq!(x.len(), self.d_model());
+        let mut logits = vec![0.0f32; e];
+        for i in 0..e {
+            logits[i] = crate::util::dot_f32(self.w.row(i), x);
+        }
+        softmax_inplace(&mut logits);
+        let mut idx: Vec<usize> = (0..e).collect();
+        // partial selection of top-k by probability
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(self.top_k);
+        let total: f32 = idx.iter().map(|&i| logits[i]).sum();
+        Route {
+            experts: idx.into_iter().map(|i| (i, logits[i] / total)).collect(),
+        }
+    }
+
+    /// Route a (t, d) batch; also returns per-expert load fractions
+    /// (n_i / (k * t), the eq.-6 quantity — sums to 1).
+    pub fn route_batch(&self, x: &[f32], t: usize) -> (Vec<Route>, Vec<f64>) {
+        let d = self.d_model();
+        assert_eq!(x.len(), t * d);
+        let mut loads = vec![0.0f64; self.n_experts()];
+        let routes: Vec<Route> = (0..t)
+            .map(|i| {
+                let r = self.route(&x[i * d..(i + 1) * d]);
+                for &(e, _) in &r.experts {
+                    loads[e] += 1.0;
+                }
+                r
+            })
+            .collect();
+        let denom = (self.top_k * t.max(1)) as f64;
+        for l in loads.iter_mut() {
+            *l /= denom;
+        }
+        (routes, loads)
+    }
+
+    /// Invert routes into per-expert token lists: (token index, weight).
+    pub fn dispatch(routes: &[Route], n_experts: usize) -> Vec<Vec<(usize, f32)>> {
+        let mut per_expert: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_experts];
+        for (t, r) in routes.iter().enumerate() {
+            for &(e, w) in &r.experts {
+                per_expert[e].push((t, w));
+            }
+        }
+        per_expert
+    }
+}
+
+pub fn softmax_inplace(v: &mut [f32]) {
+    let max = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in v.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Load-balance penalty, eq. (6): sum_i (load_i - 1/E)^2.
+pub fn balance_penalty(loads: &[f64]) -> f64 {
+    let e = loads.len() as f64;
+    loads.iter().map(|l| (l - 1.0 / e) * (l - 1.0 / e)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gate(e: usize, d: usize, k: usize, seed: u64) -> GateNetwork {
+        let mut rng = Rng::new(seed);
+        GateNetwork::new(Tensor::rand_normal(&[e, d], 0.5, &mut rng), k)
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0, 2.0, 3.0, -1.0];
+        softmax_inplace(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(v.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut v = vec![1000.0, 999.0];
+        softmax_inplace(&mut v);
+        assert!(v[0] > v[1] && v[0].is_finite());
+    }
+
+    #[test]
+    fn route_weights_sum_to_one() {
+        let g = gate(8, 16, 2, 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+            let r = g.route(&x);
+            assert_eq!(r.experts.len(), 2);
+            let s: f32 = r.experts.iter().map(|e| e.1).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(r.experts[0].1 >= r.experts[1].1);
+        }
+    }
+
+    #[test]
+    fn k1_picks_argmax() {
+        let g = gate(5, 8, 1, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal_f32(1.0)).collect();
+        let r = g.route(&x);
+        assert_eq!(r.experts.len(), 1);
+        // brute-force argmax of logits
+        let mut best = (0, f32::NEG_INFINITY);
+        for i in 0..5 {
+            let l: f32 = g.w.row(i).iter().zip(&x).map(|(a, b)| a * b).sum();
+            if l > best.1 {
+                best = (i, l);
+            }
+        }
+        assert_eq!(r.experts[0].0, best.0);
+    }
+
+    #[test]
+    fn batch_loads_sum_to_one() {
+        let g = gate(4, 8, 2, 5);
+        let mut rng = Rng::new(6);
+        let t = 50;
+        let x: Vec<f32> = (0..t * 8).map(|_| rng.normal_f32(1.0)).collect();
+        let (routes, loads) = g.route_batch(&x, t);
+        assert_eq!(routes.len(), t);
+        assert!((loads.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_inverts_routes() {
+        let g = gate(4, 8, 2, 7);
+        let mut rng = Rng::new(8);
+        let t = 10;
+        let x: Vec<f32> = (0..t * 8).map(|_| rng.normal_f32(1.0)).collect();
+        let (routes, _) = g.route_batch(&x, t);
+        let disp = GateNetwork::dispatch(&routes, 4);
+        let total: usize = disp.iter().map(Vec::len).sum();
+        assert_eq!(total, t * 2);
+        for (e, toks) in disp.iter().enumerate() {
+            for &(ti, w) in toks {
+                assert!(routes[ti].experts.iter().any(|&(ei, wi)| ei == e && wi == w));
+            }
+        }
+    }
+
+    #[test]
+    fn balance_penalty_zero_at_uniform() {
+        assert!(balance_penalty(&[0.25; 4]) < 1e-12);
+        assert!(balance_penalty(&[1.0, 0.0, 0.0, 0.0]) > 0.5);
+    }
+}

@@ -1,0 +1,511 @@
+//! MoE FFN layers: ButterflyMoE (the paper), standard MoE and dense FFN
+//! baselines.  All three share the trait [`MoeLayer`] so the coordinator,
+//! examples and benches are generic over the expert parameterization.
+//!
+//! Forward semantics mirror `python/compile/model.py::moe_ffn_forward`
+//! exactly (same gating, same GELU, same shared down projection) so the
+//! native engine is numerically parity-testable against the AOT graphs.
+
+use anyhow::Result;
+
+use super::gating::GateNetwork;
+use super::gelu;
+use crate::butterfly::Butterfly;
+use crate::quant::{ternary_quantize, TernaryQuant};
+use crate::tensor::store::TensorStore;
+use crate::tensor::Tensor;
+use crate::ternary::BitplaneTernary;
+use crate::util::Rng;
+
+/// Common interface over expert parameterizations.
+pub trait MoeLayer: Send + Sync {
+    fn d_model(&self) -> usize;
+    fn d_ff(&self) -> usize;
+    fn n_experts(&self) -> usize;
+
+    /// Alg. 1: expert mixture only, x (t, d_model) -> h (t, d_ff).
+    /// Returns per-expert load fractions alongside.
+    fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64>;
+
+    /// Full FFN block: experts -> GELU -> shared down projection.
+    fn forward(&self, x: &[f32], t: usize, y: &mut [f32]) -> Vec<f64> {
+        let (dff, d) = (self.d_ff(), self.d_model());
+        let mut h = vec![0.0f32; t * dff];
+        let loads = self.experts_forward(x, t, &mut h);
+        for v in h.iter_mut() {
+            *v = gelu(*v);
+        }
+        let wd = self.w_down();
+        assert_eq!(y.len(), t * d);
+        for i in 0..t {
+            let hi = &h[i * dff..(i + 1) * dff];
+            let yi = &mut y[i * d..(i + 1) * d];
+            for r in 0..d {
+                yi[r] = crate::util::dot_f32(wd.row(r), hi);
+            }
+        }
+        loads
+    }
+
+    /// Shared down projection (d_model, d_ff).
+    fn w_down(&self) -> &Tensor;
+
+    /// Bytes of *expert-identity* storage — what Table 1 compares.
+    /// (Shared substrate + per-expert params for ButterflyMoE; the N
+    /// dense matrices for standard MoE.  Gate and shared down projection
+    /// are excluded on both sides, as in the paper.)
+    fn expert_bytes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// ButterflyMoE
+// ---------------------------------------------------------------------------
+
+/// One expert's orbit parameters (the substrate lives on the layer).
+#[derive(Clone, Debug)]
+pub struct OrbitExpert {
+    pub theta: Butterfly, // over d_model, applied transposed on input
+    pub phi: Butterfly,   // over d_ff, applied forward on output
+}
+
+pub struct ButterflyMoeLayer {
+    pub gate: GateNetwork,
+    /// Shared ternary substrate (d_ff, d_model), bitplane-packed.
+    pub substrate: BitplaneTernary,
+    pub experts: Vec<OrbitExpert>,
+    pub w_down: Tensor,
+    /// Quantize activations to int8 in the substrate GEMM (W1.58A8, the
+    /// deployment fast path — ~2x faster, ~0.5% output error).  Default
+    /// false so the engine is bit-parity-testable against the L2 graph.
+    pub act_quant: bool,
+    d_model: usize,
+    d_ff: usize,
+}
+
+impl ButterflyMoeLayer {
+    pub fn new(
+        gate: GateNetwork,
+        substrate: &TernaryQuant,
+        experts: Vec<OrbitExpert>,
+        w_down: Tensor,
+    ) -> Self {
+        let (d_ff, d_model) = (substrate.shape[0], substrate.shape[1]);
+        assert_eq!(gate.d_model(), d_model);
+        assert_eq!(gate.n_experts(), experts.len());
+        for ex in &experts {
+            assert_eq!(ex.theta.d, d_model);
+            assert_eq!(ex.phi.d, d_ff);
+        }
+        assert_eq!(w_down.shape, vec![d_model, d_ff]);
+        ButterflyMoeLayer {
+            gate,
+            substrate: BitplaneTernary::from_quant(substrate),
+            experts,
+            w_down,
+            act_quant: false,
+            d_model,
+            d_ff,
+        }
+    }
+
+    /// Random init mirroring `model.py::init_ffn_params`.
+    pub fn random(
+        d_model: usize,
+        d_ff: usize,
+        n_experts: usize,
+        top_k: usize,
+        depth: Option<usize>,
+        rng: &mut Rng,
+    ) -> Self {
+        let scale = 1.0 / (d_model as f32).sqrt();
+        let gate = GateNetwork::new(Tensor::rand_normal(&[n_experts, d_model], scale, rng), top_k);
+        let w_base = Tensor::rand_normal(&[d_ff, d_model], scale, rng);
+        let tq = ternary_quantize(&w_base);
+        let din = depth.unwrap_or(Butterfly::max_depth(d_model));
+        let dout = depth.unwrap_or(Butterfly::max_depth(d_ff));
+        let experts = (0..n_experts)
+            .map(|i| OrbitExpert {
+                theta: Butterfly::random(d_model, din, 0.01, &mut rng.fork(i as u64 * 2)),
+                phi: Butterfly::random(d_ff, dout, 0.01, &mut rng.fork(i as u64 * 2 + 1)),
+            })
+            .collect();
+        let w_down = Tensor::rand_normal(&[d_model, d_ff], 1.0 / (d_ff as f32).sqrt(), rng);
+        Self::new(gate, &tq, experts, w_down)
+    }
+
+    /// Load from a TensorStore with the aot.py `ffn.` naming scheme
+    /// (`ffn.gate`, `ffn.w_base`, `ffn.theta` (E, depth, d/2), `ffn.phi`,
+    /// `ffn.w_down`).
+    pub fn from_store(store: &TensorStore, prefix: &str, top_k: usize) -> Result<Self> {
+        let get = |name: &str| store.get_f32(&format!("{prefix}{name}"));
+        let gate_w = get("gate")?.clone();
+        let w_base = get("w_base")?;
+        let theta = get("theta")?;
+        let phi = get("phi")?;
+        let w_down = get("w_down")?.clone();
+        let (d_ff, d_model) = (w_base.shape[0], w_base.shape[1]);
+        let e = theta.shape[0];
+        let (depth_in, half_in) = (theta.shape[1], theta.shape[2]);
+        let (depth_out, half_out) = (phi.shape[1], phi.shape[2]);
+        anyhow::ensure!(half_in == d_model / 2 && half_out == d_ff / 2, "angle shape");
+        let tq = ternary_quantize(w_base);
+        let experts = (0..e)
+            .map(|i| {
+                let tslice = &theta.data[i * depth_in * half_in..(i + 1) * depth_in * half_in];
+                let pslice = &phi.data[i * depth_out * half_out..(i + 1) * depth_out * half_out];
+                OrbitExpert {
+                    theta: Butterfly::from_angles(d_model, depth_in, tslice),
+                    phi: Butterfly::from_angles(d_ff, depth_out, pslice),
+                }
+            })
+            .collect();
+        Ok(Self::new(
+            GateNetwork::new(gate_w, top_k),
+            &tq,
+            experts,
+            w_down,
+        ))
+    }
+
+    /// Single-expert orbit forward (eq. 2) with caller scratch:
+    /// out = B(phi)( Q(W) ( B(theta)^T x ) ).
+    pub fn expert_forward(&self, e: usize, x: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_model);
+        debug_assert_eq!(scratch.len(), self.d_model);
+        debug_assert_eq!(out.len(), self.d_ff);
+        let ex = &self.experts[e];
+        scratch.copy_from_slice(x);
+        ex.theta.apply_transpose(scratch);
+        self.substrate.gemv(scratch, out);
+        ex.phi.apply(out);
+    }
+}
+
+impl MoeLayer for ButterflyMoeLayer {
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+    fn d_ff(&self) -> usize {
+        self.d_ff
+    }
+    fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+    fn w_down(&self) -> &Tensor {
+        &self.w_down
+    }
+
+    fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {
+        let (d, dff) = (self.d_model, self.d_ff);
+        assert_eq!(x.len(), t * d);
+        assert_eq!(h.len(), t * dff);
+        h.fill(0.0);
+        let (routes, loads) = self.gate.route_batch(x, t);
+        let dispatch = GateNetwork::dispatch(&routes, self.n_experts());
+        // Expert-major batched dispatch (§Perf iteration 3): gather each
+        // expert's tokens contiguously, rotate the whole block, run ONE
+        // substrate GEMM (weights decoded once per expert, not once per
+        // token), rotate back, weighted scatter — the same HBM locality
+        // schedule as the Pallas BlockSpec (DESIGN.md §3).
+        let mut xg: Vec<f32> = Vec::new();
+        let mut hg: Vec<f32> = Vec::new();
+        for (e, toks) in dispatch.iter().enumerate() {
+            if toks.is_empty() {
+                continue;
+            }
+            let ex = &self.experts[e];
+            let n = toks.len();
+            xg.clear();
+            xg.reserve(n * d);
+            for &(ti, _) in toks {
+                xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
+            }
+            ex.theta.apply_transpose_batch(&mut xg);
+            hg.resize(n * dff, 0.0);
+            if self.act_quant {
+                self.substrate.gemm_a8(&xg, n, &mut hg);
+            } else {
+                self.substrate.gemm(&xg, n, &mut hg);
+            }
+            ex.phi.apply_batch(&mut hg);
+            for (row, &(ti, w)) in toks.iter().enumerate() {
+                let src = &hg[row * dff..(row + 1) * dff];
+                let dst = &mut h[ti * dff..(ti + 1) * dff];
+                for (hv, &ov) in dst.iter_mut().zip(src) {
+                    *hv += w * ov;
+                }
+            }
+        }
+        loads
+    }
+
+    fn expert_bytes(&self) -> usize {
+        // Paper accounting (Prop. 1): ternary substrate at 1.58 bits +
+        // FP16 angles.  ceil at byte granularity.
+        let substrate = (self.d_ff * self.d_model) as f64 * 1.58 / 8.0;
+        let angles: usize = self
+            .experts
+            .iter()
+            .map(|e| e.theta.bytes_fp16() + e.phi.bytes_fp16())
+            .sum();
+        substrate.ceil() as usize + angles
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Standard MoE baseline
+// ---------------------------------------------------------------------------
+
+pub struct StandardMoeLayer {
+    pub gate: GateNetwork,
+    /// n_experts dense matrices (d_ff, d_model), f32
+    pub w_up: Vec<Tensor>,
+    pub w_down: Tensor,
+    d_model: usize,
+    d_ff: usize,
+}
+
+impl StandardMoeLayer {
+    pub fn new(gate: GateNetwork, w_up: Vec<Tensor>, w_down: Tensor) -> Self {
+        let (d_ff, d_model) = (w_up[0].shape[0], w_up[0].shape[1]);
+        assert_eq!(gate.d_model(), d_model);
+        assert_eq!(gate.n_experts(), w_up.len());
+        StandardMoeLayer {
+            gate,
+            w_up,
+            w_down,
+            d_model,
+            d_ff,
+        }
+    }
+
+    pub fn random(
+        d_model: usize,
+        d_ff: usize,
+        n_experts: usize,
+        top_k: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let scale = 1.0 / (d_model as f32).sqrt();
+        let gate = GateNetwork::new(Tensor::rand_normal(&[n_experts, d_model], scale, rng), top_k);
+        let w_up = (0..n_experts)
+            .map(|_| Tensor::rand_normal(&[d_ff, d_model], scale, rng))
+            .collect();
+        let w_down = Tensor::rand_normal(&[d_model, d_ff], 1.0 / (d_ff as f32).sqrt(), rng);
+        Self::new(gate, w_up, w_down)
+    }
+}
+
+impl MoeLayer for StandardMoeLayer {
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+    fn d_ff(&self) -> usize {
+        self.d_ff
+    }
+    fn n_experts(&self) -> usize {
+        self.w_up.len()
+    }
+    fn w_down(&self) -> &Tensor {
+        &self.w_down
+    }
+
+    fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {
+        let (d, dff) = (self.d_model, self.d_ff);
+        h.fill(0.0);
+        let (routes, loads) = self.gate.route_batch(x, t);
+        let dispatch = GateNetwork::dispatch(&routes, self.n_experts());
+        for (e, toks) in dispatch.iter().enumerate() {
+            let w = &self.w_up[e];
+            for &(ti, wt) in toks {
+                let xi = &x[ti * d..(ti + 1) * d];
+                let hrow = &mut h[ti * dff..(ti + 1) * dff];
+                for r in 0..dff {
+                    hrow[r] += wt * crate::util::dot_f32(w.row(r), xi);
+                }
+            }
+        }
+        loads
+    }
+
+    fn expert_bytes(&self) -> usize {
+        self.w_up.iter().map(Tensor::nbytes).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense FFN baseline
+// ---------------------------------------------------------------------------
+
+pub struct DenseFfn {
+    pub w_up: Tensor,
+    pub w_down_t: Tensor,
+}
+
+impl DenseFfn {
+    pub fn random(d_model: usize, d_ff: usize, rng: &mut Rng) -> Self {
+        DenseFfn {
+            w_up: Tensor::rand_normal(&[d_ff, d_model], 1.0 / (d_model as f32).sqrt(), rng),
+            w_down_t: Tensor::rand_normal(&[d_model, d_ff], 1.0 / (d_ff as f32).sqrt(), rng),
+        }
+    }
+}
+
+impl MoeLayer for DenseFfn {
+    fn d_model(&self) -> usize {
+        self.w_up.shape[1]
+    }
+    fn d_ff(&self) -> usize {
+        self.w_up.shape[0]
+    }
+    fn n_experts(&self) -> usize {
+        1
+    }
+    fn w_down(&self) -> &Tensor {
+        &self.w_down_t
+    }
+
+    fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {
+        let (d, dff) = (self.d_model(), self.d_ff());
+        for i in 0..t {
+            let xi = &x[i * d..(i + 1) * d];
+            let hrow = &mut h[i * dff..(i + 1) * dff];
+            for r in 0..dff {
+                hrow[r] = crate::util::dot_f32(self.w_up.row(r), xi);
+            }
+        }
+        vec![1.0]
+    }
+
+    fn expert_bytes(&self) -> usize {
+        self.w_up.nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(seed: u64) -> ButterflyMoeLayer {
+        let mut rng = Rng::new(seed);
+        ButterflyMoeLayer::random(16, 32, 4, 2, None, &mut rng)
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let l = layer(1);
+        assert_eq!(l.d_model(), 16);
+        assert_eq!(l.d_ff(), 32);
+        assert_eq!(l.n_experts(), 4);
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let l = layer(2);
+        let mut rng = Rng::new(3);
+        let t = 5;
+        let x: Vec<f32> = (0..t * 16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut y = vec![0.0f32; t * 16];
+        let loads = l.forward(&x, t, &mut y);
+        assert!((loads.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(y.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn experts_forward_is_convex_mix_of_expert_outputs() {
+        let l = layer(4);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut h = vec![0.0f32; 32];
+        l.experts_forward(&x, 1, &mut h);
+        // manual recomputation from the route
+        let r = l.gate.route(&x);
+        let mut want = vec![0.0f32; 32];
+        let mut scratch = vec![0.0f32; 16];
+        let mut out = vec![0.0f32; 32];
+        for &(e, w) in &r.experts {
+            l.expert_forward(e, &x, &mut scratch, &mut out);
+            for (wv, &ov) in want.iter_mut().zip(&out) {
+                *wv += w * ov;
+            }
+        }
+        for (a, b) in h.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn experts_produce_distinct_outputs() {
+        let l = layer(6);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut scratch = vec![0.0f32; 16];
+        let mut y0 = vec![0.0f32; 32];
+        let mut y1 = vec![0.0f32; 32];
+        l.expert_forward(0, &x, &mut scratch, &mut y0);
+        l.expert_forward(1, &x, &mut scratch, &mut y1);
+        let diff: f32 = y0.iter().zip(&y1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-4);
+    }
+
+    #[test]
+    fn identity_rotations_reduce_to_substrate_gemv() {
+        let mut rng = Rng::new(8);
+        let mut l = ButterflyMoeLayer::random(8, 16, 2, 1, None, &mut rng);
+        for e in l.experts.iter_mut() {
+            e.theta = Butterfly::identity(8, 3);
+            e.phi = Butterfly::identity(16, 4);
+        }
+        let x: Vec<f32> = (0..8).map(|_| rng.normal_f32(1.0)).collect();
+        let mut scratch = vec![0.0f32; 8];
+        let mut out = vec![0.0f32; 16];
+        l.expert_forward(0, &x, &mut scratch, &mut out);
+        let mut want = vec![0.0f32; 16];
+        l.substrate.gemv(&x, &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn butterfly_expert_bytes_sublinear_vs_standard() {
+        // d=512, d_ff=2048, 64 experts: paper's Table 1 comparison.
+        let mut rng = Rng::new(9);
+        // construct tiny then scale-check the formulas via a small layer
+        let b = ButterflyMoeLayer::random(64, 128, 4, 2, None, &mut rng);
+        let s = StandardMoeLayer::random(64, 128, 4, 2, &mut rng);
+        assert!(b.expert_bytes() < s.expert_bytes() / 10);
+    }
+
+    #[test]
+    fn standard_moe_forward_runs() {
+        let mut rng = Rng::new(10);
+        let l = StandardMoeLayer::random(16, 32, 4, 2, &mut rng);
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut y = vec![0.0f32; 3 * 16];
+        let loads = l.forward(&x, 3, &mut y);
+        assert!((loads.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dense_ffn_forward_runs() {
+        let mut rng = Rng::new(11);
+        let l = DenseFfn::random(16, 32, &mut rng);
+        let x: Vec<f32> = (0..2 * 16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut y = vec![0.0f32; 2 * 16];
+        l.forward(&x, 2, &mut y);
+        assert!(y.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn depth_truncation_changes_params_not_shapes() {
+        let mut rng = Rng::new(12);
+        let l2 = ButterflyMoeLayer::random(64, 128, 2, 1, Some(2), &mut rng);
+        let l6 = ButterflyMoeLayer::random(64, 128, 2, 1, Some(6), &mut rng);
+        assert!(l2.expert_bytes() < l6.expert_bytes());
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32(1.0)).collect();
+        let mut y = vec![0.0f32; 64];
+        l2.forward(&x, 1, &mut y);
+        l6.forward(&x, 1, &mut y);
+    }
+}

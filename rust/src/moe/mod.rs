@@ -1,0 +1,48 @@
+//! Native edge inference engine for ButterflyMoE layers.
+//!
+//! This is the deployment path the paper's edge claims are about: packed
+//! ternary substrate + O(d log d) butterfly orbits, experts synthesized
+//! on the fly (Alg. 1), true sparse top-k dispatch (the L2 jax graph uses
+//! the dense-mask formulation instead; the two are parity-tested).
+
+pub mod gating;
+pub mod layer;
+
+pub use gating::GateNetwork;
+pub use layer::{ButterflyMoeLayer, DenseFfn, MoeLayer, StandardMoeLayer};
+
+/// GELU, tanh approximation — bit-compatible with `jax.nn.gelu`
+/// (approximate=True), which the L2 model uses.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_reference_points() {
+        // values from jax.nn.gelu(approximate=True)
+        assert!((gelu(0.0) - 0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+        assert!((gelu(3.0) - 2.996363).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_monotone_over_practical_range() {
+        let mut prev = gelu(-6.0);
+        let mut x = -6.0 + 0.05;
+        // gelu is monotone on [-0.75..] and only ~1e-3 non-monotone dip
+        // below; check global bounds instead of strict monotonicity.
+        while x < 6.0 {
+            let g = gelu(x);
+            assert!(g >= -0.2 && g <= x.max(0.0) + 1e-3);
+            prev = prev.min(g);
+            x += 0.05;
+        }
+    }
+}

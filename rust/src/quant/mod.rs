@@ -1,0 +1,179 @@
+//! AbsMean ternary quantization (eq. 5) and error metrics — the Rust
+//! mirror of `python/compile/quant.py`.
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-8;
+
+/// Result of ternarizing a weight tensor.
+#[derive(Clone, Debug)]
+pub struct TernaryQuant {
+    /// {-1, 0, +1} stored as i8, same shape/order as the source
+    pub q: Vec<i8>,
+    pub shape: Vec<usize>,
+    /// AbsMean scale
+    pub gamma: f32,
+}
+
+/// gamma = mean(|w|)  (eq. 5).
+pub fn absmean_scale(w: &[f32]) -> f32 {
+    if w.is_empty() {
+        return EPS;
+    }
+    w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32 + EPS
+}
+
+/// Quantize to {-1, 0, +1} with AbsMean scaling.
+pub fn ternary_quantize(t: &Tensor) -> TernaryQuant {
+    let gamma = absmean_scale(&t.data);
+    let q = t
+        .data
+        .iter()
+        .map(|&v| {
+            let r = (v / gamma).round();
+            r.clamp(-1.0, 1.0) as i8
+        })
+        .collect();
+    TernaryQuant {
+        q,
+        shape: t.shape.clone(),
+        gamma,
+    }
+}
+
+impl TernaryQuant {
+    /// Dequantize back to f32 (gamma * q).
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::from_vec(
+            &self.shape,
+            self.q.iter().map(|&v| v as f32 * self.gamma).collect(),
+        )
+    }
+
+    /// Fraction of zero weights (sparsity of the ternary grid).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.q.is_empty() {
+            return 0.0;
+        }
+        self.q.iter().filter(|&&v| v == 0).count() as f64 / self.q.len() as f64
+    }
+}
+
+/// Relative weight quantization MSE: ||Q(W)-W||^2 / ||W||^2 — the Fig. 4
+/// weight-space metric (paper reports it as a percentage).
+pub fn weight_quant_error(w: &Tensor) -> f64 {
+    let tq = ternary_quantize(w);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&wv, &qv) in w.data.iter().zip(&tq.q) {
+        let dq = qv as f32 * tq.gamma;
+        num += ((dq - wv) as f64).powi(2);
+        den += (wv as f64).powi(2);
+    }
+    num / (den + EPS as f64)
+}
+
+/// Relative output error between a quantized and a full-precision forward
+/// (Fig. 4's activation-aware metric): ||y_q - y_fp||^2 / ||y_fp||^2.
+pub fn output_quant_error(y_q: &[f32], y_fp: &[f32]) -> f64 {
+    assert_eq!(y_q.len(), y_fp.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&a, &b) in y_q.iter().zip(y_fp) {
+        num += ((a - b) as f64).powi(2);
+        den += (b as f64).powi(2);
+    }
+    num / (den + EPS as f64)
+}
+
+/// Histogram of w/gamma values (Fig. 4 top panels: how tightly the latent
+/// substrate clusters around the ternary grid).
+pub fn scaled_weight_histogram(w: &Tensor, bins: usize, lo: f32, hi: f32) -> Vec<u64> {
+    let gamma = absmean_scale(&w.data);
+    let mut h = vec![0u64; bins];
+    let width = (hi - lo) / bins as f32;
+    for &v in &w.data {
+        let x = v / gamma;
+        let idx = ((x - lo) / width).floor();
+        let idx = (idx.max(0.0) as usize).min(bins - 1);
+        h[idx] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quantize_values_are_ternary() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::rand_normal(&[32, 16], 1.0, &mut rng);
+        let tq = ternary_quantize(&t);
+        assert!(tq.q.iter().all(|&v| (-1..=1).contains(&v)));
+        assert!(tq.gamma > 0.0);
+    }
+
+    #[test]
+    fn absmean_matches_hand_value() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, -3.0, 0.0, 4.0]);
+        let tq = ternary_quantize(&t);
+        assert!((tq.gamma - 2.0).abs() < 1e-5);
+        // 1/2 rounds to 0 (ties-away is .5 -> 1 in rust; 0.5.round()=1)
+        assert_eq!(tq.q, vec![1, -1, 0, 1]);
+    }
+
+    #[test]
+    fn exact_ternary_has_zero_error() {
+        // mean|w| = gamma exactly when all entries are ±gamma
+        let t = Tensor::from_vec(&[4], vec![0.5, -0.5, 0.5, -0.5]);
+        assert!(weight_quant_error(&t) < 1e-9);
+    }
+
+    #[test]
+    fn heavy_tails_have_large_error() {
+        let mut rng = Rng::new(1);
+        let mut t = Tensor::rand_normal(&[64, 64], 1.0, &mut rng);
+        for v in t.data.iter_mut() {
+            *v = v.powi(3); // heavy-tailed
+        }
+        assert!(weight_quant_error(&t) > 0.05);
+    }
+
+    #[test]
+    fn dequantize_roundtrip_on_grid() {
+        let t = Tensor::from_vec(&[3], vec![0.25, 0.0, -0.25]);
+        let tq = ternary_quantize(&t);
+        let back = tq.dequantize();
+        for (a, b) in back.data.iter().zip(&t.data) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn output_error_zero_when_equal() {
+        let y = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(output_quant_error(&y, &y), 0.0);
+    }
+
+    #[test]
+    fn histogram_total_and_peak() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::rand_normal(&[1000], 0.02, &mut rng);
+        let h = scaled_weight_histogram(&t, 9, -4.5, 4.5);
+        assert_eq!(h.iter().sum::<u64>(), 1000);
+        // tight gaussian w/ absmean scaling spreads to ±~2 around 0; the
+        // center bin should dominate the extremes
+        assert!(h[4] > h[0] && h[4] > h[8]);
+    }
+
+    #[test]
+    fn zero_fraction_sane() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::rand_normal(&[4096], 1.0, &mut rng);
+        let z = ternary_quantize(&t).zero_fraction();
+        // For N(0,1) with gamma = E|w| ≈ 0.798, P(|w| < gamma/2) ≈ 0.31
+        assert!(z > 0.2 && z < 0.45, "zero fraction {z}");
+    }
+}

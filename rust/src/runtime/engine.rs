@@ -1,0 +1,158 @@
+//! The PJRT execution engine: one CPU client, a cache of compiled
+//! executables, and typed run helpers.
+//!
+//! Compilation happens once per artifact per process (XLA compile of the
+//! bigger train-step graphs takes seconds); executions are cheap and
+//! internally synchronized, so `Engine` is shared behind `Arc` by the
+//! coordinator's workers.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::Value;
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    // name -> compiled executable.  Mutex (not RwLock): compile is rare,
+    // execute holds no lock.
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile {name}"))?,
+        );
+        eprintln!("[engine] compiled {name} in {:.2}s", sw.secs());
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host values; returns the decomposed
+    /// output tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: got {} inputs, artifact wants {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        for (v, s) in inputs.iter().zip(&spec.inputs) {
+            anyhow::ensure!(
+                v.shape() == &s.shape[..],
+                "{name}: input '{}' shape {:?} != manifest {:?}",
+                s.name,
+                v.shape(),
+                s.shape
+            );
+        }
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Value::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let parts = result.to_tuple().context("decompose output tuple")?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    /// Load the exported initial params for a config (ordered to match
+    /// the train_step artifact's first P inputs).
+    pub fn load_params(&self, params_key: &str) -> Result<Vec<Value>> {
+        self.manifest.load_params(params_key)
+    }
+
+    /// Zeros shaped like the given values (Adam moment init).
+    pub fn zeros_like(vals: &[Value]) -> Vec<Value> {
+        vals.iter()
+            .map(|v| match v {
+                Value::F32(t) => Value::F32(Tensor::zeros(&t.shape)),
+                Value::I32(t) => Value::I32(crate::tensor::IntTensor::zeros(&t.shape)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            Some(Engine::new(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn run_moe_fwd_artifact() {
+        let Some(eng) = engine() else { return };
+        // tiny moe_fwd_t16: ffn params + x (16, 64)
+        let spec = eng.manifest.artifact("tiny__moe_fwd_t16").unwrap().clone();
+        let mut inputs = eng.load_params("tiny.ffn").unwrap();
+        let t = spec.inputs.last().unwrap().shape.clone();
+        let mut rng = crate::util::Rng::new(0);
+        inputs.push(Value::F32(Tensor::rand_normal(&t, 1.0, &mut rng)));
+        let out = eng.run("tiny__moe_fwd_t16", &inputs).unwrap();
+        // outputs: y (16, 64), load (4,)
+        let y = out[0].as_f32().unwrap();
+        assert_eq!(y.shape, vec![16, 64]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        let load = out[1].as_f32().unwrap();
+        assert!((load.data.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn input_shape_mismatch_is_rejected() {
+        let Some(eng) = engine() else { return };
+        let mut inputs = eng.load_params("tiny.ffn").unwrap();
+        let mut rng = crate::util::Rng::new(0);
+        inputs.push(Value::F32(Tensor::rand_normal(&[3, 3], 1.0, &mut rng)));
+        assert!(eng.run("tiny__moe_fwd_t16", &inputs).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Engine execution thread.
+//!
+//! The published `xla` crate's client/executable types are `!Send`
+//! (internal `Rc`s over the PJRT C handles), so the engine is pinned to a
+//! dedicated thread that owns it outright — the standard one-executor-
+//! per-accelerator layout.  Worker threads talk to it through a cloneable
+//! [`EngineHandle`]; requests are serialized at the device boundary,
+//! which on a single CPU PJRT device is where they would serialize
+//! anyway.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{Engine, Value};
+
+enum Job {
+    Run {
+        artifact: String,
+        inputs: Vec<Value>,
+        reply: Sender<Result<Vec<Value>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine thread.
+pub struct EngineHandle {
+    tx: Mutex<Sender<Job>>,
+}
+
+impl EngineHandle {
+    /// Execute an artifact and wait for its outputs.
+    pub fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Run {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: rtx,
+            })
+            .context("engine thread gone")?;
+        rrx.recv().context("engine thread dropped reply")?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}
+
+/// Start the engine thread: the PJRT client and executables are `!Send`,
+/// so the [`Engine`] is *created inside* the thread and never leaves it.
+/// Blocks until the engine has initialized (or failed).
+pub fn spawn_engine_thread(
+    artifacts_dir: &std::path::Path,
+) -> Result<(std::sync::Arc<EngineHandle>, std::thread::JoinHandle<()>)> {
+    let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let dir = artifacts_dir.to_path_buf();
+    let join = std::thread::Builder::new()
+        .name("bmoe-engine".into())
+        .spawn(move || {
+            let engine = match Engine::new(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            for job in rx {
+                match job {
+                    Job::Run {
+                        artifact,
+                        inputs,
+                        reply,
+                    } => {
+                        let result = engine.run(&artifact, &inputs);
+                        let _ = reply.send(result);
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn engine thread");
+    ready_rx
+        .recv()
+        .context("engine thread died during init")??;
+    Ok((
+        std::sync::Arc::new(EngineHandle { tx: Mutex::new(tx) }),
+        join,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn engine_thread_roundtrip() {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = super::super::Manifest::load(&dir).unwrap();
+        let mut inputs = manifest.load_params("tiny.ffn").unwrap();
+        let spec = manifest.artifact("tiny__moe_fwd_t16").unwrap();
+        let shape = spec.inputs.last().unwrap().shape.clone();
+        let mut rng = crate::util::Rng::new(0);
+        inputs.push(Value::F32(crate::tensor::Tensor::rand_normal(
+            &shape, 1.0, &mut rng,
+        )));
+        let (handle, join) = spawn_engine_thread(&dir).unwrap();
+        // run from several threads concurrently
+        let results: Vec<_> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let handle = &handle;
+                    let inputs = inputs.clone();
+                    s.spawn(move || handle.run("tiny__moe_fwd_t16", inputs).unwrap())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for out in &results {
+            assert_eq!(out[0].as_f32().unwrap().shape, vec![16, 64]);
+        }
+        handle.shutdown();
+        join.join().unwrap();
+    }
+}

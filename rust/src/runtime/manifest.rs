@@ -1,0 +1,248 @@
+//! Typed view of `artifacts/manifest.json` (written by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{configs_from_manifest, ModelConfig};
+use crate::jsonx::Json;
+
+/// One input or output slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("io shape")?
+                .iter()
+                .map(|v| v.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .context("io dtype")?
+                .to_string(),
+        })
+    }
+}
+
+/// One compiled-graph artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// For train_step artifacts: the number of model parameter tensors P
+    /// (inputs are [P params, P m, P v, step, lr, tokens, targets]).
+    pub fn train_param_count(&self) -> usize {
+        debug_assert_eq!(self.kind, "train_step");
+        (self.inputs.len() - 4) / 3
+    }
+}
+
+/// Exported parameter file entry.
+#[derive(Clone, Debug)]
+pub struct ParamsSpec {
+    pub file: String,
+    pub names: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, ParamsSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        let configs = configs_from_manifest(&j)?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact name")?
+                .to_string();
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("file")?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .context("kind")?
+                    .to_string(),
+                config: a
+                    .get("config")
+                    .and_then(Json::as_str)
+                    .context("config")?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("inputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("outputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(name, spec);
+        }
+
+        let mut params = BTreeMap::new();
+        if let Some(pobj) = j.get("params").and_then(Json::as_obj) {
+            for (k, v) in pobj {
+                params.insert(
+                    k.clone(),
+                    ParamsSpec {
+                        file: v
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .context("params file")?
+                            .to_string(),
+                        names: v
+                            .get("names")
+                            .and_then(Json::as_arr)
+                            .context("params names")?
+                            .iter()
+                            .map(|n| n.as_str().context("name").map(str::to_string))
+                            .collect::<Result<_>>()?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            configs,
+            artifacts,
+            params,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Artifacts of a kind for a config, e.g. the lm_logits batch buckets.
+    pub fn find(&self, config: &str, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.config == config && a.kind == kind)
+            .collect()
+    }
+
+    /// Load the exported initial params for a config, ordered to match
+    /// the executables' flattened input order.  (Pure file I/O — no PJRT;
+    /// callable from any thread.)
+    pub fn load_params(&self, params_key: &str) -> Result<Vec<super::Value>> {
+        use crate::tensor::store::{Entry, TensorStore};
+        let spec = self
+            .params
+            .get(params_key)
+            .with_context(|| format!("no params entry '{params_key}'"))?;
+        let store = TensorStore::read(&self.dir.join(&spec.file))?;
+        spec.names
+            .iter()
+            .map(|n| {
+                let e = store
+                    .get(n)
+                    .with_context(|| format!("params file missing tensor '{n}'"))?;
+                match e {
+                    Entry::F32(t) => Ok(super::Value::F32(t.clone())),
+                    Entry::I32(t) => Ok(super::Value::I32(t.clone())),
+                    Entry::U8 { .. } => anyhow::bail!("u8 tensor '{n}' not a model param"),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.configs.contains_key("tiny"));
+        let ts = m.artifact("tiny__train_step").unwrap();
+        assert_eq!(ts.kind, "train_step");
+        let p = ts.train_param_count();
+        assert_eq!(ts.inputs.len(), 3 * p + 4);
+        assert_eq!(ts.outputs.len(), 3 * p + 5);
+        // params export is listed and names align with input specs
+        let ps = m.params.get("tiny").unwrap();
+        assert_eq!(ps.names.len(), p);
+        // hlo files exist
+        for a in m.artifacts.values() {
+            assert!(m.hlo_path(a).exists(), "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

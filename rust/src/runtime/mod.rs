@@ -1,0 +1,102 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute from
+//! the Rust request path.  The interchange contract (HLO text + manifest
+//! + BMOE params) is documented in `python/compile/aot.py`.
+
+pub mod engine;
+pub mod exec_thread;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use exec_thread::{spawn_engine_thread, EngineHandle};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// Host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(Tensor::from_vec(&[], vec![x]))
+    }
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(IntTensor::from_vec(&[], vec![x]))
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("value is not f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => bail!("value is not i32"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Value::F32(t) => {
+                if t.shape.is_empty() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    xla::Literal::vec1(&t.data).reshape(&dims)?
+                }
+            }
+            Value::I32(t) => {
+                if t.shape.is_empty() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    xla::Literal::vec1(&t.data).reshape(&dims)?
+                }
+            }
+        })
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Value::F32(Tensor::from_vec(&dims, data)))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I32(IntTensor::from_vec(&dims, data)))
+            }
+            ty => bail!("unsupported literal dtype {ty:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes() {
+        let v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), &[2, 3]);
+        assert!(v.as_f32().is_ok());
+        assert!(v.as_i32().is_err());
+        let s = Value::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+}

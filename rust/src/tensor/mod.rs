@@ -1,0 +1,156 @@
+//! Host tensors (row-major f32/i32) and the BMOE tensor container.
+
+pub mod store;
+
+/// Row-major f32 tensor.  The native engine only needs rank <= 4.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn rand_normal(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Bytes of f32 storage (for memory accounting of dense baselines).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Row view for 2-D tensors.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Dense matmul helper (tests/baselines only; hot paths live in
+    /// `ternary::` and `butterfly::`):  self (m,k) @ other^T (n,k) -> (m,n).
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let xi = self.row(i);
+            for j in 0..n {
+                out.data[i * n + j] = crate::util::dot_f32(xi, other.row(j));
+            }
+        }
+        let _ = k;
+        out
+    }
+
+    /// Max |a-b| against another tensor (parity tests).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Integer tensor (token ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+    pub fn zeros(shape: &[usize]) -> Self {
+        IntTensor {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rank(), 2);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // x (2,3) @ w^T where w (2,3): out[i][j] = dot(x_i, w_j)
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        let y = x.matmul_nt(&w);
+        assert_eq!(y.shape, vec![2, 2]);
+        assert_eq!(y.data, vec![1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn row_views() {
+        let mut t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(t.row(1), &[3., 4.]);
+        t.row_mut(0)[1] = 9.0;
+        assert_eq!(t.data, vec![1., 9., 3., 4.]);
+    }
+}

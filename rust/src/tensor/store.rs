@@ -1,0 +1,243 @@
+//! BMOE tensor container — Rust side of the spec in
+//! `python/compile/bmoe_io.py` (little-endian; see that file for layout).
+//!
+//! Reads initial params exported by `aot.py`; writes checkpoints from the
+//! training driver so Python tooling can inspect them symmetrically.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{IntTensor, Tensor};
+
+const MAGIC: &[u8; 6] = b"BMOE1\x00";
+
+/// A named tensor of any supported dtype.
+#[derive(Clone, Debug)]
+pub enum Entry {
+    F32(Tensor),
+    I32(IntTensor),
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl Entry {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Entry::F32(t) => &t.shape,
+            Entry::I32(t) => &t.shape,
+            Entry::U8 { shape, .. } => shape,
+        }
+    }
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            Entry::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Ordered named-tensor store (order is load-bearing: it must match the
+/// flattened parameter order recorded in the manifest).
+#[derive(Clone, Debug, Default)]
+pub struct TensorStore {
+    pub names: Vec<String>,
+    pub by_name: BTreeMap<String, Entry>,
+}
+
+impl TensorStore {
+    pub fn insert(&mut self, name: &str, e: Entry) {
+        if !self.by_name.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.by_name.insert(name.to_string(), e);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.by_name.get(name)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .and_then(Entry::as_f32)
+            .with_context(|| format!("tensor '{name}' missing or not f32"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Tensors in insertion order (== file order == manifest order).
+    pub fn iter_ordered(&self) -> impl Iterator<Item = (&String, &Entry)> {
+        self.names.iter().map(move |n| (n, &self.by_name[n]))
+    }
+
+    pub fn read(path: &Path) -> Result<TensorStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic {magic:?}", path.display());
+        }
+        let count = read_u32(&mut f)?;
+        let mut store = TensorStore::default();
+        for _ in 0..count {
+            let nlen = read_u16(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let (code, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+            let entry = match code {
+                0 => {
+                    let mut raw = vec![0u8; n * 4];
+                    f.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Entry::F32(Tensor { shape, data })
+                }
+                1 => {
+                    let mut raw = vec![0u8; n * 4];
+                    f.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Entry::I32(IntTensor { shape, data })
+                }
+                2 => {
+                    let mut data = vec![0u8; n];
+                    f.read_exact(&mut data)?;
+                    Entry::U8 { shape, data }
+                }
+                _ => bail!("{}: unknown dtype code {code}", path.display()),
+            };
+            store.insert(&name, entry);
+        }
+        Ok(store)
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for (name, e) in self.iter_ordered() {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            let (code, shape): (u8, &[usize]) = match e {
+                Entry::F32(t) => (0, &t.shape),
+                Entry::I32(t) => (1, &t.shape),
+                Entry::U8 { shape, .. } => (2, shape),
+            };
+            f.write_all(&[code, shape.len() as u8])?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match e {
+                Entry::F32(t) => {
+                    for v in &t.data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Entry::I32(t) => {
+                    for v in &t.data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Entry::U8 { data, .. } => f.write_all(data)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bmoe_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bmoe");
+        let mut s = TensorStore::default();
+        s.insert(
+            "w.0",
+            Entry::F32(Tensor::from_vec(&[2, 3], vec![1., -2., 3., 4., 5., 6.5])),
+        );
+        s.insert(
+            "ids",
+            Entry::I32(IntTensor::from_vec(&[4], vec![1, -2, 3, 4])),
+        );
+        s.insert(
+            "scalar",
+            Entry::F32(Tensor::from_vec(&[], vec![7.25])),
+        );
+        s.insert(
+            "packed",
+            Entry::U8 {
+                shape: vec![3],
+                data: vec![0, 127, 255],
+            },
+        );
+        s.write(&path).unwrap();
+        let back = TensorStore::read(&path).unwrap();
+        assert_eq!(back.names, s.names);
+        assert_eq!(back.get_f32("w.0").unwrap().data, vec![1., -2., 3., 4., 5., 6.5]);
+        assert_eq!(back.get_f32("scalar").unwrap().data, vec![7.25]);
+        match back.get("packed").unwrap() {
+            Entry::U8 { data, .. } => assert_eq!(data, &vec![0, 127, 255]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn reads_python_export_if_present() {
+        let path = Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/tiny.params.bmoe"
+        ));
+        if path.exists() {
+            let s = TensorStore::read(path).unwrap();
+            assert!(s.len() > 10);
+            // embeddings present with the documented naming scheme
+            assert!(s.names.iter().any(|n| n.contains("embed")));
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("bmoe_store_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bmoe");
+        std::fs::write(&path, b"NOTBMOE").unwrap();
+        assert!(TensorStore::read(&path).is_err());
+    }
+}

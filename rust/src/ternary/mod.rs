@@ -1,0 +1,484 @@
+//! Packed ternary weight storage and the add/sub-only GEMV hot path.
+//!
+//! Two physical layouts, both exactly representing a {-1,0,+1}^(n×k)
+//! matrix plus one f32 scale:
+//!
+//! * [`PackedTernary`] — 2 bits/weight (4 weights/byte).  The deployment
+//!   format: 2.0 bits/weight stored vs the paper's information-theoretic
+//!   1.58; Table 1 reports both (entropy coding would close the gap; see
+//!   `baselines::qmoe` which does exactly that for the QMoE row).
+//! * [`BitplaneTernary`] — two k-bit planes per row (plus-plane,
+//!   minus-plane).  GEMV becomes `sum(x[plus]) - sum(x[minus])`, which
+//!   vectorizes via 64-bit mask words; this is the optimized inference
+//!   path (see EXPERIMENTS.md §Perf for measured speedups).
+//!
+//! Row-major semantics match `kernels/ref.py::ternary_matmul_ref`:
+//! `y = gamma * (x @ Q^T)` with Q (n, k), x (k,) -> y (n,).
+
+use crate::quant::TernaryQuant;
+
+/// 2-bit packed layout: code 0b00 = 0, 0b01 = +1, 0b10 = -1.
+#[derive(Clone, Debug)]
+pub struct PackedTernary {
+    pub rows: usize,
+    pub cols: usize,
+    pub gamma: f32,
+    /// ceil(cols/4) bytes per row, row-major
+    pub bytes_per_row: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedTernary {
+    pub fn from_quant(q: &TernaryQuant) -> Self {
+        assert_eq!(q.shape.len(), 2, "PackedTernary wants a matrix");
+        let (rows, cols) = (q.shape[0], q.shape[1]);
+        let bpr = cols.div_ceil(4);
+        let mut data = vec![0u8; rows * bpr];
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = q.q[r * cols + c];
+                let code: u8 = match v {
+                    0 => 0b00,
+                    1 => 0b01,
+                    -1 => 0b10,
+                    _ => unreachable!("non-ternary value {v}"),
+                };
+                data[r * bpr + c / 4] |= code << ((c % 4) * 2);
+            }
+        }
+        PackedTernary {
+            rows,
+            cols,
+            gamma: q.gamma,
+            bytes_per_row: bpr,
+            data,
+        }
+    }
+
+    /// Storage bytes (weights only) — the Table 1 "measured" number.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() + 4 // + gamma
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        let byte = self.data[r * self.bytes_per_row + c / 4];
+        match (byte >> ((c % 4) * 2)) & 0b11 {
+            0b00 => 0,
+            0b01 => 1,
+            0b10 => -1,
+            _ => 0, // 0b11 unused
+        }
+    }
+
+    /// Unpack to i8 (tests / conversion).
+    pub fn unpack(&self) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// y = gamma * Q x  — scalar reference path (unpack on the fly).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let row = &self.data[r * self.bytes_per_row..(r + 1) * self.bytes_per_row];
+            let mut acc = 0.0f32;
+            let mut c = 0;
+            for &byte in row {
+                let mut b = byte;
+                let lim = (self.cols - c).min(4);
+                for _ in 0..lim {
+                    match b & 0b11 {
+                        0b01 => acc += x[c],
+                        0b10 => acc -= x[c],
+                        _ => {}
+                    }
+                    b >>= 2;
+                    c += 1;
+                }
+            }
+            y[r] = acc * self.gamma;
+        }
+    }
+}
+
+/// Bitplane layout: per row, `words = ceil(cols/64)` u64 words for the
+/// +1 positions and the same for -1 positions.
+#[derive(Clone, Debug)]
+pub struct BitplaneTernary {
+    pub rows: usize,
+    pub cols: usize,
+    pub gamma: f32,
+    words_per_row: usize,
+    plus: Vec<u64>,
+    minus: Vec<u64>,
+}
+
+impl BitplaneTernary {
+    pub fn from_quant(q: &TernaryQuant) -> Self {
+        assert_eq!(q.shape.len(), 2);
+        let (rows, cols) = (q.shape[0], q.shape[1]);
+        let wpr = cols.div_ceil(64);
+        let mut plus = vec![0u64; rows * wpr];
+        let mut minus = vec![0u64; rows * wpr];
+        for r in 0..rows {
+            for c in 0..cols {
+                match q.q[r * cols + c] {
+                    1 => plus[r * wpr + c / 64] |= 1u64 << (c % 64),
+                    -1 => minus[r * wpr + c / 64] |= 1u64 << (c % 64),
+                    _ => {}
+                }
+            }
+        }
+        BitplaneTernary {
+            rows,
+            cols,
+            gamma: q.gamma,
+            words_per_row: wpr,
+            plus,
+            minus,
+        }
+    }
+
+    /// Storage bytes (two bitplanes = 2 bits/weight, same density as the
+    /// 2-bit packing, different access pattern).
+    pub fn nbytes(&self) -> usize {
+        (self.plus.len() + self.minus.len()) * 8 + 4
+    }
+
+    /// y = gamma * Q x.
+    ///
+    /// Optimized path (§Perf iteration 1): branchless sign expansion —
+    /// per 64-column word, `sign = bit(plus) - bit(minus)` feeds a
+    /// multiply-add over a fixed-width inner loop that LLVM vectorizes.
+    /// The earlier sparse (`trailing_zeros`) walk is kept as
+    /// [`Self::gemv_sparse`] for comparison; it loses once zero fraction
+    /// drops below ~2/3 because of its serial dependent chain.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let wpr = self.words_per_row;
+        for r in 0..self.rows {
+            let pr = &self.plus[r * wpr..(r + 1) * wpr];
+            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            let mut acc = 0.0f32;
+            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+                if pw == 0 && mw == 0 {
+                    continue; // whole word of zeros: skip 64 columns
+                }
+                let base = wi * 64;
+                let n = (self.cols - base).min(64);
+                let xs = &x[base..base + n];
+                // decode the word into a stack sign buffer (shift-chain,
+                // no variable shifts), then a lane-parallel dot
+                let mut signs = [0.0f32; 64];
+                let (mut p, mut m) = (pw, mw);
+                for s in signs[..n].iter_mut() {
+                    *s = ((p & 1) as i32 - (m & 1) as i32) as f32;
+                    p >>= 1;
+                    m >>= 1;
+                }
+                acc += crate::util::dot_f32(&signs[..n], xs);
+            }
+            y[r] = acc * self.gamma;
+        }
+    }
+
+    /// Sparse-iteration GEMV (original implementation; wins only on very
+    /// sparse rows).  Kept for the §Perf ablation in `hotpath.rs`.
+    pub fn gemv_sparse(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let wpr = self.words_per_row;
+        for r in 0..self.rows {
+            let pr = &self.plus[r * wpr..(r + 1) * wpr];
+            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            let mut acc = 0.0f32;
+            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+                let base = wi * 64;
+                let mut p = pw;
+                while p != 0 {
+                    let b = p.trailing_zeros() as usize;
+                    acc += x[base + b];
+                    p &= p - 1;
+                }
+                let mut m = mw;
+                while m != 0 {
+                    let b = m.trailing_zeros() as usize;
+                    acc -= x[base + b];
+                    m &= m - 1;
+                }
+            }
+            y[r] = acc * self.gamma;
+        }
+    }
+
+    /// Batched GEMM: X (t, cols) -> Y (t, rows), row-major.
+    ///
+    /// §Perf iteration 2: row-outer loop decodes each weight row's signs
+    /// once into a dense scratch vector and reuses it across all `t`
+    /// tokens (the activation block stays L1/L2-resident), so the 2-bit
+    /// weight stream is read exactly once per batch — the same traffic
+    /// argument as the Pallas kernel's BlockSpec.
+    pub fn gemm(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), t * self.cols);
+        assert_eq!(y.len(), t * self.rows);
+        if t == 1 {
+            return self.gemv(x, y);
+        }
+        let wpr = self.words_per_row;
+        let mut signs = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let pr = &self.plus[r * wpr..(r + 1) * wpr];
+            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+                let base = wi * 64;
+                let n = (self.cols - base).min(64);
+                let (mut p, mut m) = (pw, mw);
+                for s in signs[base..base + n].iter_mut() {
+                    *s = ((p & 1) as i32 - (m & 1) as i32) as f32;
+                    p >>= 1;
+                    m >>= 1;
+                }
+            }
+            for i in 0..t {
+                let xi = &x[i * self.cols..(i + 1) * self.cols];
+                y[i * self.rows + r] = crate::util::dot_f32(&signs, xi) * self.gamma;
+            }
+        }
+    }
+}
+
+impl BitplaneTernary {
+    /// Batched GEMM with int8-quantized activations (§Perf iteration 5,
+    /// the bitnet.cpp trick): per-token absmax scales map x to i8, the
+    /// ternary signs decode to i8, and the inner dot runs in widening
+    /// integer arithmetic — 2-4x more SIMD lanes than f32 on this core.
+    ///
+    /// Activation quantization adds ~0.1-0.4% relative error (8-bit,
+    /// measured in tests) — the same order as the ternary substrate's
+    /// own error, and the deployment-standard choice (W1.58A8).
+    pub fn gemm_a8(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), t * self.cols);
+        assert_eq!(y.len(), t * self.rows);
+        let cols = self.cols;
+        let wpr = self.words_per_row;
+        // quantize activations: per-token absmax -> i8 in [-127, 127]
+        let mut xq = vec![0i8; t * cols];
+        let mut scales = vec![0.0f32; t];
+        for i in 0..t {
+            let xi = &x[i * cols..(i + 1) * cols];
+            let amax = xi.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+            let inv = 127.0 / amax;
+            scales[i] = amax / 127.0 * self.gamma;
+            for (q, &v) in xq[i * cols..(i + 1) * cols].iter_mut().zip(xi) {
+                *q = (v * inv).round() as i8;
+            }
+        }
+        let mut signs = vec![0i8; cols];
+        for r in 0..self.rows {
+            let pr = &self.plus[r * wpr..(r + 1) * wpr];
+            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+                let base = wi * 64;
+                let n = (cols - base).min(64);
+                let (mut p, mut m) = (pw, mw);
+                for s in signs[base..base + n].iter_mut() {
+                    *s = (p & 1) as i8 - (m & 1) as i8;
+                    p >>= 1;
+                    m >>= 1;
+                }
+            }
+            for i in 0..t {
+                let qi = &xq[i * cols..(i + 1) * cols];
+                y[i * self.rows + r] = dot_i8(&signs, qi) as f32 * scales[i];
+            }
+        }
+    }
+}
+
+/// Widening i8 dot with 16 lanes of i32 accumulation (vectorizes).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n16 = n - n % 16;
+    let mut acc = [0i32; 16];
+    let mut i = 0;
+    while i < n16 {
+        let (av, bv) = (&a[i..i + 16], &b[i..i + 16]);
+        for l in 0..16 {
+            acc[l] += av[l] as i32 * bv[l] as i32;
+        }
+        i += 16;
+    }
+    let mut s: i32 = acc.iter().sum();
+    for j in n16..n {
+        s += a[j] as i32 * b[j] as i32;
+    }
+    s
+}
+
+/// Dense reference: y = gamma * Q x from an i8 matrix (tests).
+pub fn dense_ternary_gemv(q: &[i8], rows: usize, cols: usize, gamma: f32, x: &[f32], y: &mut [f32]) {
+    for r in 0..rows {
+        let mut acc = 0.0f32;
+        for c in 0..cols {
+            acc += q[r * cols + c] as f32 * x[c];
+        }
+        y[r] = acc * gamma;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ternary_quantize;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn random_quant(rows: usize, cols: usize, seed: u64) -> TernaryQuant {
+        let mut rng = Rng::new(seed);
+        let t = Tensor::rand_normal(&[rows, cols], 1.0, &mut rng);
+        ternary_quantize(&t)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (rows, cols) in [(4usize, 7usize), (16, 64), (3, 130), (1, 1)] {
+            let q = random_quant(rows, cols, (rows * cols) as u64);
+            let p = PackedTernary::from_quant(&q);
+            assert_eq!(p.unpack(), q.q, "({rows},{cols})");
+        }
+    }
+
+    #[test]
+    fn packed_density_is_2bits() {
+        let q = random_quant(512, 2048, 1);
+        let p = PackedTernary::from_quant(&q);
+        assert_eq!(p.nbytes() - 4, 512 * 2048 / 4);
+    }
+
+    #[test]
+    fn packed_gemv_matches_dense() {
+        for (rows, cols, seed) in [(8usize, 16usize, 2u64), (32, 100, 3), (5, 257, 4)] {
+            let q = random_quant(rows, cols, seed);
+            let p = PackedTernary::from_quant(&q);
+            let mut rng = Rng::new(seed + 100);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(1.0)).collect();
+            let mut y = vec![0.0; rows];
+            let mut want = vec![0.0; rows];
+            p.gemv(&x, &mut y);
+            dense_ternary_gemv(&q.q, rows, cols, q.gamma, &x, &mut want);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b} ({rows}x{cols})");
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_gemv_matches_dense() {
+        for (rows, cols, seed) in [(8usize, 16usize, 5u64), (64, 512, 6), (7, 200, 7)] {
+            let q = random_quant(rows, cols, seed);
+            let bp = BitplaneTernary::from_quant(&q);
+            let mut rng = Rng::new(seed + 200);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(1.0)).collect();
+            let mut y = vec![0.0; rows];
+            let mut want = vec![0.0; rows];
+            bp.gemv(&x, &mut y);
+            dense_ternary_gemv(&q.q, rows, cols, q.gamma, &x, &mut want);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b} ({rows}x{cols})");
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_gemm_matches_row_gemv() {
+        let q = random_quant(16, 96, 8);
+        let bp = BitplaneTernary::from_quant(&q);
+        let mut rng = Rng::new(9);
+        let t = 5;
+        let x: Vec<f32> = (0..t * 96).map(|_| rng.normal_f32(1.0)).collect();
+        let mut y = vec![0.0; t * 16];
+        bp.gemm(&x, t, &mut y);
+        for i in 0..t {
+            let mut yi = vec![0.0; 16];
+            bp.gemv(&x[i * 96..(i + 1) * 96], &mut yi);
+            for (a, b) in y[i * 16..(i + 1) * 16].iter().zip(&yi) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_a8_close_to_exact() {
+        let q = random_quant(64, 256, 31);
+        let bp = BitplaneTernary::from_quant(&q);
+        let mut rng = Rng::new(32);
+        let t = 7;
+        let x: Vec<f32> = (0..t * 256).map(|_| rng.normal_f32(1.0)).collect();
+        let mut exact = vec![0.0; t * 64];
+        let mut approx = vec![0.0; t * 64];
+        bp.gemm(&x, t, &mut exact);
+        bp.gemm_a8(&x, t, &mut approx);
+        // relative error of 8-bit activation quantization
+        let scale = exact.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (a, b) in approx.iter().zip(&exact) {
+            assert!((a - b).abs() / scale < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemv_sparse_matches_gemv() {
+        for (rows, cols, seed) in [(32usize, 128usize, 21u64), (7, 200, 22)] {
+            let q = random_quant(rows, cols, seed);
+            let bp = BitplaneTernary::from_quant(&q);
+            let mut rng = Rng::new(seed + 500);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(1.0)).collect();
+            let mut a = vec![0.0; rows];
+            let mut b = vec![0.0; rows];
+            bp.gemv(&x, &mut a);
+            bp.gemv_sparse(&x, &mut b);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let q = TernaryQuant {
+            q: vec![0; 12],
+            shape: vec![3, 4],
+            gamma: 0.5,
+        };
+        let p = PackedTernary::from_quant(&q);
+        let bp = BitplaneTernary::from_quant(&q);
+        let x = vec![1.0; 4];
+        let mut y = vec![9.0; 3];
+        p.gemv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+        bp.gemv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn gamma_scales_output() {
+        let q = TernaryQuant {
+            q: vec![1, -1],
+            shape: vec![1, 2],
+            gamma: 2.5,
+        };
+        let p = PackedTernary::from_quant(&q);
+        let mut y = vec![0.0; 1];
+        p.gemv(&[3.0, 1.0], &mut y);
+        assert!((y[0] - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,302 @@
+//! Training driver: runs the AOT-compiled train-step artifact in a loop,
+//! owns the LR schedule, logs the loss curve, writes checkpoints.
+//!
+//! All compute (fwd + bwd + AdamW) is inside one compiled HLO module; the
+//! driver shuttles the parameter tuple between steps.  (The published
+//! `xla` crate cannot split an on-device tuple buffer into per-tensor
+//! buffers, so state makes a host round-trip per step — measured and
+//! acceptable at these model sizes, see EXPERIMENTS.md §Perf.)
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::RuntimeConfig;
+use crate::data::{Batcher, CorpusConfig, SyntheticCorpus};
+use crate::runtime::{Engine, Value};
+use crate::tensor::store::{Entry, TensorStore};
+use crate::util::Stopwatch;
+
+/// Per-step record for the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub ce: f32,
+    pub balance: f32,
+    pub step_secs: f64,
+}
+
+pub struct TrainReport {
+    pub config: String,
+    pub logs: Vec<StepLog>,
+    pub final_params: Vec<Value>,
+    pub param_names: Vec<String>,
+    pub total_secs: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.logs.last().map(|l| l.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean CE over the last `n` steps (smoother than the last point).
+    pub fn tail_ce(&self, n: usize) -> f32 {
+        let tail = &self.logs[self.logs.len().saturating_sub(n)..];
+        tail.iter().map(|l| l.ce).sum::<f32>() / tail.len().max(1) as f32
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,ce,balance,step_secs")?;
+        for l in &self.logs {
+            writeln!(
+                f,
+                "{},{},{},{},{:.6}",
+                l.step, l.loss, l.ce, l.balance, l.step_secs
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Save final params as a BMOE checkpoint readable by both sides.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut store = TensorStore::default();
+        for (name, v) in self.param_names.iter().zip(&self.final_params) {
+            match v {
+                Value::F32(t) => store.insert(name, Entry::F32(t.clone())),
+                Value::I32(t) => store.insert(name, Entry::I32(t.clone())),
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        store.write(path)
+    }
+}
+
+/// Linear-warmup constant LR schedule.
+pub fn lr_at(step: usize, cfg: &RuntimeConfig) -> f32 {
+    let lr = cfg.lr as f32;
+    if step < cfg.warmup_steps {
+        lr * (step + 1) as f32 / cfg.warmup_steps as f32
+    } else {
+        lr
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub rt: RuntimeConfig,
+    /// progress callback every `log_every` steps
+    pub log_every: usize,
+    pub quiet: bool,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, rt: RuntimeConfig) -> Self {
+        Trainer {
+            engine,
+            rt,
+            log_every: 20,
+            quiet: false,
+        }
+    }
+
+    /// Train `config` from its exported init params (or a checkpoint).
+    pub fn run(&self, config: &str, init_from: Option<&Path>) -> Result<TrainReport> {
+        let art_name = format!("{config}__train_step");
+        let spec = self.engine.manifest.artifact(&art_name)?.clone();
+        let mcfg = self.engine.manifest.config(config)?.clone();
+        let p = spec.train_param_count();
+
+        // batch shape from the artifact's `tokens` input
+        let tok_spec = &spec.inputs[3 * p + 2];
+        let (batch, seq_len) = (tok_spec.shape[0], tok_spec.shape[1]);
+
+        let param_names: Vec<String> = self
+            .engine
+            .manifest
+            .params
+            .get(config)
+            .map(|ps| ps.names.clone())
+            .unwrap_or_else(|| (0..p).map(|i| format!("param.{i}")).collect());
+
+        let mut params = match init_from {
+            None => self.engine.load_params(config)?,
+            Some(ckpt) => load_checkpoint_values(ckpt, &param_names)?,
+        };
+        anyhow::ensure!(params.len() == p, "param count mismatch");
+        let mut m = Engine::zeros_like(&params);
+        let mut v = Engine::zeros_like(&params);
+        let mut step_v = Value::scalar_i32(0);
+
+        let corpus = SyntheticCorpus::new(CorpusConfig {
+            vocab: mcfg.vocab,
+            seed: self.rt.seed,
+            ..CorpusConfig::default()
+        });
+        let mut batcher = Batcher::new(corpus, batch, seq_len);
+
+        let total_sw = Stopwatch::start();
+        let mut logs = Vec::with_capacity(self.rt.steps);
+        for step in 0..self.rt.steps {
+            let sw = Stopwatch::start();
+            let (toks, tgts) = batcher.next_batch();
+            let mut inputs = Vec::with_capacity(3 * p + 4);
+            inputs.extend(params.drain(..));
+            inputs.extend(m.drain(..));
+            inputs.extend(v.drain(..));
+            inputs.push(step_v.clone());
+            inputs.push(Value::scalar_f32(lr_at(step, &self.rt)));
+            inputs.push(Value::I32(toks));
+            inputs.push(Value::I32(tgts));
+
+            let mut out = self.engine.run(&art_name, &inputs)?;
+            // outputs: [P params, P m, P v, step, loss, ce, bal, load]
+            let rest = out.split_off(3 * p);
+            params = out.drain(..p).collect();
+            m = out.drain(..p).collect();
+            v = out;
+            step_v = rest[0].clone();
+            let loss = rest[1].as_f32()?.data[0];
+            let ce = rest[2].as_f32()?.data[0];
+            let bal = rest[3].as_f32()?.data[0];
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+
+            logs.push(StepLog {
+                step,
+                loss,
+                ce,
+                balance: bal,
+                step_secs: sw.secs(),
+            });
+            if !self.quiet && (step % self.log_every == 0 || step + 1 == self.rt.steps) {
+                eprintln!(
+                    "[train {config}] step {step:>5} loss {loss:.4} ce {ce:.4} bal {bal:.5} ({:.0} ms)",
+                    sw.millis()
+                );
+            }
+            if self.rt.checkpoint_every > 0
+                && step > 0
+                && step % self.rt.checkpoint_every == 0
+            {
+                let report = TrainReport {
+                    config: config.to_string(),
+                    logs: logs.clone(),
+                    final_params: params.clone(),
+                    param_names: param_names.clone(),
+                    total_secs: total_sw.secs(),
+                };
+                report.save_checkpoint(&self.ckpt_path(config, step))?;
+            }
+        }
+        Ok(TrainReport {
+            config: config.to_string(),
+            logs,
+            final_params: params,
+            param_names,
+            total_secs: total_sw.secs(),
+        })
+    }
+
+    pub fn ckpt_path(&self, config: &str, step: usize) -> PathBuf {
+        Path::new(&self.rt.out_dir).join(format!("{config}_step{step}.bmoe"))
+    }
+
+    /// Evaluate CE with the eval artifact on `n_batches` held-out batches.
+    pub fn eval(&self, config: &str, params: &[Value], n_batches: usize) -> Result<f32> {
+        let art = format!("{config}__eval");
+        let spec = self.engine.manifest.artifact(&art)?.clone();
+        let mcfg = self.engine.manifest.config(config)?.clone();
+        let p = spec.inputs.len() - 2;
+        anyhow::ensure!(params.len() == p, "eval param count");
+        let tok_spec = &spec.inputs[p];
+        let corpus = SyntheticCorpus::new(CorpusConfig {
+            vocab: mcfg.vocab,
+            seed: self.rt.seed + 0xEE,
+            ..CorpusConfig::default()
+        });
+        let mut batcher = Batcher::new(corpus, tok_spec.shape[0], tok_spec.shape[1]);
+        let mut total = 0.0f32;
+        for _ in 0..n_batches {
+            let (toks, tgts) = batcher.next_batch();
+            let mut inputs: Vec<Value> = params.to_vec();
+            inputs.push(Value::I32(toks));
+            inputs.push(Value::I32(tgts));
+            let out = self.engine.run(&art, &inputs)?;
+            total += out[0].as_f32()?.data[0];
+        }
+        Ok(total / n_batches as f32)
+    }
+}
+
+/// Get-or-train a checkpoint for `config` at `steps` steps, cached under
+/// `dir` — shared by the Fig. 4 / Fig. 5 benches so repeated runs are
+/// instant.  Returns the checkpoint path.
+pub fn ensure_checkpoint(
+    engine: &Engine,
+    config: &str,
+    steps: usize,
+    dir: &Path,
+) -> Result<PathBuf> {
+    let path = dir.join(format!("{config}_s{steps}.bmoe"));
+    if path.exists() {
+        return Ok(path);
+    }
+    eprintln!("[ensure_checkpoint] training {config} for {steps} steps (cached at {})", path.display());
+    let rt = RuntimeConfig {
+        steps,
+        lr: 3e-3,
+        warmup_steps: (steps / 10).max(1),
+        checkpoint_every: 0,
+        out_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(engine, rt);
+    trainer.quiet = true;
+    let report = trainer.run(config, None)?;
+    report.save_checkpoint(&path)?;
+    report.write_csv(&dir.join(format!("{config}_s{steps}_loss.csv")))?;
+    Ok(path)
+}
+
+/// Load checkpoint values in a given name order.
+pub fn load_checkpoint_values(path: &Path, names: &[String]) -> Result<Vec<Value>> {
+    let store = TensorStore::read(path)?;
+    names
+        .iter()
+        .map(|n| {
+            let e = store
+                .get(n)
+                .with_context(|| format!("checkpoint missing '{n}'"))?;
+            match e {
+                Entry::F32(t) => Ok(Value::F32(t.clone())),
+                Entry::I32(t) => Ok(Value::I32(t.clone())),
+                Entry::U8 { .. } => anyhow::bail!("unexpected u8 tensor"),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_warms_up() {
+        let rt = RuntimeConfig {
+            lr: 1.0,
+            warmup_steps: 10,
+            ..Default::default()
+        };
+        assert!((lr_at(0, &rt) - 0.1).abs() < 1e-6);
+        assert!((lr_at(4, &rt) - 0.5).abs() < 1e-6);
+        assert!((lr_at(10, &rt) - 1.0).abs() < 1e-6);
+        assert!((lr_at(500, &rt) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,198 @@
+//! Summary statistics used by the bench harness and the coordinator's
+//! latency accounting.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on a copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Mean pairwise cosine similarity helpers (Fig. 5).
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets for latency tracking.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * ratio^i, base * ratio^(i+1)) seconds
+    counts: Vec<u64>,
+    base: f64,
+    ratio: f64,
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new(1e-6, 1.3, 64)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(base: f64, ratio: f64, buckets: usize) -> Self {
+        LatencyHistogram {
+            counts: vec![0; buckets],
+            base,
+            ratio,
+            n: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.n += 1;
+        self.sum += secs;
+        if secs > self.max {
+            self.max = secs;
+        }
+        let idx = if secs <= self.base {
+            0
+        } else {
+            ((secs / self.base).ln() / self.ratio.ln()).floor() as usize
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * self.ratio.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((cosine_similarity(&a, &a) - 1.0).abs() < 1e-9);
+        assert!(cosine_similarity(&a, &b).abs() < 1e-9);
+        let c = [-1.0f32, 0.0];
+        assert!((cosine_similarity(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5); // 10us .. 10ms
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 3e-3 && p50 < 8e-3, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= p50);
+        assert_eq!(h.n, 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(1e-3);
+        b.record(2e-3);
+        a.merge(&b);
+        assert_eq!(a.n, 2);
+        assert!((a.mean() - 1.5e-3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cross-layer parity: the native Rust edge engine vs the AOT-compiled
+//! jax graph (which embeds the L1 Pallas kernels) on identical weights.
+//!
+//! This is the repo's strongest correctness signal: three independent
+//! implementations of eq. (2) — pure-jnp oracle (pytest), Pallas kernel
+//! (inside the HLO), and the packed-ternary native engine — must agree.
+//!
+//! Skips (passes vacuously) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
+use butterfly_moe::runtime::{Engine, Value};
+use butterfly_moe::tensor::store::TensorStore;
+use butterfly_moe::tensor::Tensor;
+use butterfly_moe::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn native_engine_matches_aot_graph_on_moe_layer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+
+    // native layer from the exported ffn params
+    let store = TensorStore::read(&dir.join("tiny.ffn.bmoe")).unwrap();
+    let native = ButterflyMoeLayer::from_store(&store, "ffn.", cfg.top_k).unwrap();
+
+    // identical input batch
+    let t = 16usize;
+    let d = cfg.d_model;
+    let mut rng = Rng::new(1234);
+    let x = Tensor::rand_normal(&[t, d], 1.0, &mut rng);
+
+    // PJRT path: params + x -> (y, load)
+    let mut inputs = engine.load_params("tiny.ffn").unwrap();
+    inputs.push(Value::F32(x.clone()));
+    let out = engine.run("tiny__moe_fwd_t16", &inputs).unwrap();
+    let y_pjrt = out[0].as_f32().unwrap();
+    let load_pjrt = out[1].as_f32().unwrap();
+
+    // native path
+    let mut y_native = vec![0.0f32; t * d];
+    let loads_native = native.forward(&x.data, t, &mut y_native);
+
+    // outputs agree (ternary substrate identical; fp noise only)
+    let scale = y_pjrt
+        .data
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()))
+        .max(1e-6);
+    let mut max_err = 0.0f32;
+    for (a, b) in y_native.iter().zip(&y_pjrt.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err / scale < 2e-3,
+        "native vs pjrt max err {max_err} (scale {scale})"
+    );
+
+    // router load fractions agree
+    for (a, b) in loads_native.iter().zip(&load_pjrt.data) {
+        assert!((a - *b as f64).abs() < 1e-4, "loads {loads_native:?} vs {:?}", load_pjrt.data);
+    }
+}
+
+#[test]
+fn native_engine_matches_aot_on_all_token_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let store = TensorStore::read(&dir.join("tiny.ffn.bmoe")).unwrap();
+    let native = ButterflyMoeLayer::from_store(&store, "ffn.", cfg.top_k).unwrap();
+
+    for bucket in [64usize, 256] {
+        let name = format!("tiny__moe_fwd_t{bucket}");
+        let mut rng = Rng::new(bucket as u64);
+        let x = Tensor::rand_normal(&[bucket, cfg.d_model], 0.7, &mut rng);
+        let mut inputs = engine.load_params("tiny.ffn").unwrap();
+        inputs.push(Value::F32(x.clone()));
+        let out = engine.run(&name, &inputs).unwrap();
+        let y_pjrt = out[0].as_f32().unwrap();
+
+        let mut y_native = vec![0.0f32; bucket * cfg.d_model];
+        native.forward(&x.data, bucket, &mut y_native);
+        let scale = y_pjrt.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        let max_err = y_native
+            .iter()
+            .zip(&y_pjrt.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err / scale < 2e-3, "bucket {bucket}: err {max_err}");
+    }
+}
+
+#[test]
+fn expert_bytes_scale_sublinearly_on_loaded_layer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = TensorStore::read(&dir.join("tiny.ffn.bmoe")).unwrap();
+    let layer = ButterflyMoeLayer::from_store(&store, "ffn.", 2).unwrap();
+    // tiny: d=64, d_ff=256, 4 experts -> formula check
+    let s = butterfly_moe::memmodel::LayerShape {
+        d_model: 64,
+        d_ff: 256,
+    };
+    let formula = butterfly_moe::memmodel::butterfly_bytes(4, s);
+    let measured = layer.expert_bytes() as f64;
+    assert!(
+        (measured - formula).abs() / formula < 0.05,
+        "measured {measured} vs formula {formula}"
+    );
+}

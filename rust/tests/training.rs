@@ -1,0 +1,113 @@
+//! Integration: the Rust training driver over the AOT train-step
+//! artifact — loss must descend, checkpoints must round-trip, and the
+//! static-rotation baseline must leave its angles untouched.
+//!
+//! Skips (passes vacuously) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use butterfly_moe::config::RuntimeConfig;
+use butterfly_moe::runtime::Engine;
+use butterfly_moe::train::{load_checkpoint_values, Trainer};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn runtime(steps: usize, out: &str) -> RuntimeConfig {
+    RuntimeConfig {
+        steps,
+        lr: 3e-3,
+        warmup_steps: 5,
+        checkpoint_every: 0,
+        out_dir: std::env::temp_dir()
+            .join(out)
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tiny_training_descends_and_checkpoints() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&engine, runtime(30, "bmoe_it_train"));
+    trainer.quiet = true;
+    let report = trainer.run("tiny", None).unwrap();
+
+    assert_eq!(report.logs.len(), 30);
+    assert!(report.logs.iter().all(|l| l.loss.is_finite()));
+    let first5: f32 = report.logs[..5].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    let last5: f32 = report.logs[25..].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    assert!(
+        last5 < first5 - 0.05,
+        "loss should descend: {first5} -> {last5}"
+    );
+
+    // checkpoint roundtrip preserves every tensor
+    let ckpt = std::env::temp_dir().join("bmoe_it_train/tiny_test.bmoe");
+    report.save_checkpoint(&ckpt).unwrap();
+    let back = load_checkpoint_values(&ckpt, &report.param_names).unwrap();
+    assert_eq!(back.len(), report.final_params.len());
+    for (a, b) in back.iter().zip(&report.final_params) {
+        let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data);
+    }
+
+    // eval artifact runs on the trained params
+    let ce = trainer.eval("tiny", &report.final_params, 2).unwrap();
+    assert!(ce.is_finite() && ce > 0.0);
+
+    // loss curve CSV
+    let csv = std::env::temp_dir().join("bmoe_it_train/loss.csv");
+    report.write_csv(&csv).unwrap();
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.lines().count() == 31); // header + 30 steps
+}
+
+#[test]
+fn static_rotations_do_not_move_under_training() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&engine, runtime(6, "bmoe_it_static"));
+    trainer.quiet = true;
+    let report = trainer.run("tiny_static", None).unwrap();
+    let init = engine.load_params("tiny_static").unwrap();
+    for ((name, after), before) in report
+        .param_names
+        .iter()
+        .zip(&report.final_params)
+        .zip(&init)
+    {
+        let is_rotation = name.contains("theta") || name.contains("phi");
+        let (a, b) = (after.as_f32().unwrap(), before.as_f32().unwrap());
+        let delta = a.max_abs_diff(b);
+        if is_rotation {
+            assert_eq!(delta, 0.0, "{name} moved by {delta}");
+        }
+    }
+    // ...but the substrate did move
+    let moved = report
+        .param_names
+        .iter()
+        .zip(&report.final_params)
+        .zip(&init)
+        .filter(|((n, _), _)| n.contains("w_base"))
+        .all(|((_, a), b)| a.as_f32().unwrap().max_abs_diff(b.as_f32().unwrap()) > 0.0);
+    assert!(moved);
+}
+
+#[test]
+fn standard_and_dense_baselines_train() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    for cfg in ["tiny_standard", "tiny_dense"] {
+        let mut trainer = Trainer::new(&engine, runtime(8, "bmoe_it_baselines"));
+        trainer.quiet = true;
+        let report = trainer.run(cfg, None).unwrap();
+        assert!(report.final_loss().is_finite(), "{cfg}");
+    }
+}
