@@ -10,7 +10,13 @@
 //!
 //! Run: `cargo run --release --example edge_deployment -- [--experts 256]`
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use butterfly_moe::cli::Args;
+use butterfly_moe::coordinator::{
+    Coordinator, GenerateRequest, NativeMoeBackend, SamplingParams, SchedulerConfig,
+};
 use butterfly_moe::devices::ALL_DEVICES;
 use butterfly_moe::energy::{butterfly_moe_energy, standard_moe_energy};
 use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
@@ -46,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== instantiating {n_experts} experts on this machine ==");
     let mut rng = Rng::new(0xED6E);
     let sw = Stopwatch::start();
-    let layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
+    let layer = Arc::new(ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng));
     println!(
         "  built in {:.2}s; expert storage {} (paper formula {}), vs standard {}",
         sw.secs(),
@@ -72,6 +78,42 @@ fn main() -> anyhow::Result<()> {
         per_token * 1e3,
         1.0 / per_token
     );
+
+    // ------------------------------------------------------------------
+    // Generation sessions on-device: the same layer behind the
+    // continuous-batching coordinator, streaming multi-token completions
+    // ------------------------------------------------------------------
+    println!("\n== generation sessions over the native engine ==");
+    let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 8));
+    let coord = Coordinator::start(backend, SchedulerConfig::new(8, Duration::from_millis(1)));
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..6).map(|_| rng.below(512) as i32).collect();
+            let req = if i % 2 == 0 {
+                GenerateRequest::greedy(prompt, 16)
+            } else {
+                GenerateRequest::greedy(prompt, 16)
+                    .with_sampling(SamplingParams::temperature(0.9, i as u64))
+            };
+            coord.submit(req)
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let c = butterfly_moe::coordinator::collect_stream(&rx, Duration::from_secs(60))?;
+        println!(
+            "  session {i}: {} tokens ({}) ttft {:.2} ms total {:.2} ms",
+            c.tokens.len(),
+            c.reason,
+            c.ttft.map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0),
+            c.total.as_secs_f64() * 1e3,
+        );
+    }
+    let snap = coord.metrics.snapshot();
+    println!(
+        "  aggregate: {:.0} tok/s at mean step occupancy {:.1}",
+        snap.tokens_per_sec, snap.mean_batch_size
+    );
+    coord.shutdown();
 
     // ------------------------------------------------------------------
     // Energy per inference on each device's DRAM

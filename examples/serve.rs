@@ -1,82 +1,128 @@
-//! Serving demo: start the coordinator over the AOT-compiled LM, drive
-//! it with a Poisson open-loop load, report latency percentiles and
-//! throughput — the serving-systems view of ButterflyMoE.
+//! Serving demo: N concurrent clients, each streaming a multi-token
+//! completion (half greedy, half temperature-sampled) from the
+//! continuous-batching coordinator — the serving-systems view of
+//! ButterflyMoE.
+//!
+//! Mixed prompt budgets show the headline property of session
+//! scheduling: short requests join the running batch, stream out, and
+//! finish while long batch-mates are still decoding.
 //!
 //! Run: `cargo run --release --example serve -- [--config tiny]
-//!       [--rps 200] [--seconds 10] [--workers 2] [--max-batch 16]`
+//!       [--clients 8] [--sessions 4] [--max-batch 16] [--native]`
+//! (`--native` serves the pure-rust MoE backend; no artifacts needed.)
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use butterfly_moe::cli::Args;
-use butterfly_moe::coordinator::{Coordinator, PjrtLmBackend};
-use butterfly_moe::util::Rng;
+use butterfly_moe::coordinator::{
+    collect_stream, Backend, Coordinator, GenerateRequest, NativeMoeBackend, PjrtLmBackend,
+    SamplingParams, SchedulerConfig, StopCriteria,
+};
+use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::util::{stats, Rng};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let config = args.flag_or("config", "tiny");
-    let rps: f64 = args.flag_parse("rps")?.unwrap_or(200.0);
-    let seconds: f64 = args.flag_parse("seconds")?.unwrap_or(10.0);
-    let workers: usize = args.flag_parse("workers")?.unwrap_or(2);
+    let clients: usize = args.flag_parse("clients")?.unwrap_or(8);
+    let sessions: usize = args.flag_parse("sessions")?.unwrap_or(4);
     let max_batch: usize = args.flag_parse("max-batch")?.unwrap_or(16);
-    let max_wait_ms: u64 = args.flag_parse("max-wait-ms")?.unwrap_or(5);
+    let max_wait_ms: u64 = args.flag_parse("max-wait-ms")?.unwrap_or(2);
 
-    println!("== starting coordinator (config={config}, {workers} workers, batch<= {max_batch}, wait<={max_wait_ms}ms) ==");
-    let (backend, _join) = PjrtLmBackend::start(Path::new("artifacts"), &config, None)?;
-    let vocab = 512; // tiny/small prompts sample below this
+    let backend: Arc<dyn Backend> = if args.has_switch("native") {
+        let mut rng = Rng::new(0xBE);
+        let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng));
+        println!("== native MoE backend (no artifacts) ==");
+        Arc::new(NativeMoeBackend::new(layer, 512, 32, max_batch))
+    } else {
+        let (b, _join) = PjrtLmBackend::start(Path::new("artifacts"), &config, None)?;
+        println!("== PJRT LM backend (config={config}) ==");
+        Arc::new(b)
+    };
+    let vocab = backend.vocab();
+    println!(
+        "backend {} | max_batch<={max_batch} wait<={max_wait_ms}ms | {clients} clients x {sessions} sessions",
+        backend.name()
+    );
+    // warmup: drive every compiled batch bucket before timing, so XLA
+    // bucket compilation stays out of the measured window
+    butterfly_moe::coordinator::warm(backend.as_ref())?;
     let coord = Coordinator::start(
-        Arc::new(backend),
-        max_batch,
-        Duration::from_millis(max_wait_ms),
-        workers,
+        backend,
+        SchedulerConfig::new(max_batch, Duration::from_millis(max_wait_ms)),
     );
 
-    // warmup: compile all buckets before measuring
-    for b in [1usize, 3, 9] {
-        let rxs: Vec<_> = (0..b).map(|_| coord.submit(vec![1, 2, 3])).collect();
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-    }
-
-    println!("== open-loop Poisson load: {rps} req/s for {seconds}s ==");
-    let mut rng = Rng::new(0x5E12E);
     let t0 = Instant::now();
-    let mut pending = Vec::new();
-    let mut next_arrival = 0.0f64;
-    let mut submitted = 0u64;
-    while t0.elapsed().as_secs_f64() < seconds {
-        let now = t0.elapsed().as_secs_f64();
-        if now >= next_arrival {
-            let len = 4 + rng.below(12);
-            let prompt: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
-            pending.push(coord.submit(prompt));
-            submitted += 1;
-            next_arrival += rng.exponential(rps);
-        } else {
-            std::thread::sleep(Duration::from_micros(200));
+    let results = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let coord = coord.clone();
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(0x5E12E + c as u64);
+                let mut lines = Vec::new();
+                let mut ttfts = Vec::new();
+                for s in 0..sessions {
+                    let plen = 4 + rng.below(12);
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| rng.below(vocab) as i32).collect();
+                    // odd sessions sample, even sessions decode greedily;
+                    // alternate short and long token budgets
+                    let max_new = if s % 2 == 0 { 8 } else { 48 };
+                    let sampling = if s % 2 == 0 {
+                        SamplingParams::greedy()
+                    } else {
+                        SamplingParams::top_k(0.8, 40, (c * 1000 + s) as u64)
+                    };
+                    let req = GenerateRequest {
+                        prompt,
+                        sampling,
+                        stop: StopCriteria::max_tokens(max_new),
+                    };
+                    let rx = coord.submit(req);
+                    let done = collect_stream(&rx, Duration::from_secs(120))
+                        .expect("session must terminate");
+                    if let Some(ttft) = done.ttft {
+                        ttfts.push(ttft.as_secs_f64());
+                    }
+                    lines.push(format!(
+                        "client {c} session {s}: {} tokens ({}) in {:.1} ms, first {:?} ...",
+                        done.tokens.len(),
+                        done.reason,
+                        done.total.as_secs_f64() * 1e3,
+                        &done.tokens[..done.tokens.len().min(6)],
+                    ));
+                }
+                (lines, ttfts)
+            }));
         }
-    }
-    // drain
-    let mut latencies = Vec::with_capacity(pending.len());
-    for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(120))?;
-        latencies.push(resp.latency.as_secs_f64());
-    }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect::<Vec<_>>()
+    });
     let wall = t0.elapsed().as_secs_f64();
 
-    use butterfly_moe::util::stats;
+    let mut ttfts = Vec::new();
+    for (lines, t) in &results {
+        for l in lines {
+            println!("  {l}");
+        }
+        ttfts.extend_from_slice(t);
+    }
+    let snap = coord.metrics.snapshot();
     println!("\n== results ==");
-    println!("  submitted {submitted} requests in {wall:.1}s -> {:.0} req/s served", submitted as f64 / wall);
     println!(
-        "  latency p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
-        1e3 * stats::percentile(&latencies, 50.0),
-        1e3 * stats::percentile(&latencies, 95.0),
-        1e3 * stats::percentile(&latencies, 99.0),
-        1e3 * latencies.iter().cloned().fold(0.0, f64::max),
+        "  {} sessions ({} tokens) in {wall:.1}s -> {:.0} tok/s sustained",
+        snap.responses, snap.tokens, snap.tokens as f64 / wall
     );
-    println!("  coordinator: {}", coord.metrics.snapshot().summary());
+    println!(
+        "  client-side ttft p50 {:.2} ms | p99 {:.2} ms",
+        1e3 * stats::percentile(&ttfts, 50.0),
+        1e3 * stats::percentile(&ttfts, 99.0),
+    );
+    println!("  coordinator: {}", snap.summary());
     coord.shutdown();
-    std::process::exit(0); // engine thread would otherwise hold the process
+    std::process::exit(0); // PJRT engine thread would otherwise hold the process
 }

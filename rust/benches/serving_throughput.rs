@@ -1,95 +1,202 @@
-//! Serving throughput/latency bench: the coordinator over the native
-//! backend (edge scenario) under increasing load and across batching
-//! policies — the systems-side evaluation of the L3 contribution.
+//! Serving throughput/latency bench: the generation-session coordinator
+//! under an open-loop Poisson session load with a mixed-length workload
+//! (short 4-token and long 32-token budgets) — the systems-side
+//! evaluation of the L3 contribution.
+//!
+//! Reports sustained tokens/sec, TTFT, inter-token latency, and the
+//! continuous-batching headline: short sessions *overtake* long ones
+//! that were submitted earlier, instead of convoying behind them.
+//!
+//! Runs the native backend always, and the PJRT LM backend when
+//! `make artifacts` has produced `artifacts/manifest.json`.
 //!
 //! Run: `cargo bench --bench serving_throughput`
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use butterfly_moe::bench::Table;
-use butterfly_moe::coordinator::{Coordinator, NativeMoeBackend};
+use butterfly_moe::coordinator::{
+    collect_stream, Backend, Coordinator, GenerateRequest, NativeMoeBackend, PjrtLmBackend,
+    SchedulerConfig,
+};
 use butterfly_moe::moe::ButterflyMoeLayer;
 use butterfly_moe::util::{stats, Rng};
 
+const SHORT_TOKENS: usize = 4;
+const LONG_TOKENS: usize = 32;
+
+struct WorkloadResult {
+    tok_per_sec: f64,
+    ttft: Vec<f64>,
+    short_e2e: Vec<f64>,
+    long_e2e: Vec<f64>,
+    /// short sessions that finished before an earlier-submitted long one
+    overtakes: usize,
+    occupancy: f64,
+    itl_p50: f64,
+}
+
+/// Open-loop Poisson arrivals at `sps` sessions/sec for `seconds`;
+/// every 4th session is long.  Latencies are server-side (from the
+/// event stream), completion ordering is reconstructed from submit
+/// time + end-to-end duration.
 fn drive(
     coord: &Coordinator,
-    rps: f64,
+    vocab: usize,
+    sps: f64,
     seconds: f64,
     rng: &mut Rng,
-) -> (f64, Vec<f64>) {
+) -> anyhow::Result<WorkloadResult> {
     let t0 = Instant::now();
-    let mut pending = Vec::new();
+    let mut pending = Vec::new(); // (is_long, submitted_at_secs, rx)
     let mut next = 0.0f64;
+    let mut n = 0usize;
     while t0.elapsed().as_secs_f64() < seconds {
         let now = t0.elapsed().as_secs_f64();
         if now >= next {
-            let prompt: Vec<i32> = (0..8).map(|_| rng.below(512) as i32).collect();
-            pending.push(coord.submit(prompt));
-            next += rng.exponential(rps);
+            let is_long = n % 4 == 3;
+            let budget = if is_long { LONG_TOKENS } else { SHORT_TOKENS };
+            let prompt: Vec<i32> = (0..8).map(|_| rng.below(vocab) as i32).collect();
+            pending.push((is_long, now, coord.submit(GenerateRequest::greedy(prompt, budget))));
+            n += 1;
+            next += rng.exponential(sps);
         } else {
             std::thread::sleep(Duration::from_micros(100));
         }
     }
-    let mut lats = Vec::with_capacity(pending.len());
-    for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-        lats.push(resp.latency.as_secs_f64());
+    let mut ttft = Vec::new();
+    let mut short_e2e = Vec::new();
+    let mut long_e2e = Vec::new();
+    let mut finished = Vec::new(); // (is_long, submitted, finished)
+    let mut tokens = 0u64;
+    for (is_long, submitted, rx) in pending {
+        let c = collect_stream(&rx, Duration::from_secs(120))?;
+        tokens += c.tokens.len() as u64;
+        if let Some(t) = c.ttft {
+            ttft.push(t.as_secs_f64());
+        }
+        let e2e = c.total.as_secs_f64();
+        if is_long {
+            long_e2e.push(e2e);
+        } else {
+            short_e2e.push(e2e);
+        }
+        finished.push((is_long, submitted, submitted + e2e));
     }
     let wall = t0.elapsed().as_secs_f64();
-    (lats.len() as f64 / wall, lats)
+    // a short session "overtakes" when some long session submitted
+    // earlier finishes later
+    let mut overtakes = 0;
+    for &(is_long, sub, fin) in &finished {
+        if is_long {
+            continue;
+        }
+        if finished
+            .iter()
+            .any(|&(l, lsub, lfin)| l && lsub < sub && lfin > fin)
+        {
+            overtakes += 1;
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    Ok(WorkloadResult {
+        tok_per_sec: tokens as f64 / wall,
+        ttft,
+        short_e2e,
+        long_e2e,
+        overtakes,
+        occupancy: snap.mean_batch_size,
+        itl_p50: snap.itl_p50,
+    })
+}
+
+fn bench_backend(
+    label: &str,
+    make: impl Fn() -> Arc<dyn Backend>,
+    vocab: usize,
+    loads: &[f64],
+    seconds: f64,
+    out: &Path,
+    rng: &mut Rng,
+) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        &format!("Serving sessions ({label}): mixed 4/32-token workload, batch<=16, wait<=2ms"),
+        &[
+            "Offered sess/s",
+            "tok/s",
+            "Occupancy",
+            "TTFT p50 ms",
+            "TTFT p99 ms",
+            "ITL p50 ms",
+            "Short e2e p50 ms",
+            "Long e2e p50 ms",
+            "Short overtakes",
+        ],
+    );
+    for &sps in loads {
+        let backend = make();
+        // warm every compiled batch bucket so XLA compilation stays out
+        // of the measured window
+        butterfly_moe::coordinator::warm(backend.as_ref())?;
+        let coord =
+            Coordinator::start(backend, SchedulerConfig::new(16, Duration::from_millis(2)));
+        let r = drive(&coord, vocab, sps, seconds, rng)?;
+        t.row(&[
+            format!("{sps:.0}"),
+            format!("{:.0}", r.tok_per_sec),
+            format!("{:.1}", r.occupancy),
+            format!("{:.2}", 1e3 * stats::percentile(&r.ttft, 50.0)),
+            format!("{:.2}", 1e3 * stats::percentile(&r.ttft, 99.0)),
+            format!("{:.3}", 1e3 * r.itl_p50),
+            format!("{:.2}", 1e3 * stats::percentile(&r.short_e2e, 50.0)),
+            format!("{:.2}", 1e3 * stats::percentile(&r.long_e2e, 50.0)),
+            format!("{}/{}", r.overtakes, r.short_e2e.len()),
+        ]);
+        coord.shutdown();
+    }
+    t.print();
+    t.write_csv(out)?;
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let out = std::path::Path::new("runs/tables");
     std::fs::create_dir_all(out)?;
     let mut rng = Rng::new(0x5EE);
-    let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut rng));
 
-    // load sweep at a fixed policy
-    let mut t = Table::new(
-        "Serving: offered load sweep (native backend, batch<=16, wait<=2ms)",
-        &["Offered rps", "Served rps", "p50 ms", "p95 ms", "p99 ms", "mean batch"],
-    );
-    for rps in [50.0f64, 200.0, 800.0] {
-        let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16));
-        let coord = Coordinator::start(backend, 16, Duration::from_millis(2), 2);
-        let (served, lats) = drive(&coord, rps, 3.0, &mut rng);
-        let snap = coord.metrics.snapshot();
-        t.row(&[
-            format!("{rps:.0}"),
-            format!("{served:.0}"),
-            format!("{:.2}", 1e3 * stats::percentile(&lats, 50.0)),
-            format!("{:.2}", 1e3 * stats::percentile(&lats, 95.0)),
-            format!("{:.2}", 1e3 * stats::percentile(&lats, 99.0)),
-            format!("{:.1}", snap.mean_batch_size),
-        ]);
-        coord.shutdown();
-    }
-    t.print();
-    t.write_csv(&out.join("serving_load_sweep.csv"))?;
+    // native edge backend: always available
+    let mut layer_rng = Rng::new(7);
+    let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut layer_rng));
+    bench_backend(
+        "native-moe",
+        || Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16)),
+        512,
+        &[20.0, 80.0, 320.0],
+        3.0,
+        &out.join("serving_sessions_native.csv"),
+        &mut rng,
+    )?;
 
-    // batching-policy ablation at fixed load
-    let mut t = Table::new(
-        "Serving: batching policy ablation (400 rps offered)",
-        &["max_batch", "max_wait ms", "Served rps", "p50 ms", "p99 ms", "mean batch"],
-    );
-    for (mb, mw) in [(1usize, 0u64), (4, 1), (16, 2), (16, 10)] {
-        let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16));
-        let coord = Coordinator::start(backend, mb, Duration::from_millis(mw), 2);
-        let (served, lats) = drive(&coord, 400.0, 3.0, &mut rng);
-        let snap = coord.metrics.snapshot();
-        t.row(&[
-            mb.to_string(),
-            mw.to_string(),
-            format!("{served:.0}"),
-            format!("{:.2}", 1e3 * stats::percentile(&lats, 50.0)),
-            format!("{:.2}", 1e3 * stats::percentile(&lats, 99.0)),
-            format!("{:.1}", snap.mean_batch_size),
-        ]);
-        coord.shutdown();
+    // PJRT LM backend: needs compiled artifacts
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let (backend, _join) = PjrtLmBackend::start(artifacts, "tiny", None)?;
+        let backend: Arc<dyn Backend> = Arc::new(backend);
+        let vocab = backend.vocab();
+        bench_backend(
+            "pjrt-lm:tiny",
+            || backend.clone(),
+            vocab,
+            &[5.0, 20.0],
+            3.0,
+            &out.join("serving_sessions_pjrt.csv"),
+            &mut rng,
+        )?;
+        std::process::exit(0); // engine thread would otherwise hold the process
+    } else {
+        println!("(skipping PJRT backend: run `make artifacts` to enable)");
     }
-    t.print();
-    t.write_csv(&out.join("serving_policy_ablation.csv"))?;
     Ok(())
 }

@@ -91,8 +91,11 @@ COMMANDS:
   quickstart            load artifacts, run one forward, print memory stats
   train                 train a config via the AOT train-step artifact
   eval                  evaluate a checkpoint's CE loss on held-out batches
-  serve                 start the TCP serving coordinator
-  bench-client          drive a running server with a synthetic load
+  serve                 start the TCP generation-session coordinator
+                        (--native serves the pure-rust MoE backend, no
+                        artifacts or PJRT runtime needed)
+  bench-client          stream sessions from a running server, report
+                        TTFT / inter-token latency / tokens per second
   tables                regenerate every paper table/figure (analytic ones)
   info                  print artifact manifest summary
 
@@ -100,10 +103,18 @@ COMMON FLAGS:
   --artifacts DIR       artifacts directory (default: artifacts)
   --config NAME         model preset (tiny|tiny_static|tiny_standard|small...)
   --steps N  --lr F     training options
-  --port P --workers N  serving options
+  --port P              serving: TCP port (default 7070)
+  --max-batch N         serving: max sequences resident per decode step
+  --max-new-tokens N    bench-client: token budget requested per session
+  --temperature F       bench-client: sampling temperature (0 = greedy)
+  --top-k N             bench-client: top-k truncation (0 = full vocab)
   --out DIR             output directory for CSV/checkpoints
 
-Any bare key=value is applied to the runtime config (see config/mod.rs).";
+Any bare key=value is applied to the runtime config (see config/mod.rs).
+The serve wire protocol is documented in coordinator/server.rs:
+  GEN <max_new> <temperature> <top_k> <seed> <eos|-1> <tok> <tok> ...
+streams back 'TOK <index> <token> <latency_us>' lines and a terminal
+'END <reason> <n_tokens> <total_us>'.";
 
 #[cfg(test)]
 mod tests {

@@ -111,11 +111,18 @@ pub struct RuntimeConfig {
     pub lr: f64,
     pub warmup_steps: usize,
     pub seed: u64,
-    /// dynamic batcher: flush when this many requests are queued
+    /// continuous batching: max sequences resident in the decode loop
     pub max_batch: usize,
-    /// dynamic batcher: flush after this many milliseconds regardless
+    /// continuous batching: idle-start admission deadline in milliseconds
+    /// (how long the first batch may wait to fill)
     pub max_wait_ms: u64,
-    pub workers: usize,
+    /// session parameters used by client-side commands (`bench-client`);
+    /// the wire protocol carries them explicitly per request
+    pub max_new_tokens: usize,
+    /// sampling temperature for client-side commands (0 = greedy)
+    pub temperature: f64,
+    /// top-k truncation for client-side commands (0 = full vocab)
+    pub top_k: usize,
     pub port: u16,
     pub checkpoint_every: usize,
     pub out_dir: String,
@@ -132,7 +139,9 @@ impl Default for RuntimeConfig {
             seed: 0,
             max_batch: 16,
             max_wait_ms: 5,
-            workers: 2,
+            max_new_tokens: 32,
+            temperature: 0.0,
+            top_k: 0,
             port: 7070,
             checkpoint_every: 100,
             out_dir: "runs".into(),
@@ -152,7 +161,9 @@ impl RuntimeConfig {
             "seed" => self.seed = value.parse().context("seed")?,
             "max_batch" => self.max_batch = value.parse().context("max_batch")?,
             "max_wait_ms" => self.max_wait_ms = value.parse().context("max_wait_ms")?,
-            "workers" => self.workers = value.parse().context("workers")?,
+            "max_new_tokens" => self.max_new_tokens = value.parse().context("max_new_tokens")?,
+            "temperature" => self.temperature = value.parse().context("temperature")?,
+            "top_k" => self.top_k = value.parse().context("top_k")?,
             "port" => self.port = value.parse().context("port")?,
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
@@ -240,6 +251,17 @@ mod tests {
         assert_eq!(r.lr, 0.01);
         assert!(r.set("nope", "1").is_err());
         assert!(r.set("steps", "abc").is_err());
+    }
+
+    #[test]
+    fn serving_overrides() {
+        let mut r = RuntimeConfig::default();
+        r.set("max_new_tokens", "64").unwrap();
+        r.set("temperature", "0.7").unwrap();
+        r.set("top_k", "40").unwrap();
+        assert_eq!(r.max_new_tokens, 64);
+        assert_eq!(r.temperature, 0.7);
+        assert_eq!(r.top_k, 40);
     }
 
     #[test]

@@ -1,26 +1,43 @@
-//! Coordinator telemetry: counters + latency histograms, shared across
-//! worker threads.
+//! Coordinator telemetry for token streaming: counters plus latency
+//! histograms (queue wait, time-to-first-token, inter-token latency,
+//! end-to-end session time), shared across threads.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::util::stats::LatencyHistogram;
 
-#[derive(Default)]
 pub struct Metrics {
+    /// Sessions submitted.
     pub requests: AtomicU64,
+    /// Sessions that reached a terminal event through the normal path.
     pub responses: AtomicU64,
-    pub batches: AtomicU64,
-    pub batched_requests: AtomicU64,
+    /// Tokens generated across all sessions.
+    pub tokens: AtomicU64,
+    /// Decode steps executed (each advances every resident sequence).
+    pub steps: AtomicU64,
+    /// Sum of batch occupancy over all steps (mean = / steps).
+    pub stepped_seqs: AtomicU64,
+    /// Sessions retired because the client dropped its event stream.
+    pub cancelled: AtomicU64,
     pub errors: AtomicU64,
+    started: Instant,
     inner: Mutex<Inner>,
 }
 
 #[derive(Default)]
 struct Inner {
     queue_wait: LatencyHistogram,
-    e2e_latency: LatencyHistogram,
-    batch_sizes: Vec<u64>, // count per size bucket (index = size)
+    ttft: LatencyHistogram,
+    itl: LatencyHistogram,
+    e2e: LatencyHistogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 /// Point-in-time snapshot for reporting.
@@ -28,11 +45,21 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
-    pub batches: u64,
+    pub tokens: u64,
+    pub steps: u64,
+    pub cancelled: u64,
     pub errors: u64,
+    /// Mean resident sequences per decode step (continuous-batching
+    /// occupancy; the old "mean batch size").
     pub mean_batch_size: f64,
+    /// Generated tokens per wall-clock second since the metrics epoch.
+    pub tokens_per_sec: f64,
     pub queue_wait_p50: f64,
     pub queue_wait_p99: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub itl_p50: f64,
+    pub itl_p99: f64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
@@ -40,24 +67,59 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            stepped_seqs: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            started: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
     pub fn record_enqueue(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, size: usize, queue_wait_secs: f64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
-        inner.queue_wait.record(queue_wait_secs);
-        if inner.batch_sizes.len() <= size {
-            inner.batch_sizes.resize(size + 1, 0);
-        }
-        inner.batch_sizes[size] += 1;
+    /// Time a request spent queued before admission.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.inner.lock().unwrap().queue_wait.record(wait.as_secs_f64());
     }
 
-    pub fn record_response(&self, e2e_secs: f64) {
+    /// One decode step over `occupancy` resident sequences.
+    pub fn record_step(&self, occupancy: usize) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.stepped_seqs
+            .fetch_add(occupancy as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_token(&self) {
+        self.tokens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enqueue-to-first-token latency of one session.
+    pub fn record_ttft(&self, ttft: Duration) {
+        self.inner.lock().unwrap().ttft.record(ttft.as_secs_f64());
+    }
+
+    /// Gap between consecutive tokens of one session.
+    pub fn record_itl(&self, gap: Duration) {
+        self.inner.lock().unwrap().itl.record(gap.as_secs_f64());
+    }
+
+    /// A session reached its terminal event after `total` end-to-end.
+    pub fn record_finished(&self, total: Duration) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.inner.lock().unwrap().e2e_latency.record(e2e_secs);
+        self.inner.lock().unwrap().e2e.record(total.as_secs_f64());
+    }
+
+    /// A session was retired because its client dropped the stream.
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_error(&self) {
@@ -66,23 +128,32 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
-        let batches = self.batches.load(Ordering::Relaxed);
+        let steps = self.steps.load(Ordering::Relaxed);
+        let tokens = self.tokens.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
-            batches,
+            tokens,
+            steps,
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
-            mean_batch_size: if batches == 0 {
+            mean_batch_size: if steps == 0 {
                 0.0
             } else {
-                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+                self.stepped_seqs.load(Ordering::Relaxed) as f64 / steps as f64
             },
+            tokens_per_sec: tokens as f64 / elapsed,
             queue_wait_p50: inner.queue_wait.quantile(0.5),
             queue_wait_p99: inner.queue_wait.quantile(0.99),
-            latency_p50: inner.e2e_latency.quantile(0.5),
-            latency_p95: inner.e2e_latency.quantile(0.95),
-            latency_p99: inner.e2e_latency.quantile(0.99),
-            latency_mean: inner.e2e_latency.mean(),
+            ttft_p50: inner.ttft.quantile(0.5),
+            ttft_p99: inner.ttft.quantile(0.99),
+            itl_p50: inner.itl.quantile(0.5),
+            itl_p99: inner.itl.quantile(0.99),
+            latency_p50: inner.e2e.quantile(0.5),
+            latency_p95: inner.e2e.quantile(0.95),
+            latency_p99: inner.e2e.quantile(0.99),
+            latency_mean: inner.e2e.mean(),
         }
     }
 }
@@ -90,14 +161,19 @@ impl Metrics {
 impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} err={} batches={} (mean size {:.1}) wait p50/p99 {:.2}/{:.2} ms lat p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+            "req={} done={} cancelled={} err={} tokens={} ({:.0} tok/s) steps={} (occupancy {:.1}) ttft p50/p99 {:.2}/{:.2} ms itl p50/p99 {:.2}/{:.2} ms e2e p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
             self.requests,
             self.responses,
+            self.cancelled,
             self.errors,
-            self.batches,
+            self.tokens,
+            self.tokens_per_sec,
+            self.steps,
             self.mean_batch_size,
-            self.queue_wait_p50 * 1e3,
-            self.queue_wait_p99 * 1e3,
+            self.ttft_p50 * 1e3,
+            self.ttft_p99 * 1e3,
+            self.itl_p50 * 1e3,
+            self.itl_p99 * 1e3,
             self.latency_p50 * 1e3,
             self.latency_p95 * 1e3,
             self.latency_p99 * 1e3,
@@ -111,17 +187,28 @@ mod tests {
 
     #[test]
     fn counters_and_histograms() {
-        let m = Metrics::default();
+        let m = Metrics::new();
         m.record_enqueue();
         m.record_enqueue();
-        m.record_batch(2, 0.001);
-        m.record_response(0.005);
-        m.record_response(0.007);
+        m.record_queue_wait(Duration::from_millis(1));
+        m.record_step(2);
+        m.record_step(1);
+        for _ in 0..3 {
+            m.record_token();
+        }
+        m.record_ttft(Duration::from_millis(4));
+        m.record_itl(Duration::from_millis(2));
+        m.record_finished(Duration::from_millis(5));
+        m.record_finished(Duration::from_millis(7));
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
-        assert_eq!(s.batches, 1);
-        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert_eq!(s.tokens, 3);
+        assert_eq!(s.steps, 2);
+        assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
+        assert!(s.tokens_per_sec > 0.0);
+        assert!(s.ttft_p50 > 0.0);
+        assert!(s.itl_p50 > 0.0);
         assert!(s.latency_p95 >= s.latency_p50);
         assert!(s.latency_mean > 0.004 && s.latency_mean < 0.01);
         assert!(!s.summary().is_empty());

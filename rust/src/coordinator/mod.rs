@@ -1,33 +1,70 @@
-//! Serving coordinator — L3's request path.
+//! Serving coordinator — L3's request path, built around **generation
+//! sessions** with continuous batching.
 //!
-//! Architecture (vLLM-router-shaped, scaled to this testbed):
+//! Architecture:
 //!
 //! ```text
-//!  clients ──TCP──► frontend ──mpsc──► DynamicBatcher ──► worker pool
-//!                                              │               │
-//!                                   (size/deadline flush)  Backend::forward
-//!                                                        (PJRT bucketed LM
-//!                                                         or native MoE)
+//!  clients ──TCP──► frontend ──mpsc──► engine thread ─────────────────┐
+//!    ▲                                   │                            │
+//!    │                         ContinuousScheduler          Backend::step
+//!    │                      (admit / step / retire)      (PJRT bucketed LM
+//!    └────── TokenEvent stream ──────────┘                or native MoE)
 //! ```
 //!
-//! * [`batcher::DynamicBatcher`] flushes a queued batch when either
-//!   `max_batch` requests are waiting or the oldest has waited
-//!   `max_wait_ms` — the standard latency/throughput knob.
-//! * [`backend::Backend`] abstracts the execution engine; the PJRT
-//!   backend pads each flush to the smallest compiled batch bucket
-//!   (aot.py emits b ∈ {1,4,16}).
-//! * [`metrics::Metrics`] tracks queue wait, batch occupancy and
-//!   end-to-end latency histograms.
+//! * A client submits a [`GenerateRequest`] — prompt, [`SamplingParams`]
+//!   (greedy, or temperature/top-k with a seeded RNG), [`StopCriteria`]
+//!   (max new tokens and/or EOS) — and receives a channel of
+//!   [`TokenEvent`]s: one `Token { token, index, latency }` per decoded
+//!   position, terminated by `Done { reason, tokens, total }`.
+//! * The [`ContinuousScheduler`] keeps sequences *resident* across
+//!   decode steps.  Between steps, finished sequences leave and queued
+//!   requests join (up to `max_batch`), so short requests stream out
+//!   ahead of long batch-mates instead of convoying behind them.  When
+//!   the loop is idle, the first batch waits up to `max_wait` to fill —
+//!   the classic size-or-deadline knob, but only for cold starts.
+//! * [`Backend::step`] advances every sequence in an [`InflightBatch`]
+//!   by one token (logits per sequence; prefill is the sequence's first
+//!   step).  The PJRT backend packs each step into the smallest
+//!   compiled batch bucket and splits oversized steps across buckets.
+//! * [`Metrics`] tracks queue wait, time-to-first-token, inter-token
+//!   latency, end-to-end session time, step occupancy, and tokens/sec.
 //!
-//! Threads + channels only (no tokio in the offline vendor set); the
-//! worker pool uses `crossbeam_utils::thread::scope` in the server loop.
+//! # Wire protocol (TCP frontend)
+//!
+//! One line per session; the server streams events back as lines:
+//!
+//! ```text
+//! client:  GEN 8 0.7 40 42 -1 10 11 12\n
+//!          └── 8 new tokens, temperature 0.7, top-40, seed 42,
+//!              no EOS token, prompt [10, 11, 12]
+//! server:  TOK 0 17 1523\n        (first token 17, TTFT 1523 µs)
+//!          TOK 1 99 812\n         (second token, 812 µs after the first)
+//!          ...
+//!          END max_tokens 8 9120\n
+//! ```
+//!
+//! Greedy decoding is `GEN 8 0 0 0 -1 <prompt…>`; `QUIT` closes the
+//! connection; malformed requests and backend failures produce a
+//! terminal `ERR <message>` line instead of `END`.
+//!
+//! Threads + channels only (no tokio in the offline vendor set): one
+//! engine thread owns the backend; each TCP connection gets a relay
+//! thread.
 
 pub mod backend;
-pub mod batcher;
 pub mod metrics;
+pub mod scheduler;
 pub mod server;
+pub mod session;
 
-pub use backend::{Backend, NativeMoeBackend, PjrtLmBackend};
-pub use batcher::{Batch, DynamicBatcher};
-pub use metrics::Metrics;
-pub use server::{Coordinator, Request, Response};
+pub use backend::{
+    greedy_next, warm, Backend, InflightBatch, InflightSeq, NativeMoeBackend, PjrtLmBackend,
+    StepOutput,
+};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};
+pub use server::{parse_gen_line, serve_tcp, Coordinator};
+pub use session::{
+    collect_stream, Completion, FinishReason, GenerateRequest, Sampler, SamplingParams,
+    StopCriteria, TokenEvent,
+};

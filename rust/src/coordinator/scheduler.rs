@@ -1,0 +1,511 @@
+//! Continuous-batching scheduler: the decode loop's bookkeeping core.
+//!
+//! Unlike the old flush-once batcher (accumulate → flush → forward →
+//! reply, one token per request), sequences here stay *resident* across
+//! decode steps.  Between any two steps, finished sequences leave and
+//! queued requests join, up to `max_batch` — a short request admitted
+//! next to a long one streams out and exits while the long one keeps
+//! decoding, so short requests never convoy behind long ones.
+//!
+//! The scheduler itself is synchronous and single-owner (driven by the
+//! coordinator's engine thread, or directly by tests); all concurrency
+//! lives in the channels around it.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::{Backend, InflightBatch, InflightSeq};
+use super::metrics::Metrics;
+use super::session::{FinishReason, GenerateRequest, Sampler, StopCriteria, TokenEvent};
+
+/// Scheduler knobs (the latency/throughput trade-off surface).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max sequences resident in the decode loop (clamped to the
+    /// backend's own `max_batch`).
+    pub max_batch: usize,
+    /// When the loop is idle, wait at most this long for more arrivals
+    /// before starting a partial batch (the classic deadline knob; once
+    /// the loop is busy, joins happen between steps with no extra wait).
+    pub max_wait: Duration,
+    /// Server-side ceiling on generated tokens per session.  Requests
+    /// asking for more are clamped at admission, so untrusted wire input
+    /// cannot pin a batch slot forever.
+    pub max_session_tokens: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            max_session_tokens: 4096,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        SchedulerConfig {
+            max_batch,
+            max_wait,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    pub fn with_session_cap(mut self, max_session_tokens: usize) -> Self {
+        self.max_session_tokens = max_session_tokens;
+        self
+    }
+}
+
+/// A request plus its reply stream, waiting for admission.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub request: GenerateRequest,
+    pub enqueued: Instant,
+    pub reply: Sender<TokenEvent>,
+}
+
+/// Per-sequence serving state the backend doesn't need to see.
+struct SeqMeta {
+    reply: Sender<TokenEvent>,
+    sampler: Sampler,
+    stop: StopCriteria,
+    enqueued: Instant,
+    /// Previous event time on this sequence (enqueue before any token),
+    /// so per-token latency = now - last_event.
+    last_event: Instant,
+    new_tokens: Vec<i32>,
+}
+
+/// The in-flight sequence set plus everything needed to stream results.
+pub struct ContinuousScheduler {
+    max_batch: usize,
+    max_session_tokens: usize,
+    batch: InflightBatch,
+    meta: Vec<SeqMeta>,
+    metrics: Arc<Metrics>,
+}
+
+impl ContinuousScheduler {
+    pub fn new(max_batch: usize, max_session_tokens: usize, metrics: Arc<Metrics>) -> Self {
+        ContinuousScheduler {
+            max_batch: max_batch.max(1),
+            max_session_tokens: max_session_tokens.max(1),
+            batch: InflightBatch::new(),
+            meta: Vec::new(),
+            metrics,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.batch.len()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.batch.len() < self.max_batch
+    }
+
+    /// Admit a queued request into the running batch.  Prefill happens on
+    /// the sequence's first step; degenerate requests (empty prompt,
+    /// zero-token budget) finish immediately without touching the batch.
+    pub fn admit(&mut self, q: QueuedRequest) {
+        let now = Instant::now();
+        self.metrics.record_queue_wait(now.duration_since(q.enqueued));
+        if q.request.prompt.is_empty() {
+            self.metrics.record_error();
+            let _ = q.reply.send(TokenEvent::Done {
+                reason: FinishReason::Error("empty prompt".into()),
+                tokens: Vec::new(),
+                total: now.duration_since(q.enqueued),
+            });
+            return;
+        }
+        if q.request.stop.max_new_tokens == 0 {
+            self.metrics.record_finished(now.duration_since(q.enqueued));
+            let _ = q.reply.send(TokenEvent::Done {
+                reason: FinishReason::MaxTokens,
+                tokens: Vec::new(),
+                total: now.duration_since(q.enqueued),
+            });
+            return;
+        }
+        // server-side cap: wire input can't reserve a slot forever
+        let mut stop = q.request.stop;
+        stop.max_new_tokens = stop.max_new_tokens.min(self.max_session_tokens);
+        self.batch.push(InflightSeq::new(q.id, q.request.prompt));
+        self.meta.push(SeqMeta {
+            reply: q.reply,
+            sampler: Sampler::new(q.request.sampling),
+            stop,
+            enqueued: q.enqueued,
+            last_event: q.enqueued,
+            new_tokens: Vec::new(),
+        });
+    }
+
+    /// One decode step over the in-flight set: sample a token per
+    /// sequence, stream the events, retire finished sequences.  Returns
+    /// how many sequences finished.  On backend failure every in-flight
+    /// sequence is aborted with a terminal error event.
+    pub fn step(&mut self, backend: &dyn Backend) -> Result<usize> {
+        if self.batch.is_empty() {
+            return Ok(0);
+        }
+        self.metrics.record_step(self.batch.len());
+        let outs = backend.step(&mut self.batch).and_then(|outs| {
+            anyhow::ensure!(
+                outs.len() == self.batch.len(),
+                "backend returned {} outputs for {} sequences",
+                outs.len(),
+                self.batch.len()
+            );
+            // hard check (not a debug_assert): a backend that reorders
+            // the batch through its &mut access would otherwise pair one
+            // session's sampler and reply channel with another's logits
+            for (o, s) in outs.iter().zip(&self.batch.seqs) {
+                anyhow::ensure!(
+                    o.seq_id == s.id,
+                    "backend reordered sequences: output for {} at slot of {}",
+                    o.seq_id,
+                    s.id
+                );
+            }
+            Ok(outs)
+        });
+        let outs = match outs {
+            Ok(o) => o,
+            Err(e) => {
+                self.metrics.record_error();
+                self.abort_all(FinishReason::Error(format!("{e:#}")));
+                return Err(e);
+            }
+        };
+        // walk backwards so swap_remove never disturbs unvisited entries
+        let mut finished = 0;
+        for i in (0..outs.len()).rev() {
+            let token = self.meta[i].sampler.sample(&outs[i].logits);
+            let now = Instant::now();
+            self.batch.seqs[i].tokens.push(token);
+
+            let m = &mut self.meta[i];
+            let latency = now.duration_since(m.last_event);
+            m.last_event = now;
+            let index = m.new_tokens.len();
+            m.new_tokens.push(token);
+            if index == 0 {
+                self.metrics.record_ttft(now.duration_since(m.enqueued));
+            } else {
+                self.metrics.record_itl(latency);
+            }
+            self.metrics.record_token();
+            if m.reply
+                .send(TokenEvent::Token {
+                    token,
+                    index,
+                    latency,
+                })
+                .is_err()
+            {
+                // the client dropped its receiver: cancel the session so
+                // a dead connection can't keep occupying a batch slot
+                self.meta.swap_remove(i);
+                self.batch.seqs.swap_remove(i);
+                self.metrics.record_cancelled();
+                finished += 1;
+                continue;
+            }
+
+            let m = &mut self.meta[i];
+            let reason = if m.stop.eos == Some(token) {
+                Some(FinishReason::Eos)
+            } else if m.new_tokens.len() >= m.stop.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else {
+                None
+            };
+            if let Some(reason) = reason {
+                let m = self.meta.swap_remove(i);
+                self.batch.seqs.swap_remove(i);
+                let total = now.duration_since(m.enqueued);
+                self.metrics.record_finished(total);
+                let _ = m.reply.send(TokenEvent::Done {
+                    reason,
+                    tokens: m.new_tokens,
+                    total,
+                });
+                finished += 1;
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Terminate every in-flight sequence with the given reason (used on
+    /// shutdown and on backend failure) so no client waits forever.
+    pub fn abort_all(&mut self, reason: FinishReason) {
+        let now = Instant::now();
+        self.batch.seqs.clear();
+        for m in self.meta.drain(..) {
+            let _ = m.reply.send(TokenEvent::Done {
+                reason: reason.clone(),
+                tokens: m.new_tokens,
+                total: now.duration_since(m.enqueued),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::StepOutput;
+    use crate::coordinator::session::SamplingParams;
+    use std::sync::mpsc::{channel, Receiver};
+
+    /// Logits peak at (context length % vocab): greedy decode yields a
+    /// deterministic, length-dependent token stream.
+    struct CountBackend {
+        vocab: usize,
+    }
+    impl Backend for CountBackend {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+        fn name(&self) -> String {
+            "count".into()
+        }
+        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
+            Ok(batch
+                .seqs
+                .iter()
+                .map(|s| {
+                    let mut logits = vec![0.0f32; self.vocab];
+                    logits[s.tokens.len() % self.vocab] = 1.0;
+                    StepOutput {
+                        seq_id: s.id,
+                        logits,
+                    }
+                })
+                .collect())
+        }
+    }
+
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            8
+        }
+        fn vocab(&self) -> usize {
+            16
+        }
+        fn name(&self) -> String {
+            "failing".into()
+        }
+        fn step(&self, _batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
+            anyhow::bail!("injected fault")
+        }
+    }
+
+    fn sched(max_batch: usize) -> ContinuousScheduler {
+        ContinuousScheduler::new(max_batch, usize::MAX, Arc::new(Metrics::new()))
+    }
+
+    fn queued(id: u64, req: GenerateRequest) -> (QueuedRequest, Receiver<TokenEvent>) {
+        let (tx, rx) = channel();
+        (
+            QueuedRequest {
+                id,
+                request: req,
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn drain(rx: &Receiver<TokenEvent>) -> (Vec<i32>, Option<FinishReason>) {
+        let mut toks = Vec::new();
+        let mut reason = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token { token, .. } => toks.push(token),
+                TokenEvent::Done { reason: r, tokens, .. } => {
+                    assert_eq!(tokens, toks, "Done must carry the streamed tokens");
+                    reason = Some(r);
+                }
+            }
+        }
+        (toks, reason)
+    }
+
+    #[test]
+    fn generates_until_max_tokens() {
+        let be = CountBackend { vocab: 16 };
+        let mut s = sched(4);
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2, 3], 4));
+        s.admit(q);
+        let mut finished = 0;
+        for _ in 0..10 {
+            finished += s.step(&be).unwrap();
+        }
+        assert_eq!(finished, 1);
+        assert_eq!(s.in_flight(), 0);
+        let (toks, reason) = drain(&rx);
+        // context lengths 3,4,5,6 -> tokens 3,4,5,6
+        assert_eq!(toks, vec![3, 4, 5, 6]);
+        assert_eq!(reason, Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        let be = CountBackend { vocab: 16 };
+        let mut s = sched(4);
+        // context length 3 -> first token is 3; eos = 5 fires on step 3
+        let (q, rx) = queued(
+            1,
+            GenerateRequest::greedy(vec![1, 2, 3], 100)
+                .with_stop(StopCriteria::max_tokens(100).with_eos(5)),
+        );
+        s.admit(q);
+        for _ in 0..10 {
+            s.step(&be).unwrap();
+        }
+        let (toks, reason) = drain(&rx);
+        assert_eq!(toks, vec![3, 4, 5]);
+        assert_eq!(reason, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn join_and_leave_between_steps() {
+        let be = CountBackend { vocab: 1024 };
+        let mut s = sched(4);
+        let (qlong, rx_long) = queued(1, GenerateRequest::greedy(vec![0; 4], 16));
+        s.admit(qlong);
+        s.step(&be).unwrap();
+        s.step(&be).unwrap();
+        // short request joins the running batch mid-flight
+        let (qshort, rx_short) = queued(2, GenerateRequest::greedy(vec![0; 8], 2));
+        s.admit(qshort);
+        assert_eq!(s.in_flight(), 2);
+        s.step(&be).unwrap();
+        let fin = s.step(&be).unwrap();
+        // short finished (2 tokens) while long is still resident
+        assert_eq!(fin, 1);
+        assert_eq!(s.in_flight(), 1);
+        let (toks_short, reason_short) = drain(&rx_short);
+        assert_eq!(toks_short.len(), 2);
+        assert_eq!(reason_short, Some(FinishReason::MaxTokens));
+        // long continues to completion afterwards
+        while s.in_flight() > 0 {
+            s.step(&be).unwrap();
+        }
+        let (toks_long, reason_long) = drain(&rx_long);
+        assert_eq!(toks_long.len(), 16);
+        assert_eq!(reason_long, Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn seeded_sampling_replays_identically() {
+        let be = CountBackend { vocab: 64 };
+        let run = |seed: u64| {
+            let mut s = sched(4);
+            let (q, rx) = queued(
+                1,
+                GenerateRequest::greedy(vec![7, 8], 12)
+                    .with_sampling(SamplingParams::temperature(1.0, seed)),
+            );
+            s.admit(q);
+            while s.in_flight() > 0 {
+                s.step(&be).unwrap();
+            }
+            drain(&rx).0
+        };
+        assert_eq!(run(123), run(123), "same seed => same tokens");
+    }
+
+    #[test]
+    fn backend_failure_aborts_all_with_error_events() {
+        let mut s = sched(4);
+        let (q1, rx1) = queued(1, GenerateRequest::greedy(vec![1], 8));
+        let (q2, rx2) = queued(2, GenerateRequest::greedy(vec![2], 8));
+        s.admit(q1);
+        s.admit(q2);
+        assert!(s.step(&FailingBackend).is_err());
+        assert_eq!(s.in_flight(), 0);
+        for rx in [&rx1, &rx2] {
+            let (_, reason) = drain(rx);
+            assert!(matches!(reason, Some(FinishReason::Error(_))));
+        }
+    }
+
+    #[test]
+    fn degenerate_requests_finish_immediately() {
+        let mut s = sched(4);
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![], 8));
+        s.admit(q);
+        assert_eq!(s.in_flight(), 0);
+        let (_, reason) = drain(&rx);
+        assert!(matches!(reason, Some(FinishReason::Error(_))));
+
+        let (q, rx) = queued(2, GenerateRequest::greedy(vec![1, 2], 0));
+        s.admit(q);
+        assert_eq!(s.in_flight(), 0);
+        let (toks, reason) = drain(&rx);
+        assert!(toks.is_empty());
+        assert_eq!(reason, Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn dropped_client_cancels_session() {
+        let be = CountBackend { vocab: 16 };
+        let mut s = sched(4);
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 100));
+        s.admit(q);
+        s.step(&be).unwrap();
+        drop(rx); // client went away mid-generation
+        s.step(&be).unwrap();
+        assert_eq!(s.in_flight(), 0, "dead client must not hold a slot");
+    }
+
+    #[test]
+    fn session_token_cap_clamps_requests() {
+        let be = CountBackend { vocab: 16 };
+        let mut s = ContinuousScheduler::new(4, 3, Arc::new(Metrics::new()));
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 1_000_000));
+        s.admit(q);
+        for _ in 0..10 {
+            s.step(&be).unwrap();
+        }
+        let (toks, reason) = drain(&rx);
+        assert_eq!(toks.len(), 3, "server-side cap must bound generation");
+        assert_eq!(reason, Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn abort_all_sends_terminal_events() {
+        let be = CountBackend { vocab: 16 };
+        let mut s = sched(4);
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 100));
+        s.admit(q);
+        s.step(&be).unwrap();
+        s.abort_all(FinishReason::Shutdown);
+        assert_eq!(s.in_flight(), 0);
+        let (toks, reason) = drain(&rx);
+        assert_eq!(toks.len(), 1);
+        assert_eq!(reason, Some(FinishReason::Shutdown));
+    }
+}

@@ -1,38 +1,50 @@
-//! The coordinator proper: frontend channel, batching loop, worker pool,
-//! and the optional TCP line-protocol frontend.
+//! The coordinator proper: session submission, the continuous-batching
+//! engine loop, and the streaming TCP line-protocol frontend.
+//!
+//! One engine thread owns the backend and the
+//! [`ContinuousScheduler`]: each iteration admits queued requests into
+//! the running batch (up to `max_batch`), executes one decode step, and
+//! streams a [`TokenEvent`] to every resident session.  Finished
+//! sequences leave between steps, so a short completion never waits for
+//! a long batch-mate to finish.
+//!
+//! Shutdown is loss-free for *waiters*: every in-flight session receives
+//! a terminal `Done { reason: Shutdown }` and every still-queued request
+//! is denied with the same terminal event — no client ever blocks on a
+//! dead reply channel.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::backend::Backend;
-use super::batcher::{Batch, DynamicBatcher};
 use super::metrics::Metrics;
+use super::scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};
+use super::session::{
+    collect_stream, Completion, FinishReason, GenerateRequest, SamplingParams, StopCriteria,
+    TokenEvent,
+};
 
-/// One in-flight generation request.
-#[derive(Debug)]
-pub struct Request {
-    pub id: u64,
-    pub tokens: Vec<i32>,
-    pub enqueued: Instant,
-    pub reply: Sender<Response>,
-}
+/// How long the engine thread sleeps in `recv` while fully idle before
+/// re-checking the stop flag.
+const IDLE_POLL: Duration = Duration::from_millis(25);
 
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub next_token: i32,
-    pub latency: Duration,
-}
+/// Per-event timeout for blocking conveniences ([`Coordinator::generate`],
+/// the TCP frontend): generous because a step may compile a bucket on
+/// first use.
+const STREAM_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Coordinator handle: submit requests, inspect metrics, shut down.
+/// Coordinator handle: submit generation sessions, inspect metrics,
+/// shut down.
 pub struct Coordinator {
-    tx: Sender<Request>,
+    /// `None` after shutdown; sends after that are denied immediately.
+    tx: Mutex<Option<Sender<QueuedRequest>>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
@@ -40,74 +52,73 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the batching loop + `workers` execution threads.
-    pub fn start(
-        backend: Arc<dyn Backend>,
-        max_batch: usize,
-        max_wait: Duration,
-        workers: usize,
-    ) -> Arc<Coordinator> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (btx, brx) = mpsc::channel::<Batch>();
-        let brx = Arc::new(Mutex::new(brx));
-        let metrics = Arc::new(Metrics::default());
+    /// Start the engine thread running the continuous-batching loop.
+    pub fn start(backend: Arc<dyn Backend>, cfg: SchedulerConfig) -> Arc<Coordinator> {
+        let (tx, rx) = mpsc::channel::<QueuedRequest>();
+        let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let mut threads = Vec::new();
-
-        // batching loop
-        {
-            let metrics = metrics.clone();
-            let stop = stop.clone();
-            let max_batch = max_batch.min(backend.max_batch());
-            threads.push(std::thread::spawn(move || {
-                batching_loop(rx, btx, max_batch, max_wait, metrics, stop)
-            }));
-        }
-        // worker pool
-        for w in 0..workers.max(1) {
-            let brx = brx.clone();
+        let engine = {
             let backend = backend.clone();
             let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("bmoe-worker-{w}"))
-                    .spawn(move || worker_loop(brx, backend, metrics))
-                    .expect("spawn worker"),
-            );
-        }
-
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("bmoe-engine-loop".into())
+                .spawn(move || engine_loop(rx, backend, cfg, metrics, stop))
+                .expect("spawn engine loop")
+        };
         Arc::new(Coordinator {
-            tx,
+            tx: Mutex::new(Some(tx)),
             metrics,
             next_id: AtomicU64::new(1),
             stop,
-            threads: Mutex::new(threads),
+            threads: Mutex::new(vec![engine]),
         })
     }
 
-    /// Submit a prompt; returns a receiver for the response.
-    pub fn submit(&self, tokens: Vec<i32>) -> Receiver<Response> {
+    /// Submit a generation session; returns the event stream.  The
+    /// stream always ends with exactly one `Done`, even across shutdown.
+    pub fn submit(&self, request: GenerateRequest) -> Receiver<TokenEvent> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.record_enqueue();
-        let _ = self.tx.send(Request {
-            id,
-            tokens,
-            enqueued: Instant::now(),
-            reply: rtx,
-        });
+        let guard = self.tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => {
+                self.metrics.record_enqueue();
+                let q = QueuedRequest {
+                    id,
+                    request,
+                    enqueued: Instant::now(),
+                    reply: rtx,
+                };
+                if let Err(mpsc::SendError(q)) = tx.send(q) {
+                    deny(q); // engine thread died; don't strand the client
+                }
+            }
+            None => {
+                let _ = rtx.send(TokenEvent::Done {
+                    reason: FinishReason::Shutdown,
+                    tokens: Vec::new(),
+                    total: Duration::ZERO,
+                });
+            }
+        }
         rrx
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
-        let rx = self.submit(tokens);
-        Ok(rx.recv()?)
+    /// Blocking convenience: submit and collect the whole completion.
+    pub fn generate(&self, request: GenerateRequest) -> Result<Completion> {
+        let rx = self.submit(request);
+        collect_stream(&rx, STREAM_TIMEOUT)
     }
 
+    /// Stop the engine loop.  Every in-flight session gets a terminal
+    /// `Shutdown` event and every queued request is drained and denied —
+    /// no waiter is left blocking on a dead channel.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        // dropping tx side is done when Coordinator drops; join threads
+        // Drop the sender: a blocked engine loop wakes immediately, and
+        // everything buffered in the channel drains on the stop path.
+        *self.tx.lock().unwrap() = None;
         let mut threads = self.threads.lock().unwrap();
         for t in threads.drain(..) {
             let _ = t.join();
@@ -115,85 +126,109 @@ impl Coordinator {
     }
 }
 
-fn batching_loop(
-    rx: Receiver<Request>,
-    btx: Sender<Batch>,
-    max_batch: usize,
-    max_wait: Duration,
+fn deny(q: QueuedRequest) {
+    let _ = q.reply.send(TokenEvent::Done {
+        reason: FinishReason::Shutdown,
+        tokens: Vec::new(),
+        total: q.enqueued.elapsed(),
+    });
+}
+
+fn engine_loop(
+    rx: Receiver<QueuedRequest>,
+    backend: Arc<dyn Backend>,
+    cfg: SchedulerConfig,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut batcher = DynamicBatcher::new(max_batch, max_wait);
+    let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
+    let mut sched = ContinuousScheduler::new(max_batch, cfg.max_session_tokens, metrics);
+    let mut pending: VecDeque<QueuedRequest> = VecDeque::new();
+    let mut disconnected = false;
     loop {
         if stop.load(Ordering::SeqCst) {
-            if let Some(b) = batcher.flush() {
-                let _ = btx.send(b);
+            sched.abort_all(FinishReason::Shutdown);
+            for q in pending.drain(..) {
+                deny(q);
             }
+            // deny everything still in — or racing into — the channel:
+            // shutdown() drops the only Sender right after setting the
+            // stop flag, so draining until disconnect guarantees no
+            // concurrently-submitted request is stranded without a
+            // terminal event
+            loop {
+                match rx.recv_timeout(IDLE_POLL) {
+                    Ok(q) => deny(q),
+                    Err(RecvTimeoutError::Disconnected) => return,
+                    Err(RecvTimeoutError::Timeout) => {}
+                }
+            }
+        }
+        // join point: pick up every request that arrived since last step
+        loop {
+            match rx.try_recv() {
+                Ok(q) => pending.push_back(q),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if sched.in_flight() == 0 {
+            if pending.is_empty() {
+                if disconnected {
+                    return;
+                }
+                match rx.recv_timeout(IDLE_POLL) {
+                    Ok(q) => pending.push_back(q),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+                continue;
+            }
+            // idle start: give the first batch up to `max_wait` to fill
+            // (size flush when it does, deadline flush when it doesn't)
+            let deadline = pending.front().unwrap().enqueued + cfg.max_wait;
+            while pending.len() < max_batch && !disconnected && !stop.load(Ordering::SeqCst) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(q) => pending.push_back(q),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+            }
+        }
+        while sched.has_capacity() {
+            match pending.pop_front() {
+                Some(q) => sched.admit(q),
+                None => break,
+            }
+        }
+        if sched.in_flight() > 0 {
+            // on backend failure the scheduler already streamed terminal
+            // error events; keep serving subsequent requests
+            let _ = sched.step(backend.as_ref());
+        } else if disconnected && pending.is_empty() {
             return;
-        }
-        // wait bounded by the current flush deadline
-        let timeout = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(req) => {
-                if let Some(batch) = batcher.push(req) {
-                    send_batch(&btx, batch, &metrics);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.poll(Instant::now()) {
-                    send_batch(&btx, batch, &metrics);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                if let Some(b) = batcher.flush() {
-                    send_batch(&btx, b, &metrics);
-                }
-                return;
-            }
-        }
-    }
-}
-
-fn send_batch(btx: &Sender<Batch>, batch: Batch, metrics: &Metrics) {
-    metrics.record_batch(batch.len(), batch.oldest.elapsed().as_secs_f64());
-    let _ = btx.send(batch);
-}
-
-fn worker_loop(brx: Arc<Mutex<Receiver<Batch>>>, backend: Arc<dyn Backend>, metrics: Arc<Metrics>) {
-    loop {
-        let batch = {
-            let guard = brx.lock().unwrap();
-            guard.recv()
-        };
-        let Ok(batch) = batch else { return };
-        let prompts: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
-        match backend.forward(&prompts) {
-            Ok(next) => {
-                for (req, tok) in batch.requests.into_iter().zip(next) {
-                    let latency = req.enqueued.elapsed();
-                    metrics.record_response(latency.as_secs_f64());
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        next_token: tok,
-                        latency,
-                    });
-                }
-            }
-            Err(e) => {
-                eprintln!("[worker] backend error: {e:#}");
-                for _ in &batch.requests {
-                    metrics.record_error();
-                }
-            }
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// TCP frontend: one line per request, space-separated token ids;
-// response line: "<next_token>".  "QUIT" closes the connection.
+// TCP frontend — streaming line protocol (one session per GEN line):
+//
+//   client:  GEN <max_new> <temperature> <top_k> <seed> <eos> <tok> <tok> ...
+//   server:  TOK <index> <token> <latency_us>      (one per generated token)
+//            END <reason> <n_tokens> <total_us>    (terminal; reason is
+//                                                   max_tokens|eos|shutdown)
+//       or:  ERR <message>                         (terminal)
+//
+// `<eos>` is -1 for "no EOS token"; `<temperature>` 0 means greedy (then
+// `<top_k>`/`<seed>` are ignored; pass 0).  "QUIT" closes the connection.
 // ---------------------------------------------------------------------------
 
 pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
@@ -224,6 +259,34 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> R
     Ok(())
 }
 
+/// Parse one `GEN` request line (see the protocol block above).
+pub fn parse_gen_line(line: &str) -> Result<GenerateRequest> {
+    let mut it = line.split_whitespace();
+    anyhow::ensure!(it.next() == Some("GEN"), "expected GEN");
+    let max_new: usize = it.next().context("missing max_new")?.parse().context("max_new")?;
+    let temperature: f32 = it
+        .next()
+        .context("missing temperature")?
+        .parse()
+        .context("temperature")?;
+    let top_k: usize = it.next().context("missing top_k")?.parse().context("top_k")?;
+    let seed: u64 = it.next().context("missing seed")?.parse().context("seed")?;
+    let eos: i64 = it.next().context("missing eos")?.parse().context("eos")?;
+    let prompt: Vec<i32> = it
+        .map(|t| t.parse::<i32>().with_context(|| format!("bad token '{t}'")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let mut stop = StopCriteria::max_tokens(max_new);
+    if eos >= 0 {
+        stop = stop.with_eos(eos as i32);
+    }
+    Ok(GenerateRequest {
+        prompt,
+        sampling: SamplingParams::top_k(temperature, top_k, seed),
+        stop,
+    })
+}
+
 fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -236,108 +299,248 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if line == "QUIT" {
             break;
         }
-        let tokens: std::result::Result<Vec<i32>, _> =
-            line.split_whitespace().map(str::parse).collect();
-        match tokens {
-            Ok(toks) if !toks.is_empty() => {
-                let resp = coord.infer(toks)?;
-                writeln!(writer, "{}", resp.next_token)?;
+        match parse_gen_line(line) {
+            Ok(req) => {
+                let rx = coord.submit(req);
+                stream_session(&mut writer, &rx)?;
             }
-            _ => {
-                writeln!(writer, "ERR bad request")?;
+            Err(e) => {
+                writeln!(writer, "ERR bad request: {e:#}")?;
             }
         }
     }
     Ok(())
 }
 
+/// Relay one session's event stream onto the wire.
+fn stream_session(writer: &mut TcpStream, rx: &Receiver<TokenEvent>) -> Result<()> {
+    loop {
+        match rx.recv_timeout(STREAM_TIMEOUT) {
+            Ok(TokenEvent::Token {
+                token,
+                index,
+                latency,
+            }) => {
+                writeln!(writer, "TOK {index} {token} {}", latency.as_micros())?;
+            }
+            Ok(TokenEvent::Done {
+                reason: FinishReason::Error(e),
+                ..
+            }) => {
+                writeln!(writer, "ERR {e}")?;
+                return Ok(());
+            }
+            Ok(TokenEvent::Done {
+                reason,
+                tokens,
+                total,
+            }) => {
+                writeln!(writer, "END {reason} {} {}", tokens.len(), total.as_micros())?;
+                return Ok(());
+            }
+            Err(_) => {
+                writeln!(writer, "ERR stream stalled")?;
+                return Ok(());
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::{InflightBatch, StepOutput};
 
-    /// Backend that echoes prompt length (deterministic, instant).
-    struct EchoBackend;
-    impl Backend for EchoBackend {
+    /// Logits peak at (context length % vocab): deterministic, instant.
+    struct CountBackend;
+    impl Backend for CountBackend {
         fn max_batch(&self) -> usize {
             8
         }
         fn seq_len(&self) -> usize {
-            16
+            64
+        }
+        fn vocab(&self) -> usize {
+            32
         }
         fn name(&self) -> String {
-            "echo".into()
+            "count".into()
         }
-        fn forward(&self, prompts: &[Vec<i32>]) -> Result<Vec<i32>> {
-            Ok(prompts.iter().map(|p| p.len() as i32).collect())
+        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
+            Ok(batch
+                .seqs
+                .iter()
+                .map(|s| {
+                    let mut logits = vec![0.0f32; 32];
+                    logits[s.tokens.len() % 32] = 1.0;
+                    StepOutput {
+                        seq_id: s.id,
+                        logits,
+                    }
+                })
+                .collect())
         }
     }
 
+    /// CountBackend with an artificial per-step delay (for shutdown and
+    /// ordering tests).
+    struct SlowBackend(Duration);
+    impl Backend for SlowBackend {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn vocab(&self) -> usize {
+            32
+        }
+        fn name(&self) -> String {
+            "slow".into()
+        }
+        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
+            std::thread::sleep(self.0);
+            CountBackend.step(batch)
+        }
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> SchedulerConfig {
+        SchedulerConfig::new(max_batch, Duration::from_millis(wait_ms))
+    }
+
     #[test]
-    fn roundtrip_single_request() {
-        let coord = Coordinator::start(
-            Arc::new(EchoBackend),
-            4,
-            Duration::from_millis(1),
-            2,
-        );
-        let resp = coord.infer(vec![5, 6, 7]).unwrap();
-        assert_eq!(resp.next_token, 3);
+    fn single_session_roundtrip() {
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
+        let c = coord
+            .generate(GenerateRequest::greedy(vec![5, 6, 7], 4))
+            .unwrap();
+        // context lengths 3,4,5,6 -> tokens 3,4,5,6
+        assert_eq!(c.tokens, vec![3, 4, 5, 6]);
+        assert_eq!(c.reason, FinishReason::MaxTokens);
+        assert!(c.ttft.is_some());
         coord.shutdown();
     }
 
     #[test]
-    fn many_concurrent_requests_all_answered() {
-        let coord = Coordinator::start(
-            Arc::new(EchoBackend),
-            8,
-            Duration::from_millis(2),
-            3,
-        );
+    fn many_concurrent_sessions_all_complete() {
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(8, 2));
         let rxs: Vec<_> = (1..=50)
-            .map(|n| (n, coord.submit(vec![0; n as usize])))
+            .map(|n| {
+                (
+                    n,
+                    coord.submit(GenerateRequest::greedy(vec![0; n as usize % 7 + 1], 3)),
+                )
+            })
             .collect();
-        for (n, rx) in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(resp.next_token, n as i32);
+        for (_, rx) in rxs {
+            let c = collect_stream(&rx, Duration::from_secs(10)).unwrap();
+            assert_eq!(c.tokens.len(), 3);
+            assert_eq!(c.reason, FinishReason::MaxTokens);
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.responses, 50);
-        assert!(snap.mean_batch_size >= 1.0);
+        assert_eq!(snap.tokens, 150);
+        assert_eq!(snap.errors, 0);
         coord.shutdown();
     }
 
     #[test]
-    fn batching_actually_batches_under_load() {
-        let coord = Coordinator::start(
-            Arc::new(EchoBackend),
-            8,
-            Duration::from_millis(20),
-            1,
-        );
-        // submit a burst before the deadline can fire
-        let rxs: Vec<_> = (0..8).map(|_| coord.submit(vec![1, 2])).collect();
+    fn size_flush_fills_the_first_batch() {
+        // huge deadline: the first step must wait for max_batch arrivals
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 10_000));
+        let rxs: Vec<_> = (0..4)
+            .map(|_| coord.submit(GenerateRequest::greedy(vec![1, 2], 1)))
+            .collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            collect_stream(&rx, Duration::from_secs(10)).unwrap();
         }
         let snap = coord.metrics.snapshot();
-        assert!(
-            snap.mean_batch_size > 1.5,
-            "burst should batch: {}",
-            snap.mean_batch_size
-        );
+        assert_eq!(snap.steps, 1, "one full step should serve all four");
+        assert!((snap.mean_batch_size - 4.0).abs() < 1e-9);
         coord.shutdown();
     }
 
     #[test]
-    fn tcp_roundtrip() {
+    fn deadline_flush_starts_a_partial_batch() {
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(16, 3));
+        let c = coord
+            .generate(GenerateRequest::greedy(vec![1, 2, 3], 2))
+            .unwrap();
+        assert_eq!(c.tokens.len(), 2);
+        let snap = coord.metrics.snapshot();
+        assert!(snap.mean_batch_size <= 1.0 + 1e-9);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn short_requests_overtake_long_ones() {
         let coord = Coordinator::start(
-            Arc::new(EchoBackend),
-            4,
-            Duration::from_millis(1),
-            1,
+            Arc::new(SlowBackend(Duration::from_millis(3))),
+            cfg(8, 1),
         );
+        let long = coord.submit(GenerateRequest::greedy(vec![1, 2], 64));
+        // let the long request get admitted, then submit the short one
+        std::thread::sleep(Duration::from_millis(20));
+        let short = coord.submit(GenerateRequest::greedy(vec![3, 4], 2));
+        let c_short = collect_stream(&short, Duration::from_secs(30)).unwrap();
+        assert_eq!(c_short.reason, FinishReason::MaxTokens);
+        // when the short one is done the long one must still be running
+        assert!(
+            matches!(long.try_recv(), Ok(TokenEvent::Token { .. })),
+            "long request should still be streaming"
+        );
+        let c_long = collect_stream(&long, Duration::from_secs(30)).unwrap();
+        assert_eq!(c_long.tokens.len(), 64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_terminates_inflight_and_queued_waiters() {
+        let coord = Coordinator::start(
+            Arc::new(SlowBackend(Duration::from_millis(10))),
+            cfg(2, 1),
+        );
+        // 2 admitted + 6 queued behind them, all effectively unbounded
+        let rxs: Vec<_> = (0..8)
+            .map(|_| coord.submit(GenerateRequest::greedy(vec![1, 2], 100_000)))
+            .collect();
+        std::thread::sleep(Duration::from_millis(40));
+        coord.shutdown();
+        for rx in rxs {
+            let c = collect_stream(&rx, Duration::from_secs(5))
+                .expect("every waiter must get a terminal event");
+            assert_eq!(c.reason, FinishReason::Shutdown);
+        }
+        // submissions after shutdown are denied immediately, not stranded
+        let rx = coord.submit(GenerateRequest::greedy(vec![1], 4));
+        let c = collect_stream(&rx, Duration::from_secs(1)).unwrap();
+        assert_eq!(c.reason, FinishReason::Shutdown);
+    }
+
+    #[test]
+    fn parse_gen_line_roundtrip() {
+        let req = parse_gen_line("GEN 16 0.8 40 1234 7 1 2 3").unwrap();
+        assert_eq!(req.stop.max_new_tokens, 16);
+        assert_eq!(req.stop.eos, Some(7));
+        assert!((req.sampling.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(req.sampling.top_k, 40);
+        assert_eq!(req.sampling.seed, 1234);
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+
+        let greedy = parse_gen_line("GEN 4 0 0 0 -1 9 9").unwrap();
+        assert!(greedy.sampling.is_greedy());
+        assert_eq!(greedy.stop.eos, None);
+
+        assert!(parse_gen_line("GEN 4 0 0 0 -1").is_err()); // no prompt
+        assert!(parse_gen_line("NOPE 1 2").is_err());
+        assert!(parse_gen_line("GEN x 0 0 0 -1 1").is_err());
+    }
+
+    #[test]
+    fn tcp_streaming_roundtrip() {
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
         let stop = Arc::new(AtomicBool::new(false));
-        let port = 17891;
+        let port = 17893;
         {
             let coord = coord.clone();
             let stop2 = stop.clone();
@@ -345,11 +548,25 @@ mod tests {
         }
         std::thread::sleep(Duration::from_millis(100));
         let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
-        writeln!(s, "1 2 3 4").unwrap();
+        writeln!(s, "GEN 3 0 0 0 -1 1 2 3 4").unwrap();
         let mut r = BufReader::new(s.try_clone().unwrap());
-        let mut line = String::new();
-        r.read_line(&mut line).unwrap();
-        assert_eq!(line.trim(), "4");
+        let mut toks = Vec::new();
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts[0] {
+                "TOK" => toks.push(parts[2].parse::<i32>().unwrap()),
+                "END" => {
+                    assert_eq!(parts[1], "max_tokens");
+                    assert_eq!(parts[2], "3");
+                    break;
+                }
+                other => panic!("unexpected line kind {other}"),
+            }
+        }
+        // context lengths 4,5,6 -> tokens 4,5,6
+        assert_eq!(toks, vec![4, 5, 6]);
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::SeqCst);
         coord.shutdown();

@@ -1,0 +1,342 @@
+//! Generation-session request/response vocabulary.
+//!
+//! A client submits a [`GenerateRequest`] and receives a stream of
+//! [`TokenEvent`]s: one `Token` per decoded position, terminated by a
+//! single `Done` carrying the [`FinishReason`] and the full completion.
+//! Sampling is seeded and deterministic — the same request produces the
+//! same tokens on every run and on every backend replica.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+/// How to turn a logit row into the next token.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 (or below) means greedy argmax decoding.
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest logits; 0 means the full
+    /// vocabulary.  Ignored under greedy decoding.
+    pub top_k: usize,
+    /// Seed for the per-request RNG stream (deterministic replay).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        }
+    }
+
+    pub fn temperature(temperature: f32, seed: u64) -> Self {
+        SamplingParams {
+            temperature,
+            top_k: 0,
+            seed,
+        }
+    }
+
+    pub fn top_k(temperature: f32, top_k: usize, seed: u64) -> Self {
+        SamplingParams {
+            temperature,
+            top_k,
+            seed,
+        }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// When to stop decoding a sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StopCriteria {
+    /// Hard cap on generated tokens (always enforced).
+    pub max_new_tokens: usize,
+    /// Stop early when this token is sampled (it is still emitted).
+    pub eos: Option<i32>,
+}
+
+impl Default for StopCriteria {
+    fn default() -> Self {
+        StopCriteria {
+            max_new_tokens: 32,
+            eos: None,
+        }
+    }
+}
+
+impl StopCriteria {
+    pub fn max_tokens(max_new_tokens: usize) -> Self {
+        StopCriteria {
+            max_new_tokens,
+            eos: None,
+        }
+    }
+
+    pub fn with_eos(mut self, eos: i32) -> Self {
+        self.eos = Some(eos);
+        self
+    }
+}
+
+/// A multi-token generation request: the unit of admission for the
+/// continuous-batching scheduler.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    pub stop: StopCriteria,
+}
+
+impl GenerateRequest {
+    /// Greedy decode of `max_new_tokens` tokens — the common default.
+    pub fn greedy(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenerateRequest {
+            prompt,
+            sampling: SamplingParams::greedy(),
+            stop: StopCriteria::max_tokens(max_new_tokens),
+        }
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn with_stop(mut self, stop: StopCriteria) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+/// Why a session ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new_tokens` generated.
+    MaxTokens,
+    /// The EOS token was sampled.
+    Eos,
+    /// The coordinator shut down before (or while) serving the request.
+    Shutdown,
+    /// The backend failed mid-generation.
+    Error(String),
+}
+
+impl std::fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FinishReason::MaxTokens => write!(f, "max_tokens"),
+            FinishReason::Eos => write!(f, "eos"),
+            FinishReason::Shutdown => write!(f, "shutdown"),
+            FinishReason::Error(e) => write!(f, "error: {e}"),
+        }
+    }
+}
+
+/// One element of a session's event stream.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// The `index`-th generated token; `latency` is the time since the
+    /// previous event on this sequence (since enqueue for index 0, i.e.
+    /// the time to first token).
+    Token {
+        token: i32,
+        index: usize,
+        latency: Duration,
+    },
+    /// Terminal event: the stream never yields anything after this.
+    Done {
+        reason: FinishReason,
+        /// Every token generated for this request, in order.
+        tokens: Vec<i32>,
+        /// End-to-end time from enqueue to finish.
+        total: Duration,
+    },
+}
+
+/// A fully collected completion (blocking-client view of a stream).
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+    /// Time to first token (None when the request died before any token).
+    pub ttft: Option<Duration>,
+    pub total: Duration,
+}
+
+/// Drain a session's event stream into a [`Completion`].  `timeout`
+/// bounds the wait for *each* event, not the whole stream.
+pub fn collect_stream(rx: &Receiver<TokenEvent>, timeout: Duration) -> Result<Completion> {
+    let mut ttft = None;
+    loop {
+        match rx.recv_timeout(timeout) {
+            Ok(TokenEvent::Token { index, latency, .. }) => {
+                if index == 0 {
+                    ttft = Some(latency);
+                }
+            }
+            Ok(TokenEvent::Done {
+                reason,
+                tokens,
+                total,
+            }) => {
+                return Ok(Completion {
+                    tokens,
+                    reason,
+                    ttft,
+                    total,
+                })
+            }
+            Err(RecvTimeoutError::Timeout) => bail!("generation stream stalled for {timeout:?}"),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("generation stream dropped without a terminal event")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Stateful per-sequence sampler: owns the seeded RNG stream.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        Sampler {
+            rng: Rng::new(params.seed),
+            params,
+        }
+    }
+
+    /// Pick the next token from a logit row.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        debug_assert!(!logits.is_empty());
+        if self.params.is_greedy() {
+            return argmax(logits) as i32;
+        }
+        let k = match self.params.top_k {
+            0 => logits.len(),
+            k => k.min(logits.len()),
+        };
+        let inv_t = 1.0 / self.params.temperature as f64;
+        if k == logits.len() {
+            // full-vocabulary softmax: only the max is needed (stability),
+            // so a single scan replaces any ordering work
+            let m = logits[argmax(logits)] as f64;
+            let weights: Vec<f64> = logits
+                .iter()
+                .map(|&l| ((l as f64 - m) * inv_t).exp())
+                .collect();
+            return self.rng.weighted(&weights) as i32;
+        }
+        // top-k restriction: partial selection, no full sort
+        let desc = |&a: &usize, &b: &usize| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        };
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.select_nth_unstable_by(k - 1, desc);
+        idx.truncate(k);
+        // softmax over the candidates at the given temperature
+        let m = idx
+            .iter()
+            .map(|&i| logits[i])
+            .fold(f32::NEG_INFINITY, f32::max) as f64;
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| ((logits[i] as f64 - m) * inv_t).exp())
+            .collect();
+        idx[self.rng.weighted(&weights)] as i32
+    }
+}
+
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampler_is_argmax() {
+        let mut s = Sampler::new(SamplingParams::greedy());
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 1.9]), 1);
+        assert_eq!(s.sample(&[-5.0, -4.0]), 1);
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let mut a = Sampler::new(SamplingParams::temperature(1.0, 42));
+        let mut b = Sampler::new(SamplingParams::temperature(1.0, 42));
+        let sa: Vec<i32> = (0..32).map(|_| a.sample(&logits)).collect();
+        let sb: Vec<i32> = (0..32).map(|_| b.sample(&logits)).collect();
+        assert_eq!(sa, sb, "same seed must replay the same tokens");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let logits = vec![0.0f32; 64]; // uniform: divergence is ~certain
+        let mut a = Sampler::new(SamplingParams::temperature(1.0, 1));
+        let mut b = Sampler::new(SamplingParams::temperature(1.0, 2));
+        let sa: Vec<i32> = (0..32).map(|_| a.sample(&logits)).collect();
+        let sb: Vec<i32> = (0..32).map(|_| b.sample(&logits)).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 5.0;
+        logits[7] = 4.0;
+        let mut s = Sampler::new(SamplingParams::top_k(1.0, 2, 9));
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 3 || t == 7, "top-2 must only yield the two peaks, got {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_argmax() {
+        let mut logits = vec![0.0f32; 8];
+        logits[5] = 10.0;
+        let mut s = Sampler::new(SamplingParams::temperature(0.05, 3));
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits), 5);
+        }
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::MaxTokens.to_string(), "max_tokens");
+        assert_eq!(FinishReason::Eos.to_string(), "eos");
+        assert_eq!(FinishReason::Shutdown.to_string(), "shutdown");
+        assert!(FinishReason::Error("boom".into()).to_string().contains("boom"));
+    }
+}

@@ -4,11 +4,13 @@
 //! Experts via Structured Butterfly Orbits"* as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! * **L3 (this crate)** — serving coordinator, native edge inference
-//!   engine (packed ternary + butterfly orbits), PJRT runtime for the
-//!   AOT-compiled jax graphs, training driver, and every analysis
-//!   substrate the paper's evaluation needs (memory models, energy
-//!   models, device profiles, baselines).
+//! * **L3 (this crate)** — generation-session serving coordinator
+//!   (continuous batching, seeded sampling, streaming token events —
+//!   see [`coordinator`]), native edge inference engine (packed ternary
+//!   + butterfly orbits), PJRT runtime for the AOT-compiled jax graphs,
+//!   training driver, and every analysis substrate the paper's
+//!   evaluation needs (memory models, energy models, device profiles,
+//!   baselines).
 //! * **L2 (`python/compile/model.py`)** — the jax transformer-LM with
 //!   ButterflyMoE FFNs, lowered once to `artifacts/*.hlo.txt`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
@@ -17,6 +19,23 @@
 //! Python runs only at build time (`make artifacts`); the `bmoe` binary
 //! is self-contained afterwards.  See DESIGN.md for the system inventory
 //! and the experiment index mapping every paper table/figure to code.
+//!
+//! ## Serving in five lines
+//!
+//! ```ignore
+//! let coord = Coordinator::start(backend, SchedulerConfig::default());
+//! let rx = coord.submit(
+//!     GenerateRequest::greedy(vec![1, 2, 3], 16)
+//!         .with_sampling(SamplingParams::temperature(0.8, 42)),
+//! );
+//! for event in rx { /* TokenEvent::Token ... then TokenEvent::Done */ }
+//! ```
+//!
+//! Requests are **sessions**: the coordinator keeps each sequence
+//! resident across decode steps (continuous batching — finished
+//! sequences leave, queued ones join between steps), streams every
+//! token as it is decoded, and reports TTFT / inter-token latency /
+//! tokens-per-second in [`coordinator::Metrics`].
 
 pub mod baselines;
 pub mod bench;

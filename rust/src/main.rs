@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use butterfly_moe::cli::{Args, USAGE};
 use butterfly_moe::config::RuntimeConfig;
-use butterfly_moe::coordinator::{Coordinator, PjrtLmBackend};
+use butterfly_moe::coordinator::{Coordinator, PjrtLmBackend, SchedulerConfig};
 use butterfly_moe::runtime::Engine;
 use butterfly_moe::train::Trainer;
 use butterfly_moe::util::human_bytes;
@@ -30,9 +30,12 @@ fn main() -> Result<()> {
         ("steps", args.flag("steps")),
         ("lr", args.flag("lr")),
         ("seed", args.flag("seed")),
-        ("workers", args.flag("workers")),
         ("port", args.flag("port")),
         ("max_batch", args.flag("max-batch")),
+        ("max_wait_ms", args.flag("max-wait-ms")),
+        ("max_new_tokens", args.flag("max-new-tokens")),
+        ("temperature", args.flag("temperature")),
+        ("top_k", args.flag("top-k")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -55,35 +58,72 @@ fn main() -> Result<()> {
     }
 }
 
-/// Drive a running `bmoe serve` instance over its TCP line protocol and
-/// report client-observed latency percentiles.
+/// Drive a running `bmoe serve` instance over the streaming session
+/// protocol and report client-observed TTFT, per-session latency, and
+/// sustained token throughput.
 fn cmd_bench_client(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
-    let n: usize = args.flag_parse("requests")?.unwrap_or(200);
+    let n: usize = args.flag_parse("requests")?.unwrap_or(100);
     let vocab: usize = args.flag_parse("vocab")?.unwrap_or(512);
     let mut stream = std::net::TcpStream::connect(("127.0.0.1", rt.port))
         .with_context(|| format!("connect to 127.0.0.1:{} (is `bmoe serve` running?)", rt.port))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut rng = butterfly_moe::util::Rng::new(rt.seed);
-    let mut lats = Vec::with_capacity(n);
-    for _ in 0..n {
+    let mut ttfts = Vec::with_capacity(n);
+    let mut totals = Vec::with_capacity(n);
+    let mut tokens = 0u64;
+    let bench_t0 = std::time::Instant::now();
+    for i in 0..n {
         let len = 3 + rng.below(10);
         let prompt: Vec<String> = (0..len).map(|_| rng.below(vocab).to_string()).collect();
         let t0 = std::time::Instant::now();
-        writeln!(stream, "{}", prompt.join(" "))?;
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        anyhow::ensure!(!line.starts_with("ERR"), "server error: {line}");
-        lats.push(t0.elapsed().as_secs_f64());
+        writeln!(
+            stream,
+            "GEN {} {} {} {} -1 {}",
+            rt.max_new_tokens,
+            rt.temperature,
+            rt.top_k,
+            rt.seed.wrapping_add(i as u64),
+            prompt.join(" ")
+        )?;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim();
+            anyhow::ensure!(!line.starts_with("ERR"), "server error: {line}");
+            if let Some(rest) = line.strip_prefix("TOK ") {
+                let mut f = rest.split_whitespace();
+                if f.next() == Some("0") {
+                    ttfts.push(t0.elapsed().as_secs_f64());
+                }
+                tokens += 1;
+            } else if line.starts_with("END ") {
+                totals.push(t0.elapsed().as_secs_f64());
+                break;
+            } else {
+                anyhow::bail!("unexpected server line: {line}");
+            }
+        }
     }
     writeln!(stream, "QUIT")?;
+    let wall = bench_t0.elapsed().as_secs_f64();
     use butterfly_moe::util::stats;
     println!(
-        "{n} requests: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | mean {:.2} ms",
-        1e3 * stats::percentile(&lats, 50.0),
-        1e3 * stats::percentile(&lats, 95.0),
-        1e3 * stats::percentile(&lats, 99.0),
-        1e3 * stats::mean(&lats),
+        "{n} sessions, {tokens} tokens in {wall:.1}s -> {:.0} tok/s",
+        tokens as f64 / wall
+    );
+    println!(
+        "  ttft  p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+        1e3 * stats::percentile(&ttfts, 50.0),
+        1e3 * stats::percentile(&ttfts, 95.0),
+        1e3 * stats::percentile(&ttfts, 99.0),
+    );
+    println!(
+        "  total p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | mean {:.2} ms",
+        1e3 * stats::percentile(&totals, 50.0),
+        1e3 * stats::percentile(&totals, 95.0),
+        1e3 * stats::percentile(&totals, 99.0),
+        1e3 * stats::mean(&totals),
     );
     Ok(())
 }
@@ -127,8 +167,7 @@ fn cmd_quickstart(rt: &RuntimeConfig) -> Result<()> {
     );
     drop(eng);
     let (backend, _join) = PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, None)?;
-    use butterfly_moe::coordinator::Backend;
-    let next = backend.forward(&[vec![1, 2, 3, 4, 5]])?;
+    let next = butterfly_moe::coordinator::greedy_next(&backend, &[vec![1, 2, 3, 4, 5]])?;
     println!("forward OK; next token for [1,2,3,4,5] -> {}", next[0]);
     std::process::exit(0); // engine thread holds the process otherwise
 }
@@ -176,15 +215,25 @@ fn cmd_eval(rt: &RuntimeConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
-    let ckpt = args.flag("from").map(Path::new);
-    let (backend, _join) =
-        PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, ckpt)?;
-    let backend = Arc::new(backend);
+    use butterfly_moe::coordinator::{Backend, NativeMoeBackend};
+    let backend: Arc<dyn Backend> = if args.has_switch("native") {
+        // pure-rust edge backend: serves without compiled artifacts (and
+        // without a PJRT runtime)
+        let mut rng = butterfly_moe::util::Rng::new(rt.seed);
+        let layer = Arc::new(butterfly_moe::moe::ButterflyMoeLayer::random(
+            256, 1024, 16, 2, None, &mut rng,
+        ));
+        Arc::new(NativeMoeBackend::new(layer, 512, 32, rt.max_batch))
+    } else {
+        let ckpt = args.flag("from").map(Path::new);
+        let (backend, _join) =
+            PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, ckpt)?;
+        Arc::new(backend)
+    };
+    eprintln!("[serve] backend: {}", backend.name());
     let coord = Coordinator::start(
         backend,
-        rt.max_batch,
-        Duration::from_millis(rt.max_wait_ms),
-        rt.workers,
+        SchedulerConfig::new(rt.max_batch, Duration::from_millis(rt.max_wait_ms)),
     );
     let stop = Arc::new(AtomicBool::new(false));
     {

@@ -4,7 +4,7 @@
 //! Compilation happens once per artifact per process (XLA compile of the
 //! bigger train-step graphs takes seconds); executions are cheap and
 //! internally synchronized, so `Engine` is shared behind `Arc` by the
-//! coordinator's workers.
+//! coordinator's engine loop.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -64,14 +64,22 @@ impl Engine {
     /// Execute an artifact with host values; returns the decomposed
     /// output tuple (aot.py lowers with return_tuple=True).
     pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.run_parts(name, inputs, &[])
+    }
+
+    /// Like [`Engine::run`] but with the inputs split into a shared
+    /// prefix (model parameters) and per-call extras, so callers on the
+    /// decode hot path never have to concatenate owned copies.
+    pub fn run_parts(&self, name: &str, prefix: &[Value], extra: &[Value]) -> Result<Vec<Value>> {
         let spec = self.manifest.artifact(name)?;
+        let n_inputs = prefix.len() + extra.len();
         anyhow::ensure!(
-            inputs.len() == spec.inputs.len(),
+            n_inputs == spec.inputs.len(),
             "{name}: got {} inputs, artifact wants {}",
-            inputs.len(),
+            n_inputs,
             spec.inputs.len()
         );
-        for (v, s) in inputs.iter().zip(&spec.inputs) {
+        for (v, s) in prefix.iter().chain(extra.iter()).zip(&spec.inputs) {
             anyhow::ensure!(
                 v.shape() == &s.shape[..],
                 "{name}: input '{}' shape {:?} != manifest {:?}",
@@ -81,8 +89,9 @@ impl Engine {
             );
         }
         let exe = self.load(name)?;
-        let lits: Vec<xla::Literal> = inputs
+        let lits: Vec<xla::Literal> = prefix
             .iter()
+            .chain(extra.iter())
             .map(Value::to_literal)
             .collect::<Result<_>>()?;
         let result = exe.execute::<xla::Literal>(&lits)?[0][0]

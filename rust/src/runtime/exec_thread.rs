@@ -9,7 +9,7 @@
 //! anyway.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -18,7 +18,10 @@ use super::{Engine, Value};
 enum Job {
     Run {
         artifact: String,
-        inputs: Vec<Value>,
+        /// Shared immutable input prefix (model parameters): crossing
+        /// the channel costs a refcount bump, not a weight copy.
+        prefix: Arc<Vec<Value>>,
+        extra: Vec<Value>,
         reply: Sender<Result<Vec<Value>>>,
     },
     Shutdown,
@@ -32,13 +35,26 @@ pub struct EngineHandle {
 impl EngineHandle {
     /// Execute an artifact and wait for its outputs.
     pub fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        self.run_with_prefix(artifact, Arc::new(Vec::new()), inputs)
+    }
+
+    /// Execute with a shared parameter prefix followed by per-call
+    /// inputs — the decode-loop hot path, which would otherwise deep-copy
+    /// every weight tensor once per step.
+    pub fn run_with_prefix(
+        &self,
+        artifact: &str,
+        prefix: Arc<Vec<Value>>,
+        extra: Vec<Value>,
+    ) -> Result<Vec<Value>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .lock()
             .unwrap()
             .send(Job::Run {
                 artifact: artifact.to_string(),
-                inputs,
+                prefix,
+                extra,
                 reply: rtx,
             })
             .context("engine thread gone")?;
@@ -76,10 +92,11 @@ pub fn spawn_engine_thread(
                 match job {
                     Job::Run {
                         artifact,
-                        inputs,
+                        prefix,
+                        extra,
                         reply,
                     } => {
-                        let result = engine.run(&artifact, &inputs);
+                        let result = engine.run_parts(&artifact, &prefix, &extra);
                         let _ = reply.send(result);
                     }
                     Job::Shutdown => break,

@@ -1,14 +1,17 @@
-//! Integration: coordinator + PJRT LM backend end-to-end — batched
-//! requests through the real AOT graph, plus the native-engine backend
-//! under concurrent load.
-//!
-//! Skips (passes vacuously) when `make artifacts` hasn't run.
+//! Integration: generation sessions end-to-end — the coordinator's
+//! continuous-batching loop over the real backends (PJRT LM when
+//! `make artifacts` has run, native MoE always), plus cross-backend
+//! invariants of the session API.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use butterfly_moe::coordinator::{Backend, Coordinator, NativeMoeBackend, PjrtLmBackend};
+use butterfly_moe::coordinator::{
+    collect_stream, greedy_next, Backend, Coordinator, FinishReason, GenerateRequest,
+    InflightBatch, InflightSeq, NativeMoeBackend, PjrtLmBackend, SamplingParams, SchedulerConfig,
+    StopCriteria,
+};
 use butterfly_moe::moe::ButterflyMoeLayer;
 use butterfly_moe::util::Rng;
 
@@ -17,64 +20,181 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-#[test]
-fn pjrt_lm_backend_serves_batches() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (backend, _join) = PjrtLmBackend::start(&dir, "tiny", None).unwrap();
-    // single
-    let out = backend.forward(&[vec![1, 2, 3]]).unwrap();
-    assert_eq!(out.len(), 1);
-    assert!((0..512).contains(&out[0]));
-    // deterministic
-    let out2 = backend.forward(&[vec![1, 2, 3]]).unwrap();
-    assert_eq!(out, out2);
-    // bucket padding: 3 prompts -> bucket 4
-    let outs = backend
-        .forward(&[vec![1, 2, 3], vec![4, 5], vec![6]])
-        .unwrap();
-    assert_eq!(outs.len(), 3);
-    // batch-invariance: the same prompt gives the same next token
-    // regardless of batch-mates (static graphs, no cross-seq state)
-    assert_eq!(outs[0], out[0]);
-}
-
-#[test]
-fn coordinator_over_pjrt_backend() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (backend, _join) = PjrtLmBackend::start(&dir, "tiny", None).unwrap();
-    let coord = Coordinator::start(Arc::new(backend), 4, Duration::from_millis(4), 2);
-
-    let rxs: Vec<_> = (0..12)
-        .map(|i| coord.submit(vec![i as i32 % 500, 3, 7]))
-        .collect();
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-        assert!((0..512).contains(&resp.next_token));
-    }
-    let snap = coord.metrics.snapshot();
-    assert_eq!(snap.responses, 12);
-    assert_eq!(snap.errors, 0);
-    assert!(snap.mean_batch_size >= 1.0);
-    coord.shutdown();
-}
-
-#[test]
-fn coordinator_over_native_backend_under_load() {
-    // no artifacts needed: fully native path
+fn native_backend(max_batch: usize) -> Arc<NativeMoeBackend> {
     let mut rng = Rng::new(7);
     let layer = Arc::new(ButterflyMoeLayer::random(64, 256, 8, 2, None, &mut rng));
-    let backend = Arc::new(NativeMoeBackend::new(layer, 512, 32, 16));
-    let coord = Coordinator::start(backend, 16, Duration::from_millis(2), 4);
+    Arc::new(NativeMoeBackend::new(layer, 512, 32, max_batch))
+}
 
-    let rxs: Vec<_> = (0..200)
-        .map(|i| coord.submit(vec![(i % 512) as i32; 8]))
+#[test]
+fn pjrt_lm_backend_steps_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (backend, _join) = PjrtLmBackend::start(&dir, "tiny", None).unwrap();
+    // single prompt, deterministic logits
+    let a = greedy_next(&backend, &[vec![1, 2, 3]]).unwrap();
+    let b = greedy_next(&backend, &[vec![1, 2, 3]]).unwrap();
+    assert_eq!(a, b);
+    assert!((0..512).contains(&a[0]));
+    // bucket padding: 3 prompts -> bucket 4; batch-invariance of seq 0
+    let outs = greedy_next(&backend, &[vec![1, 2, 3], vec![4, 5], vec![6]]).unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0], a[0]);
+    // oversized step splits across buckets instead of dropping requests
+    let many: Vec<Vec<i32>> = (0..backend.max_batch() + 3)
+        .map(|i| vec![(i % 500) as i32, 3, 7])
+        .collect();
+    let mut batch = InflightBatch::new();
+    for (i, p) in many.iter().enumerate() {
+        batch.push(InflightSeq::new(i as u64, p.clone()));
+    }
+    let outs = backend.step(&mut batch).unwrap();
+    assert_eq!(outs.len(), many.len());
+}
+
+#[test]
+fn coordinator_streams_sessions_over_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (backend, _join) = PjrtLmBackend::start(&dir, "tiny", None).unwrap();
+    let coord = Coordinator::start(
+        Arc::new(backend),
+        SchedulerConfig::new(4, Duration::from_millis(4)),
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|i| coord.submit(GenerateRequest::greedy(vec![i as i32 % 500, 3, 7], 4)))
         .collect();
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let c = collect_stream(&rx, Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens.len(), 4);
+        assert_eq!(c.reason, FinishReason::MaxTokens);
+        assert!(c.tokens.iter().all(|t| (0..512).contains(t)));
+        assert!(c.ttft.is_some());
     }
     let snap = coord.metrics.snapshot();
-    assert_eq!(snap.responses, 200);
-    assert!(snap.mean_batch_size > 1.2, "batching under load: {}", snap.mean_batch_size);
-    assert!(snap.latency_p99 < 5.0);
+    assert_eq!(snap.responses, 6);
+    assert_eq!(snap.tokens, 24);
+    assert_eq!(snap.errors, 0);
     coord.shutdown();
+}
+
+#[test]
+fn native_sessions_under_concurrent_load() {
+    let coord = Coordinator::start(
+        native_backend(16),
+        SchedulerConfig::new(16, Duration::from_millis(2)),
+    );
+    let rxs: Vec<_> = (0..100)
+        .map(|i| coord.submit(GenerateRequest::greedy(vec![(i % 512) as i32; 8], 5)))
+        .collect();
+    for rx in rxs {
+        let c = collect_stream(&rx, Duration::from_secs(30)).unwrap();
+        assert_eq!(c.tokens.len(), 5);
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.responses, 100);
+    assert_eq!(snap.tokens, 500);
+    assert!(
+        snap.mean_batch_size > 1.2,
+        "continuous batching under load: occupancy {}",
+        snap.mean_batch_size
+    );
+    assert!(snap.tokens_per_sec > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn greedy_sessions_are_deterministic_across_coordinators() {
+    let run = || {
+        let coord = Coordinator::start(
+            native_backend(8),
+            SchedulerConfig::new(8, Duration::from_millis(1)),
+        );
+        let c = coord
+            .generate(GenerateRequest::greedy(vec![5, 6, 7, 8], 12))
+            .unwrap();
+        coord.shutdown();
+        c.tokens
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn seeded_temperature_sessions_replay_identically() {
+    let coord = Coordinator::start(
+        native_backend(8),
+        SchedulerConfig::new(8, Duration::from_millis(1)),
+    );
+    let sample = |seed: u64| {
+        let req = GenerateRequest::greedy(vec![1, 2, 3], 16)
+            .with_sampling(SamplingParams::top_k(1.0, 40, seed));
+        coord.generate(req).unwrap().tokens
+    };
+    assert_eq!(sample(99), sample(99), "same seed => same completion");
+    assert_ne!(sample(1), sample(2), "different seeds should diverge");
+    coord.shutdown();
+}
+
+#[test]
+fn eos_cuts_generation_short() {
+    let coord = Coordinator::start(
+        native_backend(8),
+        SchedulerConfig::new(8, Duration::from_millis(1)),
+    );
+    // discover what greedy decoding emits, then use its second token as
+    // EOS: the session must stop right there
+    let free = coord
+        .generate(GenerateRequest::greedy(vec![9, 8, 7], 8))
+        .unwrap();
+    assert_eq!(free.tokens.len(), 8);
+    let eos = free.tokens[1];
+    let stopped = coord
+        .generate(
+            GenerateRequest::greedy(vec![9, 8, 7], 8)
+                .with_stop(StopCriteria::max_tokens(8).with_eos(eos)),
+        )
+        .unwrap();
+    assert_eq!(stopped.reason, FinishReason::Eos);
+    assert_eq!(stopped.tokens, free.tokens[..2].to_vec());
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_length_workload_short_finishes_first() {
+    let coord = Coordinator::start(
+        native_backend(8),
+        SchedulerConfig::new(8, Duration::from_millis(1)),
+    );
+    let long = coord.submit(GenerateRequest::greedy(vec![1, 2, 3], 256));
+    let short = coord.submit(GenerateRequest::greedy(vec![4, 5, 6], 4));
+    let c_short = collect_stream(&short, Duration::from_secs(30)).unwrap();
+    assert_eq!(c_short.tokens.len(), 4);
+    let c_long = collect_stream(&long, Duration::from_secs(60)).unwrap();
+    assert_eq!(c_long.tokens.len(), 256);
+    // the short session must not pay for the long one's 256 steps
+    assert!(
+        c_short.total < c_long.total,
+        "short ({:?}) should finish well before long ({:?})",
+        c_short.total,
+        c_long.total
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_denies_queued_sessions_with_terminal_events() {
+    // capacity 1 so most sessions are queued when shutdown hits; raise
+    // the server-side session cap so the in-flight one can't finish first
+    let coord = Coordinator::start(
+        native_backend(1),
+        SchedulerConfig::new(1, Duration::from_millis(1)).with_session_cap(1_000_000),
+    );
+    let rxs: Vec<_> = (0..12)
+        .map(|_| coord.submit(GenerateRequest::greedy(vec![1, 2], 1_000_000)))
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    coord.shutdown();
+    for rx in rxs {
+        let c = collect_stream(&rx, Duration::from_secs(5))
+            .expect("no waiter may be stranded on shutdown");
+        assert_eq!(c.reason, FinishReason::Shutdown);
+    }
 }

@@ -1,0 +1,200 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The build environment has no registry or native XLA/PJRT toolchain,
+//! so this shim provides the exact API surface `runtime/` compiles
+//! against.  Constructors succeed; anything that would require a real
+//! PJRT runtime returns an "unavailable" error at *runtime*.  The
+//! native serving path (`NativeMoeBackend`, scheduler, TCP frontend)
+//! never touches this crate.  To execute compiled HLO artifacts,
+//! replace this path dependency with the real `xla` crate.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT/XLA is stubbed in this offline build (vendor/xla); \
+         link the real xla crate to execute HLO artifacts"
+    ))
+}
+
+/// Host element types the workspace exchanges with literals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal handle.  Construction and reshape are cheap no-ops
+/// here; reading values back requires a real runtime.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal {
+            shape: ArrayShape {
+                dims: Vec::new(),
+                ty: T::TY,
+            },
+        }
+    }
+
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            shape: ArrayShape {
+                dims: vec![values.len() as i64],
+                ty: T::TY,
+            },
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal {
+            shape: ArrayShape {
+                dims: dims.to_vec(),
+                ty: self.shape.ty,
+            },
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_work_offline() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]).reshape(&[3, 1]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[3, 1]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(Literal::scalar(7i32).array_shape().unwrap().ty(), ElementType::S32);
+    }
+
+    #[test]
+    fn runtime_entry_points_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("stubbed"));
+    }
+}
