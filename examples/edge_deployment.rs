@@ -5,21 +5,27 @@
 //!   * actually *instantiate* a ButterflyMoE layer at a large expert
 //!     count on this machine, measure its real packed memory and its
 //!     per-token latency with the native engine,
+//!   * optionally attach an expert-residency cache and show the
+//!     memory↔throughput dial: hot experts served from a materialized
+//!     working set (bit-identical outputs) at a byte budget,
 //!   * estimate per-inference energy on that device's DRAM (Table 3's
 //!     model, per device).
 //!
-//! Run: `cargo run --release --example edge_deployment -- [--experts 256]`
+//! Run: `cargo run --release --example edge_deployment --
+//!       [--experts 256] [--expert-cache-mb 16]`
+//! (accepts and ignores `--native`: this example is always native)
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use butterfly_moe::cli::Args;
 use butterfly_moe::coordinator::{
-    Coordinator, GenerateRequest, NativeMoeBackend, SamplingParams, SchedulerConfig,
+    warm, Coordinator, GenerateRequest, NativeMoeBackend, SamplingParams, SchedulerConfig,
 };
 use butterfly_moe::devices::ALL_DEVICES;
 use butterfly_moe::energy::{butterfly_moe_energy, standard_moe_energy};
-use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
+use butterfly_moe::expertcache::ExpertCacheConfig;
+use butterfly_moe::memmodel::{butterfly_bytes, cached_butterfly_bytes, LayerShape, Method};
 use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
 use butterfly_moe::tensor::Tensor;
 use butterfly_moe::util::{human_bytes, Rng, Stopwatch};
@@ -27,6 +33,7 @@ use butterfly_moe::util::{human_bytes, Rng, Stopwatch};
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let n_experts: usize = args.flag_parse("experts")?.unwrap_or(256);
+    let cache_mb: f64 = args.flag_parse("expert-cache-mb")?.unwrap_or(0.0);
     let shape = LayerShape::paper();
 
     println!("== device deployability (d=512, d_ff=2048) ==");
@@ -52,7 +59,10 @@ fn main() -> anyhow::Result<()> {
     println!("\n== instantiating {n_experts} experts on this machine ==");
     let mut rng = Rng::new(0xED6E);
     let sw = Stopwatch::start();
-    let layer = Arc::new(ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng));
+    let mut layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
+    let cache = (cache_mb > 0.0)
+        .then(|| layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
+    let layer = Arc::new(layer);
     println!(
         "  built in {:.2}s; expert storage {} (paper formula {}), vs standard {}",
         sw.secs(),
@@ -60,12 +70,27 @@ fn main() -> anyhow::Result<()> {
         human_bytes(butterfly_bytes(n_experts, shape)),
         human_bytes(Method::StandardMoe.bytes(n_experts, shape)),
     );
+    if let Some(c) = &cache {
+        anyhow::ensure!(
+            c.enabled(),
+            "--expert-cache-mb {cache_mb} is smaller than one expert working set ({})",
+            human_bytes(c.entry_bytes() as f64),
+        );
+        println!(
+            "  expert cache: budget {} = {} resident experts max ({} working set each); \
+             total with cache full: {}",
+            human_bytes(c.budget_bytes() as f64),
+            c.capacity_experts(),
+            human_bytes(c.entry_bytes() as f64),
+            human_bytes(cached_butterfly_bytes(n_experts, c.capacity_experts(), shape)),
+        );
+    }
 
     // per-token latency of the Alg.-1 hot path
     let t = 16;
     let x = Tensor::rand_normal(&[t, 512], 1.0, &mut rng);
     let mut h = vec![0.0f32; t * 2048];
-    // warmup + measure
+    // warmup + measure (cache cold: this is the pure synthesis path)
     layer.experts_forward(&x.data, t, &mut h);
     let sw = Stopwatch::start();
     let iters = 10;
@@ -74,10 +99,33 @@ fn main() -> anyhow::Result<()> {
     }
     let per_token = sw.secs() / (iters * t) as f64;
     println!(
-        "  expert mixture: {:.2} ms/token ({:.0} tokens/s) on this CPU",
+        "  expert mixture (synthesized): {:.2} ms/token ({:.0} tokens/s) on this CPU",
         per_token * 1e3,
         1.0 / per_token
     );
+
+    // same workload with the residency cache admitted to steady state:
+    // repeated routes make the batch's hottest experts resident, and the
+    // fast path is bit-identical to synthesis (parity-tested)
+    if let Some(c) = &cache {
+        for _ in 0..16 {
+            layer.experts_forward(&x.data, t, &mut h);
+            c.tick();
+        }
+        let sw = Stopwatch::start();
+        for _ in 0..iters {
+            layer.experts_forward(&x.data, t, &mut h);
+            c.tick();
+        }
+        let cached_per_token = sw.secs() / (iters * t) as f64;
+        println!(
+            "  expert mixture (cache warm):  {:.2} ms/token ({:.0} tokens/s) — {:.2}x, {}",
+            cached_per_token * 1e3,
+            1.0 / cached_per_token,
+            per_token / cached_per_token,
+            c.snapshot().summary(),
+        );
+    }
 
     // ------------------------------------------------------------------
     // Generation sessions on-device: the same layer behind the
@@ -85,6 +133,7 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------------------------
     println!("\n== generation sessions over the native engine ==");
     let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 8));
+    warm(backend.as_ref())?; // pre-materializes the cache working set too
     let coord = Coordinator::start(backend, SchedulerConfig::new(8, Duration::from_millis(1)));
     let rxs: Vec<_> = (0..6)
         .map(|i| {
@@ -114,6 +163,32 @@ fn main() -> anyhow::Result<()> {
         snap.tokens_per_sec, snap.mean_batch_size
     );
     coord.shutdown();
+
+    // machine-parseable cache report (the CI smoke test greps this line
+    // and the nonzero-hit-rate check below fails the run outright)
+    if let Some(c) = &cache {
+        let s = c.snapshot();
+        println!(
+            "[cache] cache_hit_rate={:.3} hits={} misses={} resident_bytes={} \
+             resident_experts={} budget_bytes={} evictions={} materializations={}",
+            s.hit_rate(),
+            s.hits,
+            s.misses,
+            s.resident_bytes,
+            s.resident_experts,
+            s.budget_bytes,
+            s.evictions,
+            s.materializations,
+        );
+        anyhow::ensure!(
+            s.resident_bytes <= s.budget_bytes,
+            "resident bytes exceed the configured budget"
+        );
+        anyhow::ensure!(
+            !s.enabled || s.hits > 0,
+            "expert cache enabled but served zero hits"
+        );
+    }
 
     // ------------------------------------------------------------------
     // Energy per inference on each device's DRAM

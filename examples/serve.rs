@@ -8,8 +8,10 @@
 //! finish while long batch-mates are still decoding.
 //!
 //! Run: `cargo run --release --example serve -- [--config tiny]
-//!       [--clients 8] [--sessions 4] [--max-batch 16] [--native]`
-//! (`--native` serves the pure-rust MoE backend; no artifacts needed.)
+//!       [--clients 8] [--sessions 4] [--max-batch 16] [--native]
+//!       [--expert-cache-mb 8]`
+//! (`--native` serves the pure-rust MoE backend; no artifacts needed.
+//! `--expert-cache-mb` attaches the expert-residency cache to it.)
 
 use std::path::Path;
 use std::sync::Arc;
@@ -33,9 +35,24 @@ fn main() -> anyhow::Result<()> {
 
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         let mut rng = Rng::new(0xBE);
-        let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng));
-        println!("== native MoE backend (no artifacts) ==");
-        Arc::new(NativeMoeBackend::new(layer, 512, 32, max_batch))
+        let mut layer = ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
+        let cache_mb: f64 = args.flag_parse("expert-cache-mb")?.unwrap_or(0.0);
+        if cache_mb > 0.0 {
+            let cache = layer.attach_expert_cache(
+                butterfly_moe::expertcache::ExpertCacheConfig::with_budget_mb(cache_mb),
+            );
+            anyhow::ensure!(
+                cache.enabled(),
+                "--expert-cache-mb {cache_mb} is smaller than one expert working set"
+            );
+            println!(
+                "== native MoE backend (no artifacts; expert cache {} experts max) ==",
+                cache.capacity_experts()
+            );
+        } else {
+            println!("== native MoE backend (no artifacts) ==");
+        }
+        Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, max_batch))
     } else {
         let (b, _join) = PjrtLmBackend::start(Path::new("artifacts"), &config, None)?;
         println!("== PJRT LM backend (config={config}) ==");

@@ -6,7 +6,7 @@
 use std::path::Path;
 
 use butterfly_moe::bench::{paper_tables, Table};
-use butterfly_moe::memmodel::{LayerShape, Method, ALL_METHODS};
+use butterfly_moe::memmodel::{cached_butterfly_bytes, LayerShape, Method, ALL_METHODS};
 
 fn main() -> anyhow::Result<()> {
     let out = Path::new("runs/tables");
@@ -31,6 +31,29 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     t.write_csv(&out.join("fig3_all_methods.csv"))?;
+
+    // residency-cache companion curve: identity bytes plus R resident
+    // working sets (the serving memory↔throughput dial; `expert_cache`
+    // bench measures the throughput side)
+    let mut t = Table::new(
+        "Fig. 3b: with expert-residency cache (MB)",
+        &["Experts", "R=0 (pure)", "R=2", "R=8", "R=all", "Standard"],
+    );
+    let mut n = 8usize;
+    while n <= 1024 {
+        let mb = |b: f64| format!("{:.2}", b / (1024.0 * 1024.0));
+        t.row(&[
+            n.to_string(),
+            mb(cached_butterfly_bytes(n, 0, s)),
+            mb(cached_butterfly_bytes(n, 2, s)),
+            mb(cached_butterfly_bytes(n, 8, s)),
+            mb(cached_butterfly_bytes(n, n, s)),
+            mb(Method::StandardMoe.bytes(n, s)),
+        ]);
+        n *= 2;
+    }
+    t.print();
+    t.write_csv(&out.join("fig3_cached.csv"))?;
 
     // ASCII log-log rendering of the two headline series
     println!("\nlog2(MB) vs log2(experts)   S=standard  B=butterfly");

@@ -105,6 +105,13 @@ COMMON FLAGS:
   --steps N  --lr F     training options
   --port P              serving: TCP port (default 7070)
   --max-batch N         serving: max sequences resident per decode step
+  --expert-cache-mb MB  serving (--native): byte budget for the expert
+                        residency cache — hot experts keep a materialized
+                        working set served by a plain dense GEMM,
+                        bit-identical to on-the-fly synthesis; 0 (default)
+                        disables it (pure sub-linear mode)
+  --no-warmup           serving: skip the pre-serve warmup pass (bucket
+                        compilation + expert-cache pre-materialization)
   --max-new-tokens N    bench-client: token budget requested per session
   --temperature F       bench-client: sampling temperature (0 = greedy)
   --top-k N             bench-client: top-k truncation (0 = full vocab)
@@ -114,7 +121,8 @@ Any bare key=value is applied to the runtime config (see config/mod.rs).
 The serve wire protocol is documented in coordinator/server.rs:
   GEN <max_new> <temperature> <top_k> <seed> <eos|-1> <tok> <tok> ...
 streams back 'TOK <index> <token> <latency_us>' lines and a terminal
-'END <reason> <n_tokens> <total_us>'.";
+'END <reason> <n_tokens> <total_us>'.  'STATS' returns one key=value
+telemetry line including the expert cache's hit rate / resident bytes.";
 
 #[cfg(test)]
 mod tests {

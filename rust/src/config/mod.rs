@@ -123,6 +123,10 @@ pub struct RuntimeConfig {
     pub temperature: f64,
     /// top-k truncation for client-side commands (0 = full vocab)
     pub top_k: usize,
+    /// expert-residency cache budget in MB for the native serving
+    /// backend (`--expert-cache-mb`); 0 disables the cache — pure
+    /// sub-linear mode (see `expertcache`)
+    pub expert_cache_mb: f64,
     pub port: u16,
     pub checkpoint_every: usize,
     pub out_dir: String,
@@ -142,6 +146,7 @@ impl Default for RuntimeConfig {
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
+            expert_cache_mb: 0.0,
             port: 7070,
             checkpoint_every: 100,
             out_dir: "runs".into(),
@@ -164,6 +169,9 @@ impl RuntimeConfig {
             "max_new_tokens" => self.max_new_tokens = value.parse().context("max_new_tokens")?,
             "temperature" => self.temperature = value.parse().context("temperature")?,
             "top_k" => self.top_k = value.parse().context("top_k")?,
+            "expert_cache_mb" => {
+                self.expert_cache_mb = value.parse().context("expert_cache_mb")?
+            }
             "port" => self.port = value.parse().context("port")?,
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
@@ -259,9 +267,12 @@ mod tests {
         r.set("max_new_tokens", "64").unwrap();
         r.set("temperature", "0.7").unwrap();
         r.set("top_k", "40").unwrap();
+        r.set("expert_cache_mb", "24.5").unwrap();
         assert_eq!(r.max_new_tokens, 64);
         assert_eq!(r.temperature, 0.7);
         assert_eq!(r.top_k, 40);
+        assert_eq!(r.expert_cache_mb, 24.5);
+        assert!(r.set("expert_cache_mb", "lots").is_err());
     }
 
     #[test]

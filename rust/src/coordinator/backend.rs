@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::session::argmax;
+use crate::expertcache::CacheStatsSnapshot;
 use crate::moe::MoeLayer;
 use crate::runtime::{spawn_engine_thread, EngineHandle, Manifest, Value};
 use crate::tensor::IntTensor;
@@ -108,17 +109,36 @@ pub trait Backend: Send + Sync {
     fn warmup_sizes(&self) -> Vec<usize> {
         vec![1, self.max_batch()]
     }
+    /// Per-decode-step residency bookkeeping (expert-cache EWMA fold,
+    /// admission, eviction).  The engine loop calls this after every
+    /// step; backends without a cache keep the no-op default.
+    fn tick_caches(&self) {}
+    /// Expert-residency cache counters, when this backend serves a
+    /// cached native layer (surfaced on the `STATS` wire line).
+    fn cache_stats(&self) -> Option<CacheStatsSnapshot> {
+        None
+    }
+    /// Pre-materialize the configured cache working set from warmup
+    /// traffic so the first real request doesn't pay decode cost.
+    fn prewarm_caches(&self) {}
 }
 
 /// Drive every warmup batch size once so one-time costs (XLA bucket
-/// compilation, cache faulting) stay out of measured windows.  Shared by
-/// the serve example, the serving bench, and anything else that times
-/// the decode path.
+/// compilation, cache faulting) stay out of measured windows, then
+/// pre-materialize the configured expert-cache working set from the
+/// routing statistics that warmup traffic produced — TTFT on the first
+/// real request doesn't eat materialization cost.  Shared by the serve
+/// command/example, the serving bench, and anything else that times the
+/// decode path.
 pub fn warm(backend: &dyn Backend) -> Result<()> {
     for n in backend.warmup_sizes() {
-        let prompts: Vec<Vec<i32>> = (0..n.max(1)).map(|_| vec![1, 2, 3]).collect();
+        // vary the tail token so warmup exercises more than one route
+        let prompts: Vec<Vec<i32>> = (0..n.max(1))
+            .map(|i| vec![1, 2, (i % 61) as i32 + 2])
+            .collect();
         greedy_next(backend, &prompts)?;
     }
+    backend.prewarm_caches();
     Ok(())
 }
 
@@ -331,6 +351,22 @@ impl Backend for NativeMoeBackend {
     }
     fn name(&self) -> String {
         format!("native-moe:{}exp", self.layer.n_experts())
+    }
+
+    fn tick_caches(&self) {
+        if let Some(c) = self.layer.expert_cache() {
+            c.tick();
+        }
+    }
+
+    fn cache_stats(&self) -> Option<CacheStatsSnapshot> {
+        self.layer.expert_cache().map(|c| c.snapshot())
+    }
+
+    fn prewarm_caches(&self) {
+        if let Some(c) = self.layer.expert_cache() {
+            c.prewarm();
+        }
     }
 
     fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::expertcache::CacheStatsSnapshot;
 use crate::util::stats::LatencyHistogram;
 
 pub struct Metrics {
@@ -32,6 +33,9 @@ struct Inner {
     ttft: LatencyHistogram,
     itl: LatencyHistogram,
     e2e: LatencyHistogram,
+    /// Latest expert-residency-cache counters (gauge semantics: the
+    /// engine loop overwrites it after every decode step).
+    cache: Option<CacheStatsSnapshot>,
 }
 
 impl Default for Metrics {
@@ -64,6 +68,10 @@ pub struct MetricsSnapshot {
     pub latency_p95: f64,
     pub latency_p99: f64,
     pub latency_mean: f64,
+    /// Expert-residency cache counters, when the backend serves a cached
+    /// native layer (hit rate, resident bytes, evictions — the
+    /// memory↔throughput dial's telemetry).
+    pub cache: Option<CacheStatsSnapshot>,
 }
 
 impl Metrics {
@@ -122,6 +130,12 @@ impl Metrics {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Latest expert-cache counters (the engine loop publishes these
+    /// after every decode step).
+    pub fn record_cache(&self, snap: CacheStatsSnapshot) {
+        self.inner.lock().unwrap().cache = Some(snap);
+    }
+
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
@@ -154,14 +168,19 @@ impl Metrics {
             latency_p95: inner.e2e.quantile(0.95),
             latency_p99: inner.e2e.quantile(0.99),
             latency_mean: inner.e2e.mean(),
+            cache: inner.cache.clone(),
         }
     }
 }
 
 impl MetricsSnapshot {
     pub fn summary(&self) -> String {
+        let cache = match &self.cache {
+            Some(c) if c.enabled => format!(" | {}", c.summary()),
+            _ => String::new(),
+        };
         format!(
-            "req={} done={} cancelled={} err={} tokens={} ({:.0} tok/s) steps={} (occupancy {:.1}) ttft p50/p99 {:.2}/{:.2} ms itl p50/p99 {:.2}/{:.2} ms e2e p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+            "req={} done={} cancelled={} err={} tokens={} ({:.0} tok/s) steps={} (occupancy {:.1}) ttft p50/p99 {:.2}/{:.2} ms itl p50/p99 {:.2}/{:.2} ms e2e p50/p95/p99 {:.2}/{:.2}/{:.2} ms{cache}",
             self.requests,
             self.responses,
             self.cancelled,
@@ -212,5 +231,24 @@ mod tests {
         assert!(s.latency_p95 >= s.latency_p50);
         assert!(s.latency_mean > 0.004 && s.latency_mean < 0.01);
         assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn cache_gauge_appears_in_snapshot_and_summary() {
+        let m = Metrics::new();
+        assert!(m.snapshot().cache.is_none());
+        m.record_cache(CacheStatsSnapshot {
+            enabled: true,
+            hits: 9,
+            misses: 1,
+            resident_experts: 1,
+            resident_bytes: 1024,
+            budget_bytes: 2048,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        let c = s.cache.as_ref().unwrap();
+        assert!((c.hit_rate() - 0.9).abs() < 1e-9);
+        assert!(s.summary().contains("cache hit 90.0%"), "{}", s.summary());
     }
 }

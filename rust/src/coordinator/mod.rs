@@ -45,7 +45,11 @@
 //!
 //! Greedy decoding is `GEN 8 0 0 0 -1 <prompt…>`; `QUIT` closes the
 //! connection; malformed requests and backend failures produce a
-//! terminal `ERR <message>` line instead of `END`.
+//! terminal `ERR <message>` line instead of `END`.  `STATS` returns one
+//! `key=value` telemetry line including the expert-residency cache's
+//! hit rate and resident bytes (see [`server::stats_line`] and
+//! [`crate::expertcache`] — the `--expert-cache-mb` memory↔throughput
+//! dial).
 //!
 //! Threads + channels only (no tokio in the offline vendor set): one
 //! engine thread owns the backend; each TCP connection gets a relay
@@ -63,7 +67,7 @@ pub use backend::{
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};
-pub use server::{parse_gen_line, serve_tcp, Coordinator};
+pub use server::{parse_gen_line, serve_tcp, stats_line, Coordinator};
 pub use session::{
     collect_stream, Completion, FinishReason, GenerateRequest, Sampler, SamplingParams,
     StopCriteria, TokenEvent,

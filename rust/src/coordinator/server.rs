@@ -212,6 +212,12 @@ fn engine_loop(
             // on backend failure the scheduler already streamed terminal
             // error events; keep serving subsequent requests
             let _ = sched.step(backend.as_ref());
+            // step-time residency tick: fold gating stats, admit/evict
+            // hot experts, publish the counters for STATS readers
+            backend.tick_caches();
+            if let Some(cs) = backend.cache_stats() {
+                metrics.record_cache(cs);
+            }
         } else if disconnected && pending.is_empty() {
             return;
         }
@@ -229,6 +235,16 @@ fn engine_loop(
 //
 // `<eos>` is -1 for "no EOS token"; `<temperature>` 0 means greedy (then
 // `<top_k>`/`<seed>` are ignored; pass 0).  "QUIT" closes the connection.
+//
+// "STATS" returns one `key=value` telemetry line (see [`stats_line`]):
+//
+//   STATS req=.. done=.. tokens=.. tok_per_s=.. steps=.. occupancy=..
+//         cache_enabled=.. cache_hits=.. cache_misses=.. cache_hit_rate=..
+//         cache_resident_bytes=.. cache_resident_experts=..
+//         cache_budget_bytes=.. cache_evictions=..
+//
+// The cache_* fields report the expert-residency cache (zeros when the
+// backend serves without one — `--expert-cache-mb` unset).
 // ---------------------------------------------------------------------------
 
 pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
@@ -257,6 +273,33 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> R
         let _ = c.join();
     }
     Ok(())
+}
+
+/// Render the single-line `STATS` wire reply: serving counters plus the
+/// expert-residency cache's hit rate and resident bytes (zeros when no
+/// cache is attached), `key=value` so clients and smoke tests can grep.
+pub fn stats_line(s: &super::metrics::MetricsSnapshot) -> String {
+    let c = s.cache.clone().unwrap_or_default();
+    format!(
+        "STATS req={} done={} tokens={} tok_per_s={:.1} steps={} occupancy={:.2} \
+         cache_enabled={} cache_hits={} cache_misses={} cache_hit_rate={:.3} \
+         cache_resident_bytes={} cache_resident_experts={} cache_budget_bytes={} \
+         cache_evictions={}",
+        s.requests,
+        s.responses,
+        s.tokens,
+        s.tokens_per_sec,
+        s.steps,
+        s.mean_batch_size,
+        c.enabled as u8,
+        c.hits,
+        c.misses,
+        c.hit_rate(),
+        c.resident_bytes,
+        c.resident_experts,
+        c.budget_bytes,
+        c.evictions,
+    )
 }
 
 /// Parse one `GEN` request line (see the protocol block above).
@@ -298,6 +341,10 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         }
         if line == "QUIT" {
             break;
+        }
+        if line == "STATS" {
+            writeln!(writer, "{}", stats_line(&coord.metrics.snapshot()))?;
+            continue;
         }
         match parse_gen_line(line) {
             Ok(req) => {
@@ -570,5 +617,61 @@ mod tests {
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::SeqCst);
         coord.shutdown();
+    }
+
+    #[test]
+    fn stats_wire_line_reports_cache_fields() {
+        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let port = 17894;
+        {
+            let coord = coord.clone();
+            let stop2 = stop.clone();
+            std::thread::spawn(move || serve_tcp(coord, port, stop2));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        writeln!(s, "GEN 2 0 0 0 -1 1 2").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            if line.starts_with("END") {
+                break;
+            }
+        }
+        writeln!(s, "STATS").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STATS "), "{line}");
+        // CountBackend has no cache: fields present, zeroed
+        assert!(line.contains("cache_enabled=0"), "{line}");
+        assert!(line.contains("cache_hit_rate=0.000"), "{line}");
+        assert!(line.contains("cache_resident_bytes=0"), "{line}");
+        assert!(line.contains("tokens=2"), "{line}");
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_line_formats_cache_gauge() {
+        let m = Metrics::new();
+        m.record_cache(crate::expertcache::CacheStatsSnapshot {
+            enabled: true,
+            hits: 30,
+            misses: 10,
+            resident_experts: 2,
+            resident_bytes: 4096,
+            budget_bytes: 8192,
+            evictions: 1,
+            ..Default::default()
+        });
+        let line = stats_line(&m.snapshot());
+        assert!(line.contains("cache_enabled=1"), "{line}");
+        assert!(line.contains("cache_hit_rate=0.750"), "{line}");
+        assert!(line.contains("cache_resident_bytes=4096"), "{line}");
+        assert!(line.contains("cache_resident_experts=2"), "{line}");
+        assert!(line.contains("cache_evictions=1"), "{line}");
     }
 }

@@ -1,0 +1,778 @@
+//! Expert residency cache — budgeted materialization of hot butterfly
+//! orbits.
+//!
+//! The paper makes expert *identity* cheap (shared ternary substrate +
+//! O(d log d) angles), but the serving hot path still pays the full
+//! synthesis cost — rotate, decode the bitplane substrate, GEMM, rotate —
+//! for every expert on every decode step, even for experts routed to on
+//! nearly every step.  This module trades memory back for speed, MoTE- /
+//! edge-MoE-style: a small byte-budgeted working set of *hot* experts is
+//! kept in a fast resident form, while cold experts keep the sub-linear
+//! on-the-fly synthesis path.
+//!
+//! # The resident form, and why it is the *decoded* working set
+//!
+//! A resident expert is served from a [`DecodedExpert`]: the substrate's
+//! sign rows expanded to dense f32 (`±1.0 / 0.0`) plus a bit-packed
+//! nonzero-word skip map — exactly the intermediate
+//! [`BitplaneTernary::gemm`]/[`BitplaneTernary::gemv`] re-derive from the
+//! bitplanes on every call.  Serving from it is a plain dense GEMM with
+//! the decode hoisted out of the loop.
+//!
+//! Fully folding the rotations into one dense matrix
+//! `B(phi)·Q(W)·B(theta)ᵀ` would also elide the O(d log d) rotations
+//! (a few percent of the step), but matrix composition re-associates
+//! floating-point operations and therefore breaks the guarantee the
+//! serving stack is built on: **cached and synthesized outputs are
+//! bit-identical**.  The decoded form performs literally the same
+//! arithmetic as the synthesis path (same `dot_f32` spans, same word
+//! order, same zero-word skips), so `experts_forward` produces identical
+//! bits whichever path an expert takes — parity-tested in
+//! `rust/tests/expert_cache.rs`.
+//!
+//! Because the v1 substrate is fully shared, resident decodes currently
+//! have identical *contents* across experts; residency, budgeting and
+//! eviction are still per-expert because the gating statistics, the
+//! admission decision, and (with per-expert substrate deltas on the
+//! roadmap) the decoded bytes themselves are per-expert.  A follow-up can
+//! deduplicate the shared plane.
+//!
+//! # Accounting
+//!
+//! Cache bytes are **working-set** bytes — a deployment-time
+//! memory↔throughput dial — *not* expert-identity bytes: Table 1 and
+//! [`crate::moe::MoeLayer::expert_bytes`] are unchanged by residency.
+//! The closed-form curve lives in `memmodel::cached_butterfly_bytes`
+//! (`Method::CachedButterfly`), pinned against [`DecodedExpert::nbytes`]
+//! in tests.
+//!
+//! # Lifecycle
+//!
+//! * [`ExpertResidencyCache::observe`] — `experts_forward` reports the
+//!   per-expert load fractions of each forward (the eq.-6 statistics it
+//!   already computes).
+//! * [`ExpertResidencyCache::lookup`] — per-expert fast/slow decision in
+//!   the dispatch loop; counts hits and misses.
+//! * [`ExpertResidencyCache::tick`] — driven once per decode step by the
+//!   engine loop: folds observed loads into a per-expert EWMA, evicts
+//!   residents that went cold, admits the hottest non-residents under
+//!   the byte budget (with hysteresis and an age gate so one-off routes
+//!   don't thrash), and bounds materialization work per step.
+//! * [`ExpertResidencyCache::prewarm`] — fills the budget with the
+//!   hottest experts seen so far (warmup traffic), so the first real
+//!   request doesn't pay materialization cost.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ternary::BitplaneTernary;
+
+/// Knobs of the residency policy.  `budget_bytes == 0` disables the
+/// cache entirely (pure sub-linear mode; the default).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpertCacheConfig {
+    /// Hard ceiling on resident working-set bytes.  Never exceeded.
+    pub budget_bytes: usize,
+    /// Admission floor, as a multiple of the uniform load `1/E`: an
+    /// expert is admissible once its EWMA load ≥ `admit_factor / E`.
+    pub admit_factor: f64,
+    /// Eviction floor (hysteresis: strictly below the admission floor):
+    /// a resident is evicted once its EWMA load < `evict_factor / E`.
+    pub evict_factor: f64,
+    /// Under budget pressure, a candidate replaces the coldest resident
+    /// only if `candidate_ewma > coldest_ewma * (1 + replace_margin)`.
+    pub replace_margin: f64,
+    /// EWMA decay per tick: `ewma = (1-α)·ewma + α·load_this_tick`.
+    pub ewma_alpha: f64,
+    /// Residents younger than this many ticks are never evicted
+    /// (anti-thrash age gate).
+    pub min_resident_ticks: u64,
+    /// Materialization work bound per tick (decode-step jitter bound);
+    /// `prewarm` ignores it.
+    pub max_admissions_per_tick: usize,
+}
+
+impl Default for ExpertCacheConfig {
+    fn default() -> Self {
+        ExpertCacheConfig {
+            budget_bytes: 0,
+            admit_factor: 0.5,
+            evict_factor: 0.125,
+            replace_margin: 0.5,
+            ewma_alpha: 0.1,
+            min_resident_ticks: 4,
+            max_admissions_per_tick: 1,
+        }
+    }
+}
+
+impl ExpertCacheConfig {
+    /// The CLI surface: `--expert-cache-mb` with everything else default.
+    pub fn with_budget_mb(mb: f64) -> Self {
+        ExpertCacheConfig {
+            budget_bytes: (mb.max(0.0) * 1024.0 * 1024.0) as usize,
+            ..ExpertCacheConfig::default()
+        }
+    }
+
+    pub fn with_budget_bytes(bytes: usize) -> Self {
+        ExpertCacheConfig {
+            budget_bytes: bytes,
+            ..ExpertCacheConfig::default()
+        }
+    }
+}
+
+/// Closed-form bytes of one resident expert's decoded working set —
+/// must match [`DecodedExpert::nbytes`] exactly (pinned in tests and
+/// reused by `memmodel::resident_expert_bytes`).
+pub fn decoded_expert_bytes(rows: usize, cols: usize) -> usize {
+    let wpr = cols.div_ceil(64);
+    rows * cols * 4 + (rows * wpr).div_ceil(64) * 8 + 4
+}
+
+// ---------------------------------------------------------------------------
+// DecodedExpert — the resident fast form
+// ---------------------------------------------------------------------------
+
+/// A substrate decoded once into dense f32 sign rows plus a bit-packed
+/// per-(row, 64-column-word) nonzero map.  Its [`gemv`](Self::gemv) and
+/// [`gemm`](Self::gemm) perform *the same floating-point operations in
+/// the same order* as [`BitplaneTernary::gemv`] / [`BitplaneTernary::gemm`]
+/// — the decode is hoisted, nothing is re-associated — so swapping one
+/// for the other changes no output bit.
+pub struct DecodedExpert {
+    rows: usize,
+    cols: usize,
+    gamma: f32,
+    words_per_row: usize,
+    /// rows × cols, exact decode of the bitplanes (±1.0 / 0.0).
+    signs: Vec<f32>,
+    /// bit (r·wpr + wi) set ⟺ word wi of row r has any nonzero sign —
+    /// the same predicate as `plus|minus != 0` in the bitplane GEMV.
+    word_nonzero: Vec<u64>,
+}
+
+impl DecodedExpert {
+    /// Decode the substrate's bitplanes into the resident dense form.
+    pub fn materialize(sub: &BitplaneTernary) -> Self {
+        let (rows, cols) = (sub.rows, sub.cols);
+        let wpr = sub.words_per_row();
+        let mut signs = vec![0.0f32; rows * cols];
+        let mut word_nonzero = vec![0u64; (rows * wpr).div_ceil(64)];
+        for r in 0..rows {
+            let (pr, mr) = sub.row_planes(r);
+            let row = &mut signs[r * cols..(r + 1) * cols];
+            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+                let base = wi * 64;
+                let n = (cols - base).min(64);
+                // identical decode expression to the bitplane GEMM's
+                let (mut p, mut m) = (pw, mw);
+                for s in row[base..base + n].iter_mut() {
+                    *s = ((p & 1) as i32 - (m & 1) as i32) as f32;
+                    p >>= 1;
+                    m >>= 1;
+                }
+                if (pw | mw) != 0 {
+                    let idx = r * wpr + wi;
+                    word_nonzero[idx / 64] |= 1u64 << (idx % 64);
+                }
+            }
+        }
+        DecodedExpert {
+            rows,
+            cols,
+            gamma: sub.gamma,
+            words_per_row: wpr,
+            signs,
+            word_nonzero,
+        }
+    }
+
+    /// Resident bytes of this working set (what the budget meters).
+    pub fn nbytes(&self) -> usize {
+        self.signs.len() * 4 + self.word_nonzero.len() * 8 + 4
+    }
+
+    #[inline]
+    fn word_is_nonzero(&self, r: usize, wi: usize) -> bool {
+        let idx = r * self.words_per_row + wi;
+        self.word_nonzero[idx / 64] & (1u64 << (idx % 64)) != 0
+    }
+
+    /// y = gamma · Q x — bit-identical mirror of [`BitplaneTernary::gemv`]
+    /// (same per-word `dot_f32` spans in the same order, same all-zero
+    /// word skip), with the sign decode already done.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let wpr = self.words_per_row;
+        for r in 0..self.rows {
+            let row = &self.signs[r * self.cols..(r + 1) * self.cols];
+            let mut acc = 0.0f32;
+            for wi in 0..wpr {
+                if !self.word_is_nonzero(r, wi) {
+                    continue; // whole word of zeros: skip 64 columns
+                }
+                let base = wi * 64;
+                let n = (self.cols - base).min(64);
+                acc += crate::util::dot_f32(&row[base..base + n], &x[base..base + n]);
+            }
+            y[r] = acc * self.gamma;
+        }
+    }
+
+    /// Batched X (t, cols) -> Y (t, rows) — bit-identical mirror of
+    /// [`BitplaneTernary::gemm`] (full-row `dot_f32` per token, `t == 1`
+    /// delegates to the word-skipping GEMV exactly as the bitplane path
+    /// does).
+    pub fn gemm(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), t * self.cols);
+        assert_eq!(y.len(), t * self.rows);
+        if t == 1 {
+            return self.gemv(x, y);
+        }
+        for r in 0..self.rows {
+            let row = &self.signs[r * self.cols..(r + 1) * self.cols];
+            for i in 0..t {
+                let xi = &x[i * self.cols..(i + 1) * self.cols];
+                y[i * self.rows + r] = crate::util::dot_f32(row, xi) * self.gamma;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache statistics
+// ---------------------------------------------------------------------------
+
+/// Point-in-time counters, exposed on the serving `STATS` wire line and
+/// in `Metrics::snapshot`.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStatsSnapshot {
+    /// False when the budget can't hold even one expert (budget 0 = pure
+    /// sub-linear mode).
+    pub enabled: bool,
+    /// Expert dispatches served from a resident decode.
+    pub hits: u64,
+    /// Expert dispatches that fell back to on-the-fly synthesis.
+    pub misses: u64,
+    pub evictions: u64,
+    pub materializations: u64,
+    pub resident_experts: usize,
+    /// Always ≤ `budget_bytes` (asserted in tests).
+    pub resident_bytes: usize,
+    pub budget_bytes: usize,
+    /// Working-set bytes of one resident expert.
+    pub entry_bytes: usize,
+}
+
+impl CacheStatsSnapshot {
+    /// hits / (hits + misses); 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "cache hit {:.1}% ({} hit / {} miss) resident {}/{} ({} experts) evict={} mat={}",
+            100.0 * self.hit_rate(),
+            self.hits,
+            self.misses,
+            crate::util::human_bytes(self.resident_bytes as f64),
+            crate::util::human_bytes(self.budget_bytes as f64),
+            self.resident_experts,
+            self.evictions,
+            self.materializations,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The residency cache
+// ---------------------------------------------------------------------------
+
+struct Entry {
+    dec: Arc<DecodedExpert>,
+    /// Tick of the last cache hit — LRU tie-break when the replacement
+    /// pass must pick among equally cold residents.
+    last_used: u64,
+    admitted: u64,
+}
+
+struct Inner {
+    entries: HashMap<usize, Entry>,
+    /// Per-expert EWMA of load fraction (the eq.-6 statistic).
+    ewma: Vec<f64>,
+    /// Loads accumulated by `observe` since the last tick.
+    pending: Vec<f64>,
+    pending_obs: u64,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+/// Byte-budgeted residency of hot experts' decoded working sets.
+///
+/// Shared `Arc`-style between the owning `ButterflyMoeLayer` (lookup /
+/// observe on the forward path) and the serving engine loop (per-step
+/// `tick`, warmup `prewarm`, stats).  All state is behind one mutex;
+/// counters are atomics so stats reads never contend with the step.
+pub struct ExpertResidencyCache {
+    cfg: ExpertCacheConfig,
+    substrate: Arc<BitplaneTernary>,
+    n_experts: usize,
+    entry_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    materializations: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl ExpertResidencyCache {
+    pub fn new(cfg: ExpertCacheConfig, substrate: Arc<BitplaneTernary>, n_experts: usize) -> Self {
+        let entry_bytes = decoded_expert_bytes(substrate.rows, substrate.cols);
+        ExpertResidencyCache {
+            cfg,
+            substrate,
+            n_experts,
+            entry_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            materializations: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                ewma: vec![0.0; n_experts],
+                pending: vec![0.0; n_experts],
+                pending_obs: 0,
+                tick: 0,
+                resident_bytes: 0,
+            }),
+        }
+    }
+
+    /// True when the budget can hold at least one resident expert.
+    pub fn enabled(&self) -> bool {
+        self.cfg.budget_bytes >= self.entry_bytes
+    }
+
+    /// Working-set bytes of one resident expert.
+    pub fn entry_bytes(&self) -> usize {
+        self.entry_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.cfg.budget_bytes
+    }
+
+    /// How many experts the budget can hold.
+    pub fn capacity_experts(&self) -> usize {
+        self.cfg.budget_bytes / self.entry_bytes
+    }
+
+    /// Fold loads accumulated since the last fold into the per-expert
+    /// EWMA (an empty window decays every expert toward zero — idle
+    /// traffic cools the working set).
+    fn fold_pending(&self, inner: &mut Inner) {
+        let obs = inner.pending_obs.max(1) as f64;
+        let alpha = self.cfg.ewma_alpha;
+        for (w, p) in inner.ewma.iter_mut().zip(inner.pending.iter_mut()) {
+            *w = (1.0 - alpha) * *w + alpha * (*p / obs);
+            *p = 0.0;
+        }
+        inner.pending_obs = 0;
+    }
+
+    /// Merge one forward's per-expert load fractions into the pending
+    /// window folded at the next [`tick`](Self::tick).
+    pub fn observe(&self, loads: &[f64]) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        assert_eq!(loads.len(), inner.pending.len(), "load vector length");
+        for (p, &l) in inner.pending.iter_mut().zip(loads) {
+            *p += l;
+        }
+        inner.pending_obs += 1;
+    }
+
+    /// Resident decode for expert `e`, if any.  Counts a hit or a miss;
+    /// `None` means the caller must synthesize on the fly.
+    pub fn lookup(&self, e: usize) -> Option<Arc<DecodedExpert>> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.tick;
+        match inner.entries.get_mut(&e) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.dec.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// One decode step of residency bookkeeping: fold observed loads into
+    /// the EWMA, evict residents that went cold, admit the hottest
+    /// non-residents under the budget (bounded materialization work).
+    pub fn tick(&self) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        inner.tick += 1;
+        self.fold_pending(inner);
+
+        let uniform = 1.0 / self.n_experts as f64;
+        let evict_floor = self.cfg.evict_factor * uniform;
+        let admit_floor = self.cfg.admit_factor * uniform;
+
+        // evict residents that went cold (age-gated)
+        let cold: Vec<usize> = inner
+            .entries
+            .iter()
+            .filter(|(e, entry)| {
+                inner.ewma[**e] < evict_floor
+                    && inner.tick - entry.admitted >= self.cfg.min_resident_ticks
+            })
+            .map(|(e, _)| *e)
+            .collect();
+        for e in cold {
+            self.evict(inner, e);
+        }
+
+        // admit the hottest admissible non-residents
+        let mut candidates: Vec<usize> = (0..self.n_experts)
+            .filter(|e| !inner.entries.contains_key(e) && inner.ewma[*e] >= admit_floor)
+            .collect();
+        candidates.sort_by(|&a, &b| inner.ewma[b].partial_cmp(&inner.ewma[a]).unwrap());
+        let mut admitted = 0usize;
+        for e in candidates {
+            if admitted >= self.cfg.max_admissions_per_tick {
+                break;
+            }
+            if inner.resident_bytes + self.entry_bytes <= self.cfg.budget_bytes {
+                self.admit(inner, e);
+                admitted += 1;
+                continue;
+            }
+            // budget pressure: replace the coldest old-enough resident
+            // (LRU tie-break on equal heat) only if the candidate is
+            // decisively hotter (hysteresis)
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, en)| inner.tick - en.admitted >= self.cfg.min_resident_ticks)
+                .map(|(ve, en)| (*ve, en.last_used))
+                .min_by(|a, b| {
+                    inner.ewma[a.0]
+                        .partial_cmp(&inner.ewma[b.0])
+                        .unwrap()
+                        .then(a.1.cmp(&b.1))
+                })
+                .map(|(ve, _)| ve);
+            match victim {
+                Some(v) if inner.ewma[e] > inner.ewma[v] * (1.0 + self.cfg.replace_margin) => {
+                    self.evict(inner, v);
+                    self.admit(inner, e);
+                    admitted += 1;
+                }
+                _ => break, // hotter candidates were already tried
+            }
+        }
+    }
+
+    /// Fill the budget with the hottest experts observed so far (ties and
+    /// a cold start fall back to index order) — warmup pre-materialization
+    /// so the first real request doesn't pay decode cost.  Ignores the
+    /// admission floor and the per-tick materialization bound.
+    pub fn prewarm(&self) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        // fold any warmup traffic observed since the last tick (but
+        // don't decay observed heat when there was none)
+        if inner.pending_obs > 0 {
+            self.fold_pending(inner);
+        }
+        let mut order: Vec<usize> = (0..self.n_experts).collect();
+        order.sort_by(|&x, &y| {
+            inner.ewma[y]
+                .partial_cmp(&inner.ewma[x])
+                .unwrap()
+                .then(x.cmp(&y))
+        });
+        for e in order {
+            if inner.resident_bytes + self.entry_bytes > self.cfg.budget_bytes {
+                break;
+            }
+            if !inner.entries.contains_key(&e) {
+                self.admit(inner, e);
+            }
+        }
+    }
+
+    fn admit(&self, inner: &mut Inner, e: usize) {
+        let dec = Arc::new(DecodedExpert::materialize(&self.substrate));
+        debug_assert_eq!(dec.nbytes(), self.entry_bytes);
+        inner.resident_bytes += self.entry_bytes;
+        debug_assert!(inner.resident_bytes <= self.cfg.budget_bytes);
+        inner.entries.insert(
+            e,
+            Entry {
+                dec,
+                last_used: inner.tick,
+                admitted: inner.tick,
+            },
+        );
+        self.materializations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn evict(&self, inner: &mut Inner, e: usize) {
+        if inner.entries.remove(&e).is_some() {
+            inner.resident_bytes -= self.entry_bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        CacheStatsSnapshot {
+            enabled: self.enabled(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            materializations: self.materializations.load(Ordering::Relaxed),
+            resident_experts: inner.entries.len(),
+            resident_bytes: inner.resident_bytes,
+            budget_bytes: self.cfg.budget_bytes,
+            entry_bytes: self.entry_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ternary_quantize;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn substrate(rows: usize, cols: usize, seed: u64) -> Arc<BitplaneTernary> {
+        let mut rng = Rng::new(seed);
+        let t = Tensor::rand_normal(&[rows, cols], 1.0, &mut rng);
+        Arc::new(BitplaneTernary::from_quant(&ternary_quantize(&t)))
+    }
+
+    fn cache(
+        sub: &Arc<BitplaneTernary>,
+        n_experts: usize,
+        budget_experts: usize,
+    ) -> ExpertResidencyCache {
+        let entry = decoded_expert_bytes(sub.rows, sub.cols);
+        let cfg = ExpertCacheConfig {
+            budget_bytes: budget_experts * entry,
+            min_resident_ticks: 1,
+            max_admissions_per_tick: 8,
+            ewma_alpha: 0.5,
+            ..ExpertCacheConfig::default()
+        };
+        ExpertResidencyCache::new(cfg, sub.clone(), n_experts)
+    }
+
+    #[test]
+    fn decoded_gemv_bit_identical_to_bitplane() {
+        for (rows, cols, seed) in [(16usize, 64usize, 1u64), (32, 100, 2), (7, 200, 3)] {
+            let sub = substrate(rows, cols, seed);
+            let dec = DecodedExpert::materialize(&sub);
+            let mut rng = Rng::new(seed + 50);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(1.0)).collect();
+            let mut a = vec![0.0f32; rows];
+            let mut b = vec![0.0f32; rows];
+            sub.gemv(&x, &mut a);
+            dec.gemv(&x, &mut b);
+            assert_eq!(a, b, "({rows},{cols}) gemv must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn decoded_gemm_bit_identical_to_bitplane() {
+        let sub = substrate(24, 96, 4);
+        let dec = DecodedExpert::materialize(&sub);
+        let mut rng = Rng::new(5);
+        for t in [1usize, 2, 5, 16] {
+            let x: Vec<f32> = (0..t * 96).map(|_| rng.normal_f32(1.0)).collect();
+            let mut a = vec![0.0f32; t * 24];
+            let mut b = vec![0.0f32; t * 24];
+            sub.gemm(&x, t, &mut a);
+            dec.gemm(&x, t, &mut b);
+            assert_eq!(a, b, "t={t} gemm must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn nbytes_matches_closed_form() {
+        for (rows, cols) in [(16usize, 64usize), (2048, 512), (7, 200)] {
+            let sub = substrate(rows, cols, 9);
+            let dec = DecodedExpert::materialize(&sub);
+            assert_eq!(dec.nbytes(), decoded_expert_bytes(rows, cols));
+        }
+    }
+
+    #[test]
+    fn budget_zero_disables_everything() {
+        let sub = substrate(8, 64, 10);
+        let c = cache(&sub, 4, 0);
+        assert!(!c.enabled());
+        c.observe(&[1.0, 0.0, 0.0, 0.0]);
+        c.tick();
+        c.prewarm();
+        assert!(c.lookup(0).is_none());
+        let s = c.snapshot();
+        assert!(!s.enabled);
+        assert_eq!(s.hits + s.misses, 0, "disabled cache records nothing");
+        assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn admission_respects_budget_and_counts_hits() {
+        let sub = substrate(8, 64, 11);
+        let c = cache(&sub, 4, 2);
+        // expert 0 and 1 hot, 2 and 3 cold
+        for _ in 0..4 {
+            c.observe(&[0.5, 0.4, 0.1, 0.0]);
+            c.tick();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.resident_experts, 2);
+        assert_eq!(s.resident_bytes, 2 * c.entry_bytes());
+        assert!(s.resident_bytes <= c.budget_bytes());
+        assert!(c.lookup(0).is_some());
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_none());
+        let s = c.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shifted_hot_set_replaces_resident_with_hysteresis() {
+        let sub = substrate(8, 64, 12);
+        let c = cache(&sub, 4, 1);
+        for _ in 0..4 {
+            c.observe(&[1.0, 0.0, 0.0, 0.0]);
+            c.tick();
+        }
+        assert!(c.lookup(0).is_some());
+        // load shifts to expert 3; margin + age gate let it take over
+        // only after a few ticks, not on the first one-off route
+        c.observe(&[0.0, 0.0, 0.0, 1.0]);
+        c.tick();
+        assert!(c.lookup(0).is_some(), "one tick must not thrash");
+        for _ in 0..6 {
+            c.observe(&[0.0, 0.0, 0.0, 1.0]);
+            c.tick();
+        }
+        assert!(c.lookup(3).is_some(), "sustained load must win residency");
+        assert!(c.lookup(0).is_none());
+        let s = c.snapshot();
+        assert!(s.evictions >= 1);
+        assert_eq!(s.resident_bytes, c.entry_bytes());
+    }
+
+    #[test]
+    fn one_off_route_does_not_evict_hot_resident() {
+        let sub = substrate(8, 64, 13);
+        let c = cache(&sub, 4, 1);
+        for _ in 0..5 {
+            c.observe(&[0.8, 0.1, 0.1, 0.0]);
+            c.tick();
+        }
+        assert!(c.lookup(0).is_some());
+        // a single burst to expert 2 amid continuing expert-0 traffic
+        c.observe(&[0.4, 0.0, 0.6, 0.0]);
+        c.tick();
+        for _ in 0..3 {
+            c.observe(&[0.8, 0.1, 0.1, 0.0]);
+            c.tick();
+        }
+        assert!(c.lookup(0).is_some(), "hot resident survives a one-off");
+        assert_eq!(c.snapshot().resident_experts, 1);
+    }
+
+    #[test]
+    fn replacement_breaks_equal_heat_ties_by_lru() {
+        let sub = substrate(8, 64, 16);
+        let c = cache(&sub, 4, 2);
+        // experts 0 and 1 equally hot -> both resident
+        c.observe(&[0.5, 0.5, 0.0, 0.0]);
+        c.tick();
+        assert_eq!(c.snapshot().resident_experts, 2);
+        // advance a tick (keeping the heat tie), then hit 0 so expert 1
+        // becomes the least-recently-used of the tie
+        c.observe(&[0.5, 0.5, 0.0, 0.0]);
+        c.tick();
+        assert!(c.lookup(0).is_some());
+        // expert 2 becomes decisively hotter: it must replace 1, not 0
+        c.observe(&[0.0, 0.0, 1.0, 0.0]);
+        c.tick();
+        assert!(c.lookup(2).is_some());
+        assert!(c.lookup(0).is_some(), "recently used resident survives");
+        assert!(c.lookup(1).is_none(), "LRU resident is the victim");
+    }
+
+    #[test]
+    fn prewarm_fills_budget_by_observed_heat() {
+        let sub = substrate(8, 64, 14);
+        let c = cache(&sub, 6, 3);
+        c.observe(&[0.0, 0.1, 0.0, 0.6, 0.3, 0.0]);
+        c.prewarm();
+        let s = c.snapshot();
+        assert_eq!(s.resident_experts, 3);
+        assert!(c.lookup(3).is_some());
+        assert!(c.lookup(4).is_some());
+        assert!(c.lookup(1).is_some());
+        // cold start (no stats at all) falls back to index order
+        let c2 = cache(&sub, 6, 2);
+        c2.prewarm();
+        assert!(c2.lookup(0).is_some());
+        assert!(c2.lookup(1).is_some());
+        assert!(c2.lookup(2).is_none());
+    }
+
+    #[test]
+    fn eviction_frees_bytes_when_load_vanishes() {
+        let sub = substrate(8, 64, 15);
+        let c = cache(&sub, 4, 2);
+        for _ in 0..3 {
+            c.observe(&[0.5, 0.5, 0.0, 0.0]);
+            c.tick();
+        }
+        assert_eq!(c.snapshot().resident_experts, 2);
+        // traffic stops entirely: EWMAs decay below the eviction floor
+        for _ in 0..12 {
+            c.tick();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.resident_experts, 0);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.evictions, 2);
+    }
+}

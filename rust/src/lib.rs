@@ -46,6 +46,7 @@ pub mod coordinator;
 pub mod data;
 pub mod devices;
 pub mod energy;
+pub mod expertcache;
 pub mod jsonx;
 pub mod memmodel;
 pub mod moe;

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         ("max_new_tokens", args.flag("max-new-tokens")),
         ("temperature", args.flag("temperature")),
         ("top_k", args.flag("top-k")),
+        ("expert_cache_mb", args.flag("expert-cache-mb")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -216,21 +217,47 @@ fn cmd_eval(rt: &RuntimeConfig, args: &Args) -> Result<()> {
 
 fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use butterfly_moe::coordinator::{Backend, NativeMoeBackend};
+    use butterfly_moe::expertcache::ExpertCacheConfig;
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         // pure-rust edge backend: serves without compiled artifacts (and
         // without a PJRT runtime)
         let mut rng = butterfly_moe::util::Rng::new(rt.seed);
-        let layer = Arc::new(butterfly_moe::moe::ButterflyMoeLayer::random(
-            256, 1024, 16, 2, None, &mut rng,
-        ));
-        Arc::new(NativeMoeBackend::new(layer, 512, 32, rt.max_batch))
+        let mut layer =
+            butterfly_moe::moe::ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
+        if rt.expert_cache_mb > 0.0 {
+            let cache =
+                layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(rt.expert_cache_mb));
+            eprintln!(
+                "[serve] expert cache: budget {} = {} resident experts max ({} each)",
+                human_bytes(cache.budget_bytes() as f64),
+                cache.capacity_experts(),
+                human_bytes(cache.entry_bytes() as f64),
+            );
+            if !cache.enabled() {
+                eprintln!(
+                    "[serve] warning: --expert-cache-mb {} is smaller than one working set \
+                     ({}); cache DISABLED, serving pure sub-linear",
+                    rt.expert_cache_mb,
+                    human_bytes(cache.entry_bytes() as f64),
+                );
+            }
+        }
+        Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, rt.max_batch))
     } else {
+        if rt.expert_cache_mb > 0.0 {
+            eprintln!("[serve] note: --expert-cache-mb applies to the --native backend only");
+        }
         let ckpt = args.flag("from").map(Path::new);
         let (backend, _join) =
             PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, ckpt)?;
         Arc::new(backend)
     };
     eprintln!("[serve] backend: {}", backend.name());
+    if !args.has_switch("no-warmup") {
+        // drive every bucket once and pre-materialize the cache working
+        // set so the first real request's TTFT pays neither cost
+        butterfly_moe::coordinator::warm(backend.as_ref())?;
+    }
     let coord = Coordinator::start(
         backend,
         SchedulerConfig::new(rt.max_batch, Duration::from_millis(rt.max_wait_ms)),

@@ -5,6 +5,23 @@
 //! matrices (or their compressed forms) — excluding the gate and shared
 //! down projection, exactly as the paper's 256 MB baseline does
 //! (64 × 2048 × 512 × 4 B).
+//!
+//! # Residency-cache accounting ([`Method::CachedButterfly`])
+//!
+//! The expert-residency cache (`crate::expertcache`, the
+//! `--expert-cache-mb` serving dial) adds **working-set** bytes on top
+//! of identity bytes: each cache-resident expert keeps a decoded dense
+//! form ([`resident_expert_bytes`], ≈ `d_ff·d_model·4` B) so decode
+//! steps skip the bitplane expansion.  These bytes are a *deployment*
+//! memory↔throughput trade and are **not** expert-identity storage —
+//! Table 1 and `MoeLayer::expert_bytes` are unchanged by residency.
+//! [`cached_butterfly_bytes`] is the Fig.-3 companion curve: identity
+//! bytes (Prop. 1) plus `R` resident working sets, interpolating between
+//! the pure sub-linear point (`R = 0`, the paper's 150× headline) and a
+//! fully dense-speed deployment (`R = N`, which costs about the same as
+//! standard FP32 MoE: the resident signs are stored as f32 so the fast
+//! path stays bit-identical to synthesis — the dial trades the *entire*
+//! compression win back for throughput if you push it all the way).
 
 /// Layer shape for memory accounting.
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +59,10 @@ pub enum Method {
     /// This paper (Prop. 1): shared 1.58-bit substrate + FP16 butterfly
     /// angles per expert.
     ButterflyMoe,
+    /// ButterflyMoE identity bytes plus `resident` cache-materialized
+    /// working sets (`crate::expertcache`) — the serving
+    /// memory↔throughput dial.
+    CachedButterfly { resident: usize },
 }
 
 pub const ALL_METHODS: [Method; 6] = [
@@ -62,6 +83,7 @@ impl Method {
             Method::PuzzleMoe => "PuzzleMoE",
             Method::MixtureCompressor => "MC",
             Method::ButterflyMoe => "ButterflyMoE",
+            Method::CachedButterfly { .. } => "ButterflyMoE + cache",
         }
     }
 
@@ -81,17 +103,21 @@ impl Method {
     pub fn scaling(&self) -> &'static str {
         match self {
             Method::ButterflyMoe => "O(d^2 + N*d*log d)",
+            Method::CachedButterfly { .. } => "O(d^2 + N*d*log d + R*d^2)",
             Method::PuzzleMoe | Method::MixtureCompressor => "O(N*d^2) reduced",
             _ => "O(N*d^2)",
         }
     }
 
-    /// Expert-identity bytes for `n` experts.
+    /// Bytes for `n` experts: expert-identity storage, plus resident
+    /// working sets for [`Method::CachedButterfly`] (see module docs on
+    /// the accounting split).
     pub fn bytes(&self, n: usize, s: LayerShape) -> f64 {
         let w = s.weights_per_expert();
         match self {
             Method::StandardMoe => n as f64 * w * 4.0,
             Method::ButterflyMoe => butterfly_bytes(n, s),
+            Method::CachedButterfly { resident } => cached_butterfly_bytes(n, *resident, s),
             m => n as f64 * w * 4.0 / m.paper_ratio().unwrap(),
         }
     }
@@ -125,6 +151,23 @@ pub fn asymptotic_ratio(s: LayerShape) -> f64 {
     (s.d_model * s.d_ff) as f64 * 4.0 / per_expert_bytes(s)
 }
 
+/// Working-set bytes of ONE cache-resident expert: the decoded dense
+/// sign rows plus the nonzero-word skip map the residency cache
+/// materializes (`expertcache::DecodedExpert`) — pinned against the
+/// actual `DecodedExpert::nbytes` in `rust/tests/expert_cache.rs`.
+/// ≈ 4 bytes/weight: the price of skipping the bitplane decode.
+pub fn resident_expert_bytes(s: LayerShape) -> f64 {
+    crate::expertcache::decoded_expert_bytes(s.d_ff, s.d_model) as f64
+}
+
+/// The Fig.-3 companion curve for the serving cache: Prop.-1 identity
+/// bytes plus `resident` materialized working sets (clamped to `n`).
+/// `resident = 0` is exactly [`butterfly_bytes`] — the cache-disabled
+/// accounting is unchanged.
+pub fn cached_butterfly_bytes(n: usize, resident: usize, s: LayerShape) -> f64 {
+    butterfly_bytes(n, s) + resident.min(n) as f64 * resident_expert_bytes(s)
+}
+
 /// Butterfly bytes with truncated depth (Table 2 ablation accounting;
 /// both transforms counted over d_model as the paper's params/expert
 /// column does).
@@ -144,6 +187,23 @@ pub fn max_experts(m: Method, budget_bytes: f64, s: LayerShape) -> usize {
                 0
             } else {
                 (rem / per_expert_bytes(s)).floor() as usize
+            }
+        }
+        Method::CachedButterfly { resident } => {
+            // n experts fit iff identity(n) + min(resident, n)·ws <= budget
+            // (same clamp as `cached_butterfly_bytes`): either the full
+            // resident set is paid off the top (n >= resident), or every
+            // expert is resident and pays identity + working set.
+            let ws = resident_expert_bytes(s);
+            let rem = budget_bytes - substrate_bytes(s);
+            if rem <= 0.0 {
+                0
+            } else {
+                let full_charge =
+                    ((rem - resident as f64 * ws) / per_expert_bytes(s)).floor().max(0.0);
+                let all_resident =
+                    (rem / (per_expert_bytes(s) + ws)).floor().min(resident as f64);
+                full_charge.max(all_resident).max(0.0) as usize
             }
         }
         _ => (budget_bytes / m.bytes(1, s)).floor() as usize,
@@ -216,6 +276,50 @@ mod tests {
         assert!((mb(Method::Moqe) - 51.2).abs() < 0.1);
         assert!((mb(Method::PuzzleMoe) - 128.0).abs() < 0.1);
         assert!((mb(Method::MixtureCompressor) - 64.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn cached_curve_interpolates_sublinear_to_dense() {
+        // resident 0 is exactly the Prop.-1 accounting: cache-disabled
+        // behavior and bytes are unchanged
+        assert_eq!(cached_butterfly_bytes(64, 0, S), butterfly_bytes(64, S));
+        // each resident expert adds exactly one working set
+        let ws = resident_expert_bytes(S);
+        assert_eq!(
+            cached_butterfly_bytes(64, 8, S),
+            butterfly_bytes(64, S) + 8.0 * ws
+        );
+        // working set ≈ 4 MB at the paper shape (f32 signs + skip map)
+        assert!((ws - 4.0 * 1048576.0).abs() < 16384.0, "{ws}");
+        // a small working set keeps most of the 150x win: 8 of 64
+        // resident costs ~35 MB vs 256 MB standard
+        let dialed = Method::CachedButterfly { resident: 8 }.bytes(64, S);
+        assert!(dialed < Method::StandardMoe.bytes(64, S) / 7.0, "{dialed}");
+        // fully resident ≈ standard FP32 (the dial's far end)
+        let full = Method::CachedButterfly { resident: 64 }.bytes(64, S);
+        let std_b = Method::StandardMoe.bytes(64, S);
+        assert!((full / std_b - 1.0).abs() < 0.02, "{full} vs {std_b}");
+        // resident count clamps to n
+        assert_eq!(
+            cached_butterfly_bytes(4, 100, S),
+            cached_butterfly_bytes(4, 4, S)
+        );
+    }
+
+    #[test]
+    fn cached_max_experts_pays_working_set_off_the_top() {
+        let m0 = max_experts(Method::ButterflyMoe, 64.0 * 1048576.0, S);
+        let m2 = max_experts(Method::CachedButterfly { resident: 2 }, 64.0 * 1048576.0, S);
+        assert!(m2 < m0, "{m2} vs {m0}");
+        // budget smaller than the working set fits nothing
+        assert_eq!(
+            max_experts(Method::CachedButterfly { resident: 2 }, 1048576.0, S),
+            0
+        );
+        // round-trip with resident > n: the clamp must match
+        // `cached_butterfly_bytes` (which charges min(resident, n) sets)
+        let m = Method::CachedButterfly { resident: 100 };
+        assert!(max_experts(m, m.bytes(2, S), S) >= 2);
     }
 
     #[test]

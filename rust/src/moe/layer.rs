@@ -6,11 +6,15 @@
 //! exactly (same gating, same GELU, same shared down projection) so the
 //! native engine is numerically parity-testable against the AOT graphs.
 
+use std::cell::RefCell;
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::gating::GateNetwork;
 use super::gelu;
 use crate::butterfly::Butterfly;
+use crate::expertcache::{ExpertCacheConfig, ExpertResidencyCache};
 use crate::quant::{ternary_quantize, TernaryQuant};
 use crate::tensor::store::TensorStore;
 use crate::tensor::Tensor;
@@ -54,7 +58,26 @@ pub trait MoeLayer: Send + Sync {
     /// (Shared substrate + per-expert params for ButterflyMoE; the N
     /// dense matrices for standard MoE.  Gate and shared down projection
     /// are excluded on both sides, as in the paper.)
+    ///
+    /// Residency-cache bytes are *working-set* bytes and are **not**
+    /// counted here — attaching a cache never changes this accounting.
     fn expert_bytes(&self) -> usize;
+
+    /// Expert-residency cache attached to this layer, if any — the
+    /// serving engine loop drives its per-step `tick` and exposes its
+    /// stats through this handle.
+    fn expert_cache(&self) -> Option<&Arc<ExpertResidencyCache>> {
+        None
+    }
+}
+
+thread_local! {
+    /// Reusable gather buffers for the expert-major dispatch loop, so
+    /// steady-state decode does no per-step allocation in the expert
+    /// loop (capacity is retained across calls; per-thread because
+    /// layers are shared `Sync` across the serving stack).
+    static GATHER_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
 // ---------------------------------------------------------------------------
@@ -71,13 +94,18 @@ pub struct OrbitExpert {
 pub struct ButterflyMoeLayer {
     pub gate: GateNetwork,
     /// Shared ternary substrate (d_ff, d_model), bitplane-packed.
-    pub substrate: BitplaneTernary,
+    /// `Arc` so the residency cache can materialize decoded working sets
+    /// without holding a self-reference into the layer.
+    pub substrate: Arc<BitplaneTernary>,
     pub experts: Vec<OrbitExpert>,
     pub w_down: Tensor,
     /// Quantize activations to int8 in the substrate GEMM (W1.58A8, the
     /// deployment fast path — ~2x faster, ~0.5% output error).  Default
     /// false so the engine is bit-parity-testable against the L2 graph.
     pub act_quant: bool,
+    /// Optional residency cache of hot experts' decoded working sets
+    /// (see [`crate::expertcache`]); `None` = pure sub-linear mode.
+    cache: Option<Arc<ExpertResidencyCache>>,
     d_model: usize,
     d_ff: usize,
 }
@@ -99,13 +127,29 @@ impl ButterflyMoeLayer {
         assert_eq!(w_down.shape, vec![d_model, d_ff]);
         ButterflyMoeLayer {
             gate,
-            substrate: BitplaneTernary::from_quant(substrate),
+            substrate: Arc::new(BitplaneTernary::from_quant(substrate)),
             experts,
             w_down,
             act_quant: false,
+            cache: None,
             d_model,
             d_ff,
         }
+    }
+
+    /// Attach a byte-budgeted expert-residency cache (replacing any
+    /// previous one, with fresh stats).  Returns the shared handle the
+    /// engine loop uses for per-step `tick()`, warmup `prewarm()` and
+    /// stats.  The cache accelerates the exact (f32) substrate path
+    /// only; with `act_quant` set, forwards keep the synthesis path.
+    pub fn attach_expert_cache(&mut self, cfg: ExpertCacheConfig) -> Arc<ExpertResidencyCache> {
+        let cache = Arc::new(ExpertResidencyCache::new(
+            cfg,
+            self.substrate.clone(),
+            self.experts.len(),
+        ));
+        self.cache = Some(cache.clone());
+        cache
     }
 
     /// Random init mirroring `model.py::init_ffn_params`.
@@ -202,40 +246,56 @@ impl MoeLayer for ButterflyMoeLayer {
         h.fill(0.0);
         let (routes, loads) = self.gate.route_batch(x, t);
         let dispatch = GateNetwork::dispatch(&routes, self.n_experts());
+        // The cache serves the exact (f32) substrate path only; W1.58A8
+        // activation quantization keeps the synthesis path.
+        let cache = if self.act_quant {
+            None
+        } else {
+            self.cache.as_deref()
+        };
+        if let Some(c) = cache {
+            c.observe(&loads);
+        }
         // Expert-major batched dispatch (§Perf iteration 3): gather each
         // expert's tokens contiguously, rotate the whole block, run ONE
         // substrate GEMM (weights decoded once per expert, not once per
         // token), rotate back, weighted scatter — the same HBM locality
         // schedule as the Pallas BlockSpec (DESIGN.md §3).
-        let mut xg: Vec<f32> = Vec::new();
-        let mut hg: Vec<f32> = Vec::new();
-        for (e, toks) in dispatch.iter().enumerate() {
-            if toks.is_empty() {
-                continue;
-            }
-            let ex = &self.experts[e];
-            let n = toks.len();
-            xg.clear();
-            xg.reserve(n * d);
-            for &(ti, _) in toks {
-                xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
-            }
-            ex.theta.apply_transpose_batch(&mut xg);
-            hg.resize(n * dff, 0.0);
-            if self.act_quant {
-                self.substrate.gemm_a8(&xg, n, &mut hg);
-            } else {
-                self.substrate.gemm(&xg, n, &mut hg);
-            }
-            ex.phi.apply_batch(&mut hg);
-            for (row, &(ti, w)) in toks.iter().enumerate() {
-                let src = &hg[row * dff..(row + 1) * dff];
-                let dst = &mut h[ti * dff..(ti + 1) * dff];
-                for (hv, &ov) in dst.iter_mut().zip(src) {
-                    *hv += w * ov;
+        GATHER_SCRATCH.with(|scratch| {
+            let (xg, hg) = &mut *scratch.borrow_mut();
+            for (e, toks) in dispatch.iter().enumerate() {
+                if toks.is_empty() {
+                    continue;
+                }
+                let ex = &self.experts[e];
+                let n = toks.len();
+                xg.clear();
+                xg.reserve(n * d);
+                for &(ti, _) in toks {
+                    xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
+                }
+                ex.theta.apply_transpose_batch(xg);
+                hg.resize(n * dff, 0.0);
+                // Fast path: a resident expert is served from its decoded
+                // working set — bit-identical arithmetic to the synthesis
+                // path below, with the bitplane decode hoisted out (see
+                // `expertcache` module docs for why this form and not the
+                // fully folded dense matrix).
+                match cache.and_then(|c| c.lookup(e)) {
+                    Some(dec) => dec.gemm(xg, n, hg),
+                    None if self.act_quant => self.substrate.gemm_a8(xg, n, hg),
+                    None => self.substrate.gemm(xg, n, hg),
+                }
+                ex.phi.apply_batch(hg);
+                for (row, &(ti, w)) in toks.iter().enumerate() {
+                    let src = &hg[row * dff..(row + 1) * dff];
+                    let dst = &mut h[ti * dff..(ti + 1) * dff];
+                    for (hv, &ov) in dst.iter_mut().zip(src) {
+                        *hv += w * ov;
+                    }
                 }
             }
-        }
+        });
         loads
     }
 
@@ -249,6 +309,10 @@ impl MoeLayer for ButterflyMoeLayer {
             .map(|e| e.theta.bytes_fp16() + e.phi.bytes_fp16())
             .sum();
         substrate.ceil() as usize + angles
+    }
+
+    fn expert_cache(&self) -> Option<&Arc<ExpertResidencyCache>> {
+        self.cache.as_ref()
     }
 }
 
@@ -495,6 +559,30 @@ mod tests {
         let mut y = vec![0.0f32; 2 * 16];
         l.forward(&x, 2, &mut y);
         assert!(y.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn cached_forward_bit_identical_to_synthesis() {
+        let plain = layer(20);
+        let mut cached = layer(20); // identical weights (same seed)
+        let cache = cached.attach_expert_cache(ExpertCacheConfig::with_budget_bytes(
+            4 * crate::expertcache::decoded_expert_bytes(32, 16),
+        ));
+        cache.prewarm(); // budget holds all 4 experts: every route hits
+        let mut rng = Rng::new(21);
+        for t in [1usize, 3, 7] {
+            let x: Vec<f32> = (0..t * 16).map(|_| rng.normal_f32(1.0)).collect();
+            let mut ha = vec![0.0f32; t * 32];
+            let mut hb = vec![0.0f32; t * 32];
+            let la = plain.experts_forward(&x, t, &mut ha);
+            let lb = cached.experts_forward(&x, t, &mut hb);
+            assert_eq!(ha, hb, "cached path must be bit-identical (t={t})");
+            assert_eq!(la, lb);
+            cache.tick();
+        }
+        let s = cache.snapshot();
+        assert!(s.hits > 0, "prewarmed experts must serve hits");
+        assert!(s.resident_bytes <= s.budget_bytes);
     }
 
     #[test]

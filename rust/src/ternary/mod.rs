@@ -152,6 +152,21 @@ impl BitplaneTernary {
         (self.plus.len() + self.minus.len()) * 8 + 4
     }
 
+    /// 64-column words per row (the unit of the zero-skip in [`Self::gemv`]).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Row `r`'s (plus, minus) bitplane words — what
+    /// `expertcache::DecodedExpert` expands into its resident dense form.
+    pub fn row_planes(&self, r: usize) -> (&[u64], &[u64]) {
+        let wpr = self.words_per_row;
+        (
+            &self.plus[r * wpr..(r + 1) * wpr],
+            &self.minus[r * wpr..(r + 1) * wpr],
+        )
+    }
+
     /// y = gamma * Q x.
     ///
     /// Optimized path (§Perf iteration 1): branchless sign expansion —

@@ -1,0 +1,180 @@
+//! Expert-residency cache integration:
+//!
+//! * bit-parity: cached vs synthesized `experts_forward` produce
+//!   *identical* outputs across budgets and admission/eviction churn,
+//! * the hard byte-budget invariant (resident bytes never exceed it),
+//! * memmodel closed forms pinned against actual layer bytes at the
+//!   paper shape (ButterflyMoE, StandardMoe, and the resident working
+//!   set),
+//! * the cached serving path end-to-end: identical token streams, cache
+//!   gauge in metrics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use butterfly_moe::coordinator::{
+    collect_stream, warm, Coordinator, GenerateRequest, NativeMoeBackend, SchedulerConfig,
+};
+use butterfly_moe::expertcache::{
+    decoded_expert_bytes, CacheStatsSnapshot, DecodedExpert, ExpertCacheConfig,
+};
+use butterfly_moe::memmodel::{self, LayerShape, Method};
+use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer, StandardMoeLayer};
+use butterfly_moe::util::Rng;
+
+const D: usize = 64;
+const DFF: usize = 128;
+const E: usize = 8;
+
+fn layer(seed: u64) -> ButterflyMoeLayer {
+    let mut rng = Rng::new(seed);
+    ButterflyMoeLayer::random(D, DFF, E, 2, None, &mut rng)
+}
+
+/// Replace the gate with one-hot rows so tests can steer routing
+/// deterministically: a token with `x[hot] = 4, x[warm] = 2` routes
+/// top-2 to exactly `{hot, warm}`.
+fn steer_gate(l: &mut ButterflyMoeLayer) {
+    let (e, d) = (l.gate.w.shape[0], l.gate.w.shape[1]);
+    l.gate.w.data.fill(0.0);
+    for i in 0..e {
+        l.gate.w.data[i * d + i] = 4.0;
+    }
+}
+
+fn steering_token(hot: usize, warm2: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; D];
+    x[hot] = 4.0;
+    x[warm2] = 2.0;
+    x
+}
+
+#[test]
+fn cached_forward_bit_identical_across_budgets_and_churn() {
+    let entry = decoded_expert_bytes(DFF, D);
+    for budget_experts in [0usize, 1, 3, E] {
+        let mut plain = layer(11);
+        let mut cached = layer(11); // identical weights (same seed)
+        steer_gate(&mut plain);
+        steer_gate(&mut cached);
+        let cache = cached.attach_expert_cache(ExpertCacheConfig {
+            ewma_alpha: 0.5,
+            min_resident_ticks: 1,
+            max_admissions_per_tick: 4,
+            ..ExpertCacheConfig::with_budget_bytes(budget_experts * entry)
+        });
+        let mut rng = Rng::new(99);
+        for round in 0..40usize {
+            // phase 1 keeps experts {1,2} hot, phase 2 shifts to {5,6}:
+            // at small budgets this forces admission churn and
+            // replacement evictions while parity must hold bit-for-bit
+            let (hot, warm2) = if round < 20 { (1, 2) } else { (5, 6) };
+            let t = 1 + round % 4;
+            let mut x = steering_token(hot, warm2);
+            for _ in 1..t {
+                x.extend((0..D).map(|_| rng.normal_f32(1.0)));
+            }
+            let mut ha = vec![0.0f32; t * DFF];
+            let mut hb = vec![0.0f32; t * DFF];
+            let la = plain.experts_forward(&x, t, &mut ha);
+            let lb = cached.experts_forward(&x, t, &mut hb);
+            assert_eq!(ha, hb, "budget={budget_experts} round={round}");
+            assert_eq!(la, lb, "loads must agree");
+            cache.tick();
+            let s = cache.snapshot();
+            assert!(
+                s.resident_bytes <= budget_experts * entry,
+                "budget exceeded: {} > {}",
+                s.resident_bytes,
+                budget_experts * entry
+            );
+            assert_eq!(s.resident_bytes, s.resident_experts * entry);
+        }
+        let s = cache.snapshot();
+        if budget_experts == 0 {
+            assert!(!s.enabled);
+            assert_eq!(s.hits + s.misses, 0, "disabled cache must record nothing");
+            assert_eq!(s.resident_bytes, 0);
+        } else {
+            assert!(s.hits > 0, "budget {budget_experts}: no hits");
+            assert!(s.materializations > 0);
+        }
+        if budget_experts == 1 {
+            assert!(s.evictions > 0, "hot-set shift must churn a 1-expert budget");
+        }
+    }
+}
+
+#[test]
+fn memmodel_closed_forms_pin_actual_layer_bytes() {
+    let s = LayerShape::paper();
+    let mut rng = Rng::new(3);
+    // ButterflyMoE at the paper shape: Prop. 1 vs packed reality
+    // (difference is only the substrate's byte-granularity ceil)
+    let bf = ButterflyMoeLayer::random(512, 2048, 4, 2, None, &mut rng);
+    let predicted = memmodel::butterfly_bytes(4, s);
+    let actual = bf.expert_bytes() as f64;
+    assert!((actual - predicted).abs() < 1.0, "{actual} vs {predicted}");
+    // StandardMoe: exact
+    let st = StandardMoeLayer::random(512, 2048, 2, 1, &mut rng);
+    assert_eq!(st.expert_bytes() as f64, Method::StandardMoe.bytes(2, s));
+    // resident working-set closed form == actually materialized bytes
+    let dec = DecodedExpert::materialize(&bf.substrate);
+    assert_eq!(dec.nbytes() as f64, memmodel::resident_expert_bytes(s));
+    assert_eq!(dec.nbytes(), decoded_expert_bytes(2048, 512));
+    // attaching a cache never changes expert-identity accounting
+    let mut rng2 = Rng::new(3);
+    let mut bf2 = ButterflyMoeLayer::random(512, 2048, 4, 2, None, &mut rng2);
+    let before = bf2.expert_bytes();
+    bf2.attach_expert_cache(ExpertCacheConfig::with_budget_mb(16.0));
+    assert_eq!(bf2.expert_bytes(), before);
+}
+
+#[test]
+fn fractional_budget_rounds_down_and_is_never_exceeded() {
+    let entry = decoded_expert_bytes(DFF, D);
+    let mut l = layer(21);
+    let budget = entry * 5 / 2; // room for 2.5 experts -> 2 resident max
+    let cache = l.attach_expert_cache(ExpertCacheConfig::with_budget_bytes(budget));
+    assert_eq!(cache.capacity_experts(), 2);
+    cache.prewarm();
+    let s = cache.snapshot();
+    assert_eq!(s.resident_experts, 2);
+    assert!(s.resident_bytes <= cache.budget_bytes());
+}
+
+#[test]
+fn cached_serving_sessions_match_uncached_bitwise() {
+    let run = |cache_mb: f64| {
+        let mut rng = Rng::new(7);
+        let mut l = ButterflyMoeLayer::random(D, 256, E, 2, None, &mut rng);
+        let cache = (cache_mb > 0.0)
+            .then(|| l.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
+        let backend = Arc::new(NativeMoeBackend::new(Arc::new(l), 512, 32, 8));
+        warm(backend.as_ref()).unwrap();
+        let coord = Coordinator::start(backend, SchedulerConfig::new(8, Duration::from_millis(1)));
+        let rxs: Vec<_> = (0..6)
+            .map(|i| coord.submit(GenerateRequest::greedy(vec![(i * 31 % 512) as i32, 5, 9], 12)))
+            .collect();
+        let toks: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| collect_stream(&rx, Duration::from_secs(30)).unwrap().tokens)
+            .collect();
+        let snap = coord.metrics.snapshot();
+        coord.shutdown();
+        let cache_snap: Option<CacheStatsSnapshot> = cache.map(|c| c.snapshot());
+        (toks, snap, cache_snap)
+    };
+    let (toks_plain, snap_plain, no_cache) = run(0.0);
+    assert!(no_cache.is_none());
+    assert!(snap_plain.cache.is_none());
+    // 8 MB budget holds every expert at this shape: all dispatches hit
+    let (toks_cached, snap_cached, cache_snap) = run(8.0);
+    assert_eq!(toks_plain, toks_cached, "cached serving must decode identical tokens");
+    let gauge = snap_cached.cache.expect("engine loop must publish the cache gauge");
+    assert!(gauge.enabled);
+    let cs = cache_snap.unwrap();
+    assert!(cs.hits > 0, "prewarmed cache must serve hits");
+    assert_eq!(cs.resident_experts, E, "budget holds all experts");
+    assert!(cs.resident_bytes <= cs.budget_bytes);
+}
