@@ -12,8 +12,10 @@
 //!     model, per device).
 //!
 //! Run: `cargo run --release --example edge_deployment --
-//!       [--experts 256] [--expert-cache-mb 16]`
-//! (accepts and ignores `--native`: this example is always native)
+//!       [--experts 256] [--expert-cache-mb 16] [--workers 4]`
+//! (accepts and ignores `--native`: this example is always native;
+//! `--workers 0`/default = all cores, `--workers 1` = sequential —
+//! outputs are bit-identical either way)
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -60,6 +62,10 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0xED6E);
     let sw = Stopwatch::start();
     let mut layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
+    let workers =
+        butterfly_moe::parallel::resolve_workers(args.flag_parse("workers")?.unwrap_or(0));
+    layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
+    println!("  hot-path workers: {workers} (outputs are worker-count invariant)");
     let cache = (cache_mb > 0.0)
         .then(|| layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
     let layer = Arc::new(layer);

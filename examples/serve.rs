@@ -9,9 +9,11 @@
 //!
 //! Run: `cargo run --release --example serve -- [--config tiny]
 //!       [--clients 8] [--sessions 4] [--max-batch 16] [--native]
-//!       [--expert-cache-mb 8]`
+//!       [--expert-cache-mb 8] [--workers 4]`
 //! (`--native` serves the pure-rust MoE backend; no artifacts needed.
-//! `--expert-cache-mb` attaches the expert-residency cache to it.)
+//! `--expert-cache-mb` attaches the expert-residency cache to it and
+//! `--workers` sets its hot-path parallelism — 0/default = all cores;
+//! decoded streams are identical for every worker count.)
 
 use std::path::Path;
 use std::sync::Arc;
@@ -36,6 +38,11 @@ fn main() -> anyhow::Result<()> {
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         let mut rng = Rng::new(0xBE);
         let mut layer = ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
+        let workers = butterfly_moe::parallel::resolve_workers(
+            args.flag_parse("workers")?.unwrap_or(0),
+        );
+        layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
+        println!("hot-path workers: {workers} (token streams are worker-count invariant)");
         let cache_mb: f64 = args.flag_parse("expert-cache-mb")?.unwrap_or(0.0);
         if cache_mb > 0.0 {
             let cache = layer.attach_expert_cache(

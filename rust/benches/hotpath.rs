@@ -7,12 +7,21 @@
 //!   * butterfly apply: by dimension and depth
 //!   * top-k gate routing
 //!   * end-to-end expert mixture (tokens/s)
+//!   * expert-parallel scaling: full-forward tokens/s at workers
+//!     {1, 2, 4, 8} (CSV + JSON — the `--workers` dial, bit-identical
+//!     outputs at every point)
 //!
 //! Run: `cargo bench --bench hotpath` — results feed EXPERIMENTS.md §Perf.
+//! `cargo bench --bench hotpath -- smoke` (or BMOE_BENCH_SMOKE=1) runs
+//! only a tiny 2-worker scaling check and fails unless parallel
+//! tokens/s ≥ sequential — the CI gate.
+
+use std::sync::Arc;
 
 use butterfly_moe::bench::{black_box, Bencher, Table};
 use butterfly_moe::butterfly::Butterfly;
 use butterfly_moe::moe::{ButterflyMoeLayer, GateNetwork, MoeLayer, StandardMoeLayer};
+use butterfly_moe::parallel::WorkerPool;
 use butterfly_moe::quant::ternary_quantize;
 use butterfly_moe::tensor::Tensor;
 use butterfly_moe::ternary::{BitplaneTernary, PackedTernary};
@@ -22,7 +31,61 @@ struct BenchProxy {
     median: f64,
 }
 
+/// Median full-forward tokens/s of a fresh seeded layer at `workers`
+/// threads (same seed ⇒ identical weights across points, so the curve
+/// varies only the schedule).
+fn forward_tokens_per_sec(
+    bencher: &Bencher,
+    workers: usize,
+    d: usize,
+    dff: usize,
+    experts: usize,
+    batch: usize,
+) -> f64 {
+    let mut rng = Rng::new(0x5CA1E);
+    let mut layer = ButterflyMoeLayer::random(d, dff, experts, 2, None, &mut rng);
+    if workers > 1 {
+        layer.attach_worker_pool(Arc::new(WorkerPool::new(workers)));
+    }
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32(1.0)).collect();
+    let mut y = vec![0.0f32; batch * d];
+    let r = bencher.run(&format!("forward {workers}w"), || {
+        layer.forward(&x, batch, &mut y);
+        black_box(&y);
+    });
+    r.throughput(batch as f64)
+}
+
+/// CI smoke gate: tiny shape, 2 workers, quick samples; exits nonzero
+/// unless the parallel schedule at least matches the sequential one.
+fn smoke() -> anyhow::Result<()> {
+    let bencher = Bencher::quick();
+    let (d, dff, e, batch) = (256usize, 1024usize, 8usize, 32usize);
+    // best-of-3 per point to damp scheduler noise on small CI boxes
+    let best = |workers: usize| {
+        (0..3)
+            .map(|_| forward_tokens_per_sec(&bencher, workers, d, dff, e, batch))
+            .fold(0.0f64, f64::max)
+    };
+    let seq = best(1);
+    let par = best(2);
+    println!(
+        "[smoke] sequential {seq:.0} tok/s | 2 workers {par:.0} tok/s ({:.2}x)",
+        par / seq
+    );
+    anyhow::ensure!(
+        par >= seq,
+        "parallel ({par:.0} tok/s) must be >= sequential ({seq:.0} tok/s)"
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    if std::env::args().any(|a| a == "smoke" || a == "--smoke")
+        || std::env::var("BMOE_BENCH_SMOKE").is_ok_and(|v| v == "1")
+    {
+        return smoke();
+    }
     let bencher = Bencher::default();
     let mut rng = Rng::new(0x407);
     let out = std::path::Path::new("runs/tables");
@@ -177,5 +240,42 @@ fn main() -> anyhow::Result<()> {
         "\ngate overhead: {:.1}% of the butterfly mixture",
         100.0 * r_gate.median_secs() / r_bf.median_secs()
     );
+
+    // ------------------------------------------------------------------
+    // expert-parallel scaling: full forward (mixture + GELU + shared
+    // down projection) tokens/s vs worker count, paper layer shape.
+    // Outputs are bit-identical at every point (tests/determinism.rs).
+    // ------------------------------------------------------------------
+    let (sd, sdff, sexp, sbatch) = (512usize, 2048usize, 8usize, 16usize);
+    let mut t = Table::new(
+        "Expert-parallel scaling (d=512, d_ff=2048, 8 experts top-2, batch 16)",
+        &["Workers", "tokens/s", "Speedup", "Efficiency"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut seq_tps = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let tps = forward_tokens_per_sec(&bencher, workers, sd, sdff, sexp, sbatch);
+        if workers == 1 {
+            seq_tps = tps;
+        }
+        let speedup = tps / seq_tps.max(1e-9);
+        t.row(&[
+            workers.to_string(),
+            format!("{tps:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", 100.0 * speedup / workers as f64),
+        ]);
+        json_rows.push(format!(
+            "  {{\"workers\": {workers}, \"tokens_per_sec\": {tps:.1}, \
+             \"speedup\": {speedup:.3}}}"
+        ));
+    }
+    t.print();
+    t.write_csv(&out.join("hotpath_scaling.csv"))?;
+    std::fs::write(
+        out.join("hotpath_scaling.json"),
+        format!("[\n{}\n]\n", json_rows.join(",\n")),
+    )?;
+    println!("\nwrote runs/tables/hotpath_scaling.csv and hotpath_scaling.json");
     Ok(())
 }

@@ -22,6 +22,7 @@ use butterfly_moe::coordinator::{
     SchedulerConfig,
 };
 use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::parallel::WorkerPool;
 use butterfly_moe::util::{stats, Rng};
 
 const SHORT_TOKENS: usize = 4;
@@ -161,14 +162,97 @@ fn bench_backend(
     Ok(())
 }
 
+/// Closed-loop serving throughput vs worker count: same seeded native
+/// backend at `--workers` ∈ {1, 2, 4, 8}, a fixed 48-session × 16-token
+/// greedy workload, sustained tokens/s measured end-to-end through the
+/// coordinator.  Decoded streams are asserted identical across points —
+/// the scaling dial must never change output bits.
+fn bench_worker_scaling(out: &Path) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Serving scaling (native-moe d=256 d_ff=1024, 8 experts top-2): tokens/s vs --workers",
+        &["Workers", "tok/s", "Speedup", "Session p50 ms"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut base_tps = 0.0f64;
+    let mut reference_streams: Option<Vec<Vec<i32>>> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let mut layer_rng = Rng::new(7);
+        let mut layer = ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut layer_rng);
+        layer.attach_worker_pool(Arc::new(WorkerPool::new(workers)));
+        let backend: Arc<dyn Backend> =
+            Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, 16));
+        butterfly_moe::coordinator::warm(backend.as_ref())?;
+        let coord =
+            Coordinator::start(backend, SchedulerConfig::new(16, Duration::from_millis(2)));
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..48)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..8).map(|j| ((i * 89 + j * 13) % 512) as i32).collect();
+                coord.submit(GenerateRequest::greedy(prompt, 16))
+            })
+            .collect();
+        let mut tokens = 0u64;
+        let mut e2e = Vec::new();
+        let mut streams = Vec::new();
+        for rx in rxs {
+            let c = collect_stream(&rx, Duration::from_secs(120))?;
+            tokens += c.tokens.len() as u64;
+            e2e.push(c.total.as_secs_f64());
+            streams.push(c.tokens);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        match &reference_streams {
+            None => reference_streams = Some(streams),
+            Some(want) => anyhow::ensure!(
+                &streams == want,
+                "workers={workers}: decoded streams diverged from workers=1"
+            ),
+        }
+        let tps = tokens as f64 / wall;
+        if workers == 1 {
+            base_tps = tps;
+        }
+        t.row(&[
+            workers.to_string(),
+            format!("{tps:.0}"),
+            format!("{:.2}x", tps / base_tps.max(1e-9)),
+            format!("{:.2}", 1e3 * stats::percentile(&e2e, 50.0)),
+        ]);
+        json_rows.push(format!(
+            "  {{\"workers\": {workers}, \"tokens_per_sec\": {tps:.1}, \
+             \"speedup\": {:.3}}}",
+            tps / base_tps.max(1e-9)
+        ));
+    }
+    t.print();
+    t.write_csv(&out.join("serving_scaling.csv"))?;
+    std::fs::write(
+        out.join("serving_scaling.json"),
+        format!("[\n{}\n]\n", json_rows.join(",\n")),
+    )?;
+    println!("wrote runs/tables/serving_scaling.csv and serving_scaling.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let out = std::path::Path::new("runs/tables");
     std::fs::create_dir_all(out)?;
     let mut rng = Rng::new(0x5EE);
 
-    // native edge backend: always available
+    // tokens/s-vs-workers scaling curve for the native backend
+    bench_worker_scaling(out)?;
+
+    // native edge backend: always available; hot path parallel by
+    // default (BMOE_WORKERS env overrides, streams identical regardless)
     let mut layer_rng = Rng::new(7);
-    let layer = Arc::new(ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut layer_rng));
+    let layer = {
+        let mut l = ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut layer_rng);
+        l.attach_worker_pool(Arc::new(WorkerPool::new(
+            butterfly_moe::parallel::resolve_workers(0),
+        )));
+        Arc::new(l)
+    };
     bench_backend(
         "native-moe",
         || Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 16)),

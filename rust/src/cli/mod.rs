@@ -112,6 +112,10 @@ COMMON FLAGS:
                         disables it (pure sub-linear mode)
   --no-warmup           serving: skip the pre-serve warmup pass (bucket
                         compilation + expert-cache pre-materialization)
+  --workers N           serving (--native) / examples / benches: worker
+                        threads for the MoE hot path; default 0 = auto
+                        (BMOE_WORKERS env var, else all cores).  Decoded
+                        token streams are bit-identical for every N
   --max-new-tokens N    bench-client: token budget requested per session
   --temperature F       bench-client: sampling temperature (0 = greedy)
   --top-k N             bench-client: top-k truncation (0 = full vocab)

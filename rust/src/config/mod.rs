@@ -127,6 +127,11 @@ pub struct RuntimeConfig {
     /// backend (`--expert-cache-mb`); 0 disables the cache — pure
     /// sub-linear mode (see `expertcache`)
     pub expert_cache_mb: f64,
+    /// worker threads for the native MoE hot path (`--workers`); 0 =
+    /// auto (the `BMOE_WORKERS` env var, else every available core —
+    /// see `parallel::resolve_workers`).  Decoded streams are
+    /// bit-identical for every value.
+    pub workers: usize,
     pub port: u16,
     pub checkpoint_every: usize,
     pub out_dir: String,
@@ -147,6 +152,7 @@ impl Default for RuntimeConfig {
             temperature: 0.0,
             top_k: 0,
             expert_cache_mb: 0.0,
+            workers: 0,
             port: 7070,
             checkpoint_every: 100,
             out_dir: "runs".into(),
@@ -172,6 +178,7 @@ impl RuntimeConfig {
             "expert_cache_mb" => {
                 self.expert_cache_mb = value.parse().context("expert_cache_mb")?
             }
+            "workers" => self.workers = value.parse().context("workers")?,
             "port" => self.port = value.parse().context("port")?,
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
@@ -268,11 +275,14 @@ mod tests {
         r.set("temperature", "0.7").unwrap();
         r.set("top_k", "40").unwrap();
         r.set("expert_cache_mb", "24.5").unwrap();
+        r.set("workers", "4").unwrap();
         assert_eq!(r.max_new_tokens, 64);
         assert_eq!(r.temperature, 0.7);
         assert_eq!(r.top_k, 40);
         assert_eq!(r.expert_cache_mb, 24.5);
+        assert_eq!(r.workers, 4);
         assert!(r.set("expert_cache_mb", "lots").is_err());
+        assert!(r.set("workers", "many").is_err());
     }
 
     #[test]

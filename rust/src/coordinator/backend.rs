@@ -350,7 +350,10 @@ impl Backend for NativeMoeBackend {
         self.vocab
     }
     fn name(&self) -> String {
-        format!("native-moe:{}exp", self.layer.n_experts())
+        // advertise the hot path's parallelism (1w = sequential); the
+        // decoded streams are worker-count invariant either way
+        let workers = self.layer.worker_pool().map_or(1, |p| p.threads());
+        format!("native-moe:{}exp:{}w", self.layer.n_experts(), workers)
     }
 
     fn tick_caches(&self) {
@@ -456,6 +459,25 @@ mod tests {
         // same prompts in small batches must agree (no cross-seq state)
         let solo = greedy_next(&b, &prompts[..1]).unwrap();
         assert_eq!(next[0], solo[0]);
+    }
+
+    #[test]
+    fn native_backend_parallel_step_matches_sequential_bitwise() {
+        // same weights, pooled vs sequential layer: logits (and thus
+        // every decoded token) must agree bit-for-bit
+        let seq = native();
+        let mut rng = Rng::new(1);
+        let mut layer = ButterflyMoeLayer::random(16, 32, 4, 2, None, &mut rng);
+        layer.attach_worker_pool(Arc::new(crate::parallel::WorkerPool::new(4)));
+        let par = NativeMoeBackend::new(Arc::new(layer), 64, 8, 4);
+        assert!(par.name().ends_with(":4w"), "{}", par.name());
+        assert!(seq.name().ends_with(":1w"), "{}", seq.name());
+        let prompts = [vec![1, 2, 3], vec![9, 9], vec![40, 41, 42, 43]];
+        let o1 = seq.step(&mut batch_of(&prompts)).unwrap();
+        let o2 = par.step(&mut batch_of(&prompts)).unwrap();
+        for (a, b) in o1.iter().zip(&o2) {
+            assert_eq!(a.logits, b.logits);
+        }
     }
 
     #[test]

@@ -570,15 +570,8 @@ impl ExpertResidencyCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::ternary_quantize;
-    use crate::tensor::Tensor;
+    use crate::testutil::random_substrate as substrate;
     use crate::util::Rng;
-
-    fn substrate(rows: usize, cols: usize, seed: u64) -> Arc<BitplaneTernary> {
-        let mut rng = Rng::new(seed);
-        let t = Tensor::rand_normal(&[rows, cols], 1.0, &mut rng);
-        Arc::new(BitplaneTernary::from_quant(&ternary_quantize(&t)))
-    }
 
     fn cache(
         sub: &Arc<BitplaneTernary>,

@@ -50,9 +50,12 @@ pub mod expertcache;
 pub mod jsonx;
 pub mod memmodel;
 pub mod moe;
+pub mod parallel;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod ternary;
+#[cfg(any(test, feature = "testutil"))]
+pub mod testutil;
 pub mod train;
 pub mod util;

@@ -37,6 +37,7 @@ fn main() -> Result<()> {
         ("temperature", args.flag("temperature")),
         ("top_k", args.flag("top-k")),
         ("expert_cache_mb", args.flag("expert-cache-mb")),
+        ("workers", args.flag("workers")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -224,6 +225,9 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         let mut rng = butterfly_moe::util::Rng::new(rt.seed);
         let mut layer =
             butterfly_moe::moe::ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
+        let workers = butterfly_moe::parallel::resolve_workers(rt.workers);
+        layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
+        eprintln!("[serve] workers: {workers} (decoded streams are worker-count invariant)");
         if rt.expert_cache_mb > 0.0 {
             let cache =
                 layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(rt.expert_cache_mb));
@@ -246,6 +250,9 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     } else {
         if rt.expert_cache_mb > 0.0 {
             eprintln!("[serve] note: --expert-cache-mb applies to the --native backend only");
+        }
+        if rt.workers > 0 {
+            eprintln!("[serve] note: --workers applies to the --native backend only");
         }
         let ckpt = args.flag("from").map(Path::new);
         let (backend, _join) =

@@ -15,6 +15,13 @@
 //! steps skip the bitplane expansion.  These bytes are a *deployment*
 //! memory↔throughput trade and are **not** expert-identity storage —
 //! Table 1 and `MoeLayer::expert_bytes` are unchanged by residency.
+//!
+//! The same split applies to the expert-parallel worker pool
+//! (`crate::parallel`, the `--workers` dial): each dispatch block's
+//! gather scratch (`xg`/`hg`, ≈ `t·top_k·(d_model + d_ff)·4` B across
+//! all blocks, retained between steps) is **working-set** memory too —
+//! it scales with batch size and worker schedule, not with expert
+//! count, and never counts toward Table-1 identity bytes.
 //! [`cached_butterfly_bytes`] is the Fig.-3 companion curve: identity
 //! bytes (Prop. 1) plus `R` resident working sets, interpolating between
 //! the pure sub-linear point (`R = 0`, the paper's 150× headline) and a

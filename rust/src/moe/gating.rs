@@ -195,4 +195,65 @@ mod tests {
         assert!(balance_penalty(&[0.25; 4]) < 1e-12);
         assert!(balance_penalty(&[1.0, 0.0, 0.0, 0.0]) > 0.5);
     }
+
+    /// Property-style randomized check of the gating invariant: across
+    /// random shapes, top-k values and inputs, `dispatch` assigns every
+    /// token to exactly `top_k` *distinct* in-range experts whose
+    /// renormalized weights sum to ~1, and the per-expert load vector is
+    /// exactly the dispatch histogram over `k·t`.
+    #[test]
+    fn dispatch_invariants_hold_for_random_inputs() {
+        for trial in 0..60u64 {
+            let mut meta = Rng::new(0xD15 + trial);
+            let e = 2 + meta.below(14);
+            let k = 1 + meta.below(e.min(4));
+            let d = [8usize, 16, 32][meta.below(3)];
+            let t = 1 + meta.below(24);
+            let g = gate(e, d, k, 7000 + trial);
+            let x: Vec<f32> = (0..t * d).map(|_| meta.normal_f32(1.5)).collect();
+            let (routes, loads) = g.route_batch(&x, t);
+            let disp = GateNetwork::dispatch(&routes, e);
+            let ctx = format!("trial {trial}: e={e} k={k} d={d} t={t}");
+
+            // every token appears in exactly k experts' lists, no expert
+            // twice for the same token, indices in range by construction
+            let mut per_token_count = vec![0usize; t];
+            let mut per_token_weight = vec![0.0f32; t];
+            for toks in &disp {
+                let mut seen_this_expert = std::collections::HashSet::new();
+                for &(ti, w) in toks {
+                    assert!(ti < t, "{ctx}: token index out of range");
+                    assert!(seen_this_expert.insert(ti), "{ctx}: token duplicated");
+                    assert!(w > 0.0 && w <= 1.0 + 1e-6, "{ctx}: weight {w}");
+                    per_token_count[ti] += 1;
+                    per_token_weight[ti] += w;
+                }
+            }
+            for ti in 0..t {
+                assert_eq!(per_token_count[ti], k, "{ctx}: token {ti} expert count");
+                assert!(
+                    (per_token_weight[ti] - 1.0).abs() < 1e-4,
+                    "{ctx}: token {ti} weights sum {}",
+                    per_token_weight[ti]
+                );
+            }
+            // routes themselves carry distinct expert ids per token
+            for r in &routes {
+                let mut ids: Vec<usize> = r.experts.iter().map(|&(ei, _)| ei).collect();
+                assert!(ids.iter().all(|&ei| ei < e), "{ctx}: expert id range");
+                ids.sort_unstable();
+                ids.dedup();
+                assert_eq!(ids.len(), k, "{ctx}: duplicate expert for one token");
+            }
+            // loads are the dispatch histogram over k*t, summing to 1
+            let denom = (k * t) as f64;
+            for (ei, toks) in disp.iter().enumerate() {
+                assert!(
+                    (loads[ei] - toks.len() as f64 / denom).abs() < 1e-12,
+                    "{ctx}: load[{ei}]"
+                );
+            }
+            assert!((loads.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{ctx}");
+        }
+    }
 }

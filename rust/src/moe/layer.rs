@@ -6,8 +6,7 @@
 //! exactly (same gating, same GELU, same shared down projection) so the
 //! native engine is numerically parity-testable against the AOT graphs.
 
-use std::cell::RefCell;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -15,6 +14,7 @@ use super::gating::GateNetwork;
 use super::gelu;
 use crate::butterfly::Butterfly;
 use crate::expertcache::{ExpertCacheConfig, ExpertResidencyCache};
+use crate::parallel::{chunk_ranges, DisjointSliceMut, WorkerPool};
 use crate::quant::{ternary_quantize, TernaryQuant};
 use crate::tensor::store::TensorStore;
 use crate::tensor::Tensor;
@@ -32,6 +32,14 @@ pub trait MoeLayer: Send + Sync {
     fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64>;
 
     /// Full FFN block: experts -> GELU -> shared down projection.
+    ///
+    /// With a [`worker_pool`](Self::worker_pool) attached, the dense down
+    /// projection row-shards across the pool: every `y[i*d + r]` is
+    /// computed by exactly one task (a full `dot_f32` over the token's
+    /// activations), so the result is bit-identical to the sequential
+    /// loop for any worker count — no accumulation crosses a task
+    /// boundary.  Row-sharding (over `d`, not tokens) keeps single-token
+    /// decode steps parallel too.
     fn forward(&self, x: &[f32], t: usize, y: &mut [f32]) -> Vec<f64> {
         let (dff, d) = (self.d_ff(), self.d_model());
         let mut h = vec![0.0f32; t * dff];
@@ -41,11 +49,34 @@ pub trait MoeLayer: Send + Sync {
         }
         let wd = self.w_down();
         assert_eq!(y.len(), t * d);
-        for i in 0..t {
-            let hi = &h[i * dff..(i + 1) * dff];
-            let yi = &mut y[i * d..(i + 1) * d];
-            for r in 0..d {
-                yi[r] = crate::util::dot_f32(wd.row(r), hi);
+        match self.worker_pool() {
+            Some(pool) if pool.threads() > 1 => {
+                let ranges = chunk_ranges(d, pool.threads() * 4);
+                let ysh = DisjointSliceMut::new(y);
+                let h = &h;
+                pool.run(ranges.len(), &|w| {
+                    let (lo, hi) = ranges[w];
+                    for r in lo..hi {
+                        let wr = wd.row(r);
+                        for i in 0..t {
+                            let hi_row = &h[i * dff..(i + 1) * dff];
+                            // SAFETY: row ranges are disjoint across
+                            // tasks, so index i*d + r is written once.
+                            unsafe {
+                                *ysh.index_mut(i * d + r) = crate::util::dot_f32(wr, hi_row);
+                            }
+                        }
+                    }
+                });
+            }
+            _ => {
+                for i in 0..t {
+                    let hi = &h[i * dff..(i + 1) * dff];
+                    let yi = &mut y[i * d..(i + 1) * d];
+                    for r in 0..d {
+                        yi[r] = crate::util::dot_f32(wd.row(r), hi);
+                    }
+                }
             }
         }
         loads
@@ -69,15 +100,44 @@ pub trait MoeLayer: Send + Sync {
     fn expert_cache(&self) -> Option<&Arc<ExpertResidencyCache>> {
         None
     }
+
+    /// Worker pool the hot path shards across, if any (`--workers`).
+    /// `None` or a 1-thread pool is the sequential path; outputs are
+    /// bit-identical either way (see [`crate::parallel`]).
+    fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        None
+    }
 }
 
-thread_local! {
-    /// Reusable gather buffers for the expert-major dispatch loop, so
-    /// steady-state decode does no per-step allocation in the expert
-    /// loop (capacity is retained across calls; per-thread because
-    /// layers are shared `Sync` across the serving stack).
-    static GATHER_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
-        const { RefCell::new((Vec::new(), Vec::new())) };
+/// Per-dispatch-block gather scratch: one expert's contiguous token
+/// block (`xg`: gathered inputs, `hg`: that block's expert outputs).
+///
+/// This replaces the old single thread-local `(xg, hg)` pair: the
+/// deterministic reduction needs every active expert's `hg` alive at
+/// once (phase 2 below re-reads them in ascending expert order), so the
+/// scratch is keyed by dispatch block — strictly finer than per-worker.
+/// The blocks are retained in the layer across calls, so steady-state
+/// decode still does no allocation; they are *working-set* bytes, never
+/// counted in `expert_bytes` (see `memmodel`).
+#[derive(Default)]
+struct ExpertBlock {
+    xg: Vec<f32>,
+    hg: Vec<f32>,
+}
+
+/// Run `task(0..n)` on the pool, or inline when no pool is attached —
+/// the claim order of the inline loop and a 1-thread pool are identical,
+/// so "no pool", `--workers 1`, and `--workers N` all produce the same
+/// bits.
+fn run_on(pool: Option<&WorkerPool>, n: usize, task: &(dyn Fn(usize) + Sync)) {
+    match pool {
+        Some(p) => p.run(n, task),
+        None => {
+            for i in 0..n {
+                task(i);
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -106,6 +166,18 @@ pub struct ButterflyMoeLayer {
     /// Optional residency cache of hot experts' decoded working sets
     /// (see [`crate::expertcache`]); `None` = pure sub-linear mode.
     cache: Option<Arc<ExpertResidencyCache>>,
+    /// Optional worker pool the dispatch loop shards across
+    /// (`--workers`); `None` = sequential.
+    pool: Option<Arc<WorkerPool>>,
+    /// Retained dispatch-block scratch (see [`ExpertBlock`]).  `try_lock`
+    /// on the forward path: a second concurrent forward on the same
+    /// layer falls back to a fresh local set instead of contending.
+    scratch: Mutex<Vec<ExpertBlock>>,
+    /// Test-only fault injection: the dispatch task for this expert
+    /// panics (`"poisoned expert <e>"`) — exercises the pool's
+    /// panic-propagation path from a real decode step.
+    #[cfg(any(test, feature = "testutil"))]
+    pub poison_expert: Option<usize>,
     d_model: usize,
     d_ff: usize,
 }
@@ -132,9 +204,21 @@ impl ButterflyMoeLayer {
             w_down,
             act_quant: false,
             cache: None,
+            pool: None,
+            scratch: Mutex::new(Vec::new()),
+            #[cfg(any(test, feature = "testutil"))]
+            poison_expert: None,
             d_model,
             d_ff,
         }
+    }
+
+    /// Attach a worker pool: `experts_forward` shards its dispatch
+    /// blocks and `forward` row-shards the down projection across it.
+    /// Outputs stay bit-identical to the sequential path for any pool
+    /// size (see [`crate::parallel`] for the sharding contract).
+    pub fn attach_worker_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
     }
 
     /// Attach a byte-budgeted expert-residency cache (replacing any
@@ -239,6 +323,28 @@ impl MoeLayer for ButterflyMoeLayer {
         &self.w_down
     }
 
+    /// Expert-major batched dispatch (§Perf iteration 3), sharded across
+    /// the attached worker pool in two phases:
+    ///
+    /// 1. **Synthesis** (parallel over dispatch blocks): gather each
+    ///    active expert's tokens contiguously, rotate the whole block,
+    ///    run ONE substrate GEMM (weights decoded once per expert, not
+    ///    once per token — or the cache's decoded fast path), rotate
+    ///    back.  Each task owns its [`ExpertBlock`] exclusively.
+    /// 2. **Reduction** (parallel over token-row ranges): the weighted
+    ///    scatter into `h`.
+    ///
+    /// # Determinism invariant (documented + asserted)
+    ///
+    /// *Within* one expert the scattered token rows are disjoint, but
+    /// *across* experts they collide whenever top-k ≥ 2 routes two
+    /// experts to the same token — so float accumulation order into a
+    /// token's row matters.  The reduction therefore shards by **token
+    /// row** (disjoint ranges, `chunk_ranges` asserts exact cover) and,
+    /// inside each row, accumulates experts in **ascending expert
+    /// order** — the exact association of the sequential loop.  Output
+    /// is bit-identical for any worker count; `rust/tests/determinism.rs`
+    /// pins this.
     fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {
         let (d, dff) = (self.d_model, self.d_ff);
         assert_eq!(x.len(), t * d);
@@ -256,46 +362,94 @@ impl MoeLayer for ButterflyMoeLayer {
         if let Some(c) = cache {
             c.observe(&loads);
         }
-        // Expert-major batched dispatch (§Perf iteration 3): gather each
-        // expert's tokens contiguously, rotate the whole block, run ONE
-        // substrate GEMM (weights decoded once per expert, not once per
-        // token), rotate back, weighted scatter — the same HBM locality
-        // schedule as the Pallas BlockSpec (DESIGN.md §3).
-        GATHER_SCRATCH.with(|scratch| {
-            let (xg, hg) = &mut *scratch.borrow_mut();
-            for (e, toks) in dispatch.iter().enumerate() {
-                if toks.is_empty() {
-                    continue;
+        // Active dispatch blocks, ascending expert index (the reduction
+        // below relies on this order).
+        let active: Vec<(usize, &[(usize, f32)])> = dispatch
+            .iter()
+            .enumerate()
+            .filter(|(_, toks)| !toks.is_empty())
+            .map(|(e, toks)| (e, toks.as_slice()))
+            .collect();
+        let mut local_blocks = Vec::new();
+        // Scratch contents are rewritten every call, so a poisoned mutex
+        // (a panicking expert unwound through a prior forward) is safe
+        // to clear; only contention falls back to a fresh local set.
+        let mut guard = match self.scratch.try_lock() {
+            Ok(g) => Some(g),
+            Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Err(std::sync::TryLockError::WouldBlock) => None,
+        };
+        let blocks: &mut Vec<ExpertBlock> = match guard.as_deref_mut() {
+            Some(b) => b,
+            None => &mut local_blocks,
+        };
+        if blocks.len() < active.len() {
+            blocks.resize_with(active.len(), ExpertBlock::default);
+        }
+        let blocks = &mut blocks[..active.len()];
+        let pool = self.pool.as_deref();
+
+        // Phase 1 — synthesis, one task per dispatch block.
+        {
+            let shards = DisjointSliceMut::new(&mut *blocks);
+            let synth = |i: usize| {
+                let (e, toks) = active[i];
+                // SAFETY: task i is the only writer of block i.
+                let block = unsafe { shards.index_mut(i) };
+                #[cfg(any(test, feature = "testutil"))]
+                if self.poison_expert == Some(e) {
+                    panic!("poisoned expert {e}");
                 }
                 let ex = &self.experts[e];
                 let n = toks.len();
-                xg.clear();
-                xg.reserve(n * d);
+                block.xg.clear();
+                block.xg.reserve(n * d);
                 for &(ti, _) in toks {
-                    xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
+                    block.xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
                 }
-                ex.theta.apply_transpose_batch(xg);
-                hg.resize(n * dff, 0.0);
+                ex.theta.apply_transpose_batch(&mut block.xg);
+                block.hg.resize(n * dff, 0.0);
                 // Fast path: a resident expert is served from its decoded
                 // working set — bit-identical arithmetic to the synthesis
                 // path below, with the bitplane decode hoisted out (see
                 // `expertcache` module docs for why this form and not the
                 // fully folded dense matrix).
                 match cache.and_then(|c| c.lookup(e)) {
-                    Some(dec) => dec.gemm(xg, n, hg),
-                    None if self.act_quant => self.substrate.gemm_a8(xg, n, hg),
-                    None => self.substrate.gemm(xg, n, hg),
+                    Some(dec) => dec.gemm(&block.xg, n, &mut block.hg),
+                    None if self.act_quant => self.substrate.gemm_a8(&block.xg, n, &mut block.hg),
+                    None => self.substrate.gemm(&block.xg, n, &mut block.hg),
                 }
-                ex.phi.apply_batch(hg);
-                for (row, &(ti, w)) in toks.iter().enumerate() {
-                    let src = &hg[row * dff..(row + 1) * dff];
-                    let dst = &mut h[ti * dff..(ti + 1) * dff];
-                    for (hv, &ov) in dst.iter_mut().zip(src) {
-                        *hv += w * ov;
+                ex.phi.apply_batch(&mut block.hg);
+            };
+            run_on(pool, active.len(), &synth);
+        }
+
+        // Phase 2 — deterministic reduction: token-row ranges partition
+        // 0..t disjointly; per row, experts accumulate in ascending
+        // order exactly as the sequential loop did.
+        let blocks: &[ExpertBlock] = blocks;
+        let parts = pool.map_or(1, WorkerPool::threads);
+        let ranges = chunk_ranges(t, parts);
+        {
+            let hsh = DisjointSliceMut::new(h);
+            let scatter = |w: usize| {
+                let (lo, hi) = ranges[w];
+                for (block, &(_e, toks)) in blocks.iter().zip(&active) {
+                    for (row, &(ti, wt)) in toks.iter().enumerate() {
+                        if ti < lo || ti >= hi {
+                            continue;
+                        }
+                        let src = &block.hg[row * dff..(row + 1) * dff];
+                        // SAFETY: token ranges are disjoint across tasks.
+                        let dst = unsafe { hsh.slice_mut(ti * dff, dff) };
+                        for (hv, &ov) in dst.iter_mut().zip(src) {
+                            *hv += wt * ov;
+                        }
                     }
                 }
-            }
-        });
+            };
+            run_on(pool, ranges.len(), &scatter);
+        }
         loads
     }
 
@@ -313,6 +467,10 @@ impl MoeLayer for ButterflyMoeLayer {
 
     fn expert_cache(&self) -> Option<&Arc<ExpertResidencyCache>> {
         self.cache.as_ref()
+    }
+
+    fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
     }
 }
 
@@ -449,10 +607,10 @@ impl MoeLayer for DenseFfn {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil;
 
     fn layer(seed: u64) -> ButterflyMoeLayer {
-        let mut rng = Rng::new(seed);
-        ButterflyMoeLayer::random(16, 32, 4, 2, None, &mut rng)
+        testutil::butterfly_layer(16, 32, 4, 2, seed)
     }
 
     #[test]
@@ -583,6 +741,87 @@ mod tests {
         let s = cache.snapshot();
         assert!(s.hits > 0, "prewarmed experts must serve hits");
         assert!(s.resident_bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn parallel_experts_forward_bit_identical_for_any_worker_count() {
+        // larger shape so several experts and tokens are active at once
+        let sequential = testutil::butterfly_layer(32, 64, 8, 2, 40);
+        let x = testutil::normal_vec(9 * 32, 41);
+        let mut want = vec![0.0f32; 9 * 64];
+        let want_loads = sequential.experts_forward(&x, 9, &mut want);
+        for workers in [1usize, 2, 3, 8] {
+            let mut l = testutil::butterfly_layer(32, 64, 8, 2, 40);
+            l.attach_worker_pool(Arc::new(WorkerPool::new(workers)));
+            let mut h = vec![0.0f32; 9 * 64];
+            let loads = l.experts_forward(&x, 9, &mut h);
+            assert_eq!(h, want, "workers={workers}: not bit-identical");
+            assert_eq!(loads, want_loads, "workers={workers}: loads differ");
+        }
+    }
+
+    #[test]
+    fn parallel_full_forward_bit_identical_down_projection_included() {
+        let sequential = testutil::butterfly_layer(32, 64, 8, 2, 42);
+        let x = testutil::normal_vec(5 * 32, 43);
+        let mut want = vec![0.0f32; 5 * 32];
+        sequential.forward(&x, 5, &mut want);
+        for workers in [1usize, 4] {
+            let mut l = testutil::butterfly_layer(32, 64, 8, 2, 42);
+            l.attach_worker_pool(Arc::new(WorkerPool::new(workers)));
+            let mut y = vec![0.0f32; 5 * 32];
+            l.forward(&x, 5, &mut y);
+            assert_eq!(y, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_cached_forward_bit_identical_too() {
+        let plain = layer(30);
+        let mut cached = layer(30);
+        cached.attach_worker_pool(Arc::new(WorkerPool::new(4)));
+        let cache = cached.attach_expert_cache(ExpertCacheConfig::with_budget_bytes(
+            4 * crate::expertcache::decoded_expert_bytes(32, 16),
+        ));
+        cache.prewarm();
+        let x = testutil::normal_vec(6 * 16, 31);
+        let mut ha = vec![0.0f32; 6 * 32];
+        let mut hb = vec![0.0f32; 6 * 32];
+        plain.experts_forward(&x, 6, &mut ha);
+        cached.experts_forward(&x, 6, &mut hb);
+        assert_eq!(ha, hb, "parallel + cached must still be bit-identical");
+        assert!(cache.snapshot().hits > 0);
+    }
+
+    #[test]
+    fn poisoned_expert_fails_forward_with_payload_pool_survives() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut l = testutil::butterfly_layer(32, 64, 8, 2, 50);
+        l.attach_worker_pool(pool.clone());
+        let x = testutil::normal_vec(4 * 32, 51);
+        // poison an expert that this batch actually routes to
+        let loads = {
+            let mut h = vec![0.0f32; 4 * 64];
+            l.experts_forward(&x, 4, &mut h)
+        };
+        let hot = loads.iter().position(|&v| v > 0.0).unwrap();
+        l.poison_expert = Some(hot);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let mut h = vec![0.0f32; 4 * 64];
+            l.experts_forward(&x, 4, &mut h);
+        }))
+        .expect_err("poisoned expert must fail the step");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("poisoned expert"), "payload: {msg}");
+        // the condvar protocol recovered: same pool serves the next step
+        l.poison_expert = None;
+        let mut h = vec![0.0f32; 4 * 64];
+        l.experts_forward(&x, 4, &mut h);
+        assert!(h.iter().any(|&v| v != 0.0));
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! Expert-parallel worker pool for the MoE hot path.
+//!
+//! The offline vendor set has no `rayon` (and no `crossbeam`), so this is
+//! a dependency-free persistent pool: threads are spawned **once** at
+//! construction and parked on a mutex/condvar work queue between decode
+//! steps — no per-step spawn cost, which matters when a step is a few
+//! hundred microseconds.  [`WorkerPool::run`] executes an indexed task
+//! set `0..n` across the pool (the submitting thread participates, so a
+//! 1-thread pool is exactly the sequential loop) and returns when every
+//! task has finished.
+//!
+//! # Determinism contract
+//!
+//! The pool itself guarantees only that every index runs exactly once;
+//! *bitwise determinism of the MoE forward is a property of how the hot
+//! path shards work*, documented here because every caller relies on it:
+//!
+//! * **Disjoint writes, no reductions across tasks.**  Callers shard
+//!   output so that each element is written by exactly one task
+//!   ([`DisjointSliceMut`]).  Work whose result depends on float
+//!   accumulation *order* (the scatter of expert outputs into shared
+//!   token rows — experts may share a token under top-k ≥ 2 routing) is
+//!   never split across tasks along the accumulation axis: the layer
+//!   runs a separate reduction phase sharded by **token row**, inside
+//!   which each row accumulates its experts in ascending expert order —
+//!   the exact association of the sequential loop.  See
+//!   `moe::layer::ButterflyMoeLayer::experts_forward`.
+//! * Consequently the forward pass is bit-identical for **any** worker
+//!   count, including 1 — asserted by `rust/tests/determinism.rs`.
+//!
+//! # Panic behaviour
+//!
+//! A panicking task must fail the decode step, not hang it.  Workers run
+//! tasks under `catch_unwind`; the first panic payload is stored, all
+//! *unclaimed* tasks of the batch are cancelled, and once in-flight
+//! tasks drain, [`WorkerPool::run`] re-raises the payload on the
+//! submitting thread (`resume_unwind`).  The accounting that wakes the
+//! submitter is updated on the panic path too, so the condvar wait can
+//! never deadlock on a dead task — covered by the poisoned-expert tests.
+//! The pool stays usable after a panic.
+//!
+//! # Memory accounting
+//!
+//! Per-worker/per-block gather scratch (`xg`/`hg` in the layer) is
+//! **working-set** memory — like the expert-residency cache's decoded
+//! sets, it is *not* expert-identity storage and never counts toward the
+//! Table-1 bytes (`MoeLayer::expert_bytes`); see `crate::memmodel`.
+
+use std::any::Any;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Poison-tolerant lock: a panic re-raised by [`WorkerPool::run`]
+/// unwinds while holding the submit lock (and a panicking caller may
+/// poison the state lock); pool state stays consistent across panics by
+/// construction, so poisoning is cleared rather than propagated —
+/// "pool stays usable after a panic" is part of the contract.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Raw pointer to the current batch's task closure.  Only dereferenced
+/// while [`WorkerPool::run`] keeps the referent alive on the submitting
+/// thread's stack (the run/`unfinished` protocol guarantees it).
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` and outlives every dereference (see
+// TaskPtr docs); the pointer itself is just an address.
+unsafe impl Send for TaskPtr {}
+
+struct Job {
+    task: TaskPtr,
+    n_tasks: usize,
+    /// Next unclaimed task index (claims ascend; execution overlaps).
+    next: usize,
+    /// Tasks not yet completed (claimed-and-running + unclaimed).
+    unfinished: usize,
+    /// First panic payload observed in this batch.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between batches.
+    work_ready: Condvar,
+    /// The submitter parks here until `unfinished == 0`.
+    work_done: Condvar,
+    /// Serializes concurrent `run` calls from different threads.
+    submit: Mutex<()>,
+}
+
+/// Persistent worker pool; see the module docs for the determinism and
+/// panic contracts.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total execution threads: `threads - 1` are
+    /// spawned; the thread calling [`run`](Self::run) is the last one.
+    /// `threads == 1` therefore spawns nothing and runs inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("bmoe-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// Pool sized by [`resolve_workers`]`(0)` — env override or all cores.
+    pub fn from_env() -> Self {
+        WorkerPool::new(resolve_workers(0))
+    }
+
+    /// Total execution threads (spawned workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `task(i)` for every `i in 0..n_tasks` and wait for all of
+    /// them.  Claims are handed out in ascending index order; execution
+    /// overlaps across threads.  If any task panics, the remaining
+    /// unclaimed tasks are cancelled and the first payload is re-raised
+    /// here once in-flight tasks finish.
+    ///
+    /// Must not be called from inside one of its own tasks (a nested
+    /// call would block on the submit lock the outer call holds).
+    /// Concurrent calls from *different* threads serialize.
+    pub fn run(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.handles.is_empty() {
+            // 1-thread pool: exactly the sequential loop, panics unwind
+            // naturally to the caller.
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        let _submit = lock(&self.shared.submit);
+        {
+            let mut st = lock(&self.shared.state);
+            debug_assert!(st.job.is_none(), "stale job under the submit lock");
+            // SAFETY: launder the borrow to 'static for storage only; the
+            // referent lives on this stack frame until `unfinished == 0`
+            // below, and no dereference survives that point.
+            let task_ptr: *const (dyn Fn(usize) + Sync) = task;
+            let task_ptr: *const (dyn Fn(usize) + Sync + 'static) =
+                unsafe { std::mem::transmute(task_ptr) };
+            st.job = Some(Job {
+                task: TaskPtr(task_ptr),
+                n_tasks,
+                next: 0,
+                unfinished: n_tasks,
+                panic: None,
+            });
+            self.shared.work_ready.notify_all();
+        }
+        // The submitting thread claims tasks alongside the workers.
+        let mut st = lock(&self.shared.state);
+        loop {
+            let job = st.job.as_mut().expect("job lives until taken below");
+            if job.panic.is_some() {
+                // fail fast: drop everything not yet claimed
+                job.unfinished -= job.n_tasks - job.next;
+                job.next = job.n_tasks;
+            }
+            if job.next >= job.n_tasks {
+                break;
+            }
+            let i = job.next;
+            job.next += 1;
+            drop(st);
+            let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+            st = lock(&self.shared.state);
+            let job = st.job.as_mut().expect("job lives until taken below");
+            job.unfinished -= 1;
+            if let Err(payload) = result {
+                job.panic.get_or_insert(payload);
+            }
+        }
+        while st.job.as_ref().expect("job lives until taken").unfinished > 0 {
+            st = wait(&self.shared.work_done, st);
+        }
+        let job = st.job.take().unwrap();
+        drop(st);
+        if let Some(payload) = job.panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            // panic-propagating join: a worker dying outside a task is a
+            // pool bug; surface it unless we are already unwinding.
+            if let Err(payload) = h.join() {
+                if !std::thread::panicking() {
+                    resume_unwind(payload);
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = lock(&shared.state);
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let claimed = match st.job.as_mut() {
+            Some(job) if job.next < job.n_tasks => {
+                if job.panic.is_some() {
+                    // a sibling task panicked: cancel unclaimed work so
+                    // the submitter's condvar wait terminates (this is
+                    // the no-deadlock guarantee)
+                    job.unfinished -= job.n_tasks - job.next;
+                    job.next = job.n_tasks;
+                    if job.unfinished == 0 {
+                        shared.work_done.notify_all();
+                    }
+                    None
+                } else {
+                    let i = job.next;
+                    job.next += 1;
+                    Some((i, job.task))
+                }
+            }
+            _ => None,
+        };
+        match claimed {
+            Some((i, task)) => {
+                drop(st);
+                // SAFETY: the submitter keeps the closure alive until
+                // this task is accounted finished (see TaskPtr docs).
+                let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*task.0)(i) }));
+                st = lock(&shared.state);
+                if let Some(job) = st.job.as_mut() {
+                    job.unfinished -= 1;
+                    if let Err(payload) = result {
+                        job.panic.get_or_insert(payload);
+                    }
+                    if job.unfinished == 0 {
+                        shared.work_done.notify_all();
+                    }
+                } else {
+                    debug_assert!(false, "job vanished while a task was in flight");
+                }
+            }
+            None => {
+                st = wait(&shared.work_ready, st);
+            }
+        }
+    }
+}
+
+/// Worker-count resolution for the `--workers` knob: an explicit
+/// `requested > 0` wins; otherwise the `BMOE_WORKERS` env var (CI runs
+/// the suite under 1 and 4); otherwise every available core.
+pub fn resolve_workers(requested: usize) -> usize {
+    workers_from(requested, std::env::var("BMOE_WORKERS").ok().as_deref())
+}
+
+/// Pure core of [`resolve_workers`] (unit-testable without env races).
+fn workers_from(requested: usize, env: Option<&str>) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Some(n) = env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        if n > 0 {
+            return n;
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `parts` contiguous, ascending, disjoint
+/// ranges that exactly cover `0..n` (the unit of token-row sharding in
+/// the deterministic reduction — asserted here so callers can rely on
+/// "every row exactly once").
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n, "ranges must cover 0..n exactly");
+    debug_assert!(out.windows(2).all(|w| w[0].1 == w[1].0));
+    out
+}
+
+/// Shared mutable slice for disjoint-index parallel writes.
+///
+/// Wraps `&mut [T]` so several pool tasks can write to it concurrently
+/// **provided they touch disjoint indices** — the layer shards by
+/// dispatch block / token row / output row, all naturally disjoint.
+/// Every access is `unsafe` to keep that proof obligation at the call
+/// site.
+pub struct DisjointSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is index-disjoint by the caller contract, so aliasing
+// &mut never materializes; T: Send makes cross-thread writes sound.
+unsafe impl<T: Send> Send for DisjointSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSliceMut<'_, T> {}
+
+impl<'a, T> DisjointSliceMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSliceMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive reference to element `i`.
+    ///
+    /// # Safety
+    /// No concurrent task may access index `i`.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn index_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Exclusive reference to `start..start + len`.
+    ///
+    /// # Safety
+    /// No concurrent task may access any index in the range.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 103;
+            let mut out = vec![0u32; n];
+            let shards = DisjointSliceMut::new(&mut out);
+            let task = |i: usize| {
+                // SAFETY: one task per index
+                unsafe { *shards.index_mut(i) += i as u32 + 1 };
+            };
+            pool.run(n, &task);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(7, &|_i| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 350);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = WorkerPool::new(4);
+        pool.run(0, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn panic_propagates_payload_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, &|i| {
+                if i == 13 {
+                    panic!("poisoned task 13");
+                }
+            });
+        }))
+        .expect_err("run must re-raise the task panic");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("poisoned task 13"), "payload was: {msg}");
+        // no deadlocked condvar, no wedged workers: the pool keeps working
+        let count = AtomicUsize::new(0);
+        pool.run(32, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panic_on_single_thread_pool_unwinds_directly() {
+        let pool = WorkerPool::new(1);
+        let err = catch_unwind(AssertUnwindSafe(|| pool.run(3, &|_| panic!("seq boom"))));
+        assert!(err.is_err());
+        pool.run(3, &|_| {});
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        pool.run(11, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 11);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_disjointly() {
+        for (n, parts) in [(10usize, 3usize), (1, 8), (16, 16), (7, 1), (64, 5)] {
+            let r = chunk_ranges(n, parts);
+            assert!(r.len() <= parts && !r.is_empty());
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous, disjoint");
+            }
+            let covered: usize = r.iter().map(|(a, b)| b - a).sum();
+            assert_eq!(covered, n);
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn workers_from_resolution_order() {
+        assert_eq!(workers_from(3, Some("8")), 3, "explicit wins");
+        assert_eq!(workers_from(0, Some("8")), 8, "env next");
+        assert_eq!(workers_from(0, Some(" 2 ")), 2, "env trimmed");
+        let auto = workers_from(0, None);
+        assert!(auto >= 1, "falls back to cores");
+        assert_eq!(workers_from(0, Some("0")), auto, "env 0 = auto");
+        assert_eq!(workers_from(0, Some("nope")), auto, "bad env = auto");
+    }
+
+    #[test]
+    fn threads_accessor_counts_submitter() {
+        assert_eq!(WorkerPool::new(1).threads(), 1);
+        assert_eq!(WorkerPool::new(4).threads(), 4);
+        assert_eq!(WorkerPool::new(0).threads(), 1, "clamped to 1");
+    }
+}

@@ -354,15 +354,8 @@ pub fn dense_ternary_gemv(q: &[i8], rows: usize, cols: usize, gamma: f32, x: &[f
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::ternary_quantize;
-    use crate::tensor::Tensor;
+    use crate::testutil::random_quant;
     use crate::util::Rng;
-
-    fn random_quant(rows: usize, cols: usize, seed: u64) -> TernaryQuant {
-        let mut rng = Rng::new(seed);
-        let t = Tensor::rand_normal(&[rows, cols], 1.0, &mut rng);
-        ternary_quantize(&t)
-    }
 
     #[test]
     fn pack_unpack_roundtrip() {

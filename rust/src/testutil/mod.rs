@@ -1,0 +1,63 @@
+//! Shared seeded test fixtures.
+//!
+//! The same `Rng`-seeded helpers used to be duplicated across
+//! `ternary/mod.rs`, `expertcache/mod.rs`, `moe/layer.rs` unit tests and
+//! the integration tests under `rust/tests/`; they live here once so a
+//! fixture tweak can't silently fork the test corpora.  Compiled for
+//! unit tests via `cfg(test)` and for integration tests / fault
+//! injection via the tiny default-on `testutil` cargo feature (zero
+//! dependencies, no runtime cost when unused).
+//!
+//! Determinism matters more than realism here: every helper is a pure
+//! function of its seed, so "same seed ⇒ same weights" holds across
+//! test binaries — the property the bitwise parity and determinism
+//! suites are built on.
+
+use std::sync::Arc;
+
+use crate::moe::ButterflyMoeLayer;
+use crate::parallel::WorkerPool;
+use crate::quant::{ternary_quantize, TernaryQuant};
+use crate::tensor::Tensor;
+use crate::ternary::BitplaneTernary;
+use crate::util::Rng;
+
+/// Seeded random ternary quantization of a normal matrix — the
+/// `random_quant` fixture from the ternary tests.
+pub fn random_quant(rows: usize, cols: usize, seed: u64) -> TernaryQuant {
+    let mut rng = Rng::new(seed);
+    let t = Tensor::rand_normal(&[rows, cols], 1.0, &mut rng);
+    ternary_quantize(&t)
+}
+
+/// Seeded bitplane substrate — the `substrate` fixture from the
+/// expert-cache tests.
+pub fn random_substrate(rows: usize, cols: usize, seed: u64) -> Arc<BitplaneTernary> {
+    Arc::new(BitplaneTernary::from_quant(&random_quant(rows, cols, seed)))
+}
+
+/// Seeded ButterflyMoE layer (full butterfly depth) — the `layer`
+/// fixture from the moe and expert-cache tests.
+pub fn butterfly_layer(
+    d_model: usize,
+    d_ff: usize,
+    n_experts: usize,
+    top_k: usize,
+    seed: u64,
+) -> ButterflyMoeLayer {
+    let mut rng = Rng::new(seed);
+    ButterflyMoeLayer::random(d_model, d_ff, n_experts, top_k, None, &mut rng)
+}
+
+/// Seeded standard-normal activation batch.
+pub fn normal_vec(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.normal_f32(1.0)).collect()
+}
+
+/// Worker pool sized by the environment (`BMOE_WORKERS`, else cores) —
+/// what the integration suites attach so CI's `BMOE_WORKERS=1` /
+/// `BMOE_WORKERS=4` matrix actually exercises both schedules.
+pub fn env_pool() -> Arc<WorkerPool> {
+    Arc::new(WorkerPool::from_env())
+}

@@ -20,6 +20,7 @@ use butterfly_moe::expertcache::{
 };
 use butterfly_moe::memmodel::{self, LayerShape, Method};
 use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer, StandardMoeLayer};
+use butterfly_moe::testutil;
 use butterfly_moe::util::Rng;
 
 const D: usize = 64;
@@ -27,8 +28,7 @@ const DFF: usize = 128;
 const E: usize = 8;
 
 fn layer(seed: u64) -> ButterflyMoeLayer {
-    let mut rng = Rng::new(seed);
-    ButterflyMoeLayer::random(D, DFF, E, 2, None, &mut rng)
+    testutil::butterfly_layer(D, DFF, E, 2, seed)
 }
 
 /// Replace the gate with one-hot rows so tests can steer routing
@@ -146,8 +146,7 @@ fn fractional_budget_rounds_down_and_is_never_exceeded() {
 #[test]
 fn cached_serving_sessions_match_uncached_bitwise() {
     let run = |cache_mb: f64| {
-        let mut rng = Rng::new(7);
-        let mut l = ButterflyMoeLayer::random(D, 256, E, 2, None, &mut rng);
+        let mut l = testutil::butterfly_layer(D, 256, E, 2, 7);
         let cache = (cache_mb > 0.0)
             .then(|| l.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
         let backend = Arc::new(NativeMoeBackend::new(Arc::new(l), 512, 32, 8));

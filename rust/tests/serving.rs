@@ -12,18 +12,22 @@ use butterfly_moe::coordinator::{
     InflightBatch, InflightSeq, NativeMoeBackend, PjrtLmBackend, SamplingParams, SchedulerConfig,
     StopCriteria,
 };
-use butterfly_moe::moe::ButterflyMoeLayer;
-use butterfly_moe::util::Rng;
+use butterfly_moe::testutil;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
     dir.join("manifest.json").exists().then_some(dir)
 }
 
+/// Native backend over the shared seeded fixture layer, with a worker
+/// pool sized by the environment — CI runs this whole suite under
+/// `BMOE_WORKERS=1` and `BMOE_WORKERS=4`, and every assertion below
+/// must hold identically for both (decoded streams are worker-count
+/// invariant).
 fn native_backend(max_batch: usize) -> Arc<NativeMoeBackend> {
-    let mut rng = Rng::new(7);
-    let layer = Arc::new(ButterflyMoeLayer::random(64, 256, 8, 2, None, &mut rng));
-    Arc::new(NativeMoeBackend::new(layer, 512, 32, max_batch))
+    let mut layer = testutil::butterfly_layer(64, 256, 8, 2, 7);
+    layer.attach_worker_pool(testutil::env_pool());
+    Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, max_batch))
 }
 
 #[test]
