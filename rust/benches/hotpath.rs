@@ -5,21 +5,31 @@
 //!
 //!   * ternary GEMV: 2-bit packed vs bitplane vs dense-f32 reference
 //!   * butterfly apply: by dimension and depth
+//!   * blocked-kernel ablation (§Perf iteration 6): stage-outer blocked
+//!     butterfly vs the retained per-row walk, register-blocked GEMM vs
+//!     the retained dot-loop reference (outputs bit-identical; only the
+//!     schedule differs)
 //!   * top-k gate routing
 //!   * end-to-end expert mixture (tokens/s)
 //!   * expert-parallel scaling: full-forward tokens/s at workers
 //!     {1, 2, 4, 8} (CSV + JSON — the `--workers` dial, bit-identical
 //!     outputs at every point)
 //!
-//! Run: `cargo bench --bench hotpath` — results feed EXPERIMENTS.md §Perf.
-//! `cargo bench --bench hotpath -- smoke` (or BMOE_BENCH_SMOKE=1) runs
-//! only a tiny 2-worker scaling check and fails unless parallel
-//! tokens/s ≥ sequential — the CI gate.
+//! Run: `cargo bench --bench hotpath` — results feed EXPERIMENTS.md §Perf
+//! and write the machine-readable `BENCH_hotpath.json` at the repo root
+//! (median tok/s per config) so future PRs have a perf trajectory to
+//! compare against.
+//!
+//! `cargo bench --bench hotpath -- smoke` (or BMOE_BENCH_SMOKE=1) is the
+//! CI gate: a tiny 2-worker scaling check (parallel ≥ sequential) plus
+//! blocked-vs-reference kernel checks (blocked ≥ reference tok/s at the
+//! bench shape); it also emits `BENCH_hotpath.json` (mode "smoke").
 
 use std::sync::Arc;
 
 use butterfly_moe::bench::{black_box, Bencher, Table};
 use butterfly_moe::butterfly::Butterfly;
+use butterfly_moe::kernels::TernaryScratch;
 use butterfly_moe::moe::{ButterflyMoeLayer, GateNetwork, MoeLayer, StandardMoeLayer};
 use butterfly_moe::parallel::WorkerPool;
 use butterfly_moe::quant::ternary_quantize;
@@ -56,26 +66,153 @@ fn forward_tokens_per_sec(
     r.throughput(batch as f64)
 }
 
-/// CI smoke gate: tiny shape, 2 workers, quick samples; exits nonzero
-/// unless the parallel schedule at least matches the sequential one.
+/// Median batched-butterfly rows/s for one kernel variant.
+fn butterfly_batch_rows_per_sec(
+    bencher: &Bencher,
+    d: usize,
+    depth: usize,
+    rows: usize,
+    blocked: bool,
+) -> f64 {
+    let mut rng = Rng::new(0xB1F);
+    let b = Butterfly::random(d, depth, 0.5, &mut rng);
+    let mut xb: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32(1.0)).collect();
+    let variant = if blocked { "blocked" } else { "per_row" };
+    let name = format!("bfly {variant} d{d} l{depth} r{rows}");
+    let r = if blocked {
+        let mut scratch = Vec::new();
+        bencher.run(&name, || {
+            b.apply_batch_with(&mut xb, &mut scratch);
+            black_box(&xb);
+        })
+    } else {
+        bencher.run(&name, || {
+            b.apply_batch_per_row(&mut xb);
+            black_box(&xb);
+        })
+    };
+    r.throughput(rows as f64)
+}
+
+/// Median ternary-GEMM tokens/s for one kernel variant
+/// (`dot_loop` = retained reference, `blocked`, `blocked_a8`).
+fn ternary_gemm_tokens_per_sec(
+    bencher: &Bencher,
+    rows: usize,
+    cols: usize,
+    t: usize,
+    variant: &str,
+) -> f64 {
+    let mut rng = Rng::new(0x6E3);
+    let w = Tensor::rand_normal(&[rows, cols], 0.05, &mut rng);
+    let bp = BitplaneTernary::from_quant(&ternary_quantize(&w));
+    let x: Vec<f32> = (0..t * cols).map(|_| rng.normal_f32(1.0)).collect();
+    let mut y = vec![0.0f32; t * rows];
+    let mut scratch = TernaryScratch::default();
+    let name = format!("gemm {variant} {rows}x{cols} t{t}");
+    let r = match variant {
+        "dot_loop" => bencher.run(&name, || {
+            bp.gemm_ref(&x, t, &mut y);
+            black_box(&y);
+        }),
+        "blocked" => bencher.run(&name, || {
+            bp.gemm_with(&x, t, &mut y, &mut scratch);
+            black_box(&y);
+        }),
+        "blocked_a8" => bencher.run(&name, || {
+            bp.gemm_a8_with(&x, t, &mut y, &mut scratch);
+            black_box(&y);
+        }),
+        _ => unreachable!("unknown gemm variant {variant}"),
+    };
+    r.throughput(t as f64)
+}
+
+/// Machine-readable perf trajectory at the repo root: median tok/s per
+/// kernel config plus the workers curve — future PRs diff against it.
+fn write_bench_json(mode: &str, kernels: &[String], workers: &[String]) -> std::io::Result<()> {
+    let body = format!(
+        "{{\n  \"schema\": \"bmoe_hotpath_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"kernels\": [\n{}\n  ],\n  \"workers\": [\n{}\n  ]\n}}\n",
+        kernels.join(",\n"),
+        workers.join(",\n"),
+    );
+    std::fs::write("BENCH_hotpath.json", body)?;
+    println!("\nwrote BENCH_hotpath.json (mode {mode})");
+    Ok(())
+}
+
+fn kernel_json_row(kernel: &str, variant: &str, config: &str, tps: f64) -> String {
+    format!(
+        "    {{\"kernel\": \"{kernel}\", \"variant\": \"{variant}\", \
+         \"config\": \"{config}\", \"tokens_per_sec\": {tps:.1}}}"
+    )
+}
+
+fn worker_json_row(workers: usize, tps: f64, speedup: f64) -> String {
+    format!(
+        "{{\"workers\": {workers}, \"tokens_per_sec\": {tps:.1}, \
+         \"speedup\": {speedup:.3}}}"
+    )
+}
+
+/// CI smoke gate: quick samples, best-of-3 per point to damp scheduler
+/// noise on small CI boxes.  Exits nonzero unless (a) the 2-worker
+/// parallel schedule at least matches the sequential one, and (b) each
+/// blocked kernel at least matches its retained reference at the bench
+/// shape.  Emits `BENCH_hotpath.json` (mode "smoke") with the points it
+/// measured.
 fn smoke() -> anyhow::Result<()> {
     let bencher = Bencher::quick();
     let (d, dff, e, batch) = (256usize, 1024usize, 8usize, 32usize);
-    // best-of-3 per point to damp scheduler noise on small CI boxes
-    let best = |workers: usize| {
-        (0..3)
-            .map(|_| forward_tokens_per_sec(&bencher, workers, d, dff, e, batch))
-            .fold(0.0f64, f64::max)
-    };
-    let seq = best(1);
-    let par = best(2);
+    let best = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(0.0f64, f64::max);
+    let seq = best(&|| forward_tokens_per_sec(&bencher, 1, d, dff, e, batch));
+    let par = best(&|| forward_tokens_per_sec(&bencher, 2, d, dff, e, batch));
     println!(
         "[smoke] sequential {seq:.0} tok/s | 2 workers {par:.0} tok/s ({:.2}x)",
         par / seq
     );
+    // blocked vs reference kernels at the bench (paper) shape
+    let (bd, bdepth, brows) = (512usize, Butterfly::max_depth(512), 32usize);
+    let bf_ref = best(&|| butterfly_batch_rows_per_sec(&bencher, bd, bdepth, brows, false));
+    let bf_blk = best(&|| butterfly_batch_rows_per_sec(&bencher, bd, bdepth, brows, true));
+    println!(
+        "[smoke] butterfly d{bd} l{bdepth} r{brows}: per-row {bf_ref:.0} rows/s | \
+         blocked {bf_blk:.0} rows/s ({:.2}x)",
+        bf_blk / bf_ref
+    );
+    let (grows, gcols, gt) = (2048usize, 512usize, 32usize);
+    let gm_ref = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "dot_loop"));
+    let gm_blk = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "blocked"));
+    println!(
+        "[smoke] gemm {grows}x{gcols} t{gt}: dot-loop {gm_ref:.0} tok/s | \
+         blocked {gm_blk:.0} tok/s ({:.2}x)",
+        gm_blk / gm_ref
+    );
+    let bcfg = format!("d{bd}_l{bdepth}_r{brows}");
+    let gcfg = format!("{grows}x{gcols}_t{gt}");
+    let kernel_rows = vec![
+        kernel_json_row("butterfly_batch", "per_row", &bcfg, bf_ref),
+        kernel_json_row("butterfly_batch", "blocked", &bcfg, bf_blk),
+        kernel_json_row("ternary_gemm", "dot_loop", &gcfg, gm_ref),
+        kernel_json_row("ternary_gemm", "blocked", &gcfg, gm_blk),
+    ];
+    let worker_rows = vec![
+        format!("    {}", worker_json_row(1, seq, 1.0)),
+        format!("    {}", worker_json_row(2, par, par / seq)),
+    ];
+    write_bench_json("smoke", &kernel_rows, &worker_rows)?;
     anyhow::ensure!(
         par >= seq,
         "parallel ({par:.0} tok/s) must be >= sequential ({seq:.0} tok/s)"
+    );
+    anyhow::ensure!(
+        bf_blk >= bf_ref,
+        "blocked butterfly ({bf_blk:.0} rows/s) must be >= per-row ({bf_ref:.0} rows/s)"
+    );
+    anyhow::ensure!(
+        gm_blk >= gm_ref,
+        "blocked gemm ({gm_blk:.0} tok/s) must be >= dot-loop ({gm_ref:.0} tok/s)"
     );
     Ok(())
 }
@@ -191,6 +328,57 @@ fn main() -> anyhow::Result<()> {
     t.write_csv(&out.join("hotpath_butterfly.csv"))?;
 
     // ------------------------------------------------------------------
+    // blocked-kernel ablation (§Perf iteration 6): old vs new schedules,
+    // bit-identical outputs.  Feeds BENCH_hotpath.json.
+    // ------------------------------------------------------------------
+    let mut kernel_rows: Vec<String> = Vec::new();
+    let mut t = Table::new(
+        "Blocked butterfly vs per-row (batched apply, bit-identical)",
+        &["d", "depth", "rows", "per-row rows/s", "blocked rows/s", "Speedup"],
+    );
+    for (d, rows) in [(512usize, 16usize), (512, 64), (2048, 16)] {
+        let depth = Butterfly::max_depth(d);
+        let per_row = butterfly_batch_rows_per_sec(&bencher, d, depth, rows, false);
+        let blocked = butterfly_batch_rows_per_sec(&bencher, d, depth, rows, true);
+        t.row(&[
+            d.to_string(),
+            depth.to_string(),
+            rows.to_string(),
+            format!("{per_row:.0}"),
+            format!("{blocked:.0}"),
+            format!("{:.2}x", blocked / per_row),
+        ]);
+        let cfg = format!("d{d}_l{depth}_r{rows}");
+        kernel_rows.push(kernel_json_row("butterfly_batch", "per_row", &cfg, per_row));
+        kernel_rows.push(kernel_json_row("butterfly_batch", "blocked", &cfg, blocked));
+    }
+    t.print();
+    t.write_csv(&out.join("hotpath_butterfly_blocked.csv"))?;
+
+    let mut t = Table::new(
+        "Blocked ternary GEMM vs dot-loop (2048x512, bit-identical)",
+        &["t", "dot-loop tok/s", "blocked tok/s", "Speedup", "blocked a8 tok/s"],
+    );
+    for tt in [4usize, 16, 64] {
+        let dot_loop = ternary_gemm_tokens_per_sec(&bencher, dff, d, tt, "dot_loop");
+        let blocked = ternary_gemm_tokens_per_sec(&bencher, dff, d, tt, "blocked");
+        let blocked_a8 = ternary_gemm_tokens_per_sec(&bencher, dff, d, tt, "blocked_a8");
+        t.row(&[
+            tt.to_string(),
+            format!("{dot_loop:.0}"),
+            format!("{blocked:.0}"),
+            format!("{:.2}x", blocked / dot_loop),
+            format!("{blocked_a8:.0}"),
+        ]);
+        let cfg = format!("{dff}x{d}_t{tt}");
+        kernel_rows.push(kernel_json_row("ternary_gemm", "dot_loop", &cfg, dot_loop));
+        kernel_rows.push(kernel_json_row("ternary_gemm", "blocked", &cfg, blocked));
+        kernel_rows.push(kernel_json_row("ternary_gemm", "blocked_a8", &cfg, blocked_a8));
+    }
+    t.print();
+    t.write_csv(&out.join("hotpath_gemm_blocked.csv"))?;
+
+    // ------------------------------------------------------------------
     // gate + full mixture, butterfly vs standard (paper layer shape)
     // ------------------------------------------------------------------
     let batch = 16usize;
@@ -252,6 +440,7 @@ fn main() -> anyhow::Result<()> {
         &["Workers", "tokens/s", "Speedup", "Efficiency"],
     );
     let mut json_rows: Vec<String> = Vec::new();
+    let mut worker_rows: Vec<String> = Vec::new();
     let mut seq_tps = 0.0f64;
     for workers in [1usize, 2, 4, 8] {
         let tps = forward_tokens_per_sec(&bencher, workers, sd, sdff, sexp, sbatch);
@@ -265,10 +454,9 @@ fn main() -> anyhow::Result<()> {
             format!("{speedup:.2}x"),
             format!("{:.0}%", 100.0 * speedup / workers as f64),
         ]);
-        json_rows.push(format!(
-            "  {{\"workers\": {workers}, \"tokens_per_sec\": {tps:.1}, \
-             \"speedup\": {speedup:.3}}}"
-        ));
+        let row = worker_json_row(workers, tps, speedup);
+        json_rows.push(format!("  {row}"));
+        worker_rows.push(format!("    {row}"));
     }
     t.print();
     t.write_csv(&out.join("hotpath_scaling.csv"))?;
@@ -277,5 +465,6 @@ fn main() -> anyhow::Result<()> {
         format!("[\n{}\n]\n", json_rows.join(",\n")),
     )?;
     println!("\nwrote runs/tables/hotpath_scaling.csv and hotpath_scaling.json");
+    write_bench_json("full", &kernel_rows, &worker_rows)?;
     Ok(())
 }

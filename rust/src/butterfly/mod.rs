@@ -8,7 +8,10 @@
 //!
 //! `apply` runs in O(d·depth) with two fused multiply-adds per pair — the
 //! paper's O(d log d) expert-synthesis primitive.  Angles are stored with
-//! precomputed (cos, sin) so the hot path does no trig.
+//! precomputed (cos, sin) so the hot path does no trig.  Batched applies
+//! route through the stage-outer blocked kernel
+//! ([`crate::kernels::butterfly_apply_blocked`], §Perf iteration 6),
+//! which is bit-identical to the per-row walk by construction.
 
 use crate::util::{log2_exact, Rng};
 
@@ -118,15 +121,56 @@ impl Butterfly {
         }
     }
 
-    /// Batched apply over rows of a (rows, d) matrix.
+    /// Batched apply over rows of a (rows, d) matrix — the stage-outer
+    /// blocked kernel (§Perf iteration 6): each stage's (cos, sin) table
+    /// is read once per row block and the per-pair FMAs vectorize across
+    /// rows.  Bit-identical to applying [`Self::apply`] per row (see
+    /// [`crate::kernels::butterfly_apply_blocked`]); the per-row walk is
+    /// retained as [`Self::apply_batch_per_row`] for the ablation.
+    ///
+    /// Allocates a fresh transpose scratch; hot paths should hold one
+    /// and call [`Self::apply_batch_with`].
     pub fn apply_batch(&self, x: &mut [f32]) {
+        self.apply_batch_with(x, &mut Vec::new());
+    }
+
+    pub fn apply_transpose_batch(&self, x: &mut [f32]) {
+        self.apply_transpose_batch_with(x, &mut Vec::new());
+    }
+
+    /// [`Self::apply_batch`] with caller-retained transpose scratch
+    /// (resized to at most `d * RB` floats — [`crate::kernels::RB`] —
+    /// and reused: zero steady-state allocation).
+    pub fn apply_batch_with(&self, x: &mut [f32], scratch: &mut Vec<f32>) {
+        assert_eq!(x.len() % self.d, 0);
+        if x.len() == self.d {
+            return self.apply(x); // single row: skip the transpose round-trip
+        }
+        crate::kernels::butterfly_apply_blocked(&self.cs, self.d, self.depth, false, x, scratch);
+    }
+
+    /// [`Self::apply_transpose_batch`] with caller-retained scratch.
+    pub fn apply_transpose_batch_with(&self, x: &mut [f32], scratch: &mut Vec<f32>) {
+        assert_eq!(x.len() % self.d, 0);
+        if x.len() == self.d {
+            return self.apply_transpose(x);
+        }
+        crate::kernels::butterfly_apply_blocked(&self.cs, self.d, self.depth, true, x, scratch);
+    }
+
+    /// Reference batched apply: one row at a time through
+    /// [`Self::apply`], re-streaming the full table per row.  Kept for
+    /// the §Perf old-vs-new ablation in `benches/hotpath.rs` and the
+    /// bit-identity property tests.
+    pub fn apply_batch_per_row(&self, x: &mut [f32]) {
         assert_eq!(x.len() % self.d, 0);
         for row in x.chunks_exact_mut(self.d) {
             self.apply(row);
         }
     }
 
-    pub fn apply_transpose_batch(&self, x: &mut [f32]) {
+    /// Reference batched transpose apply (see [`Self::apply_batch_per_row`]).
+    pub fn apply_transpose_batch_per_row(&self, x: &mut [f32]) {
         assert_eq!(x.len() % self.d, 0);
         for row in x.chunks_exact_mut(self.d) {
             self.apply_transpose(row);
@@ -264,6 +308,25 @@ mod tests {
         for (i, s) in singles.iter().enumerate() {
             assert_eq!(&batch[i * d..(i + 1) * d], &s[..]);
         }
+    }
+
+    // NOTE: blocked-vs-per-row bit-identity across shapes/depths/tails
+    // lives in rust/tests/kernels.rs (plus `batch_matches_single` below,
+    // which already pins apply_batch == per-row singles bitwise).
+
+    #[test]
+    fn blocked_scratch_is_reused_across_calls() {
+        let b = rand_bfly(32, 5, 77);
+        let mut scratch = Vec::new();
+        let mut x: Vec<f32> = (0..20 * 32).map(|i| i as f32 * 0.01).collect();
+        b.apply_batch_with(&mut x, &mut scratch);
+        let (cap, ptr) = (scratch.capacity(), scratch.as_ptr());
+        for _ in 0..3 {
+            b.apply_batch_with(&mut x, &mut scratch);
+            b.apply_transpose_batch_with(&mut x, &mut scratch);
+        }
+        assert_eq!(cap, scratch.capacity(), "steady-state scratch must not grow");
+        assert_eq!(ptr, scratch.as_ptr(), "steady-state scratch must not move");
     }
 
     #[test]

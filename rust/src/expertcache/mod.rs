@@ -224,22 +224,19 @@ impl DecodedExpert {
     }
 
     /// Batched X (t, cols) -> Y (t, rows) — bit-identical mirror of
-    /// [`BitplaneTernary::gemm`] (full-row `dot_f32` per token, `t == 1`
+    /// [`BitplaneTernary::gemm`]: both route through the *same*
+    /// register-blocked micro-kernel ([`crate::kernels::gemm_f32`],
+    /// §Perf iteration 6) over the same sign values, here with the
+    /// bitplane decode already hoisted at materialization time.  `t == 1`
     /// delegates to the word-skipping GEMV exactly as the bitplane path
-    /// does).
+    /// does.  No scratch needed: the decode *is* the resident form.
     pub fn gemm(&self, x: &[f32], t: usize, y: &mut [f32]) {
         assert_eq!(x.len(), t * self.cols);
         assert_eq!(y.len(), t * self.rows);
         if t == 1 {
             return self.gemv(x, y);
         }
-        for r in 0..self.rows {
-            let row = &self.signs[r * self.cols..(r + 1) * self.cols];
-            for i in 0..t {
-                let xi = &x[i * self.cols..(i + 1) * self.cols];
-                y[i * self.rows + r] = crate::util::dot_f32(row, xi) * self.gamma;
-            }
-        }
+        crate::kernels::gemm_f32(&self.signs, self.rows, self.cols, x, t, self.gamma, y);
     }
 }
 

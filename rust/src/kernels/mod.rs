@@ -1,0 +1,602 @@
+//! Blocked SIMD micro-kernels for the expert-synthesis hot path
+//! (§Perf iteration 6).
+//!
+//! Every decode step is made of three native kernels — butterfly apply,
+//! ternary GEMM, dense down projection — and before this module each of
+//! them ran at the wrong loop order for the cache: `apply_batch` walked
+//! one row at a time re-streaming the whole (cos, sin) table per row,
+//! and the GEMMs computed one [`dot_f32`](crate::util::dot_f32) per
+//! (row, token) pair, re-reading the activation block from memory `rows`
+//! times per batch.  This module is the shared kernel layer the hot path
+//! is rewritten on top of:
+//!
+//! * [`butterfly_apply_blocked`] — **stage-outer blocked butterfly**.
+//!   A block of up to [`RB`] rows is transposed into a column-major
+//!   scratch; stages iterate outermost, so each stage's (cos, sin) table
+//!   is read **once per block** (and stays L1-resident across the pair
+//!   loop), and the per-pair two-FMA rotation runs over `RB` *contiguous*
+//!   lanes — it vectorizes across rows for every stride, including the
+//!   stride-1 stage that defeats vectorization in the per-row walk.
+//! * [`gemm_f32_strided`] / [`gemm_i8_strided`] — **register-blocked
+//!   GEMM micro-kernels**: per k-chunk, the activation chunk is loaded
+//!   once and fused against [`NR`] weight rows, so activations are
+//!   re-read `rows/NR` times instead of `rows` times and the weight
+//!   block streams exactly once.  The f32 kernel additionally blocks
+//!   [`MC`] tokens per weight-chunk load; the i8 kernel stays `NR × 1`
+//!   — its 16-lane i32 accumulators already fill the register budget,
+//!   and an `MC = 2` tile (128 live accumulators) would spill.
+//!
+//! # Bit-identity contract (the reason this layer is *shared*)
+//!
+//! The serving stack's parity invariants are path-vs-path, not
+//! golden-value: decoded-cache vs synthesis forwards, and parallel vs
+//! sequential schedules, must agree **bit-for-bit**
+//! (`rust/tests/determinism.rs`, `rust/tests/expert_cache.rs`).  Two
+//! properties make that hold by construction:
+//!
+//! * Every f32 GEMM output is computed with the **exact lane association
+//!   of [`dot_f32`](crate::util::dot_f32)** — same 8-lane accumulators
+//!   over ascending k-chunks, same fixed reduction tree, same scalar
+//!   tail.  An output's bits therefore do not depend on where a tile
+//!   boundary fell (row tails, token tails, worker-range splits all
+//!   reduce to the same per-output arithmetic), and the blocked kernels
+//!   are drop-in bit-identical replacements for the per-dot loops they
+//!   retire.  `rust/tests/kernels.rs` pins this across shapes.
+//! * The blocked butterfly applies, per element, exactly the same
+//!   two-FMA chain as the per-row [`Butterfly::apply`]
+//!   (crate::butterfly::Butterfly::apply): stages are barriers, pairs
+//!   within a stage are disjoint, and the transpose in/out is pure data
+//!   movement — so stage-outer vs row-outer order cannot change a bit.
+//!
+//! All ternary/dense GEMM call sites (`BitplaneTernary::{gemm, gemm_a8}`,
+//! `DecodedExpert::gemm`, the shared down projection in
+//! `MoeLayer::forward`) route through this one layer, so the cached and
+//! uncached serving streams keep producing identical bits.
+//!
+//! # Memory accounting
+//!
+//! Kernel scratch ([`TernaryScratch`], the butterfly transpose block) is
+//! **working-set** memory, like the residency cache's decoded sets and
+//! the dispatch-block gather buffers — it never counts toward Table-1
+//! expert-identity bytes (`MoeLayer::expert_bytes`); see
+//! `crate::memmodel`.
+
+use crate::util::dot_f32;
+
+/// GEMM row-block: weight rows fused per activation chunk.  4 rows × 8
+/// f32 lanes × 2 tokens = 64 live accumulators — the AVX2 register
+/// budget; wider blocks spill.
+pub const NR: usize = 4;
+
+/// GEMM token-block: tokens sharing one weight-chunk load.
+pub const MC: usize = 2;
+
+/// Butterfly row-block: rows rotated per transposed scratch block.  The
+/// per-pair rotation runs over `RB` contiguous lanes; 16 keeps the
+/// scratch (`d * RB * 4` bytes) L2-resident at the paper's `d_ff = 2048`.
+pub const RB: usize = 16;
+
+/// f32 accumulator lanes — must match [`dot_f32`]'s lane count, which
+/// the bit-identity contract is defined against.
+pub const LANES: usize = 8;
+
+/// Reusable scratch for the ternary GEMM hot path: decoded sign blocks
+/// and (for the W1.58A8 path) quantized activations.  Hoisted out of
+/// `gemm`/`gemm_a8` so steady-state decode does **zero allocation** —
+/// the vectors are resized in place and retained by the caller (the
+/// layer keeps one per dispatch block); `rust/tests/alloc_guard.rs`
+/// asserts the zero-allocation property under a counting allocator.
+///
+/// These are *working-set* bytes (see module docs), bounded by
+/// `NR·cols·5 + t·(cols + 4)` — independent of expert count.
+#[derive(Default)]
+pub struct TernaryScratch {
+    /// `NR × cols` decoded f32 sign rows (exact-path GEMM).
+    pub signs_f32: Vec<f32>,
+    /// `NR × cols` decoded i8 sign rows (W1.58A8 GEMM).
+    pub signs_i8: Vec<i8>,
+    /// `t × cols` per-token absmax-quantized activations.
+    pub xq: Vec<i8>,
+    /// `t` per-token dequantization scales (gamma folded in).
+    pub scales: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// f32 dot tiles — bit-identical to util::dot_f32 per output
+// ---------------------------------------------------------------------------
+
+/// `NR` dot products of contiguous weight rows against one token:
+/// `out[r] = dot_f32(w[r*cols..][..cols], x)` — the same bits, with the
+/// activation chunk loaded once per k-step instead of once per row.
+#[inline]
+pub fn dot_nr_x1(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc = [[0.0f32; LANES]; NR];
+    let mut k = 0;
+    while k < nl {
+        let xv = &x[k..k + LANES];
+        for r in 0..NR {
+            let wv = &w[r * cols + k..r * cols + k + LANES];
+            for l in 0..LANES {
+                acc[r][l] += wv[l] * xv[l];
+            }
+        }
+        k += LANES;
+    }
+    let mut out = [0.0f32; NR];
+    for r in 0..NR {
+        let a = &acc[r];
+        // identical reduction tree and tail to util::dot_f32
+        let mut s = (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]));
+        for j in nl..cols {
+            s += w[r * cols + j] * x[j];
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// [`dot_nr_x1`] over two tokens sharing every weight-chunk load:
+/// `out[m][r] = dot_f32(w_row_r, x_m)`, bit-identical per output.
+#[inline]
+pub fn dot_nr_x2(w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x0.len(), cols);
+    debug_assert_eq!(x1.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc = [[[0.0f32; LANES]; NR]; 2];
+    let mut k = 0;
+    while k < nl {
+        let x0v = &x0[k..k + LANES];
+        let x1v = &x1[k..k + LANES];
+        for r in 0..NR {
+            let wv = &w[r * cols + k..r * cols + k + LANES];
+            for l in 0..LANES {
+                acc[0][r][l] += wv[l] * x0v[l];
+                acc[1][r][l] += wv[l] * x1v[l];
+            }
+        }
+        k += LANES;
+    }
+    let mut out = [[0.0f32; NR]; 2];
+    for (m, xm) in [x0, x1].into_iter().enumerate() {
+        for r in 0..NR {
+            let a = &acc[m][r];
+            let mut s = (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]));
+            for j in nl..cols {
+                s += w[r * cols + j] * xm[j];
+            }
+            out[m][r] = s;
+        }
+    }
+    out
+}
+
+/// Register-blocked GEMM over a strided output window, generic in the
+/// output sink: `write(i*y_stride + y0 + r, gamma * dot_f32(w_row_r,
+/// x_token_i))` for `r in 0..nrows`, `i in 0..t`.  Full `NR` row tiles
+/// and `MC` token tiles run through the fused dot tiles above; tails
+/// fall back to [`dot_f32`] — which produces the same bits, so tile
+/// placement never shows in the output (the property worker-range
+/// sharding relies on).
+///
+/// The sink exists so the *one* tile schedule serves both plain slices
+/// ([`gemm_f32_strided`]) and disjoint-index parallel writes (the down
+/// projection's `DisjointSliceMut`) — the sink is monomorphized away,
+/// and a schedule change can never desynchronize the two paths.
+#[allow(clippy::too_many_arguments)] // strided-output kernel: shape + window params are irreducible
+pub fn gemm_f32_sink(
+    w: &[f32],
+    nrows: usize,
+    cols: usize,
+    x: &[f32],
+    t: usize,
+    gamma: f32,
+    y0: usize,
+    y_stride: usize,
+    mut write: impl FnMut(usize, f32),
+) {
+    debug_assert_eq!(w.len(), nrows * cols);
+    debug_assert_eq!(x.len(), t * cols);
+    let mut r = 0;
+    while r + NR <= nrows {
+        let wblk = &w[r * cols..(r + NR) * cols];
+        let mut i = 0;
+        while i + MC <= t {
+            let tile = dot_nr_x2(
+                wblk,
+                cols,
+                &x[i * cols..(i + 1) * cols],
+                &x[(i + 1) * cols..(i + 2) * cols],
+            );
+            for (m, lanes) in tile.iter().enumerate() {
+                for (rr, &v) in lanes.iter().enumerate() {
+                    write((i + m) * y_stride + y0 + r + rr, v * gamma);
+                }
+            }
+            i += MC;
+        }
+        if i < t {
+            let lanes = dot_nr_x1(wblk, cols, &x[i * cols..(i + 1) * cols]);
+            for (rr, &v) in lanes.iter().enumerate() {
+                write(i * y_stride + y0 + r + rr, v * gamma);
+            }
+        }
+        r += NR;
+    }
+    while r < nrows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        for i in 0..t {
+            write(
+                i * y_stride + y0 + r,
+                dot_f32(wr, &x[i * cols..(i + 1) * cols]) * gamma,
+            );
+        }
+        r += 1;
+    }
+}
+
+/// [`gemm_f32_sink`] writing into a plain slice:
+/// `y[i*y_stride + y0 + r] = gamma * dot_f32(w_row_r, x_token_i)`.
+#[allow(clippy::too_many_arguments)] // see gemm_f32_sink
+pub fn gemm_f32_strided(
+    w: &[f32],
+    nrows: usize,
+    cols: usize,
+    x: &[f32],
+    t: usize,
+    gamma: f32,
+    y: &mut [f32],
+    y0: usize,
+    y_stride: usize,
+) {
+    debug_assert!(t == 0 || (t - 1) * y_stride + y0 + nrows <= y.len());
+    gemm_f32_sink(w, nrows, cols, x, t, gamma, y0, y_stride, |i, v| y[i] = v);
+}
+
+/// Dense-output convenience wrapper: `y[i*rows + r]`, token-major —
+/// the layout of `BitplaneTernary::gemm` / `DecodedExpert::gemm`.
+pub fn gemm_f32(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    t: usize,
+    gamma: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), t * rows);
+    gemm_f32_strided(w, rows, cols, x, t, gamma, y, 0, rows);
+}
+
+// ---------------------------------------------------------------------------
+// i8 dot tiles — the W1.58A8 path (i32 accumulation is exact, so tiling
+// cannot change bits regardless of association)
+// ---------------------------------------------------------------------------
+
+/// i8 accumulator lanes — matches the widening [`dot_i8`] reference.
+pub const LANES_I8: usize = 16;
+
+/// Widening i8 dot with 16 lanes of i32 accumulation (§Perf iteration 5;
+/// vectorizes).  Exported as the per-row reference for the blocked i8
+/// tiles — integer accumulation is exact, so they agree bit-for-bit.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nl = n - n % LANES_I8;
+    let mut acc = [0i32; LANES_I8];
+    let mut i = 0;
+    while i < nl {
+        let (av, bv) = (&a[i..i + LANES_I8], &b[i..i + LANES_I8]);
+        for l in 0..LANES_I8 {
+            acc[l] += av[l] as i32 * bv[l] as i32;
+        }
+        i += LANES_I8;
+    }
+    let mut s: i32 = acc.iter().sum();
+    for j in nl..n {
+        s += a[j] as i32 * b[j] as i32;
+    }
+    s
+}
+
+/// `NR` widening i8 dots sharing each activation-chunk load.
+#[inline]
+fn dot_nr_x1_i8(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES_I8;
+    let mut acc = [[0i32; LANES_I8]; NR];
+    let mut k = 0;
+    while k < nl {
+        let xv = &x[k..k + LANES_I8];
+        for r in 0..NR {
+            let wv = &w[r * cols + k..r * cols + k + LANES_I8];
+            for l in 0..LANES_I8 {
+                acc[r][l] += wv[l] as i32 * xv[l] as i32;
+            }
+        }
+        k += LANES_I8;
+    }
+    let mut out = [0i32; NR];
+    for r in 0..NR {
+        let mut s: i32 = acc[r].iter().sum();
+        for j in nl..cols {
+            s += w[r * cols + j] as i32 * x[j] as i32;
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// Register-blocked i8 GEMM over a strided output window:
+/// `y[i*y_stride + y0 + r] = dot_i8(w_row_r, xq_token_i) as f32 *
+/// scales[i]` — the per-token scale carries the activation absmax and
+/// the ternary gamma.  `NR × 1` blocking only (no `MC` token tile): the
+/// 16-lane i32 accumulators per row already saturate the register file
+/// (see module docs); the decoded sign block is small enough to stay
+/// L1-resident across the token loop regardless.
+#[allow(clippy::too_many_arguments)] // see gemm_f32_strided
+pub fn gemm_i8_strided(
+    w: &[i8],
+    nrows: usize,
+    cols: usize,
+    xq: &[i8],
+    t: usize,
+    scales: &[f32],
+    y: &mut [f32],
+    y0: usize,
+    y_stride: usize,
+) {
+    debug_assert_eq!(w.len(), nrows * cols);
+    debug_assert_eq!(xq.len(), t * cols);
+    debug_assert_eq!(scales.len(), t);
+    let mut r = 0;
+    while r + NR <= nrows {
+        let wblk = &w[r * cols..(r + NR) * cols];
+        for i in 0..t {
+            let lanes = dot_nr_x1_i8(wblk, cols, &xq[i * cols..(i + 1) * cols]);
+            let dst = &mut y[i * y_stride + y0 + r..][..NR];
+            for (d, &v) in dst.iter_mut().zip(&lanes) {
+                *d = v as f32 * scales[i];
+            }
+        }
+        r += NR;
+    }
+    while r < nrows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        for i in 0..t {
+            y[i * y_stride + y0 + r] =
+                dot_i8(wr, &xq[i * cols..(i + 1) * cols]) as f32 * scales[i];
+        }
+        r += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage-outer blocked butterfly
+// ---------------------------------------------------------------------------
+
+/// Stage-outer blocked butterfly apply over a row-major `(rows, d)`
+/// batch, `rows = x.len() / d`.
+///
+/// Per block of up to [`RB`] rows: transpose into a column-major scratch
+/// (`scratch[c*rb + row]`), run every stage over the whole block, and
+/// transpose back.  Stage `l`'s (cos, sin) slice is read once per block
+/// and stays L1-resident across its pair loop; each pair's rotation is
+/// two FMAs over `rb` contiguous lanes — vectorized across rows at every
+/// stride.  `transpose = true` runs the stages in reverse order with
+/// negated sines (`B^T`), exactly like the per-row transpose apply.
+///
+/// Bit-identical to applying [`crate::butterfly::Butterfly::apply`] per
+/// row: stages are barriers, pairs within a stage touch disjoint
+/// coordinates, and each element goes through the same two-FMA chain
+/// with the same `(c, s)` — loop order cannot change a bit.  Pinned by
+/// the property tests in `rust/tests/kernels.rs` and the butterfly unit
+/// tests.
+///
+/// `scratch` is resized to at most `d * RB` and retained by the caller
+/// (working-set bytes; zero steady-state allocation).
+pub fn butterfly_apply_blocked(
+    cs: &[(f32, f32)],
+    d: usize,
+    depth: usize,
+    transpose: bool,
+    x: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len() % d, 0);
+    debug_assert_eq!(cs.len(), depth * (d / 2));
+    let rows = x.len() / d;
+    let half = d / 2;
+    scratch.resize(d * RB.min(rows), 0.0);
+    let mut done = 0;
+    while done < rows {
+        let rb = (rows - done).min(RB);
+        let blk = &mut x[done * d..(done + rb) * d];
+        // transpose in: scratch[c*rb + r] = blk[r*d + c]
+        for (r, row) in blk.chunks_exact(d).enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                scratch[c * rb + r] = v;
+            }
+        }
+        for li in 0..depth {
+            let l = if transpose { depth - 1 - li } else { li };
+            let stride = 1usize << l;
+            let table = &cs[l * half..(l + 1) * half];
+            let mut j = 0;
+            let mut base = 0;
+            while base < d {
+                for off in 0..stride {
+                    let lo = (base + off) * rb;
+                    let hi = lo + stride * rb;
+                    let (c, s0) = table[j];
+                    let s = if transpose { -s0 } else { s0 };
+                    let (head, tail) = scratch.split_at_mut(hi);
+                    let lo_lane = &mut head[lo..lo + rb];
+                    let hi_lane = &mut tail[..rb];
+                    for (pa, pb) in lo_lane.iter_mut().zip(hi_lane.iter_mut()) {
+                        let (a, b) = (*pa, *pb);
+                        *pa = c * a - s * b;
+                        *pb = s * a + c * b;
+                    }
+                    j += 1;
+                }
+                base += 2 * stride;
+            }
+        }
+        // transpose out
+        for (r, row) in blk.chunks_exact_mut(d).enumerate() {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = scratch[c * rb + r];
+            }
+        }
+        done += rb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{dot_f32, Rng};
+
+    fn vecs(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(1.0)).collect()
+    }
+
+    #[test]
+    fn dot_tiles_bit_identical_to_dot_f32() {
+        for cols in [1usize, 7, 8, 9, 64, 200, 513] {
+            let w = vecs(NR * cols, cols as u64);
+            let x0 = vecs(cols, cols as u64 + 100);
+            let x1 = vecs(cols, cols as u64 + 200);
+            let one = dot_nr_x1(&w, cols, &x0);
+            let two = dot_nr_x2(&w, cols, &x0, &x1);
+            for r in 0..NR {
+                let want0 = dot_f32(&w[r * cols..(r + 1) * cols], &x0);
+                let want1 = dot_f32(&w[r * cols..(r + 1) * cols], &x1);
+                assert_eq!(one[r], want0, "x1 tile cols={cols} r={r}");
+                assert_eq!(two[0][r], want0, "x2 tile cols={cols} r={r}");
+                assert_eq!(two[1][r], want1, "x2 tile cols={cols} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_f32_matches_per_dot_loop_all_tail_shapes() {
+        // rows exercise full tiles + 1..NR-1 tails; t exercises MC tails
+        for (rows, cols) in [(1usize, 16usize), (3, 24), (4, 33), (9, 64), (13, 100)] {
+            for t in [1usize, 2, 3, 5] {
+                let w = vecs(rows * cols, (rows * cols) as u64);
+                let x = vecs(t * cols, (t * cols) as u64 + 7);
+                let gamma = 0.37f32;
+                let mut y = vec![0.0f32; t * rows];
+                gemm_f32(&w, rows, cols, &x, t, gamma, &mut y);
+                for i in 0..t {
+                    for r in 0..rows {
+                        let want =
+                            dot_f32(&w[r * cols..(r + 1) * cols], &x[i * cols..(i + 1) * cols])
+                                * gamma;
+                        assert_eq!(y[i * rows + r], want, "({rows},{cols}) t={t} i={i} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_window_only_touches_its_rows() {
+        let (rows, cols, t) = (6usize, 32usize, 3usize);
+        let w = vecs(rows * cols, 1);
+        let x = vecs(t * cols, 2);
+        let full_stride = rows + 4; // wider output with guard columns
+        let mut y = vec![f32::NAN; t * full_stride];
+        // fill the window in two calls, split mid-tile
+        gemm_f32_strided(&w[..4 * cols], 4, cols, &x, t, 1.0, &mut y, 0, full_stride);
+        gemm_f32_strided(&w[4 * cols..], 2, cols, &x, t, 1.0, &mut y, 4, full_stride);
+        for i in 0..t {
+            for r in 0..rows {
+                let want = dot_f32(&w[r * cols..(r + 1) * cols], &x[i * cols..(i + 1) * cols]);
+                assert_eq!(y[i * full_stride + r], want, "split tile i={i} r={r}");
+            }
+            for g in rows..full_stride {
+                assert!(y[i * full_stride + g].is_nan(), "guard column clobbered");
+            }
+        }
+    }
+
+    #[test]
+    fn split_position_does_not_change_bits() {
+        // the property the worker-range down-projection sharding relies
+        // on: any row-range split yields the same bits as one call
+        let (rows, cols, t) = (11usize, 48usize, 4usize);
+        let w = vecs(rows * cols, 3);
+        let x = vecs(t * cols, 4);
+        let mut whole = vec![0.0f32; t * rows];
+        gemm_f32_strided(&w, rows, cols, &x, t, 1.0, &mut whole, 0, rows);
+        for split in 1..rows {
+            let mut parts = vec![0.0f32; t * rows];
+            gemm_f32_strided(&w[..split * cols], split, cols, &x, t, 1.0, &mut parts, 0, rows);
+            gemm_f32_strided(
+                &w[split * cols..],
+                rows - split,
+                cols,
+                &x,
+                t,
+                1.0,
+                &mut parts,
+                split,
+                rows,
+            );
+            assert_eq!(parts, whole, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn gemm_i8_matches_per_dot_loop() {
+        let mut rng = Rng::new(9);
+        for (rows, cols, t) in [(5usize, 40usize, 3usize), (8, 16, 1), (3, 100, 4)] {
+            let w: Vec<i8> = (0..rows * cols)
+                .map(|_| (rng.normal_f32(1.0) as i32).clamp(-1, 1) as i8)
+                .collect();
+            let xq: Vec<i8> = (0..t * cols)
+                .map(|_| (rng.normal_f32(40.0) as i32).clamp(-127, 127) as i8)
+                .collect();
+            let scales: Vec<f32> = (0..t).map(|i| 0.01 + i as f32 * 0.003).collect();
+            let mut y = vec![0.0f32; t * rows];
+            gemm_i8_strided(&w, rows, cols, &xq, t, &scales, &mut y, 0, rows);
+            for i in 0..t {
+                for r in 0..rows {
+                    let want = dot_i8(&w[r * cols..(r + 1) * cols], &xq[i * cols..(i + 1) * cols])
+                        as f32
+                        * scales[i];
+                    assert_eq!(y[i * rows + r], want, "({rows},{cols},{t}) i={i} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_scratch_reuse_does_not_reallocate() {
+        let mut s = TernaryScratch::default();
+        s.signs_f32.resize(NR * 64, 0.0);
+        s.xq.resize(8 * 64, 0);
+        s.scales.resize(8, 0.0);
+        let caps = (s.signs_f32.capacity(), s.xq.capacity(), s.scales.capacity());
+        // steady state: shrink then grow back within capacity
+        for t in [8usize, 3, 1, 8] {
+            s.signs_f32.resize(NR * 64, 0.0);
+            s.xq.resize(t * 64, 0);
+            s.scales.resize(t, 0.0);
+        }
+        assert_eq!(
+            caps,
+            (s.signs_f32.capacity(), s.xq.capacity(), s.scales.capacity()),
+            "capacities must be stable across steady-state resizes"
+        );
+    }
+}

@@ -48,6 +48,7 @@ pub mod devices;
 pub mod energy;
 pub mod expertcache;
 pub mod jsonx;
+pub mod kernels;
 pub mod memmodel;
 pub mod moe;
 pub mod parallel;

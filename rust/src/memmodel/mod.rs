@@ -22,6 +22,14 @@
 //! all blocks, retained between steps) is **working-set** memory too —
 //! it scales with batch size and worker schedule, not with expert
 //! count, and never counts toward Table-1 identity bytes.
+//!
+//! Kernel scratch (`crate::kernels`, §Perf iteration 6) follows the same
+//! rule: the blocked GEMMs' decode/quantize buffers
+//! (`kernels::TernaryScratch`, ≈ `NR·cols·5 + t·(cols + 4)` B per
+//! dispatch block) and the blocked butterfly's transpose block
+//! (≈ `d·RB·4` B) are **working-set** bytes — a constant-per-block tile
+//! sized by the micro-kernel's register/L1 blocking, independent of
+//! expert count, never Table-1 identity bytes.
 //! [`cached_butterfly_bytes`] is the Fig.-3 companion curve: identity
 //! bytes (Prop. 1) plus `R` resident working sets, interpolating between
 //! the pure sub-linear point (`R = 0`, the paper's 150× headline) and a

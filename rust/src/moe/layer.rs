@@ -14,6 +14,7 @@ use super::gating::GateNetwork;
 use super::gelu;
 use crate::butterfly::Butterfly;
 use crate::expertcache::{ExpertCacheConfig, ExpertResidencyCache};
+use crate::kernels::{self, TernaryScratch};
 use crate::parallel::{chunk_ranges, DisjointSliceMut, WorkerPool};
 use crate::quant::{ternary_quantize, TernaryQuant};
 use crate::tensor::store::TensorStore;
@@ -33,13 +34,14 @@ pub trait MoeLayer: Send + Sync {
 
     /// Full FFN block: experts -> GELU -> shared down projection.
     ///
-    /// With a [`worker_pool`](Self::worker_pool) attached, the dense down
-    /// projection row-shards across the pool: every `y[i*d + r]` is
-    /// computed by exactly one task (a full `dot_f32` over the token's
-    /// activations), so the result is bit-identical to the sequential
-    /// loop for any worker count — no accumulation crosses a task
-    /// boundary.  Row-sharding (over `d`, not tokens) keeps single-token
-    /// decode steps parallel too.
+    /// The down projection runs through the register-blocked micro-kernel
+    /// tiles ([`crate::kernels`]) over row ranges — sequential uses one
+    /// range, a [`worker_pool`](Self::worker_pool) shards `0..d_model`
+    /// across tasks.  Every `y[i*d + r]` is computed by exactly one tile
+    /// with the exact `dot_f32` association, so range boundaries (and
+    /// therefore the worker count) never change a bit — no accumulation
+    /// crosses a task boundary.  Row-sharding (over `d`, not tokens)
+    /// keeps single-token decode steps parallel too.
     fn forward(&self, x: &[f32], t: usize, y: &mut [f32]) -> Vec<f64> {
         let (dff, d) = (self.d_ff(), self.d_model());
         let mut h = vec![0.0f32; t * dff];
@@ -56,27 +58,12 @@ pub trait MoeLayer: Send + Sync {
                 let h = &h;
                 pool.run(ranges.len(), &|w| {
                     let (lo, hi) = ranges[w];
-                    for r in lo..hi {
-                        let wr = wd.row(r);
-                        for i in 0..t {
-                            let hi_row = &h[i * dff..(i + 1) * dff];
-                            // SAFETY: row ranges are disjoint across
-                            // tasks, so index i*d + r is written once.
-                            unsafe {
-                                *ysh.index_mut(i * d + r) = crate::util::dot_f32(wr, hi_row);
-                            }
-                        }
-                    }
+                    down_project_rows(wd, h, t, d, dff, lo, hi, &ysh);
                 });
             }
             _ => {
-                for i in 0..t {
-                    let hi = &h[i * dff..(i + 1) * dff];
-                    let yi = &mut y[i * d..(i + 1) * d];
-                    for r in 0..d {
-                        yi[r] = crate::util::dot_f32(wd.row(r), hi);
-                    }
-                }
+                let ysh = DisjointSliceMut::new(y);
+                down_project_rows(wd, &h, t, d, dff, 0, d, &ysh);
             }
         }
         loads
@@ -109,20 +96,63 @@ pub trait MoeLayer: Send + Sync {
     }
 }
 
-/// Per-dispatch-block gather scratch: one expert's contiguous token
-/// block (`xg`: gathered inputs, `hg`: that block's expert outputs).
+/// Per-dispatch-block scratch: one expert's contiguous token block
+/// (`xg`: gathered inputs, `hg`: that block's expert outputs) plus the
+/// kernel scratch its synthesis task owns exclusively — the ternary
+/// decode/quantize buffers ([`TernaryScratch`]) and the blocked
+/// butterfly's transpose block (`bfly`).
 ///
 /// This replaces the old single thread-local `(xg, hg)` pair: the
 /// deterministic reduction needs every active expert's `hg` alive at
 /// once (phase 2 below re-reads them in ascending expert order), so the
 /// scratch is keyed by dispatch block — strictly finer than per-worker.
 /// The blocks are retained in the layer across calls, so steady-state
-/// decode still does no allocation; they are *working-set* bytes, never
+/// decode does no allocation (including inside the kernels — the
+/// `gemm_a8` `xq`/`scales`/sign buffers live here now, asserted by
+/// `rust/tests/alloc_guard.rs`); they are *working-set* bytes, never
 /// counted in `expert_bytes` (see `memmodel`).
 #[derive(Default)]
-struct ExpertBlock {
+struct DispatchBlock {
     xg: Vec<f32>,
     hg: Vec<f32>,
+    kernel: TernaryScratch,
+    bfly: Vec<f32>,
+}
+
+/// Down-projection rows `lo..hi` for all `t` tokens through the shared
+/// register-blocked GEMM schedule ([`kernels::gemm_f32_sink`]):
+/// `y[i*d + r] = dot_f32(w_down_r, h_i)`.
+///
+/// Each output carries the exact `dot_f32` association whichever tile
+/// it landed in, so any `(lo, hi)` partition of `0..d` — including the
+/// non-tile-aligned ranges `chunk_ranges` hands to worker tasks —
+/// produces the same bits as one sequential pass (pinned by
+/// `rust/tests/determinism.rs` and the kernel property tests).
+#[allow(clippy::too_many_arguments)] // shape + row-window params of the sharded kernel
+fn down_project_rows(
+    wd: &Tensor,
+    h: &[f32],
+    t: usize,
+    d: usize,
+    dff: usize,
+    lo: usize,
+    hi: usize,
+    y: &DisjointSliceMut<f32>,
+) {
+    kernels::gemm_f32_sink(
+        &wd.data[lo * dff..hi * dff],
+        hi - lo,
+        dff,
+        h,
+        t,
+        1.0,
+        lo,
+        d,
+        // SAFETY: row ranges are disjoint across tasks and the kernel
+        // writes each (token, row) index exactly once, so every flat
+        // index i*d + r (r in lo..hi) has exactly one writer.
+        |i, v| unsafe { *y.index_mut(i) = v },
+    );
 }
 
 /// Run `task(0..n)` on the pool, or inline when no pool is attached —
@@ -169,10 +199,10 @@ pub struct ButterflyMoeLayer {
     /// Optional worker pool the dispatch loop shards across
     /// (`--workers`); `None` = sequential.
     pool: Option<Arc<WorkerPool>>,
-    /// Retained dispatch-block scratch (see [`ExpertBlock`]).  `try_lock`
+    /// Retained dispatch-block scratch (see [`DispatchBlock`]).  `try_lock`
     /// on the forward path: a second concurrent forward on the same
     /// layer falls back to a fresh local set instead of contending.
-    scratch: Mutex<Vec<ExpertBlock>>,
+    scratch: Mutex<Vec<DispatchBlock>>,
     /// Test-only fault injection: the dispatch task for this expert
     /// panics (`"poisoned expert <e>"`) — exercises the pool's
     /// panic-propagation path from a real decode step.
@@ -330,7 +360,7 @@ impl MoeLayer for ButterflyMoeLayer {
     ///    active expert's tokens contiguously, rotate the whole block,
     ///    run ONE substrate GEMM (weights decoded once per expert, not
     ///    once per token — or the cache's decoded fast path), rotate
-    ///    back.  Each task owns its [`ExpertBlock`] exclusively.
+    ///    back.  Each task owns its [`DispatchBlock`] exclusively.
     /// 2. **Reduction** (parallel over token-row ranges): the weighted
     ///    scatter into `h`.
     ///
@@ -379,12 +409,12 @@ impl MoeLayer for ButterflyMoeLayer {
             Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
             Err(std::sync::TryLockError::WouldBlock) => None,
         };
-        let blocks: &mut Vec<ExpertBlock> = match guard.as_deref_mut() {
+        let blocks: &mut Vec<DispatchBlock> = match guard.as_deref_mut() {
             Some(b) => b,
             None => &mut local_blocks,
         };
         if blocks.len() < active.len() {
-            blocks.resize_with(active.len(), ExpertBlock::default);
+            blocks.resize_with(active.len(), DispatchBlock::default);
         }
         let blocks = &mut blocks[..active.len()];
         let pool = self.pool.as_deref();
@@ -407,19 +437,27 @@ impl MoeLayer for ButterflyMoeLayer {
                 for &(ti, _) in toks {
                     block.xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
                 }
-                ex.theta.apply_transpose_batch(&mut block.xg);
+                ex.theta.apply_transpose_batch_with(&mut block.xg, &mut block.bfly);
                 block.hg.resize(n * dff, 0.0);
                 // Fast path: a resident expert is served from its decoded
                 // working set — bit-identical arithmetic to the synthesis
-                // path below, with the bitplane decode hoisted out (see
-                // `expertcache` module docs for why this form and not the
-                // fully folded dense matrix).
+                // path below (both route through the same micro-kernel,
+                // see `kernels`), with the bitplane decode hoisted out
+                // (see `expertcache` module docs for why this form and
+                // not the fully folded dense matrix).  The `_with`
+                // variants reuse this block's retained kernel scratch:
+                // steady-state decode allocates nothing.
                 match cache.and_then(|c| c.lookup(e)) {
                     Some(dec) => dec.gemm(&block.xg, n, &mut block.hg),
-                    None if self.act_quant => self.substrate.gemm_a8(&block.xg, n, &mut block.hg),
-                    None => self.substrate.gemm(&block.xg, n, &mut block.hg),
+                    None if self.act_quant => {
+                        self.substrate
+                            .gemm_a8_with(&block.xg, n, &mut block.hg, &mut block.kernel)
+                    }
+                    None => self
+                        .substrate
+                        .gemm_with(&block.xg, n, &mut block.hg, &mut block.kernel),
                 }
-                ex.phi.apply_batch(&mut block.hg);
+                ex.phi.apply_batch_with(&mut block.hg, &mut block.bfly);
             };
             run_on(pool, active.len(), &synth);
         }
@@ -427,7 +465,7 @@ impl MoeLayer for ButterflyMoeLayer {
         // Phase 2 — deterministic reduction: token-row ranges partition
         // 0..t disjointly; per row, experts accumulate in ascending
         // order exactly as the sequential loop did.
-        let blocks: &[ExpertBlock] = blocks;
+        let blocks: &[DispatchBlock] = blocks;
         let parts = pool.map_or(1, WorkerPool::threads);
         let ranges = chunk_ranges(t, parts);
         {

@@ -14,7 +14,14 @@
 //!
 //! Row-major semantics match `kernels/ref.py::ternary_matmul_ref`:
 //! `y = gamma * (x @ Q^T)` with Q (n, k), x (k,) -> y (n,).
+//!
+//! Batched GEMMs route through the shared register-blocked micro-kernels
+//! in [`crate::kernels`] (§Perf iteration 6) with caller-retained decode
+//! scratch; the per-(row, token) dot loops are retained as
+//! [`BitplaneTernary::gemm_ref`] / [`BitplaneTernary::gemm_a8_ref`] for
+//! the ablation and are bit-identical to the blocked paths.
 
+use crate::kernels::{self, TernaryScratch};
 use crate::quant::TernaryQuant;
 
 /// 2-bit packed layout: code 0b00 = 0, 0b01 = +1, 0b10 = -1.
@@ -83,17 +90,35 @@ impl PackedTernary {
     }
 
     /// y = gamma * Q x  — scalar reference path (unpack on the fly).
+    ///
+    /// The interior bytes of a row always hold 4 codes, so their decode
+    /// loop is branch-free with a fixed trip count; only the final byte
+    /// of a row with `cols % 4 != 0` takes the partial-limit path
+    /// (the old version re-tested the limit for every byte).
     pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
+        let full_bytes = self.cols / 4;
+        let rem = self.cols % 4;
         for r in 0..self.rows {
             let row = &self.data[r * self.bytes_per_row..(r + 1) * self.bytes_per_row];
             let mut acc = 0.0f32;
             let mut c = 0;
-            for &byte in row {
+            for &byte in &row[..full_bytes] {
                 let mut b = byte;
-                let lim = (self.cols - c).min(4);
-                for _ in 0..lim {
+                for _ in 0..4 {
+                    match b & 0b11 {
+                        0b01 => acc += x[c],
+                        0b10 => acc -= x[c],
+                        _ => {}
+                    }
+                    b >>= 2;
+                    c += 1;
+                }
+            }
+            if rem > 0 {
+                let mut b = row[full_bytes];
+                for _ in 0..rem {
                     match b & 0b11 {
                         0b01 => acc += x[c],
                         0b10 => acc -= x[c],
@@ -234,34 +259,109 @@ impl BitplaneTernary {
         }
     }
 
+    /// Decode row `r`'s bitplanes into dense f32 signs (±1.0 / 0.0) —
+    /// the exact decode expression every GEMM path shares (and that
+    /// `expertcache::DecodedExpert` materializes once).
+    #[inline]
+    fn decode_row_f32(&self, r: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), self.cols);
+        let wpr = self.words_per_row;
+        let pr = &self.plus[r * wpr..(r + 1) * wpr];
+        let mr = &self.minus[r * wpr..(r + 1) * wpr];
+        for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+            let base = wi * 64;
+            let n = (self.cols - base).min(64);
+            let (mut p, mut m) = (pw, mw);
+            for s in dst[base..base + n].iter_mut() {
+                *s = ((p & 1) as i32 - (m & 1) as i32) as f32;
+                p >>= 1;
+                m >>= 1;
+            }
+        }
+    }
+
+    /// i8 variant of [`Self::decode_row_f32`] for the W1.58A8 path.
+    #[inline]
+    fn decode_row_i8(&self, r: usize, dst: &mut [i8]) {
+        debug_assert_eq!(dst.len(), self.cols);
+        let wpr = self.words_per_row;
+        let pr = &self.plus[r * wpr..(r + 1) * wpr];
+        let mr = &self.minus[r * wpr..(r + 1) * wpr];
+        for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
+            let base = wi * 64;
+            let n = (self.cols - base).min(64);
+            let (mut p, mut m) = (pw, mw);
+            for s in dst[base..base + n].iter_mut() {
+                *s = (p & 1) as i8 - (m & 1) as i8;
+                p >>= 1;
+                m >>= 1;
+            }
+        }
+    }
+
     /// Batched GEMM: X (t, cols) -> Y (t, rows), row-major.
     ///
-    /// §Perf iteration 2: row-outer loop decodes each weight row's signs
-    /// once into a dense scratch vector and reuses it across all `t`
-    /// tokens (the activation block stays L1/L2-resident), so the 2-bit
-    /// weight stream is read exactly once per batch — the same traffic
-    /// argument as the Pallas kernel's BlockSpec.
+    /// Allocates a fresh [`TernaryScratch`] per call; the hot path holds
+    /// one per dispatch block and calls [`Self::gemm_with`] instead.
     pub fn gemm(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        self.gemm_with(x, t, y, &mut TernaryScratch::default());
+    }
+
+    /// Register-blocked batched GEMM (§Perf iteration 6, replacing the
+    /// per-(row, token) dot loop of iteration 2, which is retained as
+    /// [`Self::gemm_ref`]): signs decode [`kernels::NR`] rows at a time
+    /// into `scratch` and the block runs through the shared
+    /// [`kernels::gemm_f32_strided`] micro-kernel, so each activation
+    /// chunk is loaded once per `NR` weight rows.  Bit-identical to
+    /// `gemm_ref` (the micro-kernel reproduces `dot_f32`'s association
+    /// exactly) and to `DecodedExpert::gemm`, which routes through the
+    /// *same* micro-kernel — the cached/uncached parity contract.
+    ///
+    /// `t == 1` delegates to the word-skipping [`Self::gemv`], exactly
+    /// as the decoded path does.  Zero steady-state allocation: the
+    /// scratch is resized in place and retained by the caller.
+    pub fn gemm_with(&self, x: &[f32], t: usize, y: &mut [f32], scratch: &mut TernaryScratch) {
         assert_eq!(x.len(), t * self.cols);
         assert_eq!(y.len(), t * self.rows);
         if t == 1 {
             return self.gemv(x, y);
         }
-        let wpr = self.words_per_row;
+        scratch.signs_f32.resize(kernels::NR * self.cols, 0.0);
+        let signs = &mut scratch.signs_f32[..];
+        let mut r = 0;
+        while r < self.rows {
+            let nr = (self.rows - r).min(kernels::NR);
+            for rr in 0..nr {
+                self.decode_row_f32(r + rr, &mut signs[rr * self.cols..(rr + 1) * self.cols]);
+            }
+            kernels::gemm_f32_strided(
+                &signs[..nr * self.cols],
+                nr,
+                self.cols,
+                x,
+                t,
+                self.gamma,
+                y,
+                r,
+                self.rows,
+            );
+            r += nr;
+        }
+    }
+
+    /// Reference batched GEMM (§Perf iteration 2): decode each weight
+    /// row once, then one `dot_f32` per (row, token).  Kept for the
+    /// old-vs-new ablation in `benches/hotpath.rs` and the bit-identity
+    /// property tests in `rust/tests/kernels.rs`.
+    pub fn gemm_ref(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), t * self.cols);
+        assert_eq!(y.len(), t * self.rows);
+        if t == 1 {
+            return self.gemv(x, y);
+        }
         let mut signs = vec![0.0f32; self.cols];
         for r in 0..self.rows {
-            let pr = &self.plus[r * wpr..(r + 1) * wpr];
-            let mr = &self.minus[r * wpr..(r + 1) * wpr];
-            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
-                let base = wi * 64;
-                let n = (self.cols - base).min(64);
-                let (mut p, mut m) = (pw, mw);
-                for s in signs[base..base + n].iter_mut() {
-                    *s = ((p & 1) as i32 - (m & 1) as i32) as f32;
-                    p >>= 1;
-                    m >>= 1;
-                }
-            }
+            self.decode_row_f32(r, &mut signs);
             for i in 0..t {
                 let xi = &x[i * self.cols..(i + 1) * self.cols];
                 y[i * self.rows + r] = crate::util::dot_f32(&signs, xi) * self.gamma;
@@ -280,11 +380,63 @@ impl BitplaneTernary {
     /// measured in tests) — the same order as the ternary substrate's
     /// own error, and the deployment-standard choice (W1.58A8).
     pub fn gemm_a8(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        self.gemm_a8_with(x, t, y, &mut TernaryScratch::default());
+    }
+
+    /// [`Self::gemm_a8`] with caller-retained scratch: the per-call
+    /// `xq`/`scales`/sign-buffer allocations are hoisted into `scratch`
+    /// (resized in place), and the inner loops run through the shared
+    /// register-blocked [`kernels::gemm_i8_strided`] micro-kernel.
+    /// Bit-identical to [`Self::gemm_a8_ref`]: i32 accumulation is
+    /// exact, and the quantization arithmetic is unchanged.
+    pub fn gemm_a8_with(&self, x: &[f32], t: usize, y: &mut [f32], scratch: &mut TernaryScratch) {
         assert_eq!(x.len(), t * self.cols);
         assert_eq!(y.len(), t * self.rows);
         let cols = self.cols;
-        let wpr = self.words_per_row;
         // quantize activations: per-token absmax -> i8 in [-127, 127]
+        scratch.xq.resize(t * cols, 0);
+        scratch.scales.resize(t, 0.0);
+        let (xq, scales) = (&mut scratch.xq[..t * cols], &mut scratch.scales[..t]);
+        for i in 0..t {
+            let xi = &x[i * cols..(i + 1) * cols];
+            let amax = xi.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+            let inv = 127.0 / amax;
+            scales[i] = amax / 127.0 * self.gamma;
+            for (q, &v) in xq[i * cols..(i + 1) * cols].iter_mut().zip(xi) {
+                *q = (v * inv).round() as i8;
+            }
+        }
+        scratch.signs_i8.resize(kernels::NR * cols, 0);
+        let signs = &mut scratch.signs_i8[..];
+        let mut r = 0;
+        while r < self.rows {
+            let nr = (self.rows - r).min(kernels::NR);
+            for rr in 0..nr {
+                self.decode_row_i8(r + rr, &mut signs[rr * cols..(rr + 1) * cols]);
+            }
+            kernels::gemm_i8_strided(
+                &signs[..nr * cols],
+                nr,
+                cols,
+                xq,
+                t,
+                scales,
+                y,
+                r,
+                self.rows,
+            );
+            r += nr;
+        }
+    }
+
+    /// Reference W1.58A8 GEMM (§Perf iteration 5's original loop order):
+    /// decode each row once, one [`kernels::dot_i8`] per (row, token),
+    /// per-call buffers.  Kept for the ablation and the bit-identity
+    /// property tests.
+    pub fn gemm_a8_ref(&self, x: &[f32], t: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), t * self.cols);
+        assert_eq!(y.len(), t * self.rows);
+        let cols = self.cols;
         let mut xq = vec![0i8; t * cols];
         let mut scales = vec![0.0f32; t];
         for i in 0..t {
@@ -298,46 +450,13 @@ impl BitplaneTernary {
         }
         let mut signs = vec![0i8; cols];
         for r in 0..self.rows {
-            let pr = &self.plus[r * wpr..(r + 1) * wpr];
-            let mr = &self.minus[r * wpr..(r + 1) * wpr];
-            for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
-                let base = wi * 64;
-                let n = (cols - base).min(64);
-                let (mut p, mut m) = (pw, mw);
-                for s in signs[base..base + n].iter_mut() {
-                    *s = (p & 1) as i8 - (m & 1) as i8;
-                    p >>= 1;
-                    m >>= 1;
-                }
-            }
+            self.decode_row_i8(r, &mut signs);
             for i in 0..t {
                 let qi = &xq[i * cols..(i + 1) * cols];
-                y[i * self.rows + r] = dot_i8(&signs, qi) as f32 * scales[i];
+                y[i * self.rows + r] = kernels::dot_i8(&signs, qi) as f32 * scales[i];
             }
         }
     }
-}
-
-/// Widening i8 dot with 16 lanes of i32 accumulation (vectorizes).
-#[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let n16 = n - n % 16;
-    let mut acc = [0i32; 16];
-    let mut i = 0;
-    while i < n16 {
-        let (av, bv) = (&a[i..i + 16], &b[i..i + 16]);
-        for l in 0..16 {
-            acc[l] += av[l] as i32 * bv[l] as i32;
-        }
-        i += 16;
-    }
-    let mut s: i32 = acc.iter().sum();
-    for j in n16..n {
-        s += a[j] as i32 * b[j] as i32;
-    }
-    s
 }
 
 /// Dense reference: y = gamma * Q x from an i8 matrix (tests).
@@ -440,6 +559,29 @@ mod tests {
         let scale = exact.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         for (a, b) in approx.iter().zip(&exact) {
             assert!((a - b).abs() / scale < 0.01, "{a} vs {b}");
+        }
+    }
+
+    // NOTE: blocked-vs-reference bit-identity (gemm_with vs gemm_ref,
+    // gemm_a8_with vs gemm_a8_ref) is property-tested across shapes in
+    // rust/tests/kernels.rs — one suite, no duplicated corpora.
+
+    #[test]
+    fn packed_gemv_covers_every_byte_tail_remainder() {
+        // cols % 4 ∈ {0, 1, 2, 3}: the split interior/partial-byte loops
+        // must agree with the dense reference at every remainder
+        for (cols, seed) in [(64usize, 60u64), (65, 61), (66, 62), (67, 63)] {
+            let q = random_quant(6, cols, seed);
+            let p = PackedTernary::from_quant(&q);
+            let mut rng = Rng::new(seed + 10);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(1.0)).collect();
+            let mut y = vec![0.0; 6];
+            let mut want = vec![0.0; 6];
+            p.gemv(&x, &mut y);
+            dense_ternary_gemv(&q.q, 6, cols, q.gamma, &x, &mut want);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "cols={cols}: {a} vs {b}");
+            }
         }
     }
 

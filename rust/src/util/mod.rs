@@ -54,7 +54,12 @@ pub fn log2_exact(n: usize) -> u32 {
 /// A naive `acc += a[i]*b[i]` reduction is a serial dependency chain the
 /// compiler may not reassociate (float addition isn't associative);
 /// splitting into 8 lanes exposes ILP/SIMD and measures ~4-6x faster on
-/// this testbed.  All dense dot products in the crate route through here.
+/// this testbed.  All dense dot products in the crate route through here
+/// or through the register-blocked tiles in [`crate::kernels`], which
+/// reproduce **this exact lane association** (same 8-lane accumulators,
+/// same reduction tree, same scalar tail) — that shared association is
+/// the crate's bitwise-parity contract, so any change here must be
+/// mirrored there (the kernel unit tests pin the equivalence).
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

@@ -1,0 +1,84 @@
+//! Zero-steady-state-allocation guard for the blocked kernel suite.
+//!
+//! The §Perf-iteration-6 scratch hoist moved every per-call allocation
+//! of the hot-path kernels (`gemm`'s decoded sign block, `gemm_a8`'s
+//! `xq`/`scales`/sign buffers, the blocked butterfly's transpose block)
+//! into caller-retained scratch.  This binary wraps the global allocator
+//! in a counting shim and asserts that, once the scratch has seen its
+//! working shape, repeated kernel calls perform **zero** allocations —
+//! including after the token count shrinks and grows back (resize stays
+//! within capacity).
+//!
+//! Lives in its own integration-test binary: `#[global_allocator]` is
+//! process-wide and the counter must not see other tests' allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use butterfly_moe::butterfly::Butterfly;
+use butterfly_moe::expertcache::DecodedExpert;
+use butterfly_moe::kernels::TernaryScratch;
+use butterfly_moe::testutil;
+use butterfly_moe::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_kernel_calls_do_not_allocate() {
+    const ROWS: usize = 48;
+    const COLS: usize = 128;
+    const T_MAX: usize = 8;
+    let sub = testutil::random_substrate(ROWS, COLS, 1);
+    let dec = DecodedExpert::materialize(&sub);
+    let mut rng = Rng::new(2);
+    let bf = Butterfly::random(COLS, Butterfly::max_depth(COLS), 0.5, &mut rng);
+    let x = testutil::normal_vec(T_MAX * COLS, 3);
+    let mut xb = testutil::normal_vec(T_MAX * COLS, 4);
+    let mut y = vec![0.0f32; T_MAX * ROWS];
+    let mut scratch = TernaryScratch::default();
+    let mut bscratch = Vec::new();
+
+    // warmup: every scratch vector reaches its working shape once
+    sub.gemm_with(&x, T_MAX, &mut y, &mut scratch);
+    sub.gemm_a8_with(&x, T_MAX, &mut y, &mut scratch);
+    dec.gemm(&x, T_MAX, &mut y);
+    bf.apply_batch_with(&mut xb, &mut bscratch);
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    // steady state: shrink t, grow back, mix every kernel + transpose
+    for t in [T_MAX, 5, 1, 3, T_MAX] {
+        sub.gemm_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
+        sub.gemm_a8_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
+        dec.gemm(&x[..t * COLS], t, &mut y[..t * ROWS]);
+    }
+    bf.apply_batch_with(&mut xb, &mut bscratch);
+    bf.apply_transpose_batch_with(&mut xb, &mut bscratch);
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state kernel calls must not allocate ({} allocations observed)",
+        after - before
+    );
+}
