@@ -12,17 +12,24 @@
 //!     model, per device).
 //!
 //! Run: `cargo run --release --example edge_deployment --
-//!       [--experts 256] [--expert-cache-mb 16] [--workers 4]`
+//!       [--experts 256] [--expert-cache-mb 16] [--workers 4]
+//!       [--model model.bmoe] [--load mmap|heap]`
 //! (accepts and ignores `--native`: this example is always native;
 //! `--workers 0`/default = all cores, `--workers 1` = sequential —
-//! outputs are bit-identical either way)
+//! outputs are bit-identical either way.  With `--model`, the layer
+//! stack is mmap-loaded from a packed .bmoe artifact — the real edge
+//! deployment flow: weights live on disk + page cache, and concurrent
+//! processes share the substrate pages.)
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use butterfly_moe::artifact::{LoadMode, ModelArtifact};
 use butterfly_moe::cli::Args;
 use butterfly_moe::coordinator::{
-    warm, Coordinator, GenerateRequest, NativeMoeBackend, SamplingParams, SchedulerConfig,
+    warm, Coordinator, GenerateRequest, NativeLmBackend, NativeMoeBackend, SamplingParams,
+    SchedulerConfig,
 };
 use butterfly_moe::devices::ALL_DEVICES;
 use butterfly_moe::energy::{butterfly_moe_energy, standard_moe_energy};
@@ -34,7 +41,7 @@ use butterfly_moe::util::{human_bytes, Rng, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let n_experts: usize = args.flag_parse("experts")?.unwrap_or(256);
+    let mut n_experts: usize = args.flag_parse("experts")?.unwrap_or(256);
     let cache_mb: f64 = args.flag_parse("expert-cache-mb")?.unwrap_or(0.0);
     let shape = LayerShape::paper();
 
@@ -56,25 +63,59 @@ fn main() -> anyhow::Result<()> {
 
     // ------------------------------------------------------------------
     // Instantiate a big orbit family for real (this is the point: 256
-    // experts in a few MB — standard MoE would need 1 GB here)
+    // experts in a few MB — standard MoE would need 1 GB here), or
+    // mmap-load a packed model artifact (the on-disk deployment flow)
     // ------------------------------------------------------------------
-    println!("\n== instantiating {n_experts} experts on this machine ==");
-    let mut rng = Rng::new(0xED6E);
-    let sw = Stopwatch::start();
-    let mut layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
     let workers =
         butterfly_moe::parallel::resolve_workers(args.flag_parse("workers")?.unwrap_or(0));
-    layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
-    println!("  hot-path workers: {workers} (outputs are worker-count invariant)");
-    let cache = (cache_mb > 0.0)
-        .then(|| layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
-    let layer = Arc::new(layer);
+    let pool = Arc::new(butterfly_moe::parallel::WorkerPool::new(workers));
+    let mut rng = Rng::new(0xED6E);
+    // shape of the layer actually measured below: the paper shape for
+    // the synthetic build, the manifest's shape for a loaded artifact
+    let mut lshape = shape;
+    let (layer, cache, loaded): (Arc<dyn MoeLayer>, _, Option<Arc<NativeLmBackend>>) =
+        if let Some(model_path) = args.flag("model") {
+            let mode = LoadMode::parse(&args.flag_or("load", "mmap"))?;
+            let sw = Stopwatch::start();
+            let artifact = ModelArtifact::load(Path::new(model_path), mode)?;
+            let cache_bytes = (cache_mb * 1048576.0) as usize;
+            let backend =
+                Arc::new(NativeLmBackend::from_artifact(&artifact, 8, Some(pool), cache_bytes)?);
+            n_experts = artifact.manifest.n_experts;
+            lshape = LayerShape {
+                d_model: artifact.manifest.d_model,
+                d_ff: artifact.manifest.d_ff,
+            };
+            let (borrowed, copied) = artifact.zero_copy_stats();
+            println!("\n== loading {model_path} on this machine ==");
+            println!(
+                "  {} layers x {n_experts} experts, {} on disk; {} load in {:.1} ms \
+                 ({borrowed} tensors zero-copy, {copied} copied)",
+                artifact.manifest.n_layers,
+                human_bytes(artifact.file_bytes() as f64),
+                mode.name(),
+                sw.millis(),
+            );
+            println!("  hot-path workers: {workers} (outputs are worker-count invariant)");
+            let first = backend.layers()[0].clone();
+            let cache = first.expert_cache().cloned();
+            (first, cache, Some(backend))
+        } else {
+            println!("\n== instantiating {n_experts} experts on this machine ==");
+            let sw = Stopwatch::start();
+            let mut layer = ButterflyMoeLayer::random(512, 2048, n_experts, 2, None, &mut rng);
+            layer.attach_worker_pool(pool);
+            println!("  hot-path workers: {workers} (outputs are worker-count invariant)");
+            let cache = (cache_mb > 0.0)
+                .then(|| layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(cache_mb)));
+            println!("  built in {:.2}s", sw.secs());
+            (Arc::new(layer) as Arc<dyn MoeLayer>, cache, None)
+        };
     println!(
-        "  built in {:.2}s; expert storage {} (paper formula {}), vs standard {}",
-        sw.secs(),
+        "  expert storage {} (Prop.-1 formula {}), vs standard {}",
         human_bytes(layer.expert_bytes() as f64),
-        human_bytes(butterfly_bytes(n_experts, shape)),
-        human_bytes(Method::StandardMoe.bytes(n_experts, shape)),
+        human_bytes(butterfly_bytes(n_experts, lshape)),
+        human_bytes(Method::StandardMoe.bytes(n_experts, lshape)),
     );
     if let Some(c) = &cache {
         anyhow::ensure!(
@@ -88,14 +129,15 @@ fn main() -> anyhow::Result<()> {
             human_bytes(c.budget_bytes() as f64),
             c.capacity_experts(),
             human_bytes(c.entry_bytes() as f64),
-            human_bytes(cached_butterfly_bytes(n_experts, c.capacity_experts(), shape)),
+            human_bytes(cached_butterfly_bytes(n_experts, c.capacity_experts(), lshape)),
         );
     }
 
-    // per-token latency of the Alg.-1 hot path
+    // per-token latency of the Alg.-1 hot path (layer 0 of the stack)
     let t = 16;
-    let x = Tensor::rand_normal(&[t, 512], 1.0, &mut rng);
-    let mut h = vec![0.0f32; t * 2048];
+    let (d, dff) = (layer.d_model(), layer.d_ff());
+    let x = Tensor::rand_normal(&[t, d], 1.0, &mut rng);
+    let mut h = vec![0.0f32; t * dff];
     // warmup + measure (cache cold: this is the pure synthesis path)
     layer.experts_forward(&x.data, t, &mut h);
     let sw = Stopwatch::start();
@@ -138,12 +180,16 @@ fn main() -> anyhow::Result<()> {
     // continuous-batching coordinator, streaming multi-token completions
     // ------------------------------------------------------------------
     println!("\n== generation sessions over the native engine ==");
-    let backend = Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 8));
+    let backend = match loaded {
+        Some(b) => b, // the full multi-layer stack from the artifact
+        None => Arc::new(NativeMoeBackend::new(layer.clone(), 512, 32, 8)),
+    };
+    let vocab = butterfly_moe::coordinator::Backend::vocab(backend.as_ref());
     warm(backend.as_ref())?; // pre-materializes the cache working set too
     let coord = Coordinator::start(backend, SchedulerConfig::new(8, Duration::from_millis(1)));
     let rxs: Vec<_> = (0..6)
         .map(|i| {
-            let prompt: Vec<i32> = (0..6).map(|_| rng.below(512) as i32).collect();
+            let prompt: Vec<i32> = (0..6).map(|_| rng.below(vocab) as i32).collect();
             let req = if i % 2 == 0 {
                 GenerateRequest::greedy(prompt, 16)
             } else {
@@ -200,8 +246,8 @@ fn main() -> anyhow::Result<()> {
     // Energy per inference on each device's DRAM
     // ------------------------------------------------------------------
     println!("\n== energy per inference (top-2 of {n_experts} experts) ==");
-    let std_e = standard_moe_energy(n_experts, 2, shape);
-    let bf_e = butterfly_moe_energy(n_experts, 2, shape);
+    let std_e = standard_moe_energy(n_experts, 2, lshape);
+    let bf_e = butterfly_moe_energy(n_experts, 2, lshape);
     println!(
         "  standard: {:.1} µJ (dram {:.1} + compute {:.1})",
         std_e.total_nj() / 1e3,

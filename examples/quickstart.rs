@@ -2,13 +2,16 @@
 //!
 //!   1. memory math — why butterfly orbits beat dense experts (Prop. 1/2)
 //!   2. the native edge engine — build a layer, route a batch
-//!   3. the AOT path — load the jax-compiled graph and cross-check it
+//!   3. model artifacts — pack a multi-layer model, mmap it back,
+//!      check bitwise parity (the `bmoe pack-model` / `serve --model` flow)
+//!   4. the AOT path — load the jax-compiled graph and cross-check it
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (Step 3 is skipped politely if `make artifacts` hasn't been run.)
+//! (Step 4 is skipped politely if `make artifacts` hasn't been run.)
 
 use std::path::Path;
 
+use butterfly_moe::artifact::{synthesize, LoadMode, Mmap, ModelArtifact, SynthSpec};
 use butterfly_moe::memmodel::{butterfly_bytes, LayerShape, Method};
 use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
 use butterfly_moe::runtime::{Engine, Value};
@@ -52,9 +55,55 @@ fn main() -> anyhow::Result<()> {
     println!("  y[0][..4] = {:?}", &y[..4]);
 
     // ------------------------------------------------------------------
-    // 3. AOT path: the jax graph (with Pallas kernels) via PJRT
+    // 3. Model artifacts: pack -> mmap load -> bitwise parity
     // ------------------------------------------------------------------
-    println!("\n== 3. AOT artifact execution ==");
+    println!("\n== 3. model artifacts (pack-model / serve --model) ==");
+    let spec = SynthSpec {
+        d_model: 128,
+        d_ff: 512,
+        n_experts: 8,
+        top_k: 2,
+        n_layers: 2,
+        vocab: 512,
+        seq_len: 32,
+        depth: None,
+        seed: 42,
+    };
+    let model = synthesize(&spec);
+    let dir = std::env::temp_dir().join("bmoe_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("quickstart.bmoe");
+    let stats = model.pack(&path)?;
+    let mode = if Mmap::supported() { LoadMode::Mmap } else { LoadMode::Heap };
+    let artifact = ModelArtifact::load(&path, mode)?;
+    let loaded = artifact.build_layers()?;
+    // parity: the loaded stack performs bit-identical arithmetic to the
+    // in-memory model it was packed from
+    let xq = Tensor::rand_normal(&[4, 128], 1.0, &mut rng);
+    let mut y_mem = vec![0.0f32; 4 * 128];
+    let mut y_loaded = vec![0.0f32; 4 * 128];
+    model.layers[0].forward(&xq.data, 4, &mut y_mem);
+    loaded[0].forward(&xq.data, 4, &mut y_loaded);
+    assert_eq!(y_mem, y_loaded, "loaded model must be bit-identical");
+    let (borrowed, copied) = artifact.zero_copy_stats();
+    println!(
+        "  packed {} layers into {} ({} in {} tensors, {} pads)",
+        spec.n_layers,
+        path.display(),
+        human_bytes(stats.file_bytes as f64),
+        stats.tensors,
+        stats.pads,
+    );
+    println!(
+        "  {} load: {borrowed} tensors zero-copy, {copied} copied; \
+         forward parity vs in-memory model: bitwise ✓",
+        mode.name()
+    );
+
+    // ------------------------------------------------------------------
+    // 4. AOT path: the jax graph (with Pallas kernels) via PJRT
+    // ------------------------------------------------------------------
+    println!("\n== 4. AOT artifact execution ==");
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("  (skipped — run `make artifacts` first)");

@@ -9,22 +9,26 @@
 //!
 //! Run: `cargo run --release --example serve -- [--config tiny]
 //!       [--clients 8] [--sessions 4] [--max-batch 16] [--native]
-//!       [--expert-cache-mb 8] [--workers 4]`
-//! (`--native` serves the pure-rust MoE backend; no artifacts needed.
-//! `--expert-cache-mb` attaches the expert-residency cache to it and
-//! `--workers` sets its hot-path parallelism — 0/default = all cores;
-//! decoded streams are identical for every worker count.)
+//!       [--expert-cache-mb 8] [--workers 4] [--layers 2]
+//!       [--model model.bmoe] [--load mmap|heap]`
+//! (`--native` serves the pure-rust multi-layer LM; no artifacts needed.
+//! `--model` serves a packed .bmoe model artifact — mmap-loaded by
+//! default, so cold start is page faults, not deserialization.
+//! `--expert-cache-mb` attaches the expert-residency cache and
+//! `--workers` sets hot-path parallelism — 0/default = all cores;
+//! decoded streams are identical for every worker count and load mode.)
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use butterfly_moe::artifact::{synthesize, LoadMode, ModelArtifact, SynthSpec};
 use butterfly_moe::cli::Args;
 use butterfly_moe::coordinator::{
-    collect_stream, Backend, Coordinator, GenerateRequest, NativeMoeBackend, PjrtLmBackend,
+    collect_stream, Backend, Coordinator, GenerateRequest, NativeLmBackend, PjrtLmBackend,
     SamplingParams, SchedulerConfig, StopCriteria,
 };
-use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::moe::MoeLayer;
 use butterfly_moe::util::{stats, Rng};
 
 fn main() -> anyhow::Result<()> {
@@ -36,30 +40,46 @@ fn main() -> anyhow::Result<()> {
     let max_wait_ms: u64 = args.flag_parse("max-wait-ms")?.unwrap_or(2);
 
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
-        let mut rng = Rng::new(0xBE);
-        let mut layer = ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
         let workers = butterfly_moe::parallel::resolve_workers(
             args.flag_parse("workers")?.unwrap_or(0),
         );
-        layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
+        let pool = Arc::new(butterfly_moe::parallel::WorkerPool::new(workers));
         println!("hot-path workers: {workers} (token streams are worker-count invariant)");
         let cache_mb: f64 = args.flag_parse("expert-cache-mb")?.unwrap_or(0.0);
-        if cache_mb > 0.0 {
-            let cache = layer.attach_expert_cache(
-                butterfly_moe::expertcache::ExpertCacheConfig::with_budget_mb(cache_mb),
+        let cache_bytes = (cache_mb * 1048576.0) as usize;
+        let backend = if let Some(model_path) = args.flag("model") {
+            let mode = LoadMode::parse(&args.flag_or("load", "mmap"))?;
+            let artifact = ModelArtifact::load(Path::new(model_path), mode)?;
+            let b = NativeLmBackend::from_artifact(&artifact, max_batch, Some(pool), cache_bytes)?;
+            let (borrowed, copied) = artifact.zero_copy_stats();
+            println!(
+                "== native LM from {model_path}: {} layers, {} ({} load; \
+                 {borrowed} tensors zero-copy, {copied} copied) ==",
+                artifact.manifest.n_layers,
+                butterfly_moe::util::human_bytes(artifact.file_bytes() as f64),
+                mode.name(),
             );
+            b
+        } else {
+            let n_layers: usize = args.flag_parse("layers")?.unwrap_or(1);
+            let model = synthesize(&SynthSpec::serve_default(n_layers, 0xBE));
+            println!("== native LM backend ({n_layers} residual blocks, no artifacts) ==");
+            NativeLmBackend::from_synth(model, max_batch, Some(pool), cache_bytes)
+        };
+        if cache_bytes > 0 {
+            // a budget that splits below one byte per layer attaches no
+            // cache at all; both disabled forms are an input error here
+            let cache = backend.layers()[0].expert_cache();
             anyhow::ensure!(
-                cache.enabled(),
-                "--expert-cache-mb {cache_mb} is smaller than one expert working set"
+                cache.is_some_and(|c| c.enabled()),
+                "--expert-cache-mb {cache_mb} splits below one expert working set per layer"
             );
             println!(
-                "== native MoE backend (no artifacts; expert cache {} experts max) ==",
-                cache.capacity_experts()
+                "   expert cache: {} experts max per layer",
+                cache.unwrap().capacity_experts()
             );
-        } else {
-            println!("== native MoE backend (no artifacts) ==");
         }
-        Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, max_batch))
+        Arc::new(backend)
     } else {
         let (b, _join) = PjrtLmBackend::start(Path::new("artifacts"), &config, None)?;
         println!("== PJRT LM backend (config={config}) ==");

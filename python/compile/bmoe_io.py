@@ -13,7 +13,16 @@ Spec (little-endian throughout; mirrored by rust/src/tensor/store.rs):
         data     : prod(dims) * itemsize bytes, row-major
 
 Used for initial params (aot.py), checkpoints (rust train driver), and
-test vectors.
+test vectors.  This layout block is normative and mirrored verbatim in
+DESIGN.md §3, which also specifies the model-artifact schema layered on
+top (the ``__model__`` JSON manifest + ``layers.{l}.*`` tensors that
+``bmoe pack-model`` writes and the mmap loader reads).  The exact bytes
+are pinned cross-language by test_cross_language.py::test_golden_bytes_exact
+and rust/src/tensor/store.rs::golden_bytes_exact.
+
+Note: ``np.ascontiguousarray`` promotes 0-d arrays to 1-d, so this
+writer stores scalars as shape ``(1,)``; readers on both sides accept
+rank-0 and ``(1,)`` interchangeably.
 """
 
 from __future__ import annotations

@@ -1,0 +1,247 @@
+"""Generate the checked-in cross-language model fixture
+``rust/tests/fixtures/tiny_model.bmoe``.
+
+Writes a tiny multi-layer native model in the ``.bmoe`` model-artifact
+format (DESIGN.md §3) through ``compile.bmoe_io`` — the normative python
+writer — plus ``expected.*`` tensors holding reference logits computed
+by a numpy mirror of the Rust native engine
+(``NativeLmBackend::step``): mean-pooled embedding, L residual
+ButterflyMoE blocks (top-k gate → θᵀx → ternary substrate GEMV → φ →
+GELU → w_down), readout logits.
+
+The Rust side (``rust/tests/artifact.rs``) loads this file via both
+heap and mmap loaders, asserts the two are bitwise identical, and pins
+its logits against ``expected.logits`` within a float tolerance (the
+numpy mirror does not reproduce Rust's dot-product lane association
+bit-for-bit; structural drift — wrong stage order, wrong bit layout —
+blows far past the tolerance).
+
+Run from the repo root:  python3 python/tests/make_artifact_fixture.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import bmoe_io  # noqa: E402
+
+F32 = np.float32
+
+# fixture shape (small on purpose: the file is checked into git)
+VOCAB, SEQ_LEN = 32, 16
+D, DFF, E, TOP_K, L = 16, 32, 4, 2, 2
+DEPTH_IN, DEPTH_OUT = 4, 5  # log2(16), log2(32)
+SEED = 20260728
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "tiny_model.bmoe"
+)
+
+
+def bf_apply(x, cs, d, depth, transpose=False):
+    """Mirror of rust Butterfly::apply / apply_transpose: stage l pairs
+    (base+off, base+off+stride) with angle index j walking in the same
+    order; transpose runs stages reversed with negated sines."""
+    x = x.astype(F32).copy()
+    stages = range(depth - 1, -1, -1) if transpose else range(depth)
+    for l in stages:
+        stride = 1 << l
+        table = cs[l]  # (d/2, 2) float32
+        j = 0
+        base = 0
+        while base < d:
+            for off in range(stride):
+                lo, hi = base + off, base + off + stride
+                c = table[j, 0]
+                s = F32(-table[j, 1]) if transpose else table[j, 1]
+                a, b = x[lo], x[hi]
+                x[lo] = F32(c * a - s * b)
+                x[hi] = F32(s * a + c * b)
+                j += 1
+            base += 2 * stride
+    return x
+
+
+def gelu(x):
+    c = F32(0.7978845608028654)
+    x = x.astype(F32)
+    return (F32(0.5) * x * (F32(1.0) + np.tanh(c * (x + F32(0.044715) * x * x * x)))).astype(F32)
+
+
+def softmax(v):
+    v = v.astype(F32)
+    e = np.exp(v - v.max())
+    return (e / e.sum()).astype(F32)
+
+
+class Layer:
+    def __init__(self, rng):
+        # gate scaled up vs the usual 1/sqrt(D) init so routing margins
+        # are far above f32 association noise (the fixture must pin the
+        # same expert selection in numpy and rust)
+        self.gate = rng.standard_normal((E, D)).astype(F32)
+        self.signs = rng.integers(-1, 2, size=(DFF, D)).astype(np.int8)
+        self.gamma = F32(abs(rng.standard_normal()) * 0.05 + 0.02)
+        self.theta = (rng.standard_normal((E, DEPTH_IN, D // 2)) * 0.5).astype(F32)
+        self.phi = (rng.standard_normal((E, DEPTH_OUT, DFF // 2)) * 0.5).astype(F32)
+        self.theta_cs = np.stack(
+            [np.cos(self.theta), np.sin(self.theta)], axis=-1
+        ).astype(F32)
+        self.phi_cs = np.stack([np.cos(self.phi), np.sin(self.phi)], axis=-1).astype(F32)
+        self.w_down = (rng.standard_normal((D, DFF)) / np.sqrt(DFF)).astype(F32)
+
+    def planes(self):
+        """Bitplane words: word wi bit b of a row is column wi*64 + b —
+        the BitplaneTernary layout.  Returns u8 views (rows, wpr*8)."""
+        wpr = (D + 63) // 64  # = 1 at this shape
+        plus = np.zeros((DFF, wpr), dtype="<u8")
+        minus = np.zeros((DFF, wpr), dtype="<u8")
+        for r in range(DFF):
+            for c in range(D):
+                if self.signs[r, c] == 1:
+                    plus[r, c // 64] |= np.uint64(1) << np.uint64(c % 64)
+                elif self.signs[r, c] == -1:
+                    minus[r, c // 64] |= np.uint64(1) << np.uint64(c % 64)
+        return (
+            plus.view(np.uint8).reshape(DFF, wpr * 8),
+            minus.view(np.uint8).reshape(DFF, wpr * 8),
+        )
+
+    def route(self, x):
+        """topk_gate mirror: softmax over gate logits, top-k by prob
+        (stable sort, descending), renormalized.  Returns [(e, w)]
+        ascending by expert index (the rust reduction order) plus the
+        selection margin for the generator's tie guard."""
+        logits = self.gate @ x.astype(F32)
+        p = softmax(logits)
+        order = np.argsort(-p, kind="stable")
+        chosen = order[:TOP_K]
+        margin = float(p[order[TOP_K - 1]] - p[order[TOP_K]]) if TOP_K < E else 1.0
+        total = p[chosen].sum(dtype=F32)
+        pairs = sorted((int(e), F32(p[e] / total)) for e in chosen)
+        return pairs, margin
+
+    def forward(self, x):
+        """moe block mirror: experts -> gelu -> w_down.  Returns (y, margin)."""
+        pairs, margin = self.route(x)
+        h = np.zeros(DFF, dtype=F32)
+        for e, w in pairs:
+            xr = bf_apply(x, self.theta_cs[e], D, DEPTH_IN, transpose=True)
+            mid = (self.signs.astype(F32) @ xr * self.gamma).astype(F32)
+            out = bf_apply(mid, self.phi_cs[e], DFF, DEPTH_OUT, transpose=False)
+            h = (h + w * out).astype(F32)
+        g = gelu(h)
+        y = (self.w_down @ g).astype(F32)
+        return y, margin
+
+
+def try_build(seed):
+    """Build a model + reference outputs at `seed`; None if any margin
+    (gate selection or argmax token) is too small to survive the float-
+    association differences between numpy and the Rust engine."""
+    rng = np.random.default_rng(seed)
+    embed = (rng.standard_normal((VOCAB, D)) * 0.1).astype(F32)
+    readout = (rng.standard_normal((VOCAB, D)) * 0.1).astype(F32)
+    layers = [Layer(rng) for _ in range(L)]
+
+    prompts = [
+        [1, 2, 3],
+        [31, 7, 7, 19, 4],
+        [16, 0, 25, 9],
+    ]
+
+    # reference logits: one decode step per prompt (greedy_next semantics)
+    expected = np.zeros((len(prompts), VOCAB), dtype=F32)
+    next_tokens = np.zeros(len(prompts), dtype=np.int32)
+    for i, prompt in enumerate(prompts):
+        ctx = prompt[-SEQ_LEN:]
+        x = np.zeros(D, dtype=F32)
+        for t in ctx:
+            x = (x + embed[t % VOCAB]).astype(F32)
+        x = (x * F32(1.0 / len(ctx))).astype(F32)
+        for layer in layers:
+            y, margin = layer.forward(x)
+            if margin <= 2e-3:
+                return None
+            x = (x + y).astype(F32)
+        logits = (readout @ x).astype(F32)
+        expected[i] = logits
+        srt = np.sort(logits)
+        # far above the ~1e-5 association noise between numpy and rust
+        if srt[-1] - srt[-2] <= 2e-3:
+            return None
+        next_tokens[i] = int(np.argmax(logits))
+    return embed, readout, layers, prompts, expected, next_tokens
+
+
+def main():
+    built = None
+    for seed in range(SEED, SEED + 64):
+        built = try_build(seed)
+        if built is not None:
+            print(f"using seed {seed}")
+            break
+    assert built is not None, "no seed in range produced robust margins"
+    embed, readout, layers, prompts, expected, next_tokens = built
+
+    manifest = {
+        "format": "bmoe-model",
+        "version": 1,
+        "vocab": VOCAB,
+        "seq_len": SEQ_LEN,
+        "d_model": D,
+        "d_ff": DFF,
+        "n_layers": L,
+        "n_experts": E,
+        "top_k": TOP_K,
+        "depth_in": DEPTH_IN,
+        "depth_out": DEPTH_OUT,
+    }
+    tensors = [
+        ("__model__", np.frombuffer(json.dumps(manifest).encode(), dtype=np.uint8)),
+        ("embed", embed),
+        ("readout", readout),
+    ]
+    for l, layer in enumerate(layers):
+        plus, minus = layer.planes()
+        tensors += [
+            (f"layers.{l}.gate", layer.gate),
+            (f"layers.{l}.substrate.gamma", np.asarray(layer.gamma, dtype=F32)),
+            (f"layers.{l}.substrate.plus", plus),
+            (f"layers.{l}.substrate.minus", minus),
+            (f"layers.{l}.theta", layer.theta),
+            (f"layers.{l}.theta_cs", layer.theta_cs),
+            (f"layers.{l}.phi", layer.phi),
+            (f"layers.{l}.phi_cs", layer.phi_cs),
+            (f"layers.{l}.w_down", layer.w_down),
+        ]
+    # reference outputs for the rust side
+    plen = max(len(p) for p in prompts)
+    padded = np.full((len(prompts), plen), -1, dtype=np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    tensors += [
+        ("expected.prompts", padded),
+        ("expected.prompt_lens", np.array([len(p) for p in prompts], dtype=np.int32)),
+        ("expected.logits", expected),
+        ("expected.next_tokens", next_tokens),
+    ]
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    bmoe_io.write_bmoe(OUT, tensors)
+    size = os.path.getsize(OUT)
+    print(f"wrote {OUT} ({size} bytes, {len(tensors)} tensors)")
+    # self-check: the normative reader round-trips it
+    back = dict(bmoe_io.read_bmoe(OUT))
+    assert np.array_equal(back["expected.logits"], expected)
+    assert bytes(back["__model__"].tobytes()) == json.dumps(manifest).encode()
+    print(f"next tokens: {next_tokens.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

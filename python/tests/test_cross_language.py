@@ -4,6 +4,7 @@ the Rust training driver must load in Python with identical semantics
 or checkpoints exist yet."""
 
 import glob
+import json
 import os
 
 import numpy as np
@@ -47,3 +48,60 @@ def test_rust_checkpoint_matches_init_param_structure():
     assert set(trained) == set(init)
     for name in init:
         assert trained[name].shape == init[name].shape, name
+
+
+# ---------------------------------------------------------------------------
+# Golden bytes: the exact container layout, pinned on both sides
+# ---------------------------------------------------------------------------
+
+# The same bytes are embedded in rust/src/tensor/store.rs::golden_bytes_exact;
+# regenerating them here proves the python writer has not drifted either.
+
+
+def _golden_tensors():
+    return [
+        ("w", np.array([[1.0, -2.0, 3.0], [4.0, 5.0, 6.5]], dtype=np.float32)),
+        ("ids", np.array([1, -2, 3, 4], dtype=np.int32)),
+        ("packed", np.array([0, 127, 255], dtype=np.uint8)),
+    ]
+
+
+GOLDEN = bytes.fromhex(
+    "424d4f45310003000000"
+    "010077000202000000030000000000803f000000c00000404000008040"
+    "0000a0400000d040"
+    "030069647301010400000001000000feffffff0300000004000000"
+    "06007061636b6564020103000000007fff"
+)
+
+
+def test_golden_bytes_exact(tmp_path):
+    path = str(tmp_path / "golden.bmoe")
+    bmoe_io.write_bmoe(path, _golden_tensors())
+    with open(path, "rb") as f:
+        got = f.read()
+    assert got == GOLDEN, "python writer drifted from the pinned container bytes"
+    back = bmoe_io.read_bmoe(path)
+    assert [n for n, _ in back] == ["w", "ids", "packed"]
+    assert np.array_equal(back[0][1], _golden_tensors()[0][1])
+    assert np.array_equal(back[1][1], _golden_tensors()[1][1])
+    assert np.array_equal(back[2][1], _golden_tensors()[2][1])
+
+
+def test_model_fixture_is_well_formed():
+    """The checked-in cross-language model fixture must stay readable by
+    the normative python reader and keep its expected.* reference
+    tensors (rust/tests/artifact.rs pins the logits against them)."""
+    path = os.path.join(ROOT, "rust", "tests", "fixtures", "tiny_model.bmoe")
+    assert os.path.exists(path), "regenerate with python3 python/tests/make_artifact_fixture.py"
+    tensors = dict(bmoe_io.read_bmoe(path))
+    manifest = json.loads(bytes(tensors["__model__"].tobytes()).decode())
+    assert manifest["format"] == "bmoe-model" and manifest["version"] == 1
+    for l in range(manifest["n_layers"]):
+        for part in ("gate", "substrate.plus", "substrate.minus", "theta_cs", "phi_cs", "w_down"):
+            assert f"layers.{l}.{part}" in tensors, part
+    assert tensors["expected.logits"].shape == (
+        tensors["expected.prompts"].shape[0],
+        manifest["vocab"],
+    )
+    assert np.isfinite(tensors["expected.logits"]).all()

@@ -1,0 +1,197 @@
+//! Cold-start bench: mmap-load vs heap-load of a packed multi-layer
+//! model at the paper shape (§Perf iteration 7 in EXPERIMENTS.md).
+//!
+//! The claim under test is the artifact subsystem's reason to exist:
+//! `LoadMode::Mmap` parses only the container directory and borrows
+//! every bulk tensor from the mapping, so "load" is microseconds of
+//! header work plus page faults amortized over the first decode steps —
+//! while `LoadMode::Heap` pays the full read + decode up front.  Both
+//! modes produce bit-identical logits (asserted here per trial).
+//!
+//! Reported per mode: load ms (artifact open + layer build), first-step
+//! ms (page-fault-inclusive prefill of one decode step), steady-step ms,
+//! and RSS delta around the load (linux `/proc/self/status`, 0
+//! elsewhere).  Writes `runs/tables/cold_start.csv`.
+//!
+//! Run: `cargo bench --bench cold_start [-- smoke]`
+//! `-- smoke` additionally asserts mmap load is faster than heap load
+//! (the CI gate) on a reduced trial count.
+
+use std::path::Path;
+
+use butterfly_moe::artifact::{synthesize, LoadMode, Mmap, ModelArtifact, SynthSpec};
+use butterfly_moe::bench::Table;
+use butterfly_moe::coordinator::{Backend, InflightBatch, InflightSeq, NativeLmBackend};
+use butterfly_moe::util::{human_bytes, stats, Stopwatch};
+
+/// VmRSS in KiB from /proc/self/status (0 where unavailable).
+fn rss_kib() -> u64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                return rest
+                    .trim()
+                    .trim_end_matches(" kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+struct Trial {
+    load_ms: f64,
+    first_step_ms: f64,
+    steady_step_ms: f64,
+    rss_delta_kib: i64,
+}
+
+fn batch() -> InflightBatch {
+    let mut b = InflightBatch::new();
+    for i in 0..4i64 {
+        b.push(InflightSeq::new(
+            i as u64,
+            (0..6).map(|j| ((i * 97 + j * 31) % 512) as i32).collect(),
+        ));
+    }
+    b
+}
+
+fn run_trial(path: &Path, mode: LoadMode) -> anyhow::Result<(Trial, Vec<f32>)> {
+    let rss0 = rss_kib() as i64;
+    let sw = Stopwatch::start();
+    let artifact = ModelArtifact::load(path, mode)?;
+    let backend = NativeLmBackend::from_artifact(&artifact, 8, None, 0)?;
+    let load_ms = sw.millis();
+    let rss_delta_kib = rss_kib() as i64 - rss0;
+    let sw = Stopwatch::start();
+    let mut b = batch();
+    let out = backend.step(&mut b)?;
+    let first_step_ms = sw.millis();
+    let logits = out[0].logits.clone();
+    let sw = Stopwatch::start();
+    let iters = 3;
+    for _ in 0..iters {
+        backend.step(&mut b)?;
+    }
+    Ok((
+        Trial {
+            load_ms,
+            first_step_ms,
+            steady_step_ms: sw.millis() / iters as f64,
+            rss_delta_kib,
+        },
+        logits,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "smoke");
+    let trials = if smoke { 3 } else { 7 };
+    let out = Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+
+    // paper shape, 4 residual blocks: a multi-MB artifact dominated by
+    // the per-expert angle tables + dense projections
+    let spec = SynthSpec::paper(4, 0xC01D);
+    eprintln!(
+        "synthesizing {} layers x {} experts (d={}, d_ff={})...",
+        spec.n_layers, spec.n_experts, spec.d_model, spec.d_ff
+    );
+    let model = synthesize(&spec);
+    let dir = std::env::temp_dir().join("bmoe_cold_start");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("paper_shape.bmoe");
+    let pack = model.pack(&path)?;
+    drop(model); // the loads below must stand on the file alone
+    eprintln!(
+        "packed {} ({} tensors, {} pads) -> {}",
+        human_bytes(pack.file_bytes as f64),
+        pack.tensors,
+        pack.pads,
+        path.display()
+    );
+
+    let modes: Vec<LoadMode> = if Mmap::supported() {
+        vec![LoadMode::Heap, LoadMode::Mmap]
+    } else {
+        eprintln!("(mmap unsupported on this target: heap mode only, no gate)");
+        vec![LoadMode::Heap]
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "Cold start at the paper shape ({} on disk, {} layers x {} experts)",
+            human_bytes(pack.file_bytes as f64),
+            spec.n_layers,
+            spec.n_experts
+        ),
+        &[
+            "Load",
+            "Load ms (med)",
+            "Load ms (p95)",
+            "First step ms",
+            "Steady step ms",
+            "RSS delta",
+        ],
+    );
+    let mut median_load = Vec::new();
+    let mut reference_logits: Option<Vec<f32>> = None;
+    for &mode in &modes {
+        let mut loads = Vec::new();
+        let mut firsts = Vec::new();
+        let mut steadies = Vec::new();
+        let mut rss = Vec::new();
+        for _ in 0..trials {
+            let (trial, logits) = run_trial(&path, mode)?;
+            // the invariant that makes the load mode a free choice:
+            // identical logits bits from either loader
+            match &reference_logits {
+                None => reference_logits = Some(logits),
+                Some(want) => anyhow::ensure!(
+                    &logits == want,
+                    "{} load produced different logits bits",
+                    mode.name()
+                ),
+            }
+            loads.push(trial.load_ms);
+            firsts.push(trial.first_step_ms);
+            steadies.push(trial.steady_step_ms);
+            rss.push(trial.rss_delta_kib as f64);
+        }
+        let med = stats::median(&loads);
+        median_load.push((mode, med));
+        t.row(&[
+            mode.name().to_string(),
+            format!("{med:.2}"),
+            format!("{:.2}", stats::percentile(&loads, 95.0)),
+            format!("{:.2}", stats::median(&firsts)),
+            format!("{:.2}", stats::median(&steadies)),
+            format!("{}", human_bytes(stats::median(&rss) * 1024.0)),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("cold_start.csv"))?;
+    println!("wrote runs/tables/cold_start.csv");
+
+    if median_load.len() == 2 {
+        let heap = median_load[0].1;
+        let mmap = median_load[1].1;
+        println!(
+            "mmap load {mmap:.2} ms vs heap load {heap:.2} ms ({:.1}x)",
+            heap / mmap.max(1e-9)
+        );
+        if smoke {
+            // the acceptance gate (smoke/CI only; a plain measurement
+            // run reports without failing)
+            anyhow::ensure!(
+                mmap < heap,
+                "SMOKE FAIL: mmap load ({mmap:.2} ms) not faster than heap load ({heap:.2} ms)"
+            );
+            println!("cold-start gate OK: mmap < heap");
+        }
+    }
+    Ok(())
+}

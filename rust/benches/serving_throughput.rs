@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 
 use butterfly_moe::bench::Table;
 use butterfly_moe::coordinator::{
-    collect_stream, Backend, Coordinator, GenerateRequest, NativeMoeBackend, PjrtLmBackend,
-    SchedulerConfig,
+    collect_stream, Backend, Coordinator, GenerateRequest, NativeLmBackend, NativeMoeBackend,
+    PjrtLmBackend, SchedulerConfig,
 };
 use butterfly_moe::moe::ButterflyMoeLayer;
 use butterfly_moe::parallel::WorkerPool;
@@ -235,6 +235,84 @@ fn bench_worker_scaling(out: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Serving throughput vs model depth: the Table-2 per-layer scaling on
+/// the hot path instead of only analytically.  Synthesized native LMs at
+/// `L ∈ {1, 2, 4}` residual blocks (same per-layer shape and seed
+/// family), a fixed closed-loop 24-session × 16-token greedy workload.
+/// ms/token should scale ~linearly in L (each decode step runs L
+/// expert mixtures + down projections).
+fn bench_layer_scaling(out: &Path) -> anyhow::Result<()> {
+    use butterfly_moe::artifact::{synthesize, ShTensor, SynthSpec};
+    use butterfly_moe::moe::MoeLayer;
+    let mut t = Table::new(
+        "Serving depth scaling (native-lm d=256 d_ff=1024, 8 experts top-2): tokens/s vs layers",
+        &["Layers", "tok/s", "ms/token", "Session p50 ms"],
+    );
+    for n_layers in [1usize, 2, 4] {
+        let spec = SynthSpec {
+            d_model: 256,
+            d_ff: 1024,
+            n_experts: 8,
+            top_k: 2,
+            n_layers,
+            vocab: 512,
+            seq_len: 32,
+            depth: None,
+            seed: 7,
+        };
+        let model = synthesize(&spec);
+        let pool = Arc::new(WorkerPool::new(
+            butterfly_moe::parallel::resolve_workers(0),
+        ));
+        let layers: Vec<Arc<dyn MoeLayer>> = model
+            .layers
+            .into_iter()
+            .map(|mut l| {
+                l.attach_worker_pool(pool.clone());
+                Arc::new(l) as Arc<dyn MoeLayer>
+            })
+            .collect();
+        let backend: Arc<dyn Backend> = Arc::new(NativeLmBackend::from_layers(
+            layers,
+            ShTensor::from_tensor(model.embed),
+            ShTensor::from_tensor(model.readout),
+            spec.vocab,
+            spec.seq_len,
+            16,
+        ));
+        butterfly_moe::coordinator::warm(backend.as_ref())?;
+        let coord =
+            Coordinator::start(backend, SchedulerConfig::new(16, Duration::from_millis(2)));
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..8).map(|j| ((i * 89 + j * 13) % 512) as i32).collect();
+                coord.submit(GenerateRequest::greedy(prompt, 16))
+            })
+            .collect();
+        let mut tokens = 0u64;
+        let mut e2e = Vec::new();
+        for rx in rxs {
+            let c = collect_stream(&rx, Duration::from_secs(120))?;
+            tokens += c.tokens.len() as u64;
+            e2e.push(c.total.as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        let tps = tokens as f64 / wall;
+        t.row(&[
+            n_layers.to_string(),
+            format!("{tps:.0}"),
+            format!("{:.3}", 1e3 / tps.max(1e-9)),
+            format!("{:.2}", 1e3 * stats::percentile(&e2e, 50.0)),
+        ]);
+    }
+    t.print();
+    t.write_csv(&out.join("serving_layers.csv"))?;
+    println!("wrote runs/tables/serving_layers.csv");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let out = std::path::Path::new("runs/tables");
     std::fs::create_dir_all(out)?;
@@ -242,6 +320,9 @@ fn main() -> anyhow::Result<()> {
 
     // tokens/s-vs-workers scaling curve for the native backend
     bench_worker_scaling(out)?;
+
+    // tokens/s-vs-depth curve for the multi-layer native LM
+    bench_layer_scaling(out)?;
 
     // native edge backend: always available; hot path parallel by
     // default (BMOE_WORKERS env overrides, streams identical regardless)

@@ -1,0 +1,365 @@
+//! Zero-copy reader over the BMOE1 container (DESIGN.md §3).
+//!
+//! [`crate::tensor::store::TensorStore`] deserializes every tensor into
+//! owned memory — right for checkpoints, wrong for cold-starting a
+//! model: a multi-layer artifact is dominated by the per-expert angle
+//! tables and dense projections, and copying them on every serve start
+//! is exactly the deserialization pass the mmap path exists to skip.
+//! [`MappedStore`] parses only the container *directory* (names, dtypes,
+//! shapes, data ranges — a few hundred bytes) and hands out
+//! [`SharedSlice`]s that reference the backing bytes in place.
+//!
+//! Data offsets in a BMOE1 file are not naturally aligned (headers have
+//! byte granularity), so the model packer inserts `__pad.*` filler
+//! tensors to 64-align the bulk tensors (see `super::pack`).  Files
+//! written without pads (e.g. by `python/compile/bmoe_io.py`) still
+//! load — misaligned tensors silently take the decode-copy path with
+//! identical values.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::mmapfile::Mmap;
+use super::shared::{Backing, Pod, SharedSlice};
+
+pub const MAGIC: &[u8; 6] = b"BMOE1\x00";
+
+/// dtype codes of the BMOE1 container (normative list in DESIGN.md §3).
+pub const DTYPE_F32: u8 = 0;
+pub const DTYPE_I32: u8 = 1;
+pub const DTYPE_U8: u8 = 2;
+
+/// How to load a model file (the `--load` serving flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// `mmap` the file and borrow tensor data in place: cold start is
+    /// page faults, and concurrent processes share page-cache pages.
+    Mmap,
+    /// Read the file and eagerly decode every tensor into owned memory —
+    /// the deserialization baseline the cold-start bench compares
+    /// against.  Bit-identical values to [`LoadMode::Mmap`].
+    Heap,
+}
+
+impl LoadMode {
+    pub fn parse(s: &str) -> Result<LoadMode> {
+        Ok(match s {
+            "mmap" => LoadMode::Mmap,
+            "heap" => LoadMode::Heap,
+            _ => bail!("unknown load mode '{s}' (expected mmap|heap)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadMode::Mmap => "mmap",
+            LoadMode::Heap => "heap",
+        }
+    }
+}
+
+/// One directory entry: where a tensor's bytes live in the backing.
+#[derive(Clone, Debug)]
+pub struct RawEntry {
+    pub name: String,
+    pub dtype: u8,
+    pub shape: Vec<usize>,
+    /// byte offset of the data payload in the file
+    pub off: usize,
+    /// payload length in bytes
+    pub byte_len: usize,
+}
+
+impl RawEntry {
+    pub fn elems(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape.iter().product()
+        }
+    }
+}
+
+/// Directory over a BMOE1 file plus its shared backing bytes.
+pub struct MappedStore {
+    backing: Arc<Backing>,
+    entries: Vec<RawEntry>,
+    index: BTreeMap<String, usize>,
+    mode: LoadMode,
+    /// tensors handed out as in-place borrows vs decoded copies (the
+    /// quickstart/bench zero-copy report)
+    borrowed: std::sync::atomic::AtomicUsize,
+    copied: std::sync::atomic::AtomicUsize,
+}
+
+impl MappedStore {
+    /// Open `path` in the given mode and parse the directory.
+    pub fn open(path: &Path, mode: LoadMode) -> Result<MappedStore> {
+        let backing = match mode {
+            LoadMode::Mmap => Backing::Mapped(Mmap::map(path)?),
+            LoadMode::Heap => Backing::Heap(
+                std::fs::read(path).with_context(|| format!("read {}", path.display()))?,
+            ),
+        };
+        Self::parse(Arc::new(backing), mode).with_context(|| format!("parse {}", path.display()))
+    }
+
+    fn parse(backing: Arc<Backing>, mode: LoadMode) -> Result<MappedStore> {
+        fn take<'a>(b: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+            anyhow::ensure!(*off + n <= b.len(), "truncated container at byte {off}");
+            let s = &b[*off..*off + n];
+            *off += n;
+            Ok(s)
+        }
+        let mut entries;
+        let mut index = BTreeMap::new();
+        {
+            let b = backing.bytes();
+            anyhow::ensure!(b.len() >= 10, "file too short for a BMOE1 header");
+            anyhow::ensure!(&b[..6] == MAGIC, "bad magic {:?}", &b[..6]);
+            let count = u32::from_le_bytes([b[6], b[7], b[8], b[9]]) as usize;
+            // every entry needs >= 4 header bytes, so a corrupt count
+            // field fails here instead of driving a huge preallocation
+            anyhow::ensure!(
+                count <= (b.len() - 10) / 4,
+                "implausible tensor count {count} for a {}-byte file",
+                b.len()
+            );
+            let mut off = 10usize;
+            entries = Vec::with_capacity(count);
+            for i in 0..count {
+                let nlen = {
+                    let s = take(b, &mut off, 2)?;
+                    u16::from_le_bytes([s[0], s[1]]) as usize
+                };
+                let name = String::from_utf8(take(b, &mut off, nlen)?.to_vec())
+                    .with_context(|| format!("tensor {i}: name not utf-8"))?;
+                let hdr = take(b, &mut off, 2)?;
+                let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    let s = take(b, &mut off, 4)?;
+                    shape.push(u32::from_le_bytes([s[0], s[1], s[2], s[3]]) as usize);
+                }
+                // checked size arithmetic: crafted dims must not wrap
+                // into a small byte_len that passes the bounds check
+                let elems: usize = if ndim == 0 {
+                    1
+                } else {
+                    shape
+                        .iter()
+                        .try_fold(1usize, |a, &d| a.checked_mul(d))
+                        .with_context(|| format!("tensor '{name}': shape {shape:?} overflows"))?
+                };
+                let itemsize = match dtype {
+                    DTYPE_F32 | DTYPE_I32 => 4,
+                    DTYPE_U8 => 1,
+                    other => bail!("tensor '{name}': unknown dtype code {other}"),
+                };
+                let byte_len = elems
+                    .checked_mul(itemsize)
+                    .with_context(|| format!("tensor '{name}': byte length overflows"))?;
+                // off <= b.len() after the header takes; subtract-side
+                // comparison cannot overflow the way `off + byte_len` can
+                anyhow::ensure!(byte_len <= b.len() - off, "tensor '{name}': data truncated");
+                index.insert(name.clone(), entries.len());
+                entries.push(RawEntry {
+                    name,
+                    dtype,
+                    shape,
+                    off,
+                    byte_len,
+                });
+                off += byte_len;
+            }
+        }
+        Ok(MappedStore {
+            backing,
+            entries,
+            index,
+            mode,
+            borrowed: Default::default(),
+            copied: Default::default(),
+        })
+    }
+
+    pub fn mode(&self) -> LoadMode {
+        self.mode
+    }
+
+    /// Total bytes of the underlying file image.
+    pub fn file_bytes(&self) -> usize {
+        self.backing.len()
+    }
+
+    pub fn entries(&self) -> &[RawEntry] {
+        &self.entries
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&RawEntry> {
+        self.index
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .with_context(|| format!("tensor '{name}' missing from model artifact"))
+    }
+
+    /// `(tensors borrowed in place, tensors decoded to owned copies)`.
+    pub fn zero_copy_stats(&self) -> (usize, usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.borrowed.load(Relaxed), self.copied.load(Relaxed))
+    }
+
+    fn slice<T: Pod>(&self, e: &RawEntry) -> SharedSlice<T> {
+        let s = SharedSlice::from_backing(
+            &self.backing,
+            e.off,
+            e.byte_len,
+            self.mode == LoadMode::Heap,
+        );
+        use std::sync::atomic::Ordering::Relaxed;
+        if s.is_borrowed() {
+            self.borrowed.fetch_add(1, Relaxed);
+        } else {
+            self.copied.fetch_add(1, Relaxed);
+        }
+        s
+    }
+
+    /// An f32 tensor's shape and (possibly borrowed) data.
+    pub fn f32(&self, name: &str) -> Result<(Vec<usize>, SharedSlice<f32>)> {
+        let e = self.entry(name)?;
+        anyhow::ensure!(e.dtype == DTYPE_F32, "tensor '{name}' is not f32");
+        Ok((e.shape.clone(), self.slice(e)))
+    }
+
+    /// An f32 tensor decoded into an owned `Vec` — for tensors the
+    /// caller re-materializes anyway (e.g. gate weights copied into a
+    /// `Tensor`), so the zero-copy telemetry counts them as copies, not
+    /// borrows.
+    pub fn f32_owned(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let e = self.entry(name)?;
+        anyhow::ensure!(e.dtype == DTYPE_F32, "tensor '{name}' is not f32");
+        let b = &self.backing.bytes()[e.off..e.off + e.byte_len];
+        let v = b
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        self.copied.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok((e.shape.clone(), v))
+    }
+
+    /// A scalar f32 (rank 0 or single-element) tensor's value.
+    pub fn f32_scalar(&self, name: &str) -> Result<f32> {
+        let (_, s) = self.f32(name)?;
+        anyhow::ensure!(s.len() == 1, "tensor '{name}' is not a scalar");
+        Ok(s.as_slice()[0])
+    }
+
+    /// A U8 tensor reinterpreted as little-endian u64 words (the packed
+    /// bitplane encoding; DESIGN.md §3).  The byte length must be a
+    /// multiple of 8.
+    pub fn u64_words(&self, name: &str) -> Result<(Vec<usize>, SharedSlice<u64>)> {
+        let e = self.entry(name)?;
+        anyhow::ensure!(e.dtype == DTYPE_U8, "tensor '{name}' is not u8");
+        anyhow::ensure!(
+            e.byte_len % 8 == 0,
+            "tensor '{name}': {} bytes is not a whole number of u64 words",
+            e.byte_len
+        );
+        Ok((e.shape.clone(), self.slice(e)))
+    }
+
+    /// Raw payload bytes (the embedded JSON manifest).
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        Ok(&self.backing.bytes()[e.off..e.off + e.byte_len])
+    }
+
+    /// An i32 tensor decoded to owned values (fixture metadata; never on
+    /// the hot path, so no borrow variant).
+    pub fn i32(&self, name: &str) -> Result<(Vec<usize>, Vec<i32>)> {
+        let e = self.entry(name)?;
+        anyhow::ensure!(e.dtype == DTYPE_I32, "tensor '{name}' is not i32");
+        let b = &self.backing.bytes()[e.off..e.off + e.byte_len];
+        let v = b
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((e.shape.clone(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::store::{Entry, TensorStore};
+    use crate::tensor::{IntTensor, Tensor};
+
+    fn sample(path: &Path) {
+        let mut s = TensorStore::default();
+        s.insert(
+            "a",
+            Entry::F32(Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 0.5, 4.0])),
+        );
+        s.insert("ids", Entry::I32(IntTensor::from_vec(&[3], vec![5, -6, 7])));
+        s.insert(
+            "raw",
+            Entry::U8 {
+                shape: vec![16],
+                data: (0..16u8).collect(),
+            },
+        );
+        s.write(path).unwrap();
+    }
+
+    #[test]
+    fn heap_store_reads_what_tensorstore_wrote() {
+        let dir = std::env::temp_dir().join("bmoe_mapped_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.bmoe");
+        sample(&path);
+        let m = MappedStore::open(&path, LoadMode::Heap).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        let (shape, a) = m.f32("a").unwrap();
+        assert_eq!(shape, vec![2, 2]);
+        assert_eq!(a.as_slice(), &[1.0, -2.0, 0.5, 4.0]);
+        assert!(!a.is_borrowed(), "heap mode must eagerly copy");
+        let (_, ids) = m.i32("ids").unwrap();
+        assert_eq!(ids, vec![5, -6, 7]);
+        let (shape, words) = m.u64_words("raw").unwrap();
+        assert_eq!(shape, vec![16]);
+        assert_eq!(words.len(), 2);
+        assert!(m.f32("missing").is_err());
+        assert!(m.f32("ids").is_err(), "dtype mismatch must error");
+        assert_eq!(m.file_bytes(), std::fs::metadata(&path).unwrap().len() as usize);
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_store_matches_heap_store() {
+        let dir = std::env::temp_dir().join("bmoe_mapped_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.bmoe");
+        sample(&path);
+        let heap = MappedStore::open(&path, LoadMode::Heap).unwrap();
+        let map = MappedStore::open(&path, LoadMode::Mmap).unwrap();
+        let (_, ah) = heap.f32("a").unwrap();
+        let (_, am) = map.f32("a").unwrap();
+        assert_eq!(ah.as_slice(), am.as_slice());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("bmoe_mapped_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bmoe");
+        std::fs::write(&path, b"NOTBMOE123").unwrap();
+        assert!(MappedStore::open(&path, LoadMode::Heap).is_err());
+        // truncated: valid magic + count but no entries
+        std::fs::write(&path, [&MAGIC[..], &5u32.to_le_bytes()].concat()).unwrap();
+        assert!(MappedStore::open(&path, LoadMode::Heap).is_err());
+    }
+}

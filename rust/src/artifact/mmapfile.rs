@@ -1,0 +1,124 @@
+//! Read-only file mapping over the vendored `mman` shim (DESIGN.md §4:
+//! the `libc` crate is not in the offline vendor set, so the three POSIX
+//! calls the loader needs are raw `extern "C"` declarations in
+//! `vendor/mman`).
+//!
+//! The mapping is `PROT_READ` + `MAP_SHARED`: every serve process that
+//! maps the same model file shares its page-cache pages, which is the
+//! substrate-sharing story of DESIGN.md §3.  On targets without the
+//! shim (non-unix, 32-bit) [`Mmap::map`] returns an error and callers
+//! fall back to [`LoadMode::Heap`](crate::artifact::LoadMode).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A read-only shared mapping of an entire file.
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only for its whole lifetime and the
+// pointer is never handed out mutably.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Whether this target can map files at all.
+    pub fn supported() -> bool {
+        cfg!(all(unix, target_pointer_width = "64"))
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        anyhow::ensure!(len > 0, "{}: empty file", path.display());
+        let fd = f.as_raw_fd();
+        // sanity-read the first bytes through the shim's pread so a
+        // wholly unreadable file fails with a clean error, not SIGBUS
+        let mut probe = [0u8; 8];
+        let got = unsafe {
+            mman::sys::pread(fd, probe.as_mut_ptr() as *mut core::ffi::c_void, probe.len(), 0)
+        };
+        anyhow::ensure!(got > 0, "{}: unreadable", path.display());
+        let ptr = unsafe {
+            mman::sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mman::sys::PROT_READ,
+                mman::sys::MAP_SHARED,
+                fd,
+                0,
+            )
+        };
+        anyhow::ensure!(ptr != mman::sys::MAP_FAILED, "mmap({}) failed", path.display());
+        // the fd may close now: the mapping holds its own reference
+        Ok(Mmap {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map(path: &Path) -> Result<Mmap> {
+        anyhow::bail!(
+            "mmap is not available on this target ({}); load with LoadMode::Heap",
+            path.display()
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len come from a successful mmap that lives until
+        // Drop; the mapping is never written.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        unsafe {
+            mman::sys::munmap(self.ptr as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(all(test, unix, target_pointer_width = "64"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_a_real_file() {
+        let dir = std::env::temp_dir().join("bmoe_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = Mmap::map(&path).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.bytes(), &data[..]);
+        assert!(Mmap::supported());
+    }
+
+    #[test]
+    fn missing_and_empty_files_error() {
+        let dir = std::env::temp_dir().join("bmoe_mmap_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Mmap::map(&dir.join("nope.bin")).is_err());
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(Mmap::map(&empty).is_err());
+    }
+}

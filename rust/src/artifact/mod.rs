@@ -1,0 +1,800 @@
+//! Native model artifacts: a versioned multi-layer model format over the
+//! BMOE1 tensor container, a packer, and an mmap-backed zero-copy loader
+//! (normative spec: DESIGN.md §3).
+//!
+//! The paper's point is that N experts' identities fit in
+//! O(d² + N·d·log d) bytes — small enough for an edge device's *disk and
+//! page cache*, not just its RAM.  This module makes the native engine
+//! model-file-driven so that story holds end to end:
+//!
+//! * [`pack_model`] writes any [`ButterflyMoeLayer`] stack (plus embed /
+//!   readout and a JSON [`ModelManifest`]) into one `.bmoe` file, with
+//!   `__pad.*` filler tensors 64-aligning every bulk tensor's payload.
+//! * [`ModelArtifact::load`] opens the file in [`LoadMode::Mmap`]
+//!   (borrow tensor payloads straight from the mapping — cold start is
+//!   page faults, not deserialization, and concurrent serve processes
+//!   share the substrate's page-cache pages) or [`LoadMode::Heap`] (read
+//!   + eager decode: the deserialization baseline the cold-start bench
+//!   compares against).  The two modes are bit-identical by construction
+//!   — they read the same bytes — which `rust/tests/artifact.rs` and the
+//!   multi-layer cases in `rust/tests/determinism.rs` pin.
+//! * [`synthesize`] builds the seeded multi-layer stand-in model that
+//!   `bmoe serve --native` (without `--model`) and `bmoe pack-model`
+//!   share, so a packed-then-loaded model is bit-identical to the
+//!   in-memory one it came from.
+//!
+//! File-size accounting lives in [`crate::memmodel::model_file_bytes`]
+//! and is pinned against real packed artifacts in the tests.
+
+pub mod mapped;
+pub mod mmapfile;
+pub mod shared;
+
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use mapped::{LoadMode, MappedStore, RawEntry};
+pub use mmapfile::Mmap;
+pub use shared::{Backing, Pod, SharedSlice, ShTensor};
+
+use crate::butterfly::Butterfly;
+use crate::jsonx::Json;
+use crate::moe::layer::OrbitExpert;
+use crate::moe::{ButterflyMoeLayer, GateNetwork, MoeLayer};
+use crate::tensor::Tensor;
+use crate::ternary::BitplaneTernary;
+use crate::util::Rng;
+
+/// Name of the embedded JSON manifest tensor (always written first).
+pub const MANIFEST_TENSOR: &str = "__model__";
+
+/// Alignment of bulk tensor payloads in a packed model (64 covers every
+/// element width we borrow — f32 and u64 — plus cache-line alignment).
+pub const DATA_ALIGN: usize = 64;
+
+/// Current model-format version ([`ModelManifest::version`]).
+pub const FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+/// The versioned model manifest embedded as the `__model__` tensor —
+/// everything a loader needs to validate shapes before touching a single
+/// weight page (DESIGN.md §3 lists the schema normatively).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelManifest {
+    pub version: u64,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// butterfly stages of the input transform (over `d_model`)
+    pub depth_in: usize,
+    /// butterfly stages of the output transform (over `d_ff`)
+    pub depth_out: usize,
+}
+
+impl ModelManifest {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"format\":\"bmoe-model\",\"version\":{},\"vocab\":{},\"seq_len\":{},\
+             \"d_model\":{},\"d_ff\":{},\"n_layers\":{},\"n_experts\":{},\"top_k\":{},\
+             \"depth_in\":{},\"depth_out\":{}}}",
+            self.version,
+            self.vocab,
+            self.seq_len,
+            self.d_model,
+            self.d_ff,
+            self.n_layers,
+            self.n_experts,
+            self.top_k,
+            self.depth_in,
+            self.depth_out,
+        )
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<ModelManifest> {
+        let text = std::str::from_utf8(bytes).context("model manifest is not utf-8")?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("model manifest: {e}"))?;
+        let fmt = j
+            .get("format")
+            .and_then(Json::as_str)
+            .context("manifest missing 'format'")?;
+        anyhow::ensure!(fmt == "bmoe-model", "not a bmoe model manifest (format='{fmt}')");
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing key '{k}'"))
+        };
+        let version = get("version")? as u64;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported model format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let m = ModelManifest {
+            version,
+            vocab: get("vocab")?,
+            seq_len: get("seq_len")?,
+            d_model: get("d_model")?,
+            d_ff: get("d_ff")?,
+            n_layers: get("n_layers")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            depth_in: get("depth_in")?,
+            depth_out: get("depth_out")?,
+        };
+        anyhow::ensure!(
+            m.d_model.is_power_of_two() && m.d_ff.is_power_of_two(),
+            "d_model/d_ff must be powers of two (butterfly constraint)"
+        );
+        anyhow::ensure!(m.n_layers >= 1, "model has no layers");
+        anyhow::ensure!(m.vocab >= 1 && m.seq_len >= 1, "empty vocab/seq_len");
+        anyhow::ensure!(
+            m.top_k >= 1 && m.top_k <= m.n_experts,
+            "top_k out of range"
+        );
+        // loud load-time rejection instead of an out-of-bounds (or
+        // shift-overflow) panic inside stage() on the first decode step
+        let max_in = crate::butterfly::Butterfly::max_depth(m.d_model);
+        let max_out = crate::butterfly::Butterfly::max_depth(m.d_ff);
+        anyhow::ensure!(
+            m.depth_in >= 1 && m.depth_in <= max_in,
+            "depth_in {} out of range 1..={max_in} for d_model {}",
+            m.depth_in,
+            m.d_model
+        );
+        anyhow::ensure!(
+            m.depth_out >= 1 && m.depth_out <= max_out,
+            "depth_out {} out of range 1..={max_out} for d_ff {}",
+            m.depth_out,
+            m.d_ff
+        );
+        Ok(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packer
+// ---------------------------------------------------------------------------
+
+/// What [`pack_model`] wrote.
+#[derive(Clone, Copy, Debug)]
+pub struct PackStats {
+    pub file_bytes: u64,
+    pub tensors: usize,
+    /// `__pad.*` alignment fillers among `tensors`
+    pub pads: usize,
+}
+
+struct PackWriter {
+    f: BufWriter<std::fs::File>,
+    off: usize,
+    count: u32,
+    pads: usize,
+}
+
+impl PackWriter {
+    fn create(path: &Path) -> Result<PackWriter> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut f = BufWriter::new(file);
+        f.write_all(mapped::MAGIC)?;
+        f.write_all(&0u32.to_le_bytes())?; // count, patched in finish()
+        Ok(PackWriter {
+            f,
+            off: 10,
+            count: 0,
+            pads: 0,
+        })
+    }
+
+    fn header_len(name: &str, ndim: usize) -> usize {
+        2 + name.len() + 2 + 4 * ndim
+    }
+
+    /// Write one tensor entry, unaligned.
+    fn raw_tensor(&mut self, name: &str, code: u8, shape: &[usize], data: &[u8]) -> Result<()> {
+        anyhow::ensure!(name.len() <= u16::MAX as usize, "tensor name too long");
+        anyhow::ensure!(shape.len() <= u8::MAX as usize, "tensor rank too high");
+        let elems: usize = if shape.is_empty() {
+            1
+        } else {
+            shape.iter().product()
+        };
+        let itemsize = match code {
+            mapped::DTYPE_F32 | mapped::DTYPE_I32 => 4,
+            mapped::DTYPE_U8 => 1,
+            _ => bail!("unknown dtype code {code}"),
+        };
+        anyhow::ensure!(
+            elems * itemsize == data.len(),
+            "tensor '{name}': {} bytes for shape {shape:?}",
+            data.len()
+        );
+        self.f.write_all(&(name.len() as u16).to_le_bytes())?;
+        self.f.write_all(name.as_bytes())?;
+        self.f.write_all(&[code, shape.len() as u8])?;
+        for &d in shape {
+            anyhow::ensure!(d <= u32::MAX as usize, "dim too large");
+            self.f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        self.f.write_all(data)?;
+        self.off += Self::header_len(name, shape.len()) + data.len();
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Write one tensor whose *data payload* starts [`DATA_ALIGN`]-aligned,
+    /// inserting a `__pad.N` filler tensor first when needed.  Files
+    /// without pads still load (the reader copy-falls-back), so this is
+    /// an optimization the packer guarantees, not a format requirement.
+    fn aligned_tensor(&mut self, name: &str, code: u8, shape: &[usize], data: &[u8]) -> Result<()> {
+        let h = Self::header_len(name, shape.len());
+        if (self.off + h) % DATA_ALIGN != 0 {
+            let pname = format!("__pad.{}", self.pads);
+            let ph = Self::header_len(&pname, 1);
+            let p = (DATA_ALIGN - ((self.off + ph + h) % DATA_ALIGN)) % DATA_ALIGN;
+            self.raw_tensor(&pname, mapped::DTYPE_U8, &[p], &vec![0u8; p])?;
+            self.pads += 1;
+            debug_assert_eq!((self.off + h) % DATA_ALIGN, 0);
+        }
+        self.raw_tensor(name, code, shape, data)
+    }
+
+    fn finish(mut self) -> Result<PackStats> {
+        self.f.seek(SeekFrom::Start(6))?;
+        self.f.write_all(&self.count.to_le_bytes())?;
+        self.f.flush()?;
+        Ok(PackStats {
+            file_bytes: self.off as u64,
+            tensors: self.count as usize,
+            pads: self.pads,
+        })
+    }
+}
+
+fn f32_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u64_bytes(v: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Pack a ButterflyMoE layer stack (+ embed/readout) into a `.bmoe`
+/// model artifact at `path`.  Tensor naming and layout are normative in
+/// DESIGN.md §3; both the raw angle tensors (provenance / python
+/// interop) and the precomputed `*_cs` (cos, sin) serving tables are
+/// written, so a loaded model performs bit-identical arithmetic to the
+/// in-memory stack that was packed — no trig at load time.
+pub fn pack_model(
+    path: &Path,
+    manifest: &ModelManifest,
+    embed: &[f32],
+    readout: &[f32],
+    layers: &[ButterflyMoeLayer],
+) -> Result<PackStats> {
+    let m = manifest;
+    anyhow::ensure!(m.n_layers == layers.len(), "manifest/layer-count mismatch");
+    anyhow::ensure!(embed.len() == m.vocab * m.d_model, "embed shape mismatch");
+    anyhow::ensure!(readout.len() == m.vocab * m.d_model, "readout shape mismatch");
+    let mut w = PackWriter::create(path)?;
+    let json = m.to_json();
+    w.raw_tensor(
+        MANIFEST_TENSOR,
+        mapped::DTYPE_U8,
+        &[json.len()],
+        json.as_bytes(),
+    )?;
+    w.aligned_tensor(
+        "embed",
+        mapped::DTYPE_F32,
+        &[m.vocab, m.d_model],
+        &f32_bytes(embed),
+    )?;
+    w.aligned_tensor(
+        "readout",
+        mapped::DTYPE_F32,
+        &[m.vocab, m.d_model],
+        &f32_bytes(readout),
+    )?;
+    let (half_in, half_out) = (m.d_model / 2, m.d_ff / 2);
+    for (l, layer) in layers.iter().enumerate() {
+        anyhow::ensure!(
+            layer.d_model() == m.d_model
+                && layer.d_ff() == m.d_ff
+                && layer.n_experts() == m.n_experts,
+            "layer {l} shape disagrees with manifest"
+        );
+        let sub = &layer.substrate;
+        let wpr = sub.words_per_row();
+        let prefix = format!("layers.{l}");
+        w.aligned_tensor(
+            &format!("{prefix}.gate"),
+            mapped::DTYPE_F32,
+            &[m.n_experts, m.d_model],
+            &f32_bytes(&layer.gate.w.data),
+        )?;
+        w.raw_tensor(
+            &format!("{prefix}.substrate.gamma"),
+            mapped::DTYPE_F32,
+            &[],
+            &sub.gamma.to_le_bytes(),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.substrate.plus"),
+            mapped::DTYPE_U8,
+            &[m.d_ff, wpr * 8],
+            &u64_bytes(sub.plus_words()),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.substrate.minus"),
+            mapped::DTYPE_U8,
+            &[m.d_ff, wpr * 8],
+            &u64_bytes(sub.minus_words()),
+        )?;
+        // stacked per-expert tables: angles then serving (cos, sin)
+        let mut theta = Vec::with_capacity(m.n_experts * m.depth_in * half_in);
+        let mut theta_cs = Vec::with_capacity(2 * theta.capacity());
+        let mut phi = Vec::with_capacity(m.n_experts * m.depth_out * half_out);
+        let mut phi_cs = Vec::with_capacity(2 * phi.capacity());
+        for ex in &layer.experts {
+            anyhow::ensure!(
+                ex.theta.depth == m.depth_in && ex.phi.depth == m.depth_out,
+                "expert depth disagrees with manifest"
+            );
+            theta.extend_from_slice(ex.theta.angles());
+            theta_cs.extend_from_slice(ex.theta.cs_table());
+            phi.extend_from_slice(ex.phi.angles());
+            phi_cs.extend_from_slice(ex.phi.cs_table());
+        }
+        w.aligned_tensor(
+            &format!("{prefix}.theta"),
+            mapped::DTYPE_F32,
+            &[m.n_experts, m.depth_in, half_in],
+            &f32_bytes(&theta),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.theta_cs"),
+            mapped::DTYPE_F32,
+            &[m.n_experts, m.depth_in, half_in, 2],
+            &f32_bytes(&theta_cs),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.phi"),
+            mapped::DTYPE_F32,
+            &[m.n_experts, m.depth_out, half_out],
+            &f32_bytes(&phi),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.phi_cs"),
+            mapped::DTYPE_F32,
+            &[m.n_experts, m.depth_out, half_out, 2],
+            &f32_bytes(&phi_cs),
+        )?;
+        w.aligned_tensor(
+            &format!("{prefix}.w_down"),
+            mapped::DTYPE_F32,
+            &[m.d_model, m.d_ff],
+            &f32_bytes(layer.w_down_data()),
+        )?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Loader
+// ---------------------------------------------------------------------------
+
+/// A loaded `.bmoe` model: manifest + directory + (mapped or heap)
+/// backing bytes.  Layers built from it borrow the backing through
+/// [`SharedSlice`], so keep the artifact's `Arc` alive only if you need
+/// its stats — the layers themselves keep the backing alive.
+pub struct ModelArtifact {
+    pub manifest: ModelManifest,
+    pub path: PathBuf,
+    store: MappedStore,
+}
+
+impl ModelArtifact {
+    /// Open `path` in `mode`.  A [`LoadMode::Mmap`] request on a target
+    /// without mmap support (non-unix / 32-bit) silently degrades to
+    /// [`LoadMode::Heap`] — identical bits, no zero-copy win; the
+    /// artifact's [`mode`](Self::mode) reports what actually happened.
+    pub fn load(path: &Path, mode: LoadMode) -> Result<ModelArtifact> {
+        let mode = if mode == LoadMode::Mmap && !Mmap::supported() {
+            LoadMode::Heap
+        } else {
+            mode
+        };
+        let store = MappedStore::open(path, mode)?;
+        let manifest = ModelManifest::parse(store.bytes(MANIFEST_TENSOR).with_context(|| {
+            format!("{}: not a model artifact (no {MANIFEST_TENSOR} tensor)", path.display())
+        })?)?;
+        Ok(ModelArtifact {
+            manifest,
+            path: path.to_path_buf(),
+            store,
+        })
+    }
+
+    pub fn mode(&self) -> LoadMode {
+        self.store.mode()
+    }
+
+    /// The underlying container directory — extra (non-model) tensors a
+    /// fixture or tool stored alongside the model, e.g. the
+    /// `expected.*` reference outputs of the cross-language fixture.
+    pub fn store(&self) -> &MappedStore {
+        &self.store
+    }
+
+    /// Bytes of the file image backing this model (the `memmodel`
+    /// file-bytes accounting is pinned against this).
+    pub fn file_bytes(&self) -> usize {
+        self.store.file_bytes()
+    }
+
+    /// `(borrowed in place, decoded to owned)` tensor counts so far.
+    pub fn zero_copy_stats(&self) -> (usize, usize) {
+        self.store.zero_copy_stats()
+    }
+
+    fn sh_tensor(&self, name: &str, want: &[usize]) -> Result<ShTensor> {
+        let (shape, data) = self.store.f32(name)?;
+        anyhow::ensure!(
+            shape == want,
+            "tensor '{name}': shape {shape:?}, expected {want:?}"
+        );
+        Ok(ShTensor::new(shape, data))
+    }
+
+    /// Token embedding table `(vocab, d_model)`.
+    pub fn embed(&self) -> Result<ShTensor> {
+        let m = &self.manifest;
+        self.sh_tensor("embed", &[m.vocab, m.d_model])
+    }
+
+    /// Readout projection `(vocab, d_model)`.
+    pub fn readout(&self) -> Result<ShTensor> {
+        let m = &self.manifest;
+        self.sh_tensor("readout", &[m.vocab, m.d_model])
+    }
+
+    /// Build the full layer stack, borrowing bitplanes, angle tables and
+    /// dense projections from the backing (mmap mode) or from the eager
+    /// heap decode (heap mode) — identical bits either way.
+    pub fn build_layers(&self) -> Result<Vec<ButterflyMoeLayer>> {
+        (0..self.manifest.n_layers)
+            .map(|l| self.build_layer(l))
+            .collect()
+    }
+
+    fn build_layer(&self, l: usize) -> Result<ButterflyMoeLayer> {
+        let m = &self.manifest;
+        let (d, dff, e) = (m.d_model, m.d_ff, m.n_experts);
+        let (half_in, half_out) = (d / 2, dff / 2);
+        let prefix = format!("layers.{l}");
+        let gate = {
+            // decoded owned (f32_owned): the gate is re-materialized as a
+            // Tensor either way, so it counts as a copy in the zero-copy
+            // telemetry instead of a phantom borrow
+            let (shape, data) = self.store.f32_owned(&format!("{prefix}.gate"))?;
+            anyhow::ensure!(shape == [e, d], "layer {l}: gate shape {shape:?}");
+            GateNetwork::new(Tensor::from_vec(&[e, d], data), m.top_k)
+        };
+        let gamma = self.store.f32_scalar(&format!("{prefix}.substrate.gamma"))?;
+        let wpr = d.div_ceil(64);
+        let plane = |which: &str| -> Result<SharedSlice<u64>> {
+            let name = format!("{prefix}.substrate.{which}");
+            let (shape, words) = self.store.u64_words(&name)?;
+            anyhow::ensure!(
+                shape == [dff, wpr * 8],
+                "'{name}': shape {shape:?}, expected [{dff}, {}]",
+                wpr * 8
+            );
+            Ok(words)
+        };
+        let substrate =
+            BitplaneTernary::from_planes(dff, d, gamma, plane("plus")?, plane("minus")?);
+        let angle_table = |which: &str, depth: usize, half: usize| -> Result<SharedSlice<f32>> {
+            let name = format!("{prefix}.{which}");
+            let (shape, data) = self.store.f32(&name)?;
+            anyhow::ensure!(
+                shape == [e, depth, half],
+                "'{name}': shape {shape:?}, expected [{e}, {depth}, {half}]"
+            );
+            Ok(data)
+        };
+        let cs_table = |which: &str, depth: usize, half: usize| -> Result<SharedSlice<f32>> {
+            let name = format!("{prefix}.{which}");
+            let (shape, data) = self.store.f32(&name)?;
+            anyhow::ensure!(
+                shape == [e, depth, half, 2],
+                "'{name}': shape {shape:?}, expected [{e}, {depth}, {half}, 2]"
+            );
+            Ok(data)
+        };
+        let theta = angle_table("theta", m.depth_in, half_in)?;
+        let theta_cs = cs_table("theta_cs", m.depth_in, half_in)?;
+        let phi = angle_table("phi", m.depth_out, half_out)?;
+        let phi_cs = cs_table("phi_cs", m.depth_out, half_out)?;
+        let experts = (0..e)
+            .map(|i| {
+                let (na, nc) = (m.depth_in * half_in, m.depth_in * half_in * 2);
+                let (pa, pc) = (m.depth_out * half_out, m.depth_out * half_out * 2);
+                OrbitExpert {
+                    theta: Butterfly::from_shared(
+                        d,
+                        m.depth_in,
+                        theta.sub(i * na, na),
+                        theta_cs.sub(i * nc, nc),
+                    ),
+                    phi: Butterfly::from_shared(
+                        dff,
+                        m.depth_out,
+                        phi.sub(i * pa, pa),
+                        phi_cs.sub(i * pc, pc),
+                    ),
+                }
+            })
+            .collect();
+        let w_down = self.sh_tensor(&format!("{prefix}.w_down"), &[d, dff])?;
+        Ok(ButterflyMoeLayer::from_parts(
+            gate,
+            Arc::new(substrate),
+            experts,
+            w_down,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic model (seeded stand-in shared by serve / pack-model / tests)
+// ---------------------------------------------------------------------------
+
+/// Shape + seed of a synthesized model.  `bmoe serve --native` (without
+/// `--model`) and `bmoe pack-model` build from the *same* spec, so a
+/// packed-then-loaded model is bit-identical to the in-memory stand-in.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthSpec {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// butterfly depth override (`None` = full `log2 d` depth)
+    pub depth: Option<usize>,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// The serve default: the shape `bmoe serve --native` has always used.
+    pub fn serve_default(n_layers: usize, seed: u64) -> SynthSpec {
+        SynthSpec {
+            d_model: 256,
+            d_ff: 1024,
+            n_experts: 16,
+            top_k: 2,
+            n_layers,
+            vocab: 512,
+            seq_len: 32,
+            depth: None,
+            seed,
+        }
+    }
+
+    /// The paper shape (Table 1 / Prop. 1): d=512, d_ff=2048, 64 experts.
+    pub fn paper(n_layers: usize, seed: u64) -> SynthSpec {
+        SynthSpec {
+            d_model: 512,
+            d_ff: 2048,
+            n_experts: 64,
+            top_k: 2,
+            n_layers,
+            vocab: 512,
+            seq_len: 32,
+            depth: None,
+            seed,
+        }
+    }
+
+    pub fn manifest(&self) -> ModelManifest {
+        ModelManifest {
+            version: FORMAT_VERSION,
+            vocab: self.vocab,
+            seq_len: self.seq_len,
+            d_model: self.d_model,
+            d_ff: self.d_ff,
+            n_layers: self.n_layers,
+            n_experts: self.n_experts,
+            top_k: self.top_k,
+            depth_in: self.depth.unwrap_or(Butterfly::max_depth(self.d_model)),
+            depth_out: self.depth.unwrap_or(Butterfly::max_depth(self.d_ff)),
+        }
+    }
+}
+
+/// A synthesized in-memory model: what [`pack_model`] packs and what the
+/// native backend serves directly when no `--model` file is given.
+pub struct SynthModel {
+    pub manifest: ModelManifest,
+    pub embed: Tensor,
+    pub readout: Tensor,
+    pub layers: Vec<ButterflyMoeLayer>,
+}
+
+impl SynthModel {
+    pub fn pack(&self, path: &Path) -> Result<PackStats> {
+        pack_model(
+            path,
+            &self.manifest,
+            &self.embed.data,
+            &self.readout.data,
+            &self.layers,
+        )
+    }
+}
+
+/// Deterministically synthesize a multi-layer model from `spec` (pure
+/// function of the spec: same spec ⇒ same weights, across processes).
+pub fn synthesize(spec: &SynthSpec) -> SynthModel {
+    let manifest = spec.manifest();
+    let mut lrng = Rng::new(spec.seed);
+    let layers = (0..spec.n_layers)
+        .map(|l| {
+            ButterflyMoeLayer::random(
+                spec.d_model,
+                spec.d_ff,
+                spec.n_experts,
+                spec.top_k,
+                spec.depth,
+                &mut lrng.fork(l as u64),
+            )
+        })
+        .collect();
+    // embed/readout seeding matches the historical NativeMoeBackend
+    // stand-in at seed 0 (0xE13BED)
+    let mut erng = Rng::new(0xE13BED ^ spec.seed);
+    let embed = Tensor::rand_normal(&[spec.vocab, spec.d_model], 0.1, &mut erng);
+    let readout = Tensor::rand_normal(&[spec.vocab, spec.d_model], 0.1, &mut erng);
+    SynthModel {
+        manifest,
+        embed,
+        readout,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SynthSpec {
+        SynthSpec {
+            d_model: 16,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_layers: 2,
+            vocab: 32,
+            seq_len: 8,
+            depth: None,
+            seed: 7,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("bmoe_artifact_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = tiny_spec().manifest();
+        let back = ModelManifest::parse(m.to_json().as_bytes()).unwrap();
+        assert_eq!(m, back);
+        assert!(ModelManifest::parse(b"{}").is_err());
+        assert!(ModelManifest::parse(b"{\"format\":\"other\"}").is_err());
+        // future versions are rejected loudly, not misread
+        let future = m.to_json().replace("\"version\":1", "\"version\":99");
+        assert!(ModelManifest::parse(future.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn pack_then_load_heap_reproduces_every_tensor() {
+        let model = synthesize(&tiny_spec());
+        let path = tmp("roundtrip.bmoe");
+        let stats = model.pack(&path).unwrap();
+        assert_eq!(stats.file_bytes, std::fs::metadata(&path).unwrap().len());
+        let art = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+        assert_eq!(art.manifest, model.manifest);
+        assert_eq!(art.embed().unwrap().data(), &model.embed.data[..]);
+        assert_eq!(art.readout().unwrap().data(), &model.readout.data[..]);
+        let layers = art.build_layers().unwrap();
+        assert_eq!(layers.len(), 2);
+        for (a, b) in layers.iter().zip(&model.layers) {
+            assert_eq!(a.gate.w.data, b.gate.w.data);
+            assert_eq!(a.substrate.gamma, b.substrate.gamma);
+            assert_eq!(a.substrate.plus_words(), b.substrate.plus_words());
+            assert_eq!(a.substrate.minus_words(), b.substrate.minus_words());
+            assert_eq!(a.w_down_data(), b.w_down_data());
+            for (ea, eb) in a.experts.iter().zip(&b.experts) {
+                assert_eq!(ea.theta.cs_table(), eb.theta.cs_table());
+                assert_eq!(ea.theta.angles(), eb.theta.angles());
+                assert_eq!(ea.phi.cs_table(), eb.phi.cs_table());
+            }
+        }
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_load_borrows_bulk_tensors_in_place() {
+        let model = synthesize(&tiny_spec());
+        let path = tmp("mapped.bmoe");
+        model.pack(&path).unwrap();
+        let art = ModelArtifact::load(&path, LoadMode::Mmap).unwrap();
+        let layers = art.build_layers().unwrap();
+        let _embed = art.embed().unwrap();
+        let (borrowed, copied) = art.zero_copy_stats();
+        // gate tensors are copied into the GateNetwork (small); every
+        // bulk tensor — planes, angle/cs tables, w_down, embed — must
+        // have been borrowed from the packed (aligned) file
+        assert!(borrowed >= 2 * 7 + 1, "borrowed={borrowed} copied={copied}");
+        assert!(!layers[0].experts[0].theta.cs_table().is_empty());
+        // heap vs mmap: identical values
+        let heap = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+        let hl = heap.build_layers().unwrap();
+        assert_eq!(
+            layers[1].experts[2].phi.cs_table(),
+            hl[1].experts[2].phi.cs_table()
+        );
+        assert_eq!(layers[0].substrate.plus_words(), hl[0].substrate.plus_words());
+    }
+
+    #[test]
+    fn load_rejects_non_model_containers() {
+        // a plain tensor store without __model__ must fail cleanly
+        let path = tmp("plain.bmoe");
+        let mut s = crate::tensor::store::TensorStore::default();
+        s.insert(
+            "w",
+            crate::tensor::store::Entry::F32(Tensor::from_vec(&[2], vec![1.0, 2.0])),
+        );
+        s.write(&path).unwrap();
+        assert!(ModelArtifact::load(&path, LoadMode::Heap).is_err());
+    }
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let a = synthesize(&tiny_spec());
+        let b = synthesize(&tiny_spec());
+        assert_eq!(a.embed.data, b.embed.data);
+        assert_eq!(
+            a.layers[1].experts[3].theta.cs_table(),
+            b.layers[1].experts[3].theta.cs_table()
+        );
+        let mut other = tiny_spec();
+        other.seed = 8;
+        let c = synthesize(&other);
+        assert_ne!(a.embed.data, c.embed.data);
+    }
+}

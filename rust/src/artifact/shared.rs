@@ -1,0 +1,317 @@
+//! Shared zero-copy storage: slices backed either by owned heap memory
+//! or by a byte buffer (file mapping / heap file image) shared through
+//! an [`Arc`].
+//!
+//! This is the mechanism that lets the hot-path structures
+//! ([`crate::butterfly::Butterfly`]'s (cos, sin) table,
+//! [`crate::ternary::BitplaneTernary`]'s bitplanes, the dense
+//! projections) reference a model artifact's bytes *in place*: an
+//! mmap-loaded model pays page faults on first touch instead of a
+//! deserialization pass, and concurrent serve processes mapping the same
+//! file share its page-cache pages (see DESIGN.md §3).
+//!
+//! Borrowing is only performed when it is bit-exact and well-defined:
+//! the element type must be 4/8-byte aligned at its absolute address and
+//! the host must be little-endian (the on-disk byte order of the BMOE1
+//! container).  Otherwise [`SharedSlice::from_backing`] silently decodes
+//! into an owned copy — same values, same downstream bits, just without
+//! the zero-copy win.
+
+use std::sync::Arc;
+
+use crate::artifact::mmapfile::Mmap;
+
+/// Backing storage shared by every slice borrowed from one loaded file:
+/// a read-only file mapping, or the file image read onto the heap.
+pub enum Backing {
+    Mapped(Mmap),
+    Heap(Vec<u8>),
+}
+
+impl Backing {
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            Backing::Mapped(m) => m.bytes(),
+            Backing::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes().is_empty()
+    }
+}
+
+/// Element types that may be reinterpreted from little-endian file bytes.
+/// Sealed to the two the artifact format stores in bulk.
+pub trait Pod: Copy + Send + Sync + 'static {
+    const WIDTH: usize;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl Pod for f32 {
+    const WIDTH: usize = 4;
+    #[inline]
+    fn from_le(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl Pod for u64 {
+    const WIDTH: usize = 8;
+    #[inline]
+    fn from_le(b: &[u8]) -> u64 {
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+}
+
+/// A `[T]` that is either owned or borrowed from a shared [`Backing`].
+///
+/// The borrowed form keeps the backing alive through an [`Arc`], so the
+/// slice is `'static`-safe to move into layers, backends and worker
+/// threads.  [`SharedSlice::as_slice`] is a pointer cast — no copy, no
+/// lock — which is what makes it usable from the decode hot path.
+pub enum SharedSlice<T: Pod> {
+    Owned(Vec<T>),
+    Borrowed {
+        backing: Arc<Backing>,
+        /// byte offset into `backing.bytes()`; absolute address is
+        /// `T`-aligned (checked at construction)
+        off: usize,
+        /// length in elements
+        len: usize,
+    },
+}
+
+impl<T: Pod> SharedSlice<T> {
+    pub fn owned(v: Vec<T>) -> Self {
+        SharedSlice::Owned(v)
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SharedSlice::Owned(v) => v.len(),
+            SharedSlice::Borrowed { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when this slice references the backing in place (the
+    /// zero-copy path) rather than an owned decode.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, SharedSlice::Borrowed { .. })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            SharedSlice::Owned(v) => v,
+            SharedSlice::Borrowed { backing, off, len } => {
+                let bytes = backing.bytes();
+                debug_assert!(off + len * T::WIDTH <= bytes.len());
+                let ptr = bytes[*off..].as_ptr();
+                debug_assert_eq!(ptr as usize % std::mem::align_of::<T>(), 0);
+                // SAFETY: bounds and alignment were checked at
+                // construction (and re-asserted above); the backing is
+                // immutable and kept alive by the Arc; T is Pod, so any
+                // bit pattern is a valid value.
+                unsafe { std::slice::from_raw_parts(ptr as *const T, *len) }
+            }
+        }
+    }
+
+    /// Build from `byte_len` bytes at `off` in `backing`.  Borrows in
+    /// place when the absolute address is `T`-aligned on a little-endian
+    /// host and `force_copy` is false; otherwise decodes an owned copy
+    /// (identical values either way).  `byte_len` must be a multiple of
+    /// `T::WIDTH` and in bounds (checked by the caller, re-asserted).
+    pub fn from_backing(
+        backing: &Arc<Backing>,
+        off: usize,
+        byte_len: usize,
+        force_copy: bool,
+    ) -> Self {
+        assert_eq!(byte_len % T::WIDTH, 0, "byte length not a multiple of element width");
+        let bytes = backing.bytes();
+        assert!(off + byte_len <= bytes.len(), "tensor data out of bounds");
+        let len = byte_len / T::WIDTH;
+        let aligned = (bytes[off..].as_ptr() as usize) % std::mem::align_of::<T>() == 0;
+        if cfg!(target_endian = "little") && aligned && !force_copy {
+            return SharedSlice::Borrowed {
+                backing: backing.clone(),
+                off,
+                len,
+            };
+        }
+        let mut v = Vec::with_capacity(len);
+        for chunk in bytes[off..off + byte_len].chunks_exact(T::WIDTH) {
+            v.push(T::from_le(chunk));
+        }
+        SharedSlice::Owned(v)
+    }
+
+    /// Element sub-range `[start, start + len)` sharing the same backing
+    /// (borrowed stays borrowed; owned copies the sub-range).  Used to
+    /// carve per-expert angle tables out of one stacked tensor.
+    pub fn sub(&self, start: usize, len: usize) -> SharedSlice<T> {
+        assert!(start + len <= self.len(), "sub-slice out of range");
+        match self {
+            SharedSlice::Owned(v) => SharedSlice::Owned(v[start..start + len].to_vec()),
+            SharedSlice::Borrowed { backing, off, .. } => SharedSlice::Borrowed {
+                backing: backing.clone(),
+                off: off + start * T::WIDTH,
+                len,
+            },
+        }
+    }
+}
+
+impl<T: Pod> Clone for SharedSlice<T> {
+    fn clone(&self) -> Self {
+        match self {
+            SharedSlice::Owned(v) => SharedSlice::Owned(v.clone()),
+            SharedSlice::Borrowed { backing, off, len } => SharedSlice::Borrowed {
+                backing: backing.clone(),
+                off: *off,
+                len: *len,
+            },
+        }
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for SharedSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SharedSlice::Owned(v) => write!(f, "SharedSlice::Owned(len={})", v.len()),
+            SharedSlice::Borrowed { off, len, .. } => {
+                write!(f, "SharedSlice::Borrowed(off={off}, len={len})")
+            }
+        }
+    }
+}
+
+/// Row-major f32 tensor over [`SharedSlice`] storage — the shared-or-
+/// owned twin of [`crate::tensor::Tensor`], used where a dense parameter
+/// (`w_down`, `embed`, `readout`) may be borrowed from a model mapping.
+#[derive(Clone, Debug)]
+pub struct ShTensor {
+    pub shape: Vec<usize>,
+    data: SharedSlice<f32>,
+}
+
+impl ShTensor {
+    pub fn new(shape: Vec<usize>, data: SharedSlice<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != len {}",
+            data.len()
+        );
+        ShTensor { shape, data }
+    }
+
+    pub fn from_tensor(t: crate::tensor::Tensor) -> Self {
+        ShTensor {
+            shape: t.shape,
+            data: SharedSlice::owned(t.data),
+        }
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn is_borrowed(&self) -> bool {
+        self.data.is_borrowed()
+    }
+
+    /// f32 storage bytes (memory-accounting parity with `Tensor::nbytes`).
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_roundtrip_and_sub() {
+        let s = SharedSlice::owned(vec![1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(s.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(!s.is_borrowed());
+        assert_eq!(s.sub(1, 2).as_slice(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn borrowed_from_heap_backing_when_aligned() {
+        // a Vec<u8> allocation is at least 8-aligned in practice, but the
+        // code must work either way — probe both offsets
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.0, 0.25, 8.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let backing = Arc::new(Backing::Heap(bytes));
+        let s: SharedSlice<f32> = SharedSlice::from_backing(&backing, 0, 16, false);
+        assert_eq!(s.as_slice(), &[1.5, -2.0, 0.25, 8.0]);
+        // force_copy gives the same values without the borrow
+        let c: SharedSlice<f32> = SharedSlice::from_backing(&backing, 0, 16, true);
+        assert!(!c.is_borrowed());
+        assert_eq!(c.as_slice(), s.as_slice());
+    }
+
+    #[test]
+    fn misaligned_offset_decodes_owned_copy() {
+        let mut bytes = vec![0u8]; // 1-byte shim forces misalignment
+        for v in [7.0f32, -1.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let backing = Arc::new(Backing::Heap(bytes));
+        let s: SharedSlice<f32> = SharedSlice::from_backing(&backing, 1, 8, false);
+        // absolute address 1 off the allocation start can never be
+        // 4-aligned, so this must have fallen back to the copy path
+        assert_eq!(s.as_slice(), &[7.0, -1.0]);
+    }
+
+    #[test]
+    fn u64_words_roundtrip() {
+        let words = [0xDEAD_BEEF_0123_4567u64, u64::MAX, 0];
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let backing = Arc::new(Backing::Heap(bytes));
+        let s: SharedSlice<u64> = SharedSlice::from_backing(&backing, 0, 24, false);
+        assert_eq!(s.as_slice(), &words);
+        let c: SharedSlice<u64> = SharedSlice::from_backing(&backing, 0, 24, true);
+        assert_eq!(c.as_slice(), &words);
+    }
+
+    #[test]
+    fn shtensor_shape_checked() {
+        let t = ShTensor::new(vec![2, 2], SharedSlice::owned(vec![0.0f32; 4]));
+        assert_eq!(t.nbytes(), 16);
+        assert!(!t.is_borrowed());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shtensor_shape_mismatch_panics() {
+        ShTensor::new(vec![3], SharedSlice::owned(vec![0.0f32; 4]));
+    }
+}

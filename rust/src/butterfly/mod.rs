@@ -12,19 +12,28 @@
 //! route through the stage-outer blocked kernel
 //! ([`crate::kernels::butterfly_apply_blocked`], §Perf iteration 6),
 //! which is bit-identical to the per-row walk by construction.
+//!
+//! Both the raw angles and the serving (cos, sin) table live in
+//! [`SharedSlice`] storage: owned for transforms built in memory, or
+//! borrowed straight from a model artifact's mapping
+//! ([`Butterfly::from_shared`], DESIGN.md §3) — loading a packed model
+//! does no trig and no table copy, and serves bit-identically to the
+//! in-memory transform the packer wrote.
 
+use crate::artifact::SharedSlice;
 use crate::util::{log2_exact, Rng};
 
-/// Butterfly parameters: raw angles plus a (cos, sin) table refreshed on
-/// mutation.  `d/2 * depth` angles — eq. (3)'s storage.
+/// Butterfly parameters: raw angles plus a (cos, sin) table kept in
+/// lockstep.  `d/2 * depth` angles — eq. (3)'s storage; the table is
+/// interleaved `[cos0, sin0, cos1, sin1, …]` with the same indexing.
 #[derive(Clone, Debug)]
 pub struct Butterfly {
     pub d: usize,
     pub depth: usize,
     /// angles[l][j], layout as documented above; len = depth * d/2
-    pub angles: Vec<f32>,
-    /// interleaved (cos, sin) per angle, same indexing
-    cs: Vec<(f32, f32)>,
+    angles: SharedSlice<f32>,
+    /// interleaved (cos, sin) per angle; len = depth * d
+    cs: SharedSlice<f32>,
 }
 
 impl Butterfly {
@@ -36,44 +45,96 @@ impl Butterfly {
     pub fn identity(d: usize, depth: usize) -> Self {
         assert!(depth >= 1 && depth <= Self::max_depth(d).max(1));
         let n = depth * d / 2;
+        let mut cs = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            cs.push(1.0);
+            cs.push(0.0);
+        }
         Butterfly {
             d,
             depth,
-            angles: vec![0.0; n],
-            cs: vec![(1.0, 0.0); n],
+            angles: SharedSlice::owned(vec![0.0; n]),
+            cs: SharedSlice::owned(cs),
         }
     }
 
     /// Near-identity random init, eq. (7): angles ~ N(0, std^2).
     pub fn random(d: usize, depth: usize, std: f32, rng: &mut Rng) -> Self {
-        let mut b = Self::identity(d, depth);
-        rng.fill_normal(&mut b.angles, std);
-        b.refresh();
-        b
+        let mut angles = vec![0.0f32; depth * d / 2];
+        rng.fill_normal(&mut angles, std);
+        Self::from_angle_vec(d, depth, angles)
     }
 
     /// Build from an angle slice laid out [depth, d/2] row-major (the
     /// layout of the exported `theta`/`phi` tensors).
     pub fn from_angles(d: usize, depth: usize, angles: &[f32]) -> Self {
-        assert_eq!(angles.len(), depth * d / 2, "angle count mismatch");
-        let mut b = Butterfly {
-            d,
-            depth,
-            angles: angles.to_vec(),
-            cs: Vec::new(),
-        };
-        b.refresh();
-        b
+        Self::from_angle_vec(d, depth, angles.to_vec())
     }
 
-    /// Recompute the (cos, sin) table after editing `angles`.
-    pub fn refresh(&mut self) {
-        self.cs = self.angles.iter().map(|&a| (a.cos(), a.sin())).collect();
+    fn from_angle_vec(d: usize, depth: usize, angles: Vec<f32>) -> Self {
+        assert_eq!(angles.len(), depth * d / 2, "angle count mismatch");
+        let cs = Self::cs_from(&angles);
+        Butterfly {
+            d,
+            depth,
+            angles: SharedSlice::owned(angles),
+            cs: SharedSlice::owned(cs),
+        }
+    }
+
+    /// Build from shared storage — the model-artifact loader's path
+    /// (DESIGN.md §3): `angles` is the raw [depth, d/2] table, `cs` the
+    /// precomputed interleaved (cos, sin) serving table, both typically
+    /// borrowed from the file mapping.  No trig happens here, so the
+    /// transform reproduces exactly the table the packer wrote.
+    pub fn from_shared(
+        d: usize,
+        depth: usize,
+        angles: SharedSlice<f32>,
+        cs: SharedSlice<f32>,
+    ) -> Self {
+        assert_eq!(angles.len(), depth * d / 2, "angle count mismatch");
+        assert_eq!(cs.len(), depth * d, "(cos, sin) table length mismatch");
+        Butterfly { d, depth, angles, cs }
+    }
+
+    fn cs_from(angles: &[f32]) -> Vec<f32> {
+        let mut cs = Vec::with_capacity(2 * angles.len());
+        for &a in angles {
+            cs.push(a.cos());
+            cs.push(a.sin());
+        }
+        cs
+    }
+
+    /// The raw angle table (empty-free: always `depth * d/2` values).
+    pub fn angles(&self) -> &[f32] {
+        self.angles.as_slice()
+    }
+
+    /// Replace the angles and recompute the (cos, sin) table (training /
+    /// test mutation; the result is always owned storage).
+    pub fn set_angles(&mut self, angles: Vec<f32>) {
+        assert_eq!(angles.len(), self.depth * self.d / 2, "angle count mismatch");
+        self.cs = SharedSlice::owned(Self::cs_from(&angles));
+        self.angles = SharedSlice::owned(angles);
+    }
+
+    /// The interleaved `[cos, sin]` serving table (what the packer
+    /// writes as `*_cs` and the blocked kernel reads).
+    pub fn cs_table(&self) -> &[f32] {
+        self.cs.as_slice()
+    }
+
+    /// True when the tables are borrowed from a model mapping rather
+    /// than owned (the zero-copy load path).
+    pub fn is_shared(&self) -> bool {
+        self.cs.is_borrowed()
     }
 
     /// Parameter count (what Table 2's "Params/Expert" counts per transform).
     pub fn n_params(&self) -> usize {
-        self.angles.len()
+        self.depth * self.d / 2
     }
 
     /// Bytes when angles are stored FP16 (Prop. 1 memory accounting).
@@ -100,8 +161,9 @@ impl Butterfly {
     #[inline]
     fn stage(&self, x: &mut [f32], l: usize, transpose: bool) {
         let stride = 1usize << l;
-        let half = self.d / 2;
-        let table = &self.cs[l * half..(l + 1) * half];
+        let cs = self.cs.as_slice();
+        // stage l's interleaved table slice: d/2 (cos, sin) pairs
+        let table = &cs[l * self.d..(l + 1) * self.d];
         let mut j = 0;
         let mut base = 0;
         // blocks of 2*stride; within a block, `stride` adjacent pairs
@@ -109,7 +171,7 @@ impl Butterfly {
             for off in 0..stride {
                 let lo = base + off;
                 let hi = lo + stride;
-                let (c, s0) = table[j];
+                let (c, s0) = (table[2 * j], table[2 * j + 1]);
                 let s = if transpose { -s0 } else { s0 };
                 let a = x[lo];
                 let b = x[hi];
@@ -146,7 +208,14 @@ impl Butterfly {
         if x.len() == self.d {
             return self.apply(x); // single row: skip the transpose round-trip
         }
-        crate::kernels::butterfly_apply_blocked(&self.cs, self.d, self.depth, false, x, scratch);
+        crate::kernels::butterfly_apply_blocked(
+            self.cs.as_slice(),
+            self.d,
+            self.depth,
+            false,
+            x,
+            scratch,
+        );
     }
 
     /// [`Self::apply_transpose_batch`] with caller-retained scratch.
@@ -155,7 +224,14 @@ impl Butterfly {
         if x.len() == self.d {
             return self.apply_transpose(x);
         }
-        crate::kernels::butterfly_apply_blocked(&self.cs, self.d, self.depth, true, x, scratch);
+        crate::kernels::butterfly_apply_blocked(
+            self.cs.as_slice(),
+            self.d,
+            self.depth,
+            true,
+            x,
+            scratch,
+        );
     }
 
     /// Reference batched apply: one row at a time through
@@ -269,8 +345,9 @@ mod tests {
     #[test]
     fn single_stage_stride_one_rotates_adjacent_pairs() {
         let mut b = Butterfly::identity(4, 1);
-        b.angles[0] = std::f32::consts::FRAC_PI_2; // rotate pair (0,1) by 90°
-        b.refresh();
+        let mut a = b.angles().to_vec();
+        a[0] = std::f32::consts::FRAC_PI_2; // rotate pair (0,1) by 90°
+        b.set_angles(a);
         let mut x = vec![1.0, 0.0, 1.0, 0.0];
         b.apply(&mut x);
         // pair (0,1): (1,0) -> (0,1); pair (2,3) untouched angle=0
@@ -282,8 +359,9 @@ mod tests {
     fn stage_stride_two_pairs_across() {
         let mut b = Butterfly::identity(4, 2);
         // zero stage 0; stage 1 (stride 2) pairs (0,2) and (1,3)
-        b.angles[2] = std::f32::consts::FRAC_PI_2;
-        b.refresh();
+        let mut a = b.angles().to_vec();
+        a[2] = std::f32::consts::FRAC_PI_2;
+        b.set_angles(a);
         let mut x = vec![1.0, 0.0, 0.0, 0.0];
         b.apply(&mut x);
         assert!((x[0]).abs() < 1e-6 && (x[2] - 1.0).abs() < 1e-6, "{x:?}");
@@ -334,11 +412,36 @@ mod tests {
         let d = 8;
         let depth = 3;
         let src = rand_bfly(d, depth, 13);
-        let b2 = Butterfly::from_angles(d, depth, &src.angles);
+        let b2 = Butterfly::from_angles(d, depth, src.angles());
         let mut x = vec![0.3f32; d];
         let mut y = x.clone();
         src.apply(&mut x);
         b2.apply(&mut y);
         assert_eq!(x, y);
+    }
+
+    #[test]
+    fn from_shared_serves_the_packed_table_bit_for_bit() {
+        let src = rand_bfly(16, 4, 21);
+        // simulate the pack -> load path: the loader hands back the same
+        // angle + cs values through shared storage
+        let shared = Butterfly::from_shared(
+            16,
+            4,
+            SharedSlice::owned(src.angles().to_vec()),
+            SharedSlice::owned(src.cs_table().to_vec()),
+        );
+        assert!(!shared.is_shared()); // owned storage in this simulation
+        let mut rng = Rng::new(22);
+        let mut a: Vec<f32> = (0..5 * 16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut b = a.clone();
+        src.apply_batch(&mut a);
+        shared.apply_batch(&mut b);
+        assert_eq!(a, b);
+        let mut ta = a.clone();
+        let mut tb = a.clone();
+        src.apply_transpose_batch(&mut ta);
+        shared.apply_transpose_batch(&mut tb);
+        assert_eq!(ta, tb);
     }
 }

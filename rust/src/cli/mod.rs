@@ -92,8 +92,12 @@ COMMANDS:
   train                 train a config via the AOT train-step artifact
   eval                  evaluate a checkpoint's CE loss on held-out batches
   serve                 start the TCP generation-session coordinator
-                        (--native serves the pure-rust MoE backend, no
-                        artifacts or PJRT runtime needed)
+                        (--native serves the pure-rust multi-layer LM, no
+                        artifacts or PJRT runtime needed; --model serves a
+                        packed .bmoe model artifact, mmap-loaded)
+  pack-model            synthesize a multi-layer native model and pack it
+                        into a .bmoe artifact (--out model.bmoe); serving
+                        it reproduces the in-memory model bit-for-bit
   bench-client          stream sessions from a running server, report
                         TTFT / inter-token latency / tokens per second
   tables                regenerate every paper table/figure (analytic ones)
@@ -116,10 +120,24 @@ COMMON FLAGS:
                         threads for the MoE hot path; default 0 = auto
                         (BMOE_WORKERS env var, else all cores).  Decoded
                         token streams are bit-identical for every N
+  --model FILE          serving (--native) / pack-model: the packed .bmoe
+                        model artifact to serve / write.  Without it,
+                        serve --native synthesizes the seeded stand-in
+  --layers L            serving (--native) / pack-model: residual
+                        ButterflyMoE blocks in the synthesized model
+                        (default 1); a --model file carries its own count
+  --load mmap|heap      serving (--native --model): mmap borrows tensor
+                        payloads from a shared file mapping (zero-copy
+                        cold start, page-cache shared across processes);
+                        heap eagerly deserializes.  Token streams are
+                        bit-identical either way (default: mmap)
   --max-new-tokens N    bench-client: token budget requested per session
   --temperature F       bench-client: sampling temperature (0 = greedy)
   --top-k N             bench-client: top-k truncation (0 = full vocab)
-  --out DIR             output directory for CSV/checkpoints
+  --out DIR|FILE        output directory for CSV/checkpoints; for
+                        pack-model, the .bmoe file to write
+                        (pack-model also takes --d-model --d-ff --experts
+                        --top-k-experts --vocab --seq-len --depth --seed)
 
 Any bare key=value is applied to the runtime config (see config/mod.rs).
 The serve wire protocol is documented in coordinator/server.rs:

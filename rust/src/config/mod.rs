@@ -132,6 +132,18 @@ pub struct RuntimeConfig {
     /// see `parallel::resolve_workers`).  Decoded streams are
     /// bit-identical for every value.
     pub workers: usize,
+    /// residual ButterflyMoE blocks in the synthetic native model
+    /// (`--layers`); ignored when `model_path` names a `.bmoe` artifact,
+    /// which carries its own layer count
+    pub n_layers: usize,
+    /// packed `.bmoe` model artifact for `serve --native` (`--model`);
+    /// empty = synthesize the seeded stand-in model instead
+    pub model_path: String,
+    /// how to load `model_path` (`--load mmap|heap`): `mmap` borrows
+    /// tensor payloads from a shared file mapping (zero-copy cold
+    /// start), `heap` eagerly deserializes — decoded token streams are
+    /// bit-identical either way (see `artifact`)
+    pub load_mode: String,
     pub port: u16,
     pub checkpoint_every: usize,
     pub out_dir: String,
@@ -153,6 +165,9 @@ impl Default for RuntimeConfig {
             top_k: 0,
             expert_cache_mb: 0.0,
             workers: 0,
+            n_layers: 1,
+            model_path: String::new(),
+            load_mode: "mmap".into(),
             port: 7070,
             checkpoint_every: 100,
             out_dir: "runs".into(),
@@ -179,6 +194,18 @@ impl RuntimeConfig {
                 self.expert_cache_mb = value.parse().context("expert_cache_mb")?
             }
             "workers" => self.workers = value.parse().context("workers")?,
+            "n_layers" => {
+                self.n_layers = value.parse().context("n_layers")?;
+                anyhow::ensure!(self.n_layers >= 1, "n_layers must be >= 1");
+            }
+            "model_path" => self.model_path = value.into(),
+            "load_mode" => {
+                anyhow::ensure!(
+                    matches!(value, "mmap" | "heap"),
+                    "load_mode must be mmap|heap"
+                );
+                self.load_mode = value.into();
+            }
             "port" => self.port = value.parse().context("port")?,
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
@@ -283,6 +310,22 @@ mod tests {
         assert_eq!(r.workers, 4);
         assert!(r.set("expert_cache_mb", "lots").is_err());
         assert!(r.set("workers", "many").is_err());
+    }
+
+    #[test]
+    fn model_artifact_overrides() {
+        let mut r = RuntimeConfig::default();
+        assert_eq!(r.n_layers, 1);
+        assert_eq!(r.load_mode, "mmap");
+        assert!(r.model_path.is_empty());
+        r.set("n_layers", "4").unwrap();
+        r.set("model_path", "runs/model.bmoe").unwrap();
+        r.set("load_mode", "heap").unwrap();
+        assert_eq!(r.n_layers, 4);
+        assert_eq!(r.model_path, "runs/model.bmoe");
+        assert_eq!(r.load_mode, "heap");
+        assert!(r.set("n_layers", "0").is_err());
+        assert!(r.set("load_mode", "floppy").is_err());
     }
 
     #[test]

@@ -62,8 +62,8 @@ pub mod server;
 pub mod session;
 
 pub use backend::{
-    greedy_next, warm, Backend, InflightBatch, InflightSeq, NativeMoeBackend, PjrtLmBackend,
-    StepOutput,
+    greedy_next, warm, Backend, InflightBatch, InflightSeq, NativeLmBackend, NativeMoeBackend,
+    PjrtLmBackend, StepOutput,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};

@@ -43,10 +43,11 @@
 //!   are drop-in bit-identical replacements for the per-dot loops they
 //!   retire.  `rust/tests/kernels.rs` pins this across shapes.
 //! * The blocked butterfly applies, per element, exactly the same
-//!   two-FMA chain as the per-row [`Butterfly::apply`]
-//!   (crate::butterfly::Butterfly::apply): stages are barriers, pairs
-//!   within a stage are disjoint, and the transpose in/out is pure data
-//!   movement — so stage-outer vs row-outer order cannot change a bit.
+//!   two-FMA chain as the per-row
+//!   [`Butterfly::apply`](crate::butterfly::Butterfly::apply): stages
+//!   are barriers, pairs within a stage are disjoint, and the transpose
+//!   in/out is pure data movement — so stage-outer vs row-outer order
+//!   cannot change a bit.
 //!
 //! All ternary/dense GEMM call sites (`BitplaneTernary::{gemm, gemm_a8}`,
 //! `DecodedExpert::gemm`, the shared down projection in
@@ -400,8 +401,13 @@ pub fn gemm_i8_strided(
 ///
 /// `scratch` is resized to at most `d * RB` and retained by the caller
 /// (working-set bytes; zero steady-state allocation).
+///
+/// `cs` is the interleaved `[cos, sin]` table (`depth * d` floats, the
+/// layout of `Butterfly::cs_table` — also the exact bytes a model
+/// artifact stores, so a mapping-borrowed table feeds this kernel with
+/// no translation).
 pub fn butterfly_apply_blocked(
-    cs: &[(f32, f32)],
+    cs: &[f32],
     d: usize,
     depth: usize,
     transpose: bool,
@@ -409,9 +415,8 @@ pub fn butterfly_apply_blocked(
     scratch: &mut Vec<f32>,
 ) {
     debug_assert_eq!(x.len() % d, 0);
-    debug_assert_eq!(cs.len(), depth * (d / 2));
+    debug_assert_eq!(cs.len(), depth * d);
     let rows = x.len() / d;
-    let half = d / 2;
     scratch.resize(d * RB.min(rows), 0.0);
     let mut done = 0;
     while done < rows {
@@ -426,14 +431,14 @@ pub fn butterfly_apply_blocked(
         for li in 0..depth {
             let l = if transpose { depth - 1 - li } else { li };
             let stride = 1usize << l;
-            let table = &cs[l * half..(l + 1) * half];
+            let table = &cs[l * d..(l + 1) * d];
             let mut j = 0;
             let mut base = 0;
             while base < d {
                 for off in 0..stride {
                     let lo = (base + off) * rb;
                     let hi = lo + stride * rb;
-                    let (c, s0) = table[j];
+                    let (c, s0) = (table[2 * j], table[2 * j + 1]);
                     let s = if transpose { -s0 } else { s0 };
                     let (head, tail) = scratch.split_at_mut(hi);
                     let lo_lane = &mut head[lo..lo + rb];

@@ -7,10 +7,11 @@
 //! * **L3 (this crate)** — generation-session serving coordinator
 //!   (continuous batching, seeded sampling, streaming token events —
 //!   see [`coordinator`]), native edge inference engine (packed ternary
-//!   + butterfly orbits), PJRT runtime for the AOT-compiled jax graphs,
-//!   training driver, and every analysis substrate the paper's
-//!   evaluation needs (memory models, energy models, device profiles,
-//!   baselines).
+//!   + butterfly orbits, multi-layer residual LM), mmap-backed model
+//!   artifacts (pack + zero-copy load — see [`artifact`]), PJRT runtime
+//!   for the AOT-compiled jax graphs, training driver, and every
+//!   analysis substrate the paper's evaluation needs (memory models,
+//!   energy models, device profiles, baselines).
 //! * **L2 (`python/compile/model.py`)** — the jax transformer-LM with
 //!   ButterflyMoE FFNs, lowered once to `artifacts/*.hlo.txt`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
@@ -37,6 +38,7 @@
 //! token as it is decoded, and reports TTFT / inter-token latency /
 //! tokens-per-second in [`coordinator::Metrics`].
 
+pub mod artifact;
 pub mod baselines;
 pub mod bench;
 pub mod butterfly;

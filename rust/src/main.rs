@@ -38,6 +38,9 @@ fn main() -> Result<()> {
         ("top_k", args.flag("top-k")),
         ("expert_cache_mb", args.flag("expert-cache-mb")),
         ("workers", args.flag("workers")),
+        ("n_layers", args.flag("layers")),
+        ("model_path", args.flag("model")),
+        ("load_mode", args.flag("load")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -54,10 +57,50 @@ fn main() -> Result<()> {
         "train" => cmd_train(&rt, &args),
         "eval" => cmd_eval(&rt, &args),
         "serve" => cmd_serve(&rt, &args),
+        "pack-model" => cmd_pack_model(&rt, &args),
         "bench-client" => cmd_bench_client(&rt, &args),
         "tables" => cmd_tables(&rt),
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
+}
+
+/// Synthesize the seeded multi-layer native model and pack it into a
+/// `.bmoe` artifact.  `bmoe serve --native --model <file>` then serves
+/// token streams bit-identical to `bmoe serve --native` with the same
+/// shape flags and seed (pinned by rust/tests/artifact.rs).
+fn cmd_pack_model(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    use butterfly_moe::artifact::{synthesize, SynthSpec};
+    let out = args.flag_or("out", "model.bmoe");
+    let spec = SynthSpec {
+        d_model: args.flag_parse("d-model")?.unwrap_or(256),
+        d_ff: args.flag_parse("d-ff")?.unwrap_or(1024),
+        n_experts: args.flag_parse("experts")?.unwrap_or(16),
+        top_k: args.flag_parse("top-k-experts")?.unwrap_or(2),
+        n_layers: rt.n_layers,
+        vocab: args.flag_parse("vocab")?.unwrap_or(512),
+        seq_len: args.flag_parse("seq-len")?.unwrap_or(32),
+        depth: args.flag_parse("depth")?,
+        seed: rt.seed,
+    };
+    let sw = butterfly_moe::util::Stopwatch::start();
+    let model = synthesize(&spec);
+    let built_ms = sw.millis();
+    let sw = butterfly_moe::util::Stopwatch::start();
+    let stats = model.pack(Path::new(&out))?;
+    println!(
+        "packed {} layers x {} experts (d={}, d_ff={}, top-{}) -> {}",
+        spec.n_layers, spec.n_experts, spec.d_model, spec.d_ff, spec.top_k, out
+    );
+    println!(
+        "  {} in {} tensors ({} alignment pads); synthesize {:.0} ms, pack {:.0} ms",
+        human_bytes(stats.file_bytes as f64),
+        stats.tensors,
+        stats.pads,
+        built_ms,
+        sw.millis(),
+    );
+    println!("  serve it:  bmoe serve --native --model {out}");
+    Ok(())
 }
 
 /// Drive a running `bmoe serve` instance over the streaming session
@@ -217,42 +260,80 @@ fn cmd_eval(rt: &RuntimeConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
-    use butterfly_moe::coordinator::{Backend, NativeMoeBackend};
-    use butterfly_moe::expertcache::ExpertCacheConfig;
+    use butterfly_moe::artifact::{synthesize, LoadMode, ModelArtifact, SynthSpec};
+    use butterfly_moe::coordinator::{Backend, NativeLmBackend};
+    use butterfly_moe::moe::MoeLayer;
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         // pure-rust edge backend: serves without compiled artifacts (and
-        // without a PJRT runtime)
-        let mut rng = butterfly_moe::util::Rng::new(rt.seed);
-        let mut layer =
-            butterfly_moe::moe::ButterflyMoeLayer::random(256, 1024, 16, 2, None, &mut rng);
+        // without a PJRT runtime) — a packed .bmoe model file, or the
+        // seeded synthetic stand-in when no --model is given
         let workers = butterfly_moe::parallel::resolve_workers(rt.workers);
-        layer.attach_worker_pool(Arc::new(butterfly_moe::parallel::WorkerPool::new(workers)));
+        let pool = Arc::new(butterfly_moe::parallel::WorkerPool::new(workers));
         eprintln!("[serve] workers: {workers} (decoded streams are worker-count invariant)");
-        if rt.expert_cache_mb > 0.0 {
-            let cache =
-                layer.attach_expert_cache(ExpertCacheConfig::with_budget_mb(rt.expert_cache_mb));
+        let cache_bytes = (rt.expert_cache_mb * 1048576.0) as usize;
+        let backend = if !rt.model_path.is_empty() {
+            let mode = LoadMode::parse(&rt.load_mode)?;
+            let sw = butterfly_moe::util::Stopwatch::start();
+            let artifact = ModelArtifact::load(Path::new(&rt.model_path), mode)?;
+            let backend =
+                NativeLmBackend::from_artifact(&artifact, rt.max_batch, Some(pool), cache_bytes)?;
+            let (borrowed, copied) = artifact.zero_copy_stats();
             eprintln!(
-                "[serve] expert cache: budget {} = {} resident experts max ({} each)",
-                human_bytes(cache.budget_bytes() as f64),
-                cache.capacity_experts(),
-                human_bytes(cache.entry_bytes() as f64),
+                "[serve] model: {} — {} layers, {} ({} load in {:.1} ms; \
+                 {borrowed} tensors zero-copy, {copied} copied)",
+                rt.model_path,
+                artifact.manifest.n_layers,
+                human_bytes(artifact.file_bytes() as f64),
+                mode.name(),
+                sw.millis(),
             );
-            if !cache.enabled() {
-                eprintln!(
-                    "[serve] warning: --expert-cache-mb {} is smaller than one working set \
-                     ({}); cache DISABLED, serving pure sub-linear",
-                    rt.expert_cache_mb,
-                    human_bytes(cache.entry_bytes() as f64),
-                );
+            backend
+        } else {
+            let model = synthesize(&SynthSpec::serve_default(rt.n_layers, rt.seed));
+            NativeLmBackend::from_synth(model, rt.max_batch, Some(pool), cache_bytes)
+        };
+        if cache_bytes > 0 {
+            // per-layer budget: the serving dial splits evenly across
+            // blocks (a split that rounds to zero attaches no cache)
+            match backend.layers()[0].expert_cache() {
+                Some(cache) => {
+                    eprintln!(
+                        "[serve] expert cache: {} per layer x {} layers = {} resident experts \
+                         max per layer ({} each)",
+                        human_bytes(cache.budget_bytes() as f64),
+                        backend.n_layers(),
+                        cache.capacity_experts(),
+                        human_bytes(cache.entry_bytes() as f64),
+                    );
+                    if !cache.enabled() {
+                        eprintln!(
+                            "[serve] warning: --expert-cache-mb {} splits below one working set \
+                             per layer ({}); cache DISABLED, serving pure sub-linear",
+                            rt.expert_cache_mb,
+                            human_bytes(cache.entry_bytes() as f64),
+                        );
+                    }
+                }
+                None => eprintln!(
+                    "[serve] warning: --expert-cache-mb {} rounds to zero bytes per layer; \
+                     cache DISABLED, serving pure sub-linear",
+                    rt.expert_cache_mb
+                ),
             }
         }
-        Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, rt.max_batch))
+        Arc::new(backend)
     } else {
         if rt.expert_cache_mb > 0.0 {
             eprintln!("[serve] note: --expert-cache-mb applies to the --native backend only");
         }
         if rt.workers > 0 {
             eprintln!("[serve] note: --workers applies to the --native backend only");
+        }
+        if !rt.model_path.is_empty() {
+            eprintln!(
+                "[serve] note: --model names a native .bmoe artifact; the PJRT backend \
+                 loads checkpoints via --from instead"
+            );
         }
         let ckpt = args.flag("from").map(Path::new);
         let (backend, _join) =

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use super::gating::GateNetwork;
 use super::gelu;
+use crate::artifact::ShTensor;
 use crate::butterfly::Butterfly;
 use crate::expertcache::{ExpertCacheConfig, ExpertResidencyCache};
 use crate::kernels::{self, TernaryScratch};
@@ -69,8 +70,11 @@ pub trait MoeLayer: Send + Sync {
         loads
     }
 
-    /// Shared down projection (d_model, d_ff).
-    fn w_down(&self) -> &Tensor;
+    /// Shared down projection, row-major `(d_model, d_ff)` data.  A
+    /// slice (not a `Tensor`) so implementations may serve it from
+    /// owned memory or borrowed from a model artifact's mapping
+    /// ([`crate::artifact::ShTensor`]).
+    fn w_down(&self) -> &[f32];
 
     /// Bytes of *expert-identity* storage — what Table 1 compares.
     /// (Shared substrate + per-expert params for ButterflyMoE; the N
@@ -130,7 +134,7 @@ struct DispatchBlock {
 /// `rust/tests/determinism.rs` and the kernel property tests).
 #[allow(clippy::too_many_arguments)] // shape + row-window params of the sharded kernel
 fn down_project_rows(
-    wd: &Tensor,
+    wd: &[f32],
     h: &[f32],
     t: usize,
     d: usize,
@@ -140,7 +144,7 @@ fn down_project_rows(
     y: &DisjointSliceMut<f32>,
 ) {
     kernels::gemm_f32_sink(
-        &wd.data[lo * dff..hi * dff],
+        &wd[lo * dff..hi * dff],
         hi - lo,
         dff,
         h,
@@ -188,7 +192,9 @@ pub struct ButterflyMoeLayer {
     /// without holding a self-reference into the layer.
     pub substrate: Arc<BitplaneTernary>,
     pub experts: Vec<OrbitExpert>,
-    pub w_down: Tensor,
+    /// Shared down projection (d_model, d_ff); owned for in-memory
+    /// layers, borrowed from the model mapping for artifact-loaded ones.
+    pub w_down: ShTensor,
     /// Quantize activations to int8 in the substrate GEMM (W1.58A8, the
     /// deployment fast path — ~2x faster, ~0.5% output error).  Default
     /// false so the engine is bit-parity-testable against the L2 graph.
@@ -219,7 +225,25 @@ impl ButterflyMoeLayer {
         experts: Vec<OrbitExpert>,
         w_down: Tensor,
     ) -> Self {
-        let (d_ff, d_model) = (substrate.shape[0], substrate.shape[1]);
+        Self::from_parts(
+            gate,
+            Arc::new(BitplaneTernary::from_quant(substrate)),
+            experts,
+            ShTensor::from_tensor(w_down),
+        )
+    }
+
+    /// Assemble from already-built parts — the model-artifact loader's
+    /// constructor (`crate::artifact::ModelArtifact::build_layers`),
+    /// where the substrate planes, angle tables and `w_down` may all be
+    /// borrowed from the file mapping.  Same validation as [`Self::new`].
+    pub fn from_parts(
+        gate: GateNetwork,
+        substrate: Arc<BitplaneTernary>,
+        experts: Vec<OrbitExpert>,
+        w_down: ShTensor,
+    ) -> Self {
+        let (d_ff, d_model) = (substrate.rows, substrate.cols);
         assert_eq!(gate.d_model(), d_model);
         assert_eq!(gate.n_experts(), experts.len());
         for ex in &experts {
@@ -229,7 +253,7 @@ impl ButterflyMoeLayer {
         assert_eq!(w_down.shape, vec![d_model, d_ff]);
         ButterflyMoeLayer {
             gate,
-            substrate: Arc::new(BitplaneTernary::from_quant(substrate)),
+            substrate,
             experts,
             w_down,
             act_quant: false,
@@ -241,6 +265,12 @@ impl ButterflyMoeLayer {
             d_model,
             d_ff,
         }
+    }
+
+    /// Row-major `(d_model, d_ff)` down-projection data (what the model
+    /// packer serializes).
+    pub fn w_down_data(&self) -> &[f32] {
+        self.w_down.data()
     }
 
     /// Attach a worker pool: `experts_forward` shards its dispatch
@@ -349,8 +379,8 @@ impl MoeLayer for ButterflyMoeLayer {
     fn n_experts(&self) -> usize {
         self.experts.len()
     }
-    fn w_down(&self) -> &Tensor {
-        &self.w_down
+    fn w_down(&self) -> &[f32] {
+        self.w_down.data()
     }
 
     /// Expert-major batched dispatch (§Perf iteration 3), sharded across
@@ -566,8 +596,8 @@ impl MoeLayer for StandardMoeLayer {
     fn n_experts(&self) -> usize {
         self.w_up.len()
     }
-    fn w_down(&self) -> &Tensor {
-        &self.w_down
+    fn w_down(&self) -> &[f32] {
+        &self.w_down.data
     }
 
     fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {
@@ -621,8 +651,8 @@ impl MoeLayer for DenseFfn {
     fn n_experts(&self) -> usize {
         1
     }
-    fn w_down(&self) -> &Tensor {
-        &self.w_down_t
+    fn w_down(&self) -> &[f32] {
+        &self.w_down_t.data
     }
 
     fn experts_forward(&self, x: &[f32], t: usize, h: &mut [f32]) -> Vec<f64> {

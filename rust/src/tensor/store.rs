@@ -1,8 +1,27 @@
 //! BMOE tensor container — Rust side of the spec in
-//! `python/compile/bmoe_io.py` (little-endian; see that file for layout).
+//! `python/compile/bmoe_io.py` (little-endian; normative byte layout
+//! also in DESIGN.md §3, kept in sync with that docstring).
 //!
 //! Reads initial params exported by `aot.py`; writes checkpoints from the
 //! training driver so Python tooling can inspect them symmetrically.
+//! The cross-language byte format is pinned by `golden_bytes_exact`
+//! below (a python-written fixture embedded verbatim) so neither writer
+//! can silently drift.
+//!
+//! Audit notes (spec vs both implementations):
+//! * dtype codes, dim widths, endianness and field order agree exactly;
+//!   the golden fixture proves byte-for-byte write parity.
+//! * rank-0 tensors: both readers accept `ndim = 0` (1 element), and the
+//!   Rust writer emits it; numpy's `ascontiguousarray` promotes 0-d to
+//!   1-d, so the python *writer* stores scalars as shape `(1,)` — both
+//!   forms decode to one element everywhere.
+//! * the Rust writer used to truncate oversized names/ranks/dims with
+//!   bare `as` casts; it now rejects them (`write` errors) instead of
+//!   writing a corrupt container.
+//!
+//! This deserializing reader is the right tool for checkpoints and
+//! params.  Model artifacts go through the zero-copy
+//! [`crate::artifact::MappedStore`] instead.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -137,6 +156,11 @@ impl TensorStore {
         f.write_all(&(self.names.len() as u32).to_le_bytes())?;
         for (name, e) in self.iter_ordered() {
             let nb = name.as_bytes();
+            anyhow::ensure!(
+                nb.len() <= u16::MAX as usize,
+                "tensor name '{}…' exceeds the u16 name_len field",
+                &name[..name.len().min(32)]
+            );
             f.write_all(&(nb.len() as u16).to_le_bytes())?;
             f.write_all(nb)?;
             let (code, shape): (u8, &[usize]) = match e {
@@ -144,8 +168,17 @@ impl TensorStore {
                 Entry::I32(t) => (1, &t.shape),
                 Entry::U8 { shape, .. } => (2, shape),
             };
+            anyhow::ensure!(
+                shape.len() <= u8::MAX as usize,
+                "tensor '{name}': rank {} exceeds the u8 ndim field",
+                shape.len()
+            );
             f.write_all(&[code, shape.len() as u8])?;
             for &d in shape {
+                anyhow::ensure!(
+                    d <= u32::MAX as usize,
+                    "tensor '{name}': dim {d} exceeds the u32 dims field"
+                );
                 f.write_all(&(d as u32).to_le_bytes())?;
             }
             match e {
@@ -230,6 +263,88 @@ mod tests {
             // embeddings present with the documented naming scheme
             assert!(s.names.iter().any(|n| n.contains("embed")));
         }
+    }
+
+    /// The exact bytes `python/compile/bmoe_io.py::write_bmoe` produces
+    /// for this store (generated once, embedded verbatim): the
+    /// cross-language format can never silently drift — any layout
+    /// change on either side fails this test.
+    const GOLDEN: &[u8] = &[
+        0x42, 0x4d, 0x4f, 0x45, 0x31, 0x00, 0x03, 0x00, 0x00, 0x00, 0x01, 0x00, 0x77, 0x00,
+        0x02, 0x02, 0x00, 0x00, 0x00, 0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x80, 0x3f, 0x00,
+        0x00, 0x00, 0xc0, 0x00, 0x00, 0x40, 0x40, 0x00, 0x00, 0x80, 0x40, 0x00, 0x00, 0xa0,
+        0x40, 0x00, 0x00, 0xd0, 0x40, 0x03, 0x00, 0x69, 0x64, 0x73, 0x01, 0x01, 0x04, 0x00,
+        0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0xfe, 0xff, 0xff, 0xff, 0x03, 0x00, 0x00, 0x00,
+        0x04, 0x00, 0x00, 0x00, 0x06, 0x00, 0x70, 0x61, 0x63, 0x6b, 0x65, 0x64, 0x02, 0x01,
+        0x03, 0x00, 0x00, 0x00, 0x00, 0x7f, 0xff,
+    ];
+
+    fn golden_store() -> TensorStore {
+        let mut s = TensorStore::default();
+        s.insert(
+            "w",
+            Entry::F32(Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.0, 4.0, 5.0, 6.5])),
+        );
+        s.insert("ids", Entry::I32(IntTensor::from_vec(&[4], vec![1, -2, 3, 4])));
+        s.insert(
+            "packed",
+            Entry::U8 {
+                shape: vec![3],
+                data: vec![0, 127, 255],
+            },
+        );
+        s
+    }
+
+    #[test]
+    fn golden_bytes_exact() {
+        // write parity: the Rust writer emits byte-for-byte what the
+        // normative python writer produced for the same store
+        let dir = std::env::temp_dir().join("bmoe_store_golden");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("golden.bmoe");
+        golden_store().write(&path).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            GOLDEN,
+            "Rust writer drifted from the python-written golden bytes"
+        );
+        // read parity: the golden bytes decode to the same store
+        let gpath = dir.join("golden_in.bmoe");
+        std::fs::write(&gpath, GOLDEN).unwrap();
+        let back = TensorStore::read(&gpath).unwrap();
+        assert_eq!(back.names, vec!["w", "ids", "packed"]);
+        assert_eq!(back.get_f32("w").unwrap().shape, vec![2, 3]);
+        assert_eq!(
+            back.get_f32("w").unwrap().data,
+            vec![1.0, -2.0, 3.0, 4.0, 5.0, 6.5]
+        );
+        match back.get("ids").unwrap() {
+            Entry::I32(t) => assert_eq!(t.data, vec![1, -2, 3, 4]),
+            _ => panic!("wrong dtype"),
+        }
+        match back.get("packed").unwrap() {
+            Entry::U8 { data, .. } => assert_eq!(data, &vec![0, 127, 255]),
+            _ => panic!("wrong dtype"),
+        }
+        // the zero-copy reader agrees with the deserializing one
+        let m = crate::artifact::MappedStore::open(&gpath, crate::artifact::LoadMode::Heap)
+            .unwrap();
+        let (shape, w) = m.f32("w").unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(w.as_slice(), &back.get_f32("w").unwrap().data[..]);
+    }
+
+    #[test]
+    fn writer_rejects_field_overflow_instead_of_truncating() {
+        let dir = std::env::temp_dir().join("bmoe_store_overflow");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = TensorStore::default();
+        s.insert(
+            &"n".repeat(u16::MAX as usize + 1),
+            Entry::F32(Tensor::from_vec(&[1], vec![0.0])),
+        );
+        assert!(s.write(&dir.join("overflow.bmoe")).is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! [`BitplaneTernary::gemm_ref`] / [`BitplaneTernary::gemm_a8_ref`] for
 //! the ablation and are bit-identical to the blocked paths.
 
+use crate::artifact::SharedSlice;
 use crate::kernels::{self, TernaryScratch};
 use crate::quant::TernaryQuant;
 
@@ -135,14 +136,20 @@ impl PackedTernary {
 
 /// Bitplane layout: per row, `words = ceil(cols/64)` u64 words for the
 /// +1 positions and the same for -1 positions.
+///
+/// The planes live in [`SharedSlice`] storage: owned when built by
+/// [`BitplaneTernary::from_quant`], or borrowed straight from a model
+/// artifact's mapping via [`BitplaneTernary::from_planes`] (DESIGN.md
+/// §3) — the substrate's pages are then shared with every other process
+/// mapping the same file.
 #[derive(Clone, Debug)]
 pub struct BitplaneTernary {
     pub rows: usize,
     pub cols: usize,
     pub gamma: f32,
     words_per_row: usize,
-    plus: Vec<u64>,
-    minus: Vec<u64>,
+    plus: SharedSlice<u64>,
+    minus: SharedSlice<u64>,
 }
 
 impl BitplaneTernary {
@@ -161,10 +168,32 @@ impl BitplaneTernary {
                 }
             }
         }
+        Self::from_planes(
+            rows,
+            cols,
+            q.gamma,
+            SharedSlice::owned(plus),
+            SharedSlice::owned(minus),
+        )
+    }
+
+    /// Build directly from bitplane words (the artifact loader's path;
+    /// word `wi` bit `b` of a row is column `wi*64 + b`, exactly the
+    /// layout [`Self::from_quant`] produces and the packer serializes).
+    pub fn from_planes(
+        rows: usize,
+        cols: usize,
+        gamma: f32,
+        plus: SharedSlice<u64>,
+        minus: SharedSlice<u64>,
+    ) -> Self {
+        let wpr = cols.div_ceil(64);
+        assert_eq!(plus.len(), rows * wpr, "plus-plane word count mismatch");
+        assert_eq!(minus.len(), rows * wpr, "minus-plane word count mismatch");
         BitplaneTernary {
             rows,
             cols,
-            gamma: q.gamma,
+            gamma,
             words_per_row: wpr,
             plus,
             minus,
@@ -182,13 +211,23 @@ impl BitplaneTernary {
         self.words_per_row
     }
 
+    /// All plus-plane words, row-major (what the model packer serializes).
+    pub fn plus_words(&self) -> &[u64] {
+        self.plus.as_slice()
+    }
+
+    /// All minus-plane words, row-major (see [`Self::plus_words`]).
+    pub fn minus_words(&self) -> &[u64] {
+        self.minus.as_slice()
+    }
+
     /// Row `r`'s (plus, minus) bitplane words — what
     /// `expertcache::DecodedExpert` expands into its resident dense form.
     pub fn row_planes(&self, r: usize) -> (&[u64], &[u64]) {
         let wpr = self.words_per_row;
         (
-            &self.plus[r * wpr..(r + 1) * wpr],
-            &self.minus[r * wpr..(r + 1) * wpr],
+            &self.plus.as_slice()[r * wpr..(r + 1) * wpr],
+            &self.minus.as_slice()[r * wpr..(r + 1) * wpr],
         )
     }
 
@@ -204,9 +243,10 @@ impl BitplaneTernary {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         let wpr = self.words_per_row;
+        let (plus, minus) = (self.plus.as_slice(), self.minus.as_slice());
         for r in 0..self.rows {
-            let pr = &self.plus[r * wpr..(r + 1) * wpr];
-            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            let pr = &plus[r * wpr..(r + 1) * wpr];
+            let mr = &minus[r * wpr..(r + 1) * wpr];
             let mut acc = 0.0f32;
             for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
                 if pw == 0 && mw == 0 {
@@ -236,9 +276,10 @@ impl BitplaneTernary {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         let wpr = self.words_per_row;
+        let (plus, minus) = (self.plus.as_slice(), self.minus.as_slice());
         for r in 0..self.rows {
-            let pr = &self.plus[r * wpr..(r + 1) * wpr];
-            let mr = &self.minus[r * wpr..(r + 1) * wpr];
+            let pr = &plus[r * wpr..(r + 1) * wpr];
+            let mr = &minus[r * wpr..(r + 1) * wpr];
             let mut acc = 0.0f32;
             for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
                 let base = wi * 64;
@@ -265,9 +306,7 @@ impl BitplaneTernary {
     #[inline]
     fn decode_row_f32(&self, r: usize, dst: &mut [f32]) {
         debug_assert_eq!(dst.len(), self.cols);
-        let wpr = self.words_per_row;
-        let pr = &self.plus[r * wpr..(r + 1) * wpr];
-        let mr = &self.minus[r * wpr..(r + 1) * wpr];
+        let (pr, mr) = self.row_planes(r);
         for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
             let base = wi * 64;
             let n = (self.cols - base).min(64);
@@ -284,9 +323,7 @@ impl BitplaneTernary {
     #[inline]
     fn decode_row_i8(&self, r: usize, dst: &mut [i8]) {
         debug_assert_eq!(dst.len(), self.cols);
-        let wpr = self.words_per_row;
-        let pr = &self.plus[r * wpr..(r + 1) * wpr];
-        let mr = &self.minus[r * wpr..(r + 1) * wpr];
+        let (pr, mr) = self.row_planes(r);
         for (wi, (&pw, &mw)) in pr.iter().zip(mr).enumerate() {
             let base = wi * 64;
             let n = (self.cols - base).min(64);
@@ -600,6 +637,33 @@ mod tests {
                 assert!((u - v).abs() < 1e-3, "{u} vs {v}");
             }
         }
+    }
+
+    #[test]
+    fn from_planes_reproduces_from_quant_bitwise() {
+        // the pack -> load substrate path: rebuilding from serialized
+        // words must serve identical bits to the original quantization
+        let q = random_quant(16, 96, 77);
+        let a = BitplaneTernary::from_quant(&q);
+        let b = BitplaneTernary::from_planes(
+            16,
+            96,
+            a.gamma,
+            SharedSlice::owned(a.plus_words().to_vec()),
+            SharedSlice::owned(a.minus_words().to_vec()),
+        );
+        let mut rng = Rng::new(78);
+        let x: Vec<f32> = (0..96).map(|_| rng.normal_f32(1.0)).collect();
+        let (mut ya, mut yb) = (vec![0.0; 16], vec![0.0; 16]);
+        a.gemv(&x, &mut ya);
+        b.gemv(&x, &mut yb);
+        assert_eq!(ya, yb);
+        let t = 3;
+        let xs: Vec<f32> = (0..t * 96).map(|_| rng.normal_f32(1.0)).collect();
+        let (mut ga, mut gb) = (vec![0.0; t * 16], vec![0.0; t * 16]);
+        a.gemm(&xs, t, &mut ga);
+        b.gemm(&xs, t, &mut gb);
+        assert_eq!(ga, gb);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Model-artifact integration suite (DESIGN.md §3):
+//!
+//! * pack → load round trip: a packed model served through
+//!   [`NativeLmBackend`] produces logits **bit-identical** to the
+//!   in-memory model it was packed from, across mmap-vs-heap loading,
+//!   `--workers` ∈ {1, 8}, and expert-cache budgets {0, partial} — the
+//!   acceptance invariant of the artifact subsystem.
+//! * cross-language: the checked-in `tiny_model.bmoe` fixture (written
+//!   by `python/tests/make_artifact_fixture.py` through the normative
+//!   python writer) loads through both loaders, which agree bitwise,
+//!   and its logits pin against the fixture's numpy-computed
+//!   `expected.logits` within a float tolerance (structural drift —
+//!   wrong stage order, wrong bitplane layout — lands far outside it).
+//! * file-bytes accounting: `memmodel::model_file_bytes` brackets the
+//!   real packed size.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use butterfly_moe::artifact::{synthesize, LoadMode, Mmap, ModelArtifact, SynthSpec};
+use butterfly_moe::coordinator::{Backend, InflightBatch, InflightSeq, NativeLmBackend};
+use butterfly_moe::expertcache::decoded_expert_bytes;
+use butterfly_moe::moe::MoeLayer;
+use butterfly_moe::parallel::WorkerPool;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bmoe_artifact_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn load_modes() -> Vec<LoadMode> {
+    if Mmap::supported() {
+        vec![LoadMode::Heap, LoadMode::Mmap]
+    } else {
+        vec![LoadMode::Heap]
+    }
+}
+
+fn spec() -> SynthSpec {
+    SynthSpec {
+        d_model: 32,
+        d_ff: 64,
+        n_experts: 8,
+        top_k: 2,
+        n_layers: 2,
+        vocab: 64,
+        seq_len: 16,
+        depth: None,
+        seed: 0xA57,
+    }
+}
+
+fn probe_batch() -> InflightBatch {
+    let mut b = InflightBatch::new();
+    for i in 0..5i64 {
+        b.push(InflightSeq::new(
+            i as u64,
+            (0..3 + i % 3).map(|j| ((i * 97 + j * 31) % 64) as i32).collect(),
+        ));
+    }
+    b
+}
+
+fn step_logits(backend: &NativeLmBackend) -> Vec<Vec<f32>> {
+    // several steps with cache ticks in between, so budgeted runs mix
+    // admissions, hits and misses before the compared step
+    for _ in 0..3 {
+        backend.step(&mut probe_batch()).unwrap();
+        backend.tick_caches();
+    }
+    backend
+        .step(&mut probe_batch())
+        .unwrap()
+        .into_iter()
+        .map(|o| o.logits)
+        .collect()
+}
+
+#[test]
+fn packed_model_bit_identical_to_in_memory_across_loaders_workers_budgets() {
+    let spec = spec();
+    let model = synthesize(&spec);
+    let path = tmp("roundtrip_it.bmoe");
+    model.pack(&path).unwrap();
+    // reference: the in-memory model, sequential, no cache
+    let reference = step_logits(&NativeLmBackend::from_synth(model, 8, None, 0));
+    assert!(reference.iter().all(|l| l.iter().all(|v| v.is_finite())));
+    // partial residency: 3 of 8 experts per layer fit (budget splits
+    // evenly across the 2 layers)
+    let entry = decoded_expert_bytes(spec.d_ff, spec.d_model);
+    let partial = 2 * 3 * entry;
+    for mode in load_modes() {
+        for workers in [1usize, 8] {
+            for budget in [0usize, partial] {
+                let artifact = ModelArtifact::load(&path, mode).unwrap();
+                let backend = NativeLmBackend::from_artifact(
+                    &artifact,
+                    8,
+                    Some(Arc::new(WorkerPool::new(workers))),
+                    budget,
+                )
+                .unwrap();
+                if budget > 0 {
+                    let cache = backend.layers()[0].expert_cache().expect("cache attached");
+                    assert!(cache.enabled(), "partial budget must enable the cache");
+                    assert!(
+                        cache.capacity_experts() < spec.n_experts,
+                        "budget must be partial, not all-resident"
+                    );
+                    backend.prewarm_caches();
+                }
+                let got = step_logits(&backend);
+                assert_eq!(
+                    got, reference,
+                    "{} load, workers={workers}, budget={budget}: logits diverged \
+                     from the in-memory model",
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_model_greedy_streams_match_in_memory() {
+    // token-level view of the same invariant, through greedy_next
+    let spec = spec();
+    let model = synthesize(&spec);
+    let path = tmp("greedy_it.bmoe");
+    model.pack(&path).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..7).map(|i| vec![i, i + 9, (i * 13) % 64]).collect();
+    let reference = {
+        // max_batch 4, smaller than the prompt set: exercises chunked steps
+        let backend = NativeLmBackend::from_synth(model, 4, None, 0);
+        butterfly_moe::coordinator::greedy_next(&backend, &prompts).unwrap()
+    };
+    for mode in load_modes() {
+        let artifact = ModelArtifact::load(&path, mode).unwrap();
+        let backend = NativeLmBackend::from_artifact(&artifact, 4, None, 0).unwrap();
+        let got = butterfly_moe::coordinator::greedy_next(&backend, &prompts).unwrap();
+        assert_eq!(got, reference, "{} load: greedy tokens diverged", mode.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-language fixture
+// ---------------------------------------------------------------------------
+
+fn fixture_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/tiny_model.bmoe")
+}
+
+/// Rebuild the fixture's prompt set from its `expected.*` tensors.
+fn fixture_prompts(artifact: &ModelArtifact) -> Vec<Vec<i32>> {
+    let (pshape, prompts) = artifact.store().i32("expected.prompts").unwrap();
+    let (_, lens) = artifact.store().i32("expected.prompt_lens").unwrap();
+    let width = pshape[1];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &n)| prompts[i * width..i * width + n as usize].to_vec())
+        .collect()
+}
+
+#[test]
+fn python_fixture_loads_and_pins_logits() {
+    let path = fixture_path();
+    assert!(
+        path.exists(),
+        "missing fixture {} (regenerate with python3 python/tests/make_artifact_fixture.py)",
+        path.display()
+    );
+    let mut per_mode: Vec<Vec<Vec<f32>>> = Vec::new();
+    for mode in load_modes() {
+        let artifact = ModelArtifact::load(&path, mode).unwrap();
+        let m = &artifact.manifest;
+        assert_eq!((m.n_layers, m.n_experts, m.top_k), (2, 4, 2));
+        assert_eq!((m.d_model, m.d_ff, m.vocab, m.seq_len), (16, 32, 32, 16));
+        let backend = NativeLmBackend::from_artifact(&artifact, 8, None, 0).unwrap();
+        assert_eq!(backend.file_bytes(), artifact.file_bytes());
+        assert!(backend.name().starts_with("native-lm:2blk:4exp:"), "{}", backend.name());
+
+        let prompts = fixture_prompts(&artifact);
+        let (lshape, want) = {
+            let (s, t) = artifact.store().f32("expected.logits").unwrap();
+            (s, t.as_slice().to_vec())
+        };
+        assert_eq!(lshape, vec![prompts.len(), m.vocab]);
+        let (_, want_tokens) = artifact.store().i32("expected.next_tokens").unwrap();
+
+        let mut batch = InflightBatch::new();
+        for (i, p) in prompts.iter().enumerate() {
+            batch.push(InflightSeq::new(i as u64, p.clone()));
+        }
+        let out = backend.step(&mut batch).unwrap();
+        let scale = want.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let mut logits_per_prompt = Vec::new();
+        for (i, o) in out.iter().enumerate() {
+            let row = &want[i * m.vocab..(i + 1) * m.vocab];
+            for (j, (&got, &exp)) in o.logits.iter().zip(row).enumerate() {
+                assert!(
+                    (got - exp).abs() / scale < 1e-3,
+                    "{} load, prompt {i} logit {j}: got {got}, python reference {exp}",
+                    mode.name()
+                );
+            }
+            let argmax = o
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(
+                argmax as i32,
+                want_tokens[i],
+                "{} load, prompt {i}: decoded token diverged from the python reference",
+                mode.name()
+            );
+            logits_per_prompt.push(o.logits.clone());
+        }
+        per_mode.push(logits_per_prompt);
+    }
+    // mmap and heap loading of the SAME (python-written, pad-free,
+    // possibly misaligned) file must agree bit-for-bit
+    if per_mode.len() == 2 {
+        assert_eq!(per_mode[0], per_mode[1], "heap vs mmap logits bits diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File-bytes accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_file_bytes_match_memmodel_accounting() {
+    use butterfly_moe::memmodel::{model_file_bytes, LayerShape};
+    let spec = SynthSpec {
+        d_model: 64,
+        d_ff: 256,
+        n_experts: 8,
+        top_k: 2,
+        n_layers: 3,
+        vocab: 128,
+        seq_len: 16,
+        depth: None,
+        seed: 3,
+    };
+    let model = synthesize(&spec);
+    let path = tmp("accounting.bmoe");
+    let stats = model.pack(&path).unwrap();
+    let payload = model_file_bytes(
+        spec.n_layers,
+        spec.n_experts,
+        LayerShape {
+            d_model: spec.d_model,
+            d_ff: spec.d_ff,
+        },
+        spec.vocab,
+    );
+    let actual = stats.file_bytes as f64;
+    assert!(
+        actual >= payload,
+        "file smaller than its own payload accounting: {actual} < {payload}"
+    );
+    // headers + manifest + alignment pads: bounded, small slack
+    let slack = 8192.0 + stats.tensors as f64 * 128.0;
+    assert!(
+        actual <= payload + slack,
+        "file overhead beyond accounting slack: {actual} vs {payload} + {slack}"
+    );
+    // and the loaded artifact reports exactly the on-disk size
+    let artifact = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+    assert_eq!(artifact.file_bytes() as u64, stats.file_bytes);
+    assert_eq!(
+        stats.file_bytes,
+        std::fs::metadata(&path).unwrap().len()
+    );
+}

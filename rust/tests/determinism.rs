@@ -15,15 +15,20 @@
 //!   budgets too (cache parity),
 //! * a panicking ("poisoned") expert fails the decode step with the
 //!   panic payload instead of deadlocking the pool's condvar wait, and
-//!   the pool remains serviceable afterwards.
+//!   the pool remains serviceable afterwards,
+//! * and the multi-layer model artifact composes with all of it: a
+//!   packed 2-layer model decodes streams identical to the in-memory
+//!   stack it was packed from, for every loader (mmap/heap) × worker
+//!   count × cache budget (DESIGN.md §3's bit-identity contract).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Duration;
 
+use butterfly_moe::artifact::{synthesize, LoadMode, Mmap, ModelArtifact, SynthSpec};
 use butterfly_moe::coordinator::{
-    collect_stream, warm, Coordinator, GenerateRequest, NativeMoeBackend, SamplingParams,
-    SchedulerConfig,
+    collect_stream, warm, Coordinator, GenerateRequest, NativeLmBackend, NativeMoeBackend,
+    SamplingParams, SchedulerConfig,
 };
 use butterfly_moe::expertcache::{decoded_expert_bytes, ExpertCacheConfig};
 use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
@@ -156,6 +161,80 @@ fn full_forward_identical_across_workers() {
         let mut y = vec![0.0f32; 7 * D];
         build_layer(workers, 0).forward(&x, 7, &mut y);
         assert_eq!(y, want, "workers={workers}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-layer packed model (the artifact subsystem's determinism story)
+// ---------------------------------------------------------------------------
+
+/// Stream the prompt set through a coordinator over `backend`.
+fn streams_of(backend: Arc<NativeLmBackend>) -> Vec<Vec<i32>> {
+    warm(backend.as_ref()).unwrap();
+    let coord = Coordinator::start(backend, SchedulerConfig::new(6, Duration::from_millis(200)));
+    let rxs: Vec<_> = prompt_set().into_iter().map(|r| coord.submit(r)).collect();
+    let streams = rxs
+        .into_iter()
+        .map(|rx| collect_stream(&rx, Duration::from_secs(60)).unwrap().tokens)
+        .collect();
+    coord.shutdown();
+    streams
+}
+
+/// A packed 2-layer model must decode the exact token streams of the
+/// in-memory model it was packed from — for every load mode (mmap /
+/// heap), worker count, and cache budget.  This is the multi-layer
+/// extension of the single-layer invariants above, and the acceptance
+/// gate of `bmoe pack-model` + `bmoe serve --native --model`.
+#[test]
+fn packed_multi_layer_streams_identical_across_loaders_workers_budgets() {
+    let spec = SynthSpec {
+        d_model: 64,
+        d_ff: 256,
+        n_experts: 8,
+        top_k: 2,
+        n_layers: 2,
+        vocab: 512,
+        seq_len: 32,
+        depth: None,
+        seed: 0x9AC5,
+    };
+    let model = synthesize(&spec);
+    let dir = std::env::temp_dir().join("bmoe_determinism_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lm2.bmoe");
+    model.pack(&path).unwrap();
+    // reference: the in-memory stack, sequential, uncached
+    let reference = streams_of(Arc::new(NativeLmBackend::from_synth(model, 8, None, 0)));
+    assert!(reference.iter().all(|s| !s.is_empty()));
+
+    let modes = if Mmap::supported() {
+        vec![LoadMode::Heap, LoadMode::Mmap]
+    } else {
+        vec![LoadMode::Heap]
+    };
+    // partial residency: 3 of 8 experts per layer (budget splits evenly)
+    let partial = 2 * 3 * decoded_expert_bytes(spec.d_ff, spec.d_model);
+    for mode in modes {
+        for workers in [1usize, 8] {
+            for budget in [0usize, partial] {
+                let artifact = ModelArtifact::load(&path, mode).unwrap();
+                let backend = NativeLmBackend::from_artifact(
+                    &artifact,
+                    8,
+                    Some(Arc::new(WorkerPool::new(workers))),
+                    budget,
+                )
+                .unwrap();
+                let streams = streams_of(Arc::new(backend));
+                assert_eq!(
+                    streams, reference,
+                    "{} load, workers={workers}, budget={budget}: token streams \
+                     diverged from the in-memory model",
+                    mode.name()
+                );
+            }
+        }
     }
 }
 

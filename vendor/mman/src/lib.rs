@@ -1,0 +1,42 @@
+//! Minimal memory-mapping shim for the offline vendor set.
+//!
+//! The `libc` crate is not available offline, so the few POSIX calls the
+//! model-artifact loader needs (`mmap`, `munmap`, `pread`) are declared
+//! here as raw `extern "C"` bindings.  They resolve at link time against
+//! the platform C library that `std` already links — no new dependency,
+//! no registry access.  Only the read-only-file-mapping subset is
+//! declared; everything else stays in `std`.
+//!
+//! Constants are the POSIX values shared by Linux and macOS (the two
+//! targets the crate builds on); `off_t` is declared as `i64`, which is
+//! correct on every 64-bit unix this repo targets.  The safe wrapper
+//! (`butterfly_moe::artifact::mmapfile`) compiles the mapping path only
+//! on `cfg(all(unix, target_pointer_width = "64"))` and falls back to a
+//! heap read elsewhere, so a 32-bit or non-unix build never reaches
+//! these declarations.
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub mod sys {
+    use core::ffi::c_void;
+
+    /// Pages may be read.
+    pub const PROT_READ: i32 = 1;
+    /// Share the mapping (read-only here): concurrent processes mapping
+    /// the same model file share its page-cache pages.
+    pub const MAP_SHARED: i32 = 1;
+    /// `mmap`'s error return.
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> i32;
+        pub fn pread(fd: i32, buf: *mut c_void, count: usize, offset: i64) -> isize;
+    }
+}
