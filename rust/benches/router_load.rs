@@ -1,0 +1,438 @@
+//! Open-loop load generation against the fleet router — the SLO-grade
+//! evaluation of `bmoe route`.
+//!
+//! Boots a real fleet (child `bmoe serve --native --model <tiny.bmoe>
+//! --load mmap --port 0` processes behind an in-process `Router`) and
+//! drives it with Poisson session arrivals at swept offered loads, a
+//! mixed workload of short (4-token) and long (24-token) generation
+//! budgets.  Open-loop means arrivals do NOT wait for completions — the
+//! generator keeps offering load while the fleet saturates, which is
+//! what makes shed rate and tail latency honest (a closed loop would
+//! self-throttle and hide both).
+//!
+//! Reports, per offered-load level: client-observed TTFT and
+//! inter-token latency p50/p95/p99, shed rate, worker-lost rate, and
+//! delivered tokens/s.  Separately measures the RSS-per-worker curve at
+//! fleet sizes 1/2/4 over the same mmap-packed model — the sub-linear
+//! fleet-memory claim (workers share the packed substrate through the
+//! page cache).
+//!
+//! Output: `runs/tables/router_load.csv`, `runs/tables/router_rss.csv`,
+//! and machine-readable `BENCH_router.json` at the repo root.
+//!
+//! Run: `cargo bench --bench router_load`
+//! CI:  `cargo bench --bench router_load -- smoke` — quick burst that
+//! gates shed rate = 0 below capacity, tokens on >= 2 workers, and a
+//! loss-free drain, then emits `BENCH_router.json` (mode "smoke").
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::artifact::{synthesize, SynthSpec};
+use butterfly_moe::bench::Table;
+use butterfly_moe::router::{worker::ProcessLauncher, Router, RouterConfig};
+use butterfly_moe::util::{stats, Rng};
+
+const SHORT_TOKENS: usize = 4;
+const LONG_TOKENS: usize = 24;
+
+/// Pack the tiny seeded model the whole fleet serves.
+fn pack_tiny_model(dir: &Path) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("router_bench_tiny.bmoe");
+    let spec = SynthSpec {
+        d_model: 64,
+        d_ff: 256,
+        n_experts: 4,
+        top_k: 2,
+        n_layers: 1,
+        vocab: 128,
+        seq_len: 32,
+        depth: None,
+        seed: 7,
+    };
+    synthesize(&spec).pack(&path)?;
+    Ok(path)
+}
+
+/// Boot a router over `fleet` real child worker processes serving
+/// `model` via mmap; returns the router handle and its front-door
+/// address.  The accept loop runs on a background thread until drain.
+fn boot_router(model: &Path, fleet: usize) -> anyhow::Result<(Arc<Router>, SocketAddr)> {
+    let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_bmoe"));
+    let wargs: Vec<String> = [
+        "--native",
+        "--model",
+        model.to_str().unwrap(),
+        "--load",
+        "mmap",
+        "--max-batch",
+        "8",
+        "--workers",
+        "1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let cfg = RouterConfig {
+        port: 0,
+        fleet,
+        sessions_per_worker: 8,
+        max_queue: 32,
+        client_cap: 0, // the load generator is one IP; fairness is unit-tested
+        health_interval: Duration::from_millis(200),
+        ..RouterConfig::default()
+    };
+    let (listener, addr) = butterfly_moe::util::net::listen_reuse(0)?;
+    let router = Router::start(cfg, Arc::new(ProcessLauncher::new(bin, wargs)))?;
+    {
+        let router = router.clone();
+        std::thread::spawn(move || router.serve(listener));
+    }
+    Ok((router, addr))
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Completed,
+    Shed,
+    Lost,
+}
+
+struct SessionResult {
+    outcome: Outcome,
+    ttft: Option<f64>,
+    gaps: Vec<f64>,
+    tokens: u64,
+}
+
+/// One client session over the wire; latencies are client-observed.
+fn run_session(addr: SocketAddr, budget: usize, prompt: &[usize], seed: u64) -> SessionResult {
+    let fail = SessionResult {
+        outcome: Outcome::Lost,
+        ttft: None,
+        gaps: Vec::new(),
+        tokens: 0,
+    };
+    let Ok(mut s) = TcpStream::connect(addr) else { return fail };
+    s.set_nodelay(true).ok();
+    let words: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let t0 = Instant::now();
+    if writeln!(s, "GEN {budget} 0 0 {seed} -1 {}", words.join(" ")).is_err() {
+        return fail;
+    }
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    let mut ttft = None;
+    let mut gaps = Vec::new();
+    let mut tokens = 0u64;
+    let mut last = t0;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => {
+                return SessionResult { outcome: Outcome::Lost, ttft, gaps, tokens }
+            }
+            Ok(_) => {}
+        }
+        let now = Instant::now();
+        if line.starts_with("TOK ") {
+            if tokens == 0 {
+                ttft = Some((now - t0).as_secs_f64());
+            } else {
+                gaps.push((now - last).as_secs_f64());
+            }
+            last = now;
+            tokens += 1;
+        } else if line.starts_with("END shed") || line.starts_with("END shutdown") {
+            return SessionResult { outcome: Outcome::Shed, ttft, gaps, tokens };
+        } else if line.starts_with("END ") {
+            return SessionResult { outcome: Outcome::Completed, ttft, gaps, tokens };
+        } else if line.starts_with("ERR") {
+            return SessionResult { outcome: Outcome::Lost, ttft, gaps, tokens };
+        }
+    }
+}
+
+struct LevelResult {
+    arrivals: usize,
+    completed: usize,
+    shed: usize,
+    lost: usize,
+    shed_rate: f64,
+    tokens_per_sec: f64,
+    ttft: Vec<f64>,
+    itl: Vec<f64>,
+}
+
+/// Offer `sps` sessions/sec for `seconds`, open loop (every 4th session
+/// is long).  Sessions run on their own threads; arrivals never block
+/// on completions.
+fn drive_level(addr: SocketAddr, sps: f64, seconds: f64, rng: &mut Rng) -> LevelResult {
+    let t0 = Instant::now();
+    let mut next = 0.0f64;
+    let mut n = 0usize;
+    let mut sessions = Vec::new();
+    while t0.elapsed().as_secs_f64() < seconds {
+        if t0.elapsed().as_secs_f64() >= next {
+            let budget = if n % 4 == 3 { LONG_TOKENS } else { SHORT_TOKENS };
+            let prompt: Vec<usize> = (0..4 + rng.below(5)).map(|_| rng.below(128)).collect();
+            let seed = 1000 + n as u64;
+            sessions.push(std::thread::spawn(move || {
+                run_session(addr, budget, &prompt, seed)
+            }));
+            n += 1;
+            next += rng.exponential(sps);
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let results: Vec<SessionResult> = sessions.into_iter().filter_map(|h| h.join().ok()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: u64 = results.iter().map(|r| r.tokens).sum();
+    let count = |o: Outcome| results.iter().filter(|r| r.outcome == o).count();
+    let (completed, shed, lost) = (count(Outcome::Completed), count(Outcome::Shed), count(Outcome::Lost));
+    LevelResult {
+        arrivals: results.len(),
+        completed,
+        shed,
+        lost,
+        shed_rate: shed as f64 / results.len().max(1) as f64,
+        tokens_per_sec: tokens as f64 / wall,
+        ttft: results.iter().filter_map(|r| r.ttft).collect(),
+        itl: results.iter().flat_map(|r| r.gaps.iter().copied()).collect(),
+    }
+}
+
+fn level_json_row(fleet: usize, sps: f64, r: &LevelResult) -> String {
+    let pct = |v: &[f64], p: f64| 1e3 * stats::percentile(v, p);
+    format!(
+        "    {{\"fleet\": {fleet}, \"offered_sps\": {sps:.1}, \"arrivals\": {}, \
+         \"completed\": {}, \"shed\": {}, \"worker_lost\": {}, \"shed_rate\": {:.4}, \
+         \"tokens_per_sec\": {:.1}, \
+         \"ttft_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}}}, \
+         \"itl_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}}}}}",
+        r.arrivals,
+        r.completed,
+        r.shed,
+        r.lost,
+        r.shed_rate,
+        r.tokens_per_sec,
+        pct(&r.ttft, 50.0),
+        pct(&r.ttft, 95.0),
+        pct(&r.ttft, 99.0),
+        pct(&r.itl, 50.0),
+        pct(&r.itl, 95.0),
+        pct(&r.itl, 99.0),
+    )
+}
+
+/// VmRSS of one pid in MB (linux /proc; None elsewhere).
+fn rss_mb(pid: u32) -> Option<f64> {
+    let status = std::fs::read_to_string(format!("/proc/{pid}/status")).ok()?;
+    let kb: f64 = status
+        .lines()
+        .find(|l| l.starts_with("VmRSS:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()?;
+    Some(kb / 1024.0)
+}
+
+struct RssPoint {
+    fleet: usize,
+    per_worker_mb: Vec<f64>,
+    total_mb: f64,
+}
+
+/// Boot a fleet of `fleet` mmap workers over `model`, warm each with a
+/// small burst, and read per-worker RSS.  Sharing the packed pages via
+/// the page cache is what keeps mean-per-worker flat as the fleet grows.
+fn measure_rss(model: &Path, fleet: usize, burst: usize, rng: &mut Rng) -> anyhow::Result<RssPoint> {
+    let (router, addr) = boot_router(model, fleet)?;
+    // touch every worker: sequential sessions round-robin across the fleet
+    for i in 0..burst.max(2 * fleet) {
+        let prompt: Vec<usize> = (0..6).map(|_| rng.below(128)).collect();
+        let r = run_session(addr, SHORT_TOKENS, &prompt, 500 + i as u64);
+        anyhow::ensure!(r.outcome == Outcome::Completed, "rss warm burst session failed");
+    }
+    let per_worker_mb: Vec<f64> = router
+        .worker_pids()
+        .into_iter()
+        .flatten()
+        .filter_map(rss_mb)
+        .collect();
+    let total_mb = per_worker_mb.iter().sum();
+    router.drain();
+    Ok(RssPoint { fleet, per_worker_mb, total_mb })
+}
+
+fn rss_json_row(p: &RssPoint) -> String {
+    let per: Vec<String> = p.per_worker_mb.iter().map(|m| format!("{m:.1}")).collect();
+    let mean = p.total_mb / p.per_worker_mb.len().max(1) as f64;
+    format!(
+        "    {{\"fleet\": {}, \"per_worker_mb\": [{}], \"mean_worker_mb\": {:.1}, \
+         \"total_mb\": {:.1}}}",
+        p.fleet,
+        per.join(", "),
+        mean,
+        p.total_mb
+    )
+}
+
+fn write_bench_json(mode: &str, levels: &[String], rss: &[String]) -> std::io::Result<()> {
+    let body = format!(
+        "{{\n  \"schema\": \"bmoe_router_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"levels\": [\n{}\n  ],\n  \"rss\": [\n{}\n  ]\n}}\n",
+        levels.join(",\n"),
+        rss.join(",\n"),
+    );
+    std::fs::write("BENCH_router.json", body)?;
+    println!("\nwrote BENCH_router.json (mode {mode})");
+    Ok(())
+}
+
+fn run(mode: &str) -> anyhow::Result<()> {
+    let smoke = mode == "smoke";
+    let out = Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+    let model = pack_tiny_model(out)?;
+    let mut rng = Rng::new(0x40u64);
+
+    // ------------------------------------------------------------------
+    // offered-load sweep at fleet=2
+    // ------------------------------------------------------------------
+    let fleet = 2usize;
+    // the lowest level must sit well below fleet service capacity — it
+    // is the "shed rate must be 0" gate
+    let (levels, seconds): (&[f64], f64) = if smoke {
+        (&[6.0, 48.0], 1.5)
+    } else {
+        (&[10.0, 60.0, 240.0], 4.0)
+    };
+    let (router, addr) = boot_router(&model, fleet)?;
+    let mut table = Table::new(
+        &format!("Router open-loop load (fleet={fleet}, mmap tiny model, mixed 4/24-token)"),
+        &[
+            "Offered sess/s",
+            "Arrivals",
+            "Completed",
+            "Shed",
+            "Lost",
+            "Shed rate",
+            "tok/s",
+            "TTFT p50 ms",
+            "TTFT p95 ms",
+            "TTFT p99 ms",
+            "ITL p50 ms",
+            "ITL p99 ms",
+        ],
+    );
+    let mut level_rows = Vec::new();
+    let mut first_level: Option<LevelResult> = None;
+    for &sps in levels {
+        let r = drive_level(addr, sps, seconds, &mut rng);
+        let pct = |v: &[f64], p: f64| 1e3 * stats::percentile(v, p);
+        table.row(&[
+            format!("{sps:.0}"),
+            r.arrivals.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.lost.to_string(),
+            format!("{:.3}", r.shed_rate),
+            format!("{:.0}", r.tokens_per_sec),
+            format!("{:.2}", pct(&r.ttft, 50.0)),
+            format!("{:.2}", pct(&r.ttft, 95.0)),
+            format!("{:.2}", pct(&r.ttft, 99.0)),
+            format!("{:.3}", pct(&r.itl, 50.0)),
+            format!("{:.3}", pct(&r.itl, 99.0)),
+        ]);
+        level_rows.push(level_json_row(fleet, sps, &r));
+        if first_level.is_none() {
+            first_level = Some(r);
+        }
+    }
+    // worker spread + loss-free drain, asserted while the router is live
+    let views = router.fleet.views();
+    let busy = views.iter().filter(|v| v.tokens_relayed > 0).count();
+    println!(
+        "worker token spread: [{}]",
+        views
+            .iter()
+            .map(|v| v.tokens_relayed.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let lossless = router.drain();
+    table.print();
+    table.write_csv(&out.join("router_load.csv"))?;
+
+    // ------------------------------------------------------------------
+    // RSS-per-worker curve at 1/2/4 workers over the same mmap model
+    // ------------------------------------------------------------------
+    let mut rss_table = Table::new(
+        "Router fleet RSS (same mmap model; page-cache-shared substrate)",
+        &["Fleet", "Mean worker RSS MB", "Total RSS MB"],
+    );
+    let mut rss_rows = Vec::new();
+    let burst = if smoke { 6 } else { 24 };
+    for n in [1usize, 2, 4] {
+        let p = measure_rss(&model, n, burst, &mut rng)?;
+        if p.per_worker_mb.is_empty() {
+            println!("(no /proc RSS on this platform; skipping fleet={n} point)");
+            continue;
+        }
+        let mean = p.total_mb / p.per_worker_mb.len() as f64;
+        rss_table.row(&[
+            n.to_string(),
+            format!("{mean:.1}"),
+            format!("{:.1}", p.total_mb),
+        ]);
+        rss_rows.push(rss_json_row(&p));
+    }
+    rss_table.print();
+    rss_table.write_csv(&out.join("router_rss.csv"))?;
+
+    write_bench_json(mode, &level_rows, &rss_rows)?;
+
+    // ------------------------------------------------------------------
+    // gates
+    // ------------------------------------------------------------------
+    let first = first_level.expect("at least one load level");
+    anyhow::ensure!(
+        first.completed > 0,
+        "below-capacity level completed no sessions"
+    );
+    anyhow::ensure!(
+        first.shed == 0,
+        "shed rate must be 0 below capacity, got {}/{} shed",
+        first.shed,
+        first.arrivals
+    );
+    anyhow::ensure!(
+        first.lost == 0,
+        "no worker may be lost below capacity, got {}",
+        first.lost
+    );
+    anyhow::ensure!(
+        busy >= 2,
+        "load must spread: expected tokens on >= 2 workers, got {busy}"
+    );
+    anyhow::ensure!(lossless, "drain under load must be loss-free");
+    println!(
+        "gates OK: {} completed, 0 shed/lost below capacity, tokens on {busy} workers, \
+         loss-free drain",
+        first.completed
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke")
+        || std::env::var("BMOE_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    run(if smoke { "smoke" } else { "full" })
+}

@@ -95,6 +95,12 @@ COMMANDS:
                         (--native serves the pure-rust multi-layer LM, no
                         artifacts or PJRT runtime needed; --model serves a
                         packed .bmoe model artifact, mmap-loaded)
+  route                 fleet front door: spawn and supervise N `serve
+                        --native` worker processes (one shared mmap model
+                        substrate) and load-balance streaming sessions
+                        across them — least-loaded placement, bounded
+                        queue with explicit shedding, per-client fairness,
+                        health-checked restart, loss-free drain (DRAIN)
   pack-model            synthesize a multi-layer native model and pack it
                         into a .bmoe artifact (--out model.bmoe); serving
                         it reproduces the in-memory model bit-for-bit
@@ -131,6 +137,20 @@ COMMON FLAGS:
                         cold start, page-cache shared across processes);
                         heap eagerly deserializes.  Token streams are
                         bit-identical either way (default: mmap)
+  --fleet N             route: worker processes to spawn (default 2)
+  --sessions-per-worker N
+                        route: concurrent sessions placed on one worker
+                        before queueing; admission capacity is
+                        healthy_workers x this (default 16)
+  --route-queue N       route: bounded admission queue — arrivals beyond
+                        it get an immediate 'END shed', never a stall
+                        (default 64)
+  --client-cap N        route: max concurrent sessions per client IP; the
+                        greedy client sheds, others are unaffected
+                        (default 0 = unlimited)
+  --health-interval-ms M
+                        route: STATS health-poll cadence; crashed workers
+                        restart with exponential backoff (default 500)
   --max-new-tokens N    bench-client: token budget requested per session
   --temperature F       bench-client: sampling temperature (0 = greedy)
   --top-k N             bench-client: top-k truncation (0 = full vocab)
@@ -144,7 +164,10 @@ The serve wire protocol is documented in coordinator/server.rs:
   GEN <max_new> <temperature> <top_k> <seed> <eos|-1> <tok> <tok> ...
 streams back 'TOK <index> <token> <latency_us>' lines and a terminal
 'END <reason> <n_tokens> <total_us>'.  'STATS' returns one key=value
-telemetry line including the expert cache's hit rate / resident bytes.";
+telemetry line including the expert cache's hit rate / resident bytes.
+The router speaks the same protocol (clients point at it unchanged) and
+adds 'DRAIN' (loss-free fleet shutdown) plus the terminals 'END shed'
+(admission) and 'ERR worker lost' (worker died mid-stream).";
 
 #[cfg(test)]
 mod tests {

@@ -145,6 +145,22 @@ pub struct RuntimeConfig {
     /// bit-identical either way (see `artifact`)
     pub load_mode: String,
     pub port: u16,
+    /// router (`bmoe route`): worker processes to spawn and supervise
+    /// (`--fleet`)
+    pub fleet: usize,
+    /// router: concurrent sessions the router opens against one worker
+    /// before queueing (`--sessions-per-worker`); admission capacity is
+    /// `healthy_workers * sessions_per_worker`
+    pub sessions_per_worker: usize,
+    /// router: bounded admission queue (`--route-queue`); arrivals
+    /// beyond it are shed with an immediate `END shed`
+    pub route_queue: usize,
+    /// router: max concurrent sessions per client IP (`--client-cap`);
+    /// 0 = unlimited
+    pub client_cap: usize,
+    /// router: health-poll cadence in milliseconds
+    /// (`--health-interval-ms`)
+    pub health_interval_ms: u64,
     pub checkpoint_every: usize,
     pub out_dir: String,
 }
@@ -169,6 +185,11 @@ impl Default for RuntimeConfig {
             model_path: String::new(),
             load_mode: "mmap".into(),
             port: 7070,
+            fleet: 2,
+            sessions_per_worker: 16,
+            route_queue: 64,
+            client_cap: 0,
+            health_interval_ms: 500,
             checkpoint_every: 100,
             out_dir: "runs".into(),
         }
@@ -207,6 +228,20 @@ impl RuntimeConfig {
                 self.load_mode = value.into();
             }
             "port" => self.port = value.parse().context("port")?,
+            "fleet" => {
+                self.fleet = value.parse().context("fleet")?;
+                anyhow::ensure!(self.fleet >= 1, "fleet must be >= 1");
+            }
+            "sessions_per_worker" => {
+                self.sessions_per_worker = value.parse().context("sessions_per_worker")?;
+                anyhow::ensure!(self.sessions_per_worker >= 1, "sessions_per_worker must be >= 1");
+            }
+            "route_queue" => self.route_queue = value.parse().context("route_queue")?,
+            "client_cap" => self.client_cap = value.parse().context("client_cap")?,
+            "health_interval_ms" => {
+                self.health_interval_ms = value.parse().context("health_interval_ms")?;
+                anyhow::ensure!(self.health_interval_ms >= 1, "health_interval_ms must be >= 1");
+            }
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
             }
@@ -326,6 +361,26 @@ mod tests {
         assert_eq!(r.load_mode, "heap");
         assert!(r.set("n_layers", "0").is_err());
         assert!(r.set("load_mode", "floppy").is_err());
+    }
+
+    #[test]
+    fn router_overrides() {
+        let mut r = RuntimeConfig::default();
+        assert_eq!(r.fleet, 2);
+        assert_eq!(r.client_cap, 0);
+        r.set("fleet", "4").unwrap();
+        r.set("sessions_per_worker", "8").unwrap();
+        r.set("route_queue", "32").unwrap();
+        r.set("client_cap", "2").unwrap();
+        r.set("health_interval_ms", "250").unwrap();
+        assert_eq!(r.fleet, 4);
+        assert_eq!(r.sessions_per_worker, 8);
+        assert_eq!(r.route_queue, 32);
+        assert_eq!(r.client_cap, 2);
+        assert_eq!(r.health_interval_ms, 250);
+        assert!(r.set("fleet", "0").is_err());
+        assert!(r.set("sessions_per_worker", "0").is_err());
+        assert!(r.set("health_interval_ms", "0").is_err());
     }
 
     #[test]

@@ -23,6 +23,14 @@ pub struct Metrics {
     /// Sessions retired because the client dropped its event stream.
     pub cancelled: AtomicU64,
     pub errors: AtomicU64,
+    /// Gauge: requests queued behind the running batch (engine loop
+    /// overwrites it every iteration).  Occupancy alone can't tell an
+    /// idle server from a saturated-but-draining one; the router's
+    /// least-loaded placement needs the queue explicitly.
+    pub queue_depth: AtomicU64,
+    /// Gauge: sequences resident in the running batch right now (as
+    /// opposed to `stepped_seqs`, a historical mean).
+    pub inflight: AtomicU64,
     started: Instant,
     inner: Mutex<Inner>,
 }
@@ -53,6 +61,10 @@ pub struct MetricsSnapshot {
     pub steps: u64,
     pub cancelled: u64,
     pub errors: u64,
+    /// Requests queued behind the running batch at snapshot time.
+    pub queue_depth: u64,
+    /// Sequences resident in the running batch at snapshot time.
+    pub inflight: u64,
     /// Mean resident sequences per decode step (continuous-batching
     /// occupancy; the old "mean batch size").
     pub mean_batch_size: f64,
@@ -84,6 +96,8 @@ impl Metrics {
             stepped_seqs: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
             started: Instant::now(),
             inner: Mutex::new(Inner::default()),
         }
@@ -125,6 +139,13 @@ impl Metrics {
         self.inner.lock().unwrap().e2e.record(total.as_secs_f64());
     }
 
+    /// Instantaneous load gauges, published by the engine loop every
+    /// iteration (pending queue length, resident batch size).
+    pub fn record_load(&self, queue_depth: usize, inflight: usize) {
+        self.queue_depth.store(queue_depth as u64, Ordering::Relaxed);
+        self.inflight.store(inflight as u64, Ordering::Relaxed);
+    }
+
     /// A session was retired because its client dropped the stream.
     pub fn record_cancelled(&self) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -152,6 +173,8 @@ impl Metrics {
             steps,
             cancelled: self.cancelled.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
             mean_batch_size: if steps == 0 {
                 0.0
             } else {
@@ -231,6 +254,20 @@ mod tests {
         assert!(s.latency_p95 >= s.latency_p50);
         assert!(s.latency_mean > 0.004 && s.latency_mean < 0.01);
         assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn load_gauges_overwrite_not_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.queue_depth, s.inflight), (0, 0));
+        m.record_load(7, 3);
+        let s = m.snapshot();
+        assert_eq!((s.queue_depth, s.inflight), (7, 3));
+        // gauge semantics: the next publish replaces, never adds
+        m.record_load(0, 1);
+        let s = m.snapshot();
+        assert_eq!((s.queue_depth, s.inflight), (0, 1));
     }
 
     #[test]

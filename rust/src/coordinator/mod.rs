@@ -45,11 +45,20 @@
 //!
 //! Greedy decoding is `GEN 8 0 0 0 -1 <prompt…>`; `QUIT` closes the
 //! connection; malformed requests and backend failures produce a
-//! terminal `ERR <message>` line instead of `END`.  `STATS` returns one
-//! `key=value` telemetry line including the expert-residency cache's
-//! hit rate and resident bytes (see [`server::stats_line`] and
+//! terminal `ERR <message>` line instead of `END` (and a malformed
+//! request additionally closes the connection — an unframed client
+//! can't be trusted to stay in stream sync).  `STATS` returns one
+//! `key=value` telemetry line including the instantaneous
+//! `queue_depth`/`inflight` load gauges and the expert-residency
+//! cache's hit rate and resident bytes (see [`server::stats_line`] and
 //! [`crate::expertcache`] — the `--expert-cache-mb` memory↔throughput
-//! dial).
+//! dial).  `SHUTDOWN` begins graceful, loss-free process shutdown —
+//! how `bmoe route` retires drained workers.
+//!
+//! The server binds with `SO_REUSEADDR`, accepts `--port 0`, and
+//! announces the actually-bound address on a machine-parseable
+//! `[listening] <addr>` stdout line, so supervisors ([`crate::router`])
+//! can spawn workers on ephemeral ports and discover where they landed.
 //!
 //! Threads + channels only (no tokio in the offline vendor set): one
 //! engine thread owns the backend; each TCP connection gets a relay
@@ -67,7 +76,7 @@ pub use backend::{
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};
-pub use server::{parse_gen_line, serve_tcp, stats_line, Coordinator};
+pub use server::{parse_gen_line, serve_on, serve_tcp, stats_line, Coordinator};
 pub use session::{
     collect_stream, Completion, FinishReason, GenerateRequest, Sampler, SamplingParams,
     StopCriteria, TokenEvent,

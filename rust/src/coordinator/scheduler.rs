@@ -265,41 +265,8 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::StepOutput;
     use crate::coordinator::session::SamplingParams;
+    use crate::testutil::CountBackend;
     use std::sync::mpsc::{channel, Receiver};
-
-    /// Logits peak at (context length % vocab): greedy decode yields a
-    /// deterministic, length-dependent token stream.
-    struct CountBackend {
-        vocab: usize,
-    }
-    impl Backend for CountBackend {
-        fn max_batch(&self) -> usize {
-            8
-        }
-        fn seq_len(&self) -> usize {
-            64
-        }
-        fn vocab(&self) -> usize {
-            self.vocab
-        }
-        fn name(&self) -> String {
-            "count".into()
-        }
-        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
-            Ok(batch
-                .seqs
-                .iter()
-                .map(|s| {
-                    let mut logits = vec![0.0f32; self.vocab];
-                    logits[s.tokens.len() % self.vocab] = 1.0;
-                    StepOutput {
-                        seq_id: s.id,
-                        logits,
-                    }
-                })
-                .collect())
-        }
-    }
 
     struct FailingBackend;
     impl Backend for FailingBackend {
@@ -354,7 +321,7 @@ mod tests {
 
     #[test]
     fn generates_until_max_tokens() {
-        let be = CountBackend { vocab: 16 };
+        let be = CountBackend::new().with_vocab(16);
         let mut s = sched(4);
         let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2, 3], 4));
         s.admit(q);
@@ -372,7 +339,7 @@ mod tests {
 
     #[test]
     fn eos_stops_early() {
-        let be = CountBackend { vocab: 16 };
+        let be = CountBackend::new().with_vocab(16);
         let mut s = sched(4);
         // context length 3 -> first token is 3; eos = 5 fires on step 3
         let (q, rx) = queued(
@@ -391,7 +358,7 @@ mod tests {
 
     #[test]
     fn join_and_leave_between_steps() {
-        let be = CountBackend { vocab: 1024 };
+        let be = CountBackend::new().with_vocab(1024);
         let mut s = sched(4);
         let (qlong, rx_long) = queued(1, GenerateRequest::greedy(vec![0; 4], 16));
         s.admit(qlong);
@@ -420,7 +387,7 @@ mod tests {
 
     #[test]
     fn seeded_sampling_replays_identically() {
-        let be = CountBackend { vocab: 64 };
+        let be = CountBackend::new().with_vocab(64);
         let run = |seed: u64| {
             let mut s = sched(4);
             let (q, rx) = queued(
@@ -471,7 +438,7 @@ mod tests {
 
     #[test]
     fn dropped_client_cancels_session() {
-        let be = CountBackend { vocab: 16 };
+        let be = CountBackend::new().with_vocab(16);
         let mut s = sched(4);
         let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 100));
         s.admit(q);
@@ -483,7 +450,7 @@ mod tests {
 
     #[test]
     fn session_token_cap_clamps_requests() {
-        let be = CountBackend { vocab: 16 };
+        let be = CountBackend::new().with_vocab(16);
         let mut s = ContinuousScheduler::new(4, 3, Arc::new(Metrics::new()));
         let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 1_000_000));
         s.admit(q);
@@ -497,7 +464,7 @@ mod tests {
 
     #[test]
     fn abort_all_sends_terminal_events() {
-        let be = CountBackend { vocab: 16 };
+        let be = CountBackend::new().with_vocab(16);
         let mut s = sched(4);
         let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 100));
         s.admit(q);

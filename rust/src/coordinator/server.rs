@@ -180,6 +180,7 @@ fn engine_loop(
                 if disconnected {
                     return;
                 }
+                metrics.record_load(0, 0);
                 match rx.recv_timeout(IDLE_POLL) {
                     Ok(q) => pending.push_back(q),
                     Err(RecvTimeoutError::Timeout) => {}
@@ -208,6 +209,10 @@ fn engine_loop(
                 None => break,
             }
         }
+        // publish the load gauges every iteration so STATS readers (the
+        // router's least-loaded placement) see queue depth and resident
+        // batch size, not just the historical occupancy mean
+        metrics.record_load(pending.len(), sched.in_flight());
         if sched.in_flight() > 0 {
             // on backend failure the scheduler already streamed terminal
             // error events; keep serving subsequent requests
@@ -235,22 +240,47 @@ fn engine_loop(
 //
 // `<eos>` is -1 for "no EOS token"; `<temperature>` 0 means greedy (then
 // `<top_k>`/`<seed>` are ignored; pass 0).  "QUIT" closes the connection.
+// A malformed request gets exactly one terminal `ERR <reason>` line and
+// the connection is closed (a client that can't frame a GEN line can't
+// be trusted to stay in sync with a stream).
+//
+// "SHUTDOWN" begins graceful process shutdown: the server stops
+// accepting, lets in-flight sessions finish streaming, then runs the
+// coordinator's loss-free shutdown.  `bmoe route` sends this to workers
+// at the end of a drain.
 //
 // "STATS" returns one `key=value` telemetry line (see [`stats_line`]):
 //
 //   STATS req=.. done=.. tokens=.. tok_per_s=.. steps=.. occupancy=..
+//         queue_depth=.. inflight=..
 //         cache_enabled=.. cache_hits=.. cache_misses=.. cache_hit_rate=..
 //         cache_resident_bytes=.. cache_resident_experts=..
 //         cache_budget_bytes=.. cache_evictions=..
 //
-// The cache_* fields report the expert-residency cache (zeros when the
-// backend serves without one — `--expert-cache-mb` unset).
+// `queue_depth`/`inflight` are instantaneous gauges (requests waiting
+// for admission / sequences resident in the batch) — what the router's
+// least-loaded placement keys on.  The cache_* fields report the
+// expert-residency cache (zeros when the backend serves without one —
+// `--expert-cache-mb` unset).
 // ---------------------------------------------------------------------------
 
+/// Bind `127.0.0.1:<port>` (0 = ephemeral) with `SO_REUSEADDR`, announce
+/// the actually-bound address on a machine-parseable `[listening]`
+/// stdout line, and serve until `stop`.  Supervisors (`bmoe route`, CI)
+/// parse that line to learn the port a `--port 0` worker landed on.
 pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
-    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let (listener, addr) = crate::util::net::listen_reuse(port)?;
+    println!("[listening] {addr}");
+    std::io::stdout().flush().ok();
+    serve_on(listener, coord, stop)
+}
+
+/// Accept loop over an already-bound listener.  Returns after `stop` is
+/// set (externally, or by a wire `SHUTDOWN`), once every connection
+/// thread has exited and the coordinator has completed its loss-free
+/// shutdown — so a clean return means no stranded sessions.
+pub fn serve_on(listener: TcpListener, coord: Arc<Coordinator>, stop: Arc<AtomicBool>) -> Result<()> {
     listener.set_nonblocking(true)?;
-    eprintln!("[serve] listening on 127.0.0.1:{port}");
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -259,8 +289,9 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> R
         match listener.accept() {
             Ok((stream, _addr)) => {
                 let coord = coord.clone();
+                let stop = stop.clone();
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, coord);
+                    let _ = handle_conn(stream, coord, stop);
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -269,9 +300,13 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16, stop: Arc<AtomicBool>) -> R
             Err(e) => return Err(e.into()),
         }
     }
+    // in-flight sessions keep streaming while we join their relay
+    // threads; only then tear the engine down (idempotent with an
+    // external shutdown() — PR 1's loss-free semantics either way)
     for c in conns {
         let _ = c.join();
     }
+    coord.shutdown();
     Ok(())
 }
 
@@ -282,6 +317,7 @@ pub fn stats_line(s: &super::metrics::MetricsSnapshot) -> String {
     let c = s.cache.clone().unwrap_or_default();
     format!(
         "STATS req={} done={} tokens={} tok_per_s={:.1} steps={} occupancy={:.2} \
+         queue_depth={} inflight={} \
          cache_enabled={} cache_hits={} cache_misses={} cache_hit_rate={:.3} \
          cache_resident_bytes={} cache_resident_experts={} cache_budget_bytes={} \
          cache_evictions={}",
@@ -291,6 +327,8 @@ pub fn stats_line(s: &super::metrics::MetricsSnapshot) -> String {
         s.tokens_per_sec,
         s.steps,
         s.mean_batch_size,
+        s.queue_depth,
+        s.inflight,
         c.enabled as u8,
         c.hits,
         c.misses,
@@ -330,16 +368,54 @@ pub fn parse_gen_line(line: &str) -> Result<GenerateRequest> {
     })
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+/// Read one protocol line, waking periodically so a set `stop` flag can
+/// end the connection even while the client sits idle (a drain must
+/// never hang on a silent client).  Returns `Ok(false)` on EOF or stop.
+/// Per `BufRead::read_until`'s contract, bytes read before a timeout
+/// stay in `line`, so a slowly-arriving line is never truncated.
+fn read_wire_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    stop: &AtomicBool,
+) -> Result<bool> {
+    line.clear();
+    loop {
+        match reader.read_line(line) {
+            Ok(0) => return Ok(!line.trim().is_empty()), // EOF; flush a partial tail
+            Ok(_) => return Ok(true),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(false);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    while read_wire_line(&mut reader, &mut line, &stop)? {
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
         if line == "QUIT" {
+            break;
+        }
+        if line == "SHUTDOWN" {
+            // graceful: acknowledge, then flip the accept loop's stop
+            // flag; serve_on drains connections and the coordinator
+            writeln!(writer, "OK shutdown")?;
+            stop.store(true, Ordering::SeqCst);
             break;
         }
         if line == "STATS" {
@@ -352,7 +428,10 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
                 stream_session(&mut writer, &rx)?;
             }
             Err(e) => {
+                // one terminal ERR line, then close: a client that can't
+                // frame a request can't be trusted to resync mid-stream
                 writeln!(writer, "ERR bad request: {e:#}")?;
+                break;
             }
         }
     }
@@ -396,68 +475,37 @@ fn stream_session(writer: &mut TcpStream, rx: &Receiver<TokenEvent>) -> Result<(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{InflightBatch, StepOutput};
-
-    /// Logits peak at (context length % vocab): deterministic, instant.
-    struct CountBackend;
-    impl Backend for CountBackend {
-        fn max_batch(&self) -> usize {
-            8
-        }
-        fn seq_len(&self) -> usize {
-            64
-        }
-        fn vocab(&self) -> usize {
-            32
-        }
-        fn name(&self) -> String {
-            "count".into()
-        }
-        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
-            Ok(batch
-                .seqs
-                .iter()
-                .map(|s| {
-                    let mut logits = vec![0.0f32; 32];
-                    logits[s.tokens.len() % 32] = 1.0;
-                    StepOutput {
-                        seq_id: s.id,
-                        logits,
-                    }
-                })
-                .collect())
-        }
-    }
-
-    /// CountBackend with an artificial per-step delay (for shutdown and
-    /// ordering tests).
-    struct SlowBackend(Duration);
-    impl Backend for SlowBackend {
-        fn max_batch(&self) -> usize {
-            8
-        }
-        fn seq_len(&self) -> usize {
-            64
-        }
-        fn vocab(&self) -> usize {
-            32
-        }
-        fn name(&self) -> String {
-            "slow".into()
-        }
-        fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
-            std::thread::sleep(self.0);
-            CountBackend.step(batch)
-        }
-    }
+    use crate::testutil::CountBackend;
 
     fn cfg(max_batch: usize, wait_ms: u64) -> SchedulerConfig {
         SchedulerConfig::new(max_batch, Duration::from_millis(wait_ms))
     }
 
+    /// Boot a coordinator over [`CountBackend`] plus a TCP frontend on
+    /// an ephemeral port; returns everything a wire test needs.
+    fn serve_fixture(
+        backend: CountBackend,
+        cfg: SchedulerConfig,
+    ) -> (
+        Arc<Coordinator>,
+        std::net::SocketAddr,
+        Arc<AtomicBool>,
+        std::thread::JoinHandle<Result<()>>,
+    ) {
+        let coord = Coordinator::start(Arc::new(backend), cfg);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (listener, addr) = crate::util::net::listen_reuse(0).unwrap();
+        let handle = {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || serve_on(listener, coord, stop))
+        };
+        (coord, addr, stop, handle)
+    }
+
     #[test]
     fn single_session_roundtrip() {
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
+        let coord = Coordinator::start(Arc::new(CountBackend::new()), cfg(4, 1));
         let c = coord
             .generate(GenerateRequest::greedy(vec![5, 6, 7], 4))
             .unwrap();
@@ -470,7 +518,7 @@ mod tests {
 
     #[test]
     fn many_concurrent_sessions_all_complete() {
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(8, 2));
+        let coord = Coordinator::start(Arc::new(CountBackend::new()), cfg(8, 2));
         let rxs: Vec<_> = (1..=50)
             .map(|n| {
                 (
@@ -494,7 +542,7 @@ mod tests {
     #[test]
     fn size_flush_fills_the_first_batch() {
         // huge deadline: the first step must wait for max_batch arrivals
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 10_000));
+        let coord = Coordinator::start(Arc::new(CountBackend::new()), cfg(4, 10_000));
         let rxs: Vec<_> = (0..4)
             .map(|_| coord.submit(GenerateRequest::greedy(vec![1, 2], 1)))
             .collect();
@@ -509,7 +557,7 @@ mod tests {
 
     #[test]
     fn deadline_flush_starts_a_partial_batch() {
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(16, 3));
+        let coord = Coordinator::start(Arc::new(CountBackend::new()), cfg(16, 3));
         let c = coord
             .generate(GenerateRequest::greedy(vec![1, 2, 3], 2))
             .unwrap();
@@ -522,7 +570,7 @@ mod tests {
     #[test]
     fn short_requests_overtake_long_ones() {
         let coord = Coordinator::start(
-            Arc::new(SlowBackend(Duration::from_millis(3))),
+            Arc::new(CountBackend::new().with_delay(Duration::from_millis(3))),
             cfg(8, 1),
         );
         let long = coord.submit(GenerateRequest::greedy(vec![1, 2], 64));
@@ -544,7 +592,7 @@ mod tests {
     #[test]
     fn shutdown_terminates_inflight_and_queued_waiters() {
         let coord = Coordinator::start(
-            Arc::new(SlowBackend(Duration::from_millis(10))),
+            Arc::new(CountBackend::new().with_delay(Duration::from_millis(10))),
             cfg(2, 1),
         );
         // 2 admitted + 6 queued behind them, all effectively unbounded
@@ -584,17 +632,35 @@ mod tests {
     }
 
     #[test]
-    fn tcp_streaming_roundtrip() {
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
-        let stop = Arc::new(AtomicBool::new(false));
-        let port = 17893;
-        {
-            let coord = coord.clone();
-            let stop2 = stop.clone();
-            std::thread::spawn(move || serve_tcp(coord, port, stop2));
+    fn parse_gen_line_rejects_each_malformed_field() {
+        // every error path: the reason names the offending field so the
+        // wire ERR line is actionable
+        for (line, want) in [
+            ("", "expected GEN"),
+            ("STATSX", "expected GEN"),
+            ("GEN", "missing max_new"),
+            ("GEN 4", "missing temperature"),
+            ("GEN 4 0.5", "missing top_k"),
+            ("GEN 4 0.5 40", "missing seed"),
+            ("GEN 4 0.5 40 7", "missing eos"),
+            ("GEN 4 0.5 40 7 -1", "empty prompt"),
+            ("GEN -2 0 0 0 -1 1", "max_new"),
+            ("GEN 4 warm 0 0 -1 1", "temperature"),
+            ("GEN 4 0 k 0 -1 1", "top_k"),
+            ("GEN 4 0 0 -9 -1 1", "seed"),
+            ("GEN 4 0 0 0 end 1", "eos"),
+            ("GEN 4 0 0 0 -1 1 two 3", "bad token 'two'"),
+        ] {
+            let err = format!("{:#}", parse_gen_line(line).unwrap_err());
+            assert!(err.contains(want), "line {line:?}: err {err:?} should name {want:?}");
         }
-        std::thread::sleep(Duration::from_millis(100));
-        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    }
+
+    #[test]
+    fn tcp_streaming_roundtrip() {
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
         writeln!(s, "GEN 3 0 0 0 -1 1 2 3 4").unwrap();
         let mut r = BufReader::new(s.try_clone().unwrap());
         let mut toks = Vec::new();
@@ -620,17 +686,10 @@ mod tests {
     }
 
     #[test]
-    fn stats_wire_line_reports_cache_fields() {
-        let coord = Coordinator::start(Arc::new(CountBackend), cfg(4, 1));
-        let stop = Arc::new(AtomicBool::new(false));
-        let port = 17894;
-        {
-            let coord = coord.clone();
-            let stop2 = stop.clone();
-            std::thread::spawn(move || serve_tcp(coord, port, stop2));
-        }
-        std::thread::sleep(Duration::from_millis(100));
-        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    fn stats_wire_line_reports_cache_and_load_fields() {
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
         writeln!(s, "GEN 2 0 0 0 -1 1 2").unwrap();
         let mut r = BufReader::new(s.try_clone().unwrap());
         loop {
@@ -649,8 +708,74 @@ mod tests {
         assert!(line.contains("cache_hit_rate=0.000"), "{line}");
         assert!(line.contains("cache_resident_bytes=0"), "{line}");
         assert!(line.contains("tokens=2"), "{line}");
+        // load gauges (idle after END): present and drained to zero
+        assert!(line.contains("queue_depth=0"), "{line}");
+        assert!(line.contains("inflight=0"), "{line}");
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_one_err_line_then_close() {
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN nope").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(
+            line.starts_with("ERR bad request:"),
+            "malformed input must get a terminal ERR, got {line:?}"
+        );
+        assert!(line.contains("max_new"), "reason names the field: {line:?}");
+        // ...and then the server closes: next read is clean EOF
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "connection must close after ERR");
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_wire_command_drains_and_exits_serve_loop() {
+        let (coord, addr, _stop, serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        // a normal session first, proving the server was live
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN 1 0 0 0 -1 1 2").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            if line.starts_with("END") {
+                break;
+            }
+        }
+        writeln!(s, "SHUTDOWN").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "OK shutdown");
+        // the accept loop exits cleanly and the coordinator is torn down:
+        // post-shutdown submissions are denied with a terminal event
+        serve.join().unwrap().unwrap();
+        let c = coord
+            .generate(GenerateRequest::greedy(vec![1], 4))
+            .unwrap();
+        assert_eq!(c.reason, FinishReason::Shutdown);
+    }
+
+    #[test]
+    fn serve_on_join_is_not_blocked_by_an_idle_client() {
+        // a client that holds its connection open without sending
+        // anything must not wedge the drain: stop-aware reads time out
+        let (coord, addr, stop, serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let _idle = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::SeqCst);
+        serve.join().unwrap().unwrap();
         coord.shutdown();
     }
 

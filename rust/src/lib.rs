@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — generation-session serving coordinator
 //!   (continuous batching, seeded sampling, streaming token events —
-//!   see [`coordinator`]), native edge inference engine (packed ternary
+//!   see [`coordinator`]), fleet front-door router (supervised multi-
+//!   worker serving over one shared mmap substrate — see [`router`]),
+//!   native edge inference engine (packed ternary
 //!   + butterfly orbits, multi-layer residual LM), mmap-backed model
 //!   artifacts (pack + zero-copy load — see [`artifact`]), PJRT runtime
 //!   for the AOT-compiled jax graphs, training driver, and every
@@ -55,6 +57,7 @@ pub mod memmodel;
 pub mod moe;
 pub mod parallel;
 pub mod quant;
+pub mod router;
 pub mod runtime;
 pub mod tensor;
 pub mod ternary;

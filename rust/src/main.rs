@@ -41,6 +41,11 @@ fn main() -> Result<()> {
         ("n_layers", args.flag("layers")),
         ("model_path", args.flag("model")),
         ("load_mode", args.flag("load")),
+        ("fleet", args.flag("fleet")),
+        ("sessions_per_worker", args.flag("sessions-per-worker")),
+        ("route_queue", args.flag("route-queue")),
+        ("client_cap", args.flag("client-cap")),
+        ("health_interval_ms", args.flag("health-interval-ms")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -57,6 +62,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&rt, &args),
         "eval" => cmd_eval(&rt, &args),
         "serve" => cmd_serve(&rt, &args),
+        "route" => cmd_route(&rt, &args),
         "pack-model" => cmd_pack_model(&rt, &args),
         "bench-client" => cmd_bench_client(&rt, &args),
         "tables" => cmd_tables(&rt),
@@ -363,6 +369,61 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         });
     }
     butterfly_moe::coordinator::server::serve_tcp(coord, rt.port, stop)
+}
+
+/// Fleet front door: spawn and supervise `--fleet` child `bmoe serve
+/// --native` processes (each `--port 0`, discovered via their
+/// `[listening]` lines) and load-balance streaming sessions across
+/// them.  With `--load mmap` every worker borrows the same packed
+/// model pages from the page cache, so fleet RSS grows sub-linearly in
+/// worker count (measured by benches/router_load.rs).
+fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    use butterfly_moe::router::{run, worker::ProcessLauncher, RouterConfig};
+    let bin = std::env::current_exe().context("locate the bmoe binary for worker spawns")?;
+    // Workers inherit the serve-relevant settings; --port 0 is appended
+    // by the launcher so each picks its own ephemeral port.
+    let mut wargs: Vec<String> = vec!["--native".into()];
+    if !rt.model_path.is_empty() {
+        wargs.extend([
+            "--model".into(),
+            rt.model_path.clone(),
+            "--load".into(),
+            rt.load_mode.clone(),
+        ]);
+    } else {
+        eprintln!("[route] no --model: every worker synthesizes its own seeded stand-in model");
+        wargs.extend(["--layers".into(), rt.n_layers.to_string()]);
+    }
+    for (flag, value) in [
+        ("--max-batch", rt.max_batch.to_string()),
+        ("--max-wait-ms", rt.max_wait_ms.to_string()),
+        ("--workers", rt.workers.to_string()),
+        ("--seed", rt.seed.to_string()),
+    ] {
+        wargs.extend([flag.into(), value]);
+    }
+    if rt.expert_cache_mb > 0.0 {
+        wargs.extend(["--expert-cache-mb".into(), rt.expert_cache_mb.to_string()]);
+    }
+    if args.has_switch("no-warmup") {
+        wargs.push("--no-warmup".into());
+    }
+    let cfg = RouterConfig {
+        port: rt.port,
+        fleet: rt.fleet,
+        sessions_per_worker: rt.sessions_per_worker,
+        max_queue: rt.route_queue,
+        client_cap: rt.client_cap,
+        health_interval: Duration::from_millis(rt.health_interval_ms),
+        ..RouterConfig::default()
+    };
+    eprintln!(
+        "[route] spawning {} x `{} serve {}`",
+        cfg.fleet,
+        bin.display(),
+        wargs.join(" ")
+    );
+    run(cfg, Arc::new(ProcessLauncher::new(bin, wargs)))
 }
 
 fn cmd_tables(rt: &RuntimeConfig) -> Result<()> {

@@ -1,0 +1,353 @@
+//! Fleet state and least-loaded session placement.
+//!
+//! Placement is **session-granular**: a `GEN` session is pinned to one
+//! worker for its whole lifetime, because the worker's scheduler holds
+//! the session's decode state (resident sequence, sampler RNG, KV-style
+//! context) — tokens of one session cannot be split across processes.
+//! The balancer therefore only decides *where a session starts*: it
+//! scores each healthy worker by `router-placed sessions + last-polled
+//! queue_depth` and picks the minimum, breaking ties round-robin so a
+//! strictly sequential client still spreads across the fleet instead of
+//! camping on worker 0.
+
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One worker's supervision state.
+#[derive(Clone, Debug)]
+pub enum SlotState {
+    Up { addr: SocketAddr },
+    Down { next_attempt: Instant },
+}
+
+/// One worker slot: state plus load/health bookkeeping.
+pub struct Slot {
+    pub state: SlotState,
+    /// Sessions the router currently has open against this worker.
+    pub sessions: usize,
+    /// Last `STATS` poll: requests queued behind the worker's batch.
+    pub queue_depth: u64,
+    /// Last `STATS` poll: sequences resident in the worker's batch.
+    pub inflight: u64,
+    /// Tokens relayed through this worker since launch (router-side).
+    pub tokens_relayed: u64,
+    /// Successful relaunches after a crash.
+    pub restarts: u64,
+    /// Consecutive failed relaunch attempts while Down (drives backoff).
+    pub attempts: u32,
+    /// Consecutive failed `STATS` polls while Up.
+    pub stats_failures: u32,
+}
+
+/// Read-only view of a slot for STATS reporting.
+#[derive(Clone, Debug)]
+pub struct SlotView {
+    pub up: bool,
+    pub addr: Option<SocketAddr>,
+    pub sessions: usize,
+    pub queue_depth: u64,
+    pub tokens_relayed: u64,
+    pub restarts: u64,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    /// Round-robin cursor for tie-breaking among equally-loaded workers.
+    rr: usize,
+}
+
+/// Shared fleet state (balancer + health thread + proxy threads).
+pub struct Fleet {
+    inner: Mutex<Inner>,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+}
+
+impl Fleet {
+    pub fn new(n: usize, backoff_base: Duration, backoff_cap: Duration) -> Fleet {
+        let slots = (0..n)
+            .map(|_| Slot {
+                // placeholder until the first launch reports in
+                state: SlotState::Down { next_attempt: Instant::now() },
+                sessions: 0,
+                queue_depth: 0,
+                inflight: 0,
+                tokens_relayed: 0,
+                restarts: 0,
+                attempts: 0,
+                stats_failures: 0,
+            })
+            .collect();
+        Fleet {
+            inner: Mutex::new(Inner { slots, rr: 0 }),
+            backoff_base,
+            backoff_cap,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn healthy(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .filter(|s| matches!(s.state, SlotState::Up { .. }))
+            .count()
+    }
+
+    /// Worker `idx` is serving on `addr`.  `initial` distinguishes the
+    /// fleet boot from a crash recovery (which counts as a restart).
+    pub fn mark_up(&self, idx: usize, addr: SocketAddr, initial: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let s = &mut inner.slots[idx];
+        s.state = SlotState::Up { addr };
+        s.attempts = 0;
+        s.stats_failures = 0;
+        s.queue_depth = 0;
+        s.inflight = 0;
+        if !initial {
+            s.restarts += 1;
+        }
+    }
+
+    /// Worker `idx` died (or a relaunch failed): schedule the next
+    /// attempt with exponential backoff `base * 2^attempts`, capped.
+    /// Returns the delay chosen, for logging.
+    pub fn mark_down(&self, idx: usize) -> Duration {
+        let mut inner = self.inner.lock().unwrap();
+        let s = &mut inner.slots[idx];
+        let exp = s.attempts.min(16);
+        let backoff = self
+            .backoff_base
+            .saturating_mul(1u32 << exp)
+            .min(self.backoff_cap);
+        s.state = SlotState::Down { next_attempt: Instant::now() + backoff };
+        s.attempts = s.attempts.saturating_add(1);
+        s.stats_failures = 0;
+        backoff
+    }
+
+    /// Down slots whose backoff has expired — candidates for relaunch.
+    pub fn due_for_restart(&self, now: Instant) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s.state {
+                SlotState::Down { next_attempt } if next_attempt <= now => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Record a successful `STATS` poll of worker `idx`.
+    pub fn record_poll(&self, idx: usize, queue_depth: u64, inflight: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let s = &mut inner.slots[idx];
+        s.queue_depth = queue_depth;
+        s.inflight = inflight;
+        s.stats_failures = 0;
+    }
+
+    /// Record a failed `STATS` poll; returns the consecutive-failure
+    /// count so the health loop can decide when to declare death.
+    pub fn record_poll_failure(&self, idx: usize) -> u32 {
+        let mut inner = self.inner.lock().unwrap();
+        let s = &mut inner.slots[idx];
+        s.stats_failures = s.stats_failures.saturating_add(1);
+        s.stats_failures
+    }
+
+    /// Pick the least-loaded healthy worker and reserve a session slot
+    /// on it.  Score = router-placed sessions + polled queue depth; ties
+    /// break round-robin from a rotating cursor.  `None` when no worker
+    /// is up.  The caller owns the reservation and must pair it with
+    /// [`Fleet::complete`].
+    pub fn place(&self) -> Option<(usize, SocketAddr)> {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.slots.len();
+        if n == 0 {
+            return None;
+        }
+        let start = inner.rr % n;
+        let mut best: Option<(usize, SocketAddr, u64)> = None;
+        for off in 0..n {
+            let i = (start + off) % n;
+            let s = &inner.slots[i];
+            if let SlotState::Up { addr } = s.state {
+                let score = s.sessions as u64 + s.queue_depth;
+                // strict < keeps the first (cursor-closest) minimum — the
+                // round-robin tie-break
+                if best.map(|(_, _, b)| score < b).unwrap_or(true) {
+                    best = Some((i, addr, score));
+                }
+            }
+        }
+        let (idx, addr, _) = best?;
+        inner.slots[idx].sessions += 1;
+        inner.rr = (idx + 1) % n;
+        Some((idx, addr))
+    }
+
+    /// A session placed on `idx` finished (any terminal outcome);
+    /// `tokens` were relayed through it.
+    pub fn complete(&self, idx: usize, tokens: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let s = &mut inner.slots[idx];
+        s.sessions = s.sessions.saturating_sub(1);
+        s.tokens_relayed += tokens;
+    }
+
+    pub fn addr(&self, idx: usize) -> Option<SocketAddr> {
+        let inner = self.inner.lock().unwrap();
+        match inner.slots[idx].state {
+            SlotState::Up { addr } => Some(addr),
+            SlotState::Down { .. } => None,
+        }
+    }
+
+    pub fn views(&self) -> Vec<SlotView> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .map(|s| SlotView {
+                up: matches!(s.state, SlotState::Up { .. }),
+                addr: match s.state {
+                    SlotState::Up { addr } => Some(addr),
+                    SlotState::Down { .. } => None,
+                },
+                sessions: s.sessions,
+                queue_depth: s.queue_depth,
+                tokens_relayed: s.tokens_relayed,
+                restarts: s.restarts,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        SocketAddr::from(([127, 0, 0, 1], port))
+    }
+
+    fn fleet(n: usize) -> Fleet {
+        let f = Fleet::new(n, Duration::from_millis(10), Duration::from_millis(500));
+        for i in 0..n {
+            f.mark_up(i, addr(9000 + i as u16), true);
+        }
+        f
+    }
+
+    #[test]
+    fn sequential_sessions_spread_round_robin() {
+        // equal scores: the cursor must rotate, not camp on worker 0 —
+        // this is what makes the CI "tokens on >= 2 workers" gate pass
+        // even for a strictly sequential client
+        let f = fleet(3);
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                let (i, _) = f.place().unwrap();
+                f.complete(i, 1); // session done before the next arrives
+                i
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn placement_prefers_least_loaded() {
+        let f = fleet(3);
+        // three concurrent sessions: one per worker
+        let a = f.place().unwrap().0;
+        let b = f.place().unwrap().0;
+        let c = f.place().unwrap().0;
+        assert_eq!(
+            {
+                let mut v = vec![a, b, c];
+                v.sort();
+                v
+            },
+            vec![0, 1, 2]
+        );
+        // finish worker b's session: the next placement must land there
+        f.complete(b, 5);
+        assert_eq!(f.place().unwrap().0, b);
+    }
+
+    #[test]
+    fn polled_queue_depth_steers_placement() {
+        let f = fleet(2);
+        // worker 0 reports a deep queue (e.g. direct-connected clients
+        // the router can't see): placement must avoid it
+        f.record_poll(0, 10, 4);
+        for _ in 0..3 {
+            let (i, _) = f.place().unwrap();
+            assert_eq!(i, 1);
+            f.complete(i, 0);
+        }
+    }
+
+    #[test]
+    fn down_workers_are_never_placed() {
+        let f = fleet(2);
+        f.mark_down(0);
+        for _ in 0..4 {
+            let (i, a) = f.place().unwrap();
+            assert_eq!(i, 1);
+            assert_eq!(a, addr(9001));
+            f.complete(i, 0);
+        }
+        f.mark_down(1);
+        assert!(f.place().is_none(), "no healthy worker => no placement");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let f = Fleet::new(1, Duration::from_millis(10), Duration::from_millis(45));
+        assert_eq!(f.mark_down(0), Duration::from_millis(10));
+        assert_eq!(f.mark_down(0), Duration::from_millis(20));
+        assert_eq!(f.mark_down(0), Duration::from_millis(40));
+        assert_eq!(f.mark_down(0), Duration::from_millis(45), "capped");
+        assert_eq!(f.mark_down(0), Duration::from_millis(45));
+        // successful relaunch resets the schedule and counts a restart
+        f.mark_up(0, addr(9000), false);
+        assert_eq!(f.views()[0].restarts, 1);
+        assert_eq!(f.mark_down(0), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn due_for_restart_respects_next_attempt() {
+        let f = Fleet::new(2, Duration::from_secs(60), Duration::from_secs(60));
+        f.mark_up(0, addr(9000), true);
+        f.mark_up(1, addr(9001), true);
+        f.mark_down(0);
+        // worker 0's first retry is 60s out: not due now
+        assert!(f.due_for_restart(Instant::now()).is_empty());
+        assert_eq!(
+            f.due_for_restart(Instant::now() + Duration::from_secs(120)),
+            vec![0]
+        );
+    }
+
+    #[test]
+    fn poll_failures_count_consecutively_and_reset() {
+        let f = fleet(1);
+        assert_eq!(f.record_poll_failure(0), 1);
+        assert_eq!(f.record_poll_failure(0), 2);
+        f.record_poll(0, 0, 0); // a good poll resets the streak
+        assert_eq!(f.record_poll_failure(0), 1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Worker health: periodic `STATS` polling, crash detection, and
+//! restart with exponential backoff.
+//!
+//! Per-worker state machine (state lives in [`super::balance::Fleet`]):
+//!
+//! ```text
+//!            launch ok                       poll ok
+//!   ┌──────────────────────►  Up  ───────────────────────┐
+//!   │                          │                         │
+//!   │    process dead, or      │ 2 consecutive           │
+//!   │    STATS failed twice    ▼ failures / not alive    │
+//!  Down{next_attempt}  ◄───────┘                         │
+//!   │         ▲                                          │
+//!   │         │ relaunch failed (backoff doubles)        │
+//!   └─────────┴──── backoff expired: relaunch ───────────┘
+//! ```
+//!
+//! A worker that dies is detected two ways: its [`WorkerHandle`] stops
+//! reporting alive (immediate), or `STATS` polls fail twice in a row
+//! (covers a live-but-wedged process).  After every sweep the admission
+//! capacity is recomputed as `healthy x sessions_per_worker`, so a
+//! degraded fleet admits less instead of queueing blindly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::admission::Admission;
+use super::balance::Fleet;
+use super::worker::{WorkerHandle, WorkerLauncher};
+
+/// Consecutive `STATS` failures before a live process is declared dead.
+pub const POLL_FAILURE_LIMIT: u32 = 2;
+
+/// Everything one health sweep needs; shared with the router front-end.
+pub struct HealthCtx {
+    pub fleet: Arc<Fleet>,
+    pub admission: Arc<Admission>,
+    pub launcher: Arc<dyn WorkerLauncher>,
+    /// Slot-indexed lifecycle handles; `None` while a slot is down.
+    pub handles: Mutex<Vec<Option<Box<dyn WorkerHandle>>>>,
+    pub sessions_per_worker: usize,
+    pub poll_timeout: Duration,
+}
+
+/// Poll one worker's `STATS` line; returns `(queue_depth, inflight)`.
+pub fn poll_stats(addr: SocketAddr, timeout: Duration) -> Result<(u64, u64)> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout).context("connect")?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    writeln!(stream, "STATS").context("send STATS")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read STATS reply")?;
+    anyhow::ensure!(line.starts_with("STATS "), "unexpected reply: {line:?}");
+    let field = |key: &str| -> Result<u64> {
+        line.split_whitespace()
+            .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
+            .with_context(|| format!("STATS line missing {key}: {line:?}"))
+    };
+    Ok((field("queue_depth")?, field("inflight")?))
+}
+
+/// One supervision sweep: poll every Up worker, reap the dead, relaunch
+/// the due, then recompute admission capacity.  Factored out of the
+/// loop so tests can drive sweeps deterministically.
+pub fn health_sweep(ctx: &HealthCtx) {
+    let n = ctx.fleet.len();
+    for idx in 0..n {
+        let Some(addr) = ctx.fleet.addr(idx) else { continue };
+        // liveness first: a dead process needs no poll to be declared
+        let alive = {
+            let mut handles = ctx.handles.lock().unwrap();
+            handles[idx].as_mut().map(|h| h.is_alive()).unwrap_or(false)
+        };
+        if !alive {
+            declare_down(ctx, idx, "process exited");
+            continue;
+        }
+        match poll_stats(addr, ctx.poll_timeout) {
+            Ok((queue_depth, inflight)) => ctx.fleet.record_poll(idx, queue_depth, inflight),
+            Err(e) => {
+                let failures = ctx.fleet.record_poll_failure(idx);
+                if failures >= POLL_FAILURE_LIMIT {
+                    declare_down(ctx, idx, &format!("STATS failed {failures}x: {e:#}"));
+                }
+            }
+        }
+    }
+    for idx in ctx.fleet.due_for_restart(Instant::now()) {
+        match ctx.launcher.launch(idx) {
+            Ok((addr, handle)) => {
+                ctx.handles.lock().unwrap()[idx] = Some(handle);
+                ctx.fleet.mark_up(idx, addr, false);
+                eprintln!("[route] worker {idx} restarted on {addr}");
+            }
+            Err(e) => {
+                let backoff = ctx.fleet.mark_down(idx);
+                eprintln!("[route] worker {idx} relaunch failed ({e:#}); retry in {backoff:?}");
+            }
+        }
+    }
+    ctx.admission
+        .set_capacity(ctx.fleet.healthy() * ctx.sessions_per_worker);
+}
+
+fn declare_down(ctx: &HealthCtx, idx: usize, why: &str) {
+    // reap whatever is left of the worker before scheduling the retry
+    if let Some(mut h) = ctx.handles.lock().unwrap()[idx].take() {
+        h.kill();
+    }
+    let backoff = ctx.fleet.mark_down(idx);
+    eprintln!("[route] worker {idx} down ({why}); restart in {backoff:?}");
+}
+
+/// Run sweeps every `interval` until `stop`.
+pub fn health_loop(ctx: Arc<HealthCtx>, interval: Duration, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        health_sweep(&ctx);
+        // sleep in small slices so shutdown isn't delayed by `interval`
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline && !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(10).min(interval));
+        }
+    }
+}

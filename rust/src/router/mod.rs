@@ -1,0 +1,702 @@
+//! `bmoe route` — the fleet front door over one shared mmap substrate.
+//!
+//! PR 5 made `--load mmap` workers share the packed model's pages
+//! through the kernel page cache: N serving processes, one resident
+//! copy of the O(d² + N·d·log d) substrate.  This module is the
+//! production piece that exploits it — a single TCP front door that
+//! spawns and supervises a fleet of `bmoe serve --native --model X
+//! --load mmap --port 0` workers on the same box and proxies streaming
+//! generation sessions to the least-loaded healthy one:
+//!
+//! ```text
+//!                        ┌──────────── bmoe route ────────────┐
+//!  clients ──GEN/TOK──►  │ admission ─► balancer ─► relay     │
+//!                        │  (shed /     (least-    (1 TCP conn│
+//!                        │   queue /     loaded,    per       │
+//!                        │   fairness)   rr ties)   session)  │
+//!                        │        health thread               │
+//!                        │  (STATS polls, restart w/ backoff) │
+//!                        └───┬───────────┬───────────┬────────┘
+//!                          serve       serve       serve      (children,
+//!                         :ephem      :ephem      :ephem     --port 0)
+//!                            └───── shared mmap pages ─┘
+//! ```
+//!
+//! Submodules: [`admission`] (bounded queue, shedding, per-client
+//! fairness, drain barrier), [`balance`] (fleet state, least-loaded
+//! placement), [`worker`] (launch/supervise, real processes or
+//! in-process test workers), [`health`] (poll/restart state machine),
+//! [`proxy`] (wire handling and per-session relay).
+//!
+//! Shutdown reuses PR 1's loss-free semantics end-to-end: a `DRAIN`
+//! command stops admission (`END shutdown` terminals for new arrivals),
+//! waits for every accepted session — including queued ones — to reach
+//! its terminal event, then sends each worker the wire `SHUTDOWN` (the
+//! worker's own loss-free path) and reaps them.  No accepted session is
+//! ever dropped without a terminal line.
+//!
+//! Design rationale (topology, session-granular balancing, the health
+//! state machine): DESIGN.md §2.
+
+pub mod admission;
+pub mod balance;
+pub mod health;
+pub mod proxy;
+pub mod worker;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use admission::Admission;
+use balance::Fleet;
+use health::HealthCtx;
+use worker::{WorkerHandle, WorkerLauncher};
+
+/// Router knobs (`bmoe route` flags map onto these).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Front-door port (0 = ephemeral, announced via `[listening]`).
+    pub port: u16,
+    /// Worker processes to spawn and supervise.
+    pub fleet: usize,
+    /// Concurrent sessions the router sends each worker before queueing
+    /// (admission capacity = healthy × this).
+    pub sessions_per_worker: usize,
+    /// Bounded admission queue; arrivals beyond it are shed.
+    pub max_queue: usize,
+    /// Max concurrent sessions per client IP (0 = unlimited).
+    pub client_cap: usize,
+    /// Health sweep interval.
+    pub health_interval: Duration,
+    /// First restart backoff (doubles per failed attempt).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Per-worker connect timeout when starting a relay.
+    pub connect_timeout: Duration,
+    /// Longest a queued session may wait before being shed.
+    pub queue_timeout: Duration,
+    /// Drain barrier: how long to wait for in-flight sessions before a
+    /// forced teardown.
+    pub drain_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            port: 7070,
+            fleet: 2,
+            sessions_per_worker: 16,
+            max_queue: 64,
+            client_cap: 0,
+            health_interval: Duration::from_millis(500),
+            backoff_base: Duration::from_millis(200),
+            backoff_cap: Duration::from_secs(10),
+            connect_timeout: Duration::from_secs(5),
+            queue_timeout: Duration::from_secs(60),
+            drain_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Router-level counters (worker-level ones live in [`balance::Fleet`]).
+#[derive(Default)]
+pub struct RouterStats {
+    /// Sessions relayed to a worker terminal (`END`/`ERR` from it).
+    pub routed: AtomicU64,
+    /// Sessions shed by admission (`END shed`).
+    pub shed: AtomicU64,
+    /// Sessions whose worker died mid-relay (`ERR worker lost` /
+    /// `ERR no healthy worker`).
+    pub worker_lost: AtomicU64,
+    /// Tokens relayed across all sessions.
+    pub tokens: AtomicU64,
+}
+
+/// The supervisor: owns the fleet, admission gate, and health thread.
+pub struct Router {
+    pub cfg: RouterConfig,
+    pub fleet: Arc<Fleet>,
+    pub admission: Arc<Admission>,
+    pub stats: RouterStats,
+    health_ctx: Arc<HealthCtx>,
+    health_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Stops the health loop and every connection/accept loop.
+    stop: Arc<AtomicBool>,
+    /// A drain was requested (DRAIN command or programmatic).
+    drain_req: AtomicBool,
+}
+
+impl Router {
+    /// Launch the fleet and start supervision.  Fails unless at least
+    /// one worker comes up; failed slots enter the normal restart path.
+    pub fn start(cfg: RouterConfig, launcher: Arc<dyn WorkerLauncher>) -> Result<Arc<Router>> {
+        anyhow::ensure!(cfg.fleet >= 1, "fleet must be >= 1");
+        let fleet = Arc::new(Fleet::new(cfg.fleet, cfg.backoff_base, cfg.backoff_cap));
+        let admission = Arc::new(Admission::new(
+            0,
+            cfg.max_queue,
+            cfg.client_cap,
+            cfg.queue_timeout,
+        ));
+        let mut handles: Vec<Option<Box<dyn WorkerHandle>>> = Vec::new();
+        for idx in 0..cfg.fleet {
+            match launcher.launch(idx) {
+                Ok((addr, handle)) => {
+                    eprintln!("[route] worker {idx} up on {addr}");
+                    fleet.mark_up(idx, addr, true);
+                    handles.push(Some(handle));
+                }
+                Err(e) => {
+                    eprintln!("[route] worker {idx} failed to start: {e:#}");
+                    fleet.mark_down(idx);
+                    handles.push(None);
+                }
+            }
+        }
+        anyhow::ensure!(
+            fleet.healthy() > 0,
+            "no worker came up (fleet of {})",
+            cfg.fleet
+        );
+        admission.set_capacity(fleet.healthy() * cfg.sessions_per_worker);
+        let health_ctx = Arc::new(HealthCtx {
+            fleet: fleet.clone(),
+            admission: admission.clone(),
+            launcher,
+            handles: Mutex::new(handles),
+            sessions_per_worker: cfg.sessions_per_worker,
+            poll_timeout: Duration::from_millis(500).max(cfg.health_interval),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let health_thread = {
+            let ctx = health_ctx.clone();
+            let interval = cfg.health_interval;
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("bmoe-route-health".into())
+                .spawn(move || health::health_loop(ctx, interval, stop))
+                .context("spawn health loop")?
+        };
+        Ok(Arc::new(Router {
+            cfg,
+            fleet,
+            admission,
+            stats: RouterStats::default(),
+            health_ctx,
+            health_thread: Mutex::new(Some(health_thread)),
+            stop,
+            drain_req: AtomicBool::new(false),
+        }))
+    }
+
+    /// True once a drain or stop has been requested — connection loops
+    /// stop reading new requests.
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || self.drain_req.load(Ordering::SeqCst)
+    }
+
+    /// Begin a drain: admission closes immediately (new sessions get
+    /// `END shutdown`), the accept loop winds down, and `serve` runs
+    /// the full teardown before returning.
+    pub fn request_drain(&self) {
+        self.drain_req.store(true, Ordering::SeqCst);
+        self.admission.begin_drain();
+    }
+
+    /// Kill worker `idx`'s process outright (chaos testing: the client
+    /// on it sees a terminal event and the health loop restarts it).
+    pub fn kill_worker(&self, idx: usize) {
+        if let Some(h) = self.health_ctx.handles.lock().unwrap()[idx].as_mut() {
+            h.kill();
+        }
+    }
+
+    /// OS pids of the live workers, slot-indexed (`None` for down slots
+    /// and in-process test workers).  For RSS accounting in benches.
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.health_ctx
+            .handles
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|h| h.as_ref().and_then(|h| h.pid()))
+            .collect()
+    }
+
+    /// One `key=value` line for the router's own `STATS` command.
+    pub fn stats_line(&self) -> String {
+        let (inflight, queued, capacity, draining) = self.admission.counts();
+        let views = self.fleet.views();
+        let restarts: u64 = views.iter().map(|v| v.restarts).sum();
+        let mut line = format!(
+            "STATS fleet={} healthy={} capacity={capacity} inflight={inflight} \
+             queued={queued} draining={} routed={} shed={} worker_lost={} tokens={} \
+             restarts={restarts}",
+            views.len(),
+            self.fleet.healthy(),
+            draining as u8,
+            self.stats.routed.load(Ordering::Relaxed),
+            self.stats.shed.load(Ordering::Relaxed),
+            self.stats.worker_lost.load(Ordering::Relaxed),
+            self.stats.tokens.load(Ordering::Relaxed),
+        );
+        for (i, v) in views.iter().enumerate() {
+            line.push_str(&format!(
+                " w{i}_up={} w{i}_sessions={} w{i}_queue={} w{i}_tokens={} w{i}_restarts={}",
+                v.up as u8, v.sessions, v.queue_depth, v.tokens_relayed, v.restarts
+            ));
+        }
+        line
+    }
+
+    /// Drain and tear the fleet down.  Returns `true` when every
+    /// accepted session completed inside the drain window (loss-free).
+    pub fn drain(&self) -> bool {
+        self.request_drain();
+        let lossless = self.admission.wait_idle(self.cfg.drain_timeout);
+        if !lossless {
+            eprintln!(
+                "[route] drain window ({:?}) expired with sessions still in flight; forcing",
+                self.cfg.drain_timeout
+            );
+        }
+        // stop supervision *before* retiring workers so the health loop
+        // doesn't resurrect them mid-teardown
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.health_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        let mut handles = self.health_ctx.handles.lock().unwrap();
+        for (idx, slot) in handles.iter_mut().enumerate() {
+            let Some(handle) = slot.as_mut() else { continue };
+            // graceful first: the worker's own loss-free shutdown
+            if let Some(addr) = self.fleet.addr(idx) {
+                let _ = send_shutdown(addr);
+            }
+            if !handle.wait_exit(Duration::from_secs(10)) {
+                eprintln!("[route] worker {idx} ignored SHUTDOWN; killing");
+                handle.kill();
+            }
+        }
+        lossless
+    }
+
+    /// Front-door accept loop.  Returns after a drain completes (the
+    /// normal exit) or `stop` is set externally.
+    pub fn serve(self: Arc<Router>, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.stopping() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    let router = self.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let _ = proxy::handle_client(stream, router);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // connection threads run their in-flight sessions to terminal
+        // events (admission is already draining), then exit
+        for c in conns {
+            let _ = c.join();
+        }
+        self.drain();
+        Ok(())
+    }
+}
+
+/// Ask a worker to shut down gracefully over the wire.
+fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect_timeout(&addr, Duration::from_secs(2))?;
+    s.set_read_timeout(Some(Duration::from_secs(2)))?;
+    writeln!(s, "SHUTDOWN")?;
+    let mut line = String::new();
+    let _ = BufReader::new(s).read_line(&mut line); // best-effort ack
+    Ok(())
+}
+
+/// `bmoe route` entrypoint: bind the front door, announce it, serve
+/// until drained.
+pub fn run(cfg: RouterConfig, launcher: Arc<dyn WorkerLauncher>) -> Result<()> {
+    let (listener, addr) = crate::util::net::listen_reuse(cfg.port)?;
+    let router = Router::start(cfg, launcher)?;
+    println!("[listening] {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "[route] fleet of {} ({} healthy) behind {addr}; DRAIN to shut down",
+        router.cfg.fleet,
+        router.fleet.healthy()
+    );
+    router.serve(listener)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use worker::InProcessLauncher;
+
+    fn test_cfg() -> RouterConfig {
+        RouterConfig {
+            fleet: 2,
+            sessions_per_worker: 4,
+            max_queue: 2,
+            client_cap: 0,
+            health_interval: Duration::from_millis(50),
+            backoff_base: Duration::from_millis(30),
+            backoff_cap: Duration::from_millis(500),
+            connect_timeout: Duration::from_secs(2),
+            queue_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(10),
+            ..RouterConfig::default()
+        }
+    }
+
+    fn start(cfg: RouterConfig, launcher: InProcessLauncher) -> (Arc<Router>, std::net::SocketAddr) {
+        let router = Router::start(cfg, Arc::new(launcher)).unwrap();
+        let (listener, addr) = crate::util::net::listen_reuse(0).unwrap();
+        {
+            let router = router.clone();
+            std::thread::spawn(move || router.serve(listener));
+        }
+        (router, addr)
+    }
+
+    fn run_session(addr: std::net::SocketAddr, gen: &str) -> (Vec<i32>, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{gen}").unwrap();
+        read_session(&mut BufReader::new(s))
+    }
+
+    /// Read TOK lines until a terminal; returns (tokens, terminal line).
+    fn read_session(r: &mut BufReader<TcpStream>) -> (Vec<i32>, String) {
+        let mut toks = Vec::new();
+        loop {
+            let mut line = String::new();
+            if r.read_line(&mut line).unwrap_or(0) == 0 {
+                return (toks, "EOF".into());
+            }
+            if let Some(rest) = line.strip_prefix("TOK ") {
+                toks.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+            } else {
+                return (toks, line.trim().to_string());
+            }
+        }
+    }
+
+    fn stats(addr: std::net::SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "STATS").unwrap();
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        line
+    }
+
+    fn stat_field(line: &str, key: &str) -> u64 {
+        line.split_whitespace()
+            .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
+            .unwrap_or_else(|| panic!("missing {key} in {line}"))
+    }
+
+    #[test]
+    fn sessions_stream_through_the_router_and_spread() {
+        let (router, addr) = start(test_cfg(), InProcessLauncher::new(Duration::ZERO, 4));
+        for i in 0..6 {
+            let (toks, end) = run_session(addr, &format!("GEN 3 0 0 0 -1 1 2 {i}"));
+            assert_eq!(toks.len(), 3, "session {i}");
+            assert!(end.starts_with("END max_tokens 3"), "{end}");
+        }
+        // round-robin tie-break: sequential sessions land on both
+        // workers.  Counters are bumped just after the terminal line is
+        // forwarded, so poll briefly rather than racing the bookkeeping.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            let line = stats(addr);
+            if stat_field(&line, "routed") == 6 {
+                assert!(stat_field(&line, "w0_tokens") > 0, "{line}");
+                assert!(stat_field(&line, "w1_tokens") > 0, "{line}");
+                assert_eq!(stat_field(&line, "shed"), 0, "{line}");
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "routed never hit 6: {line}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        router.drain();
+    }
+
+    #[test]
+    fn shed_at_capacity_is_explicit_and_immediate() {
+        // capacity 1x1, queue 0-ish: second concurrent session sheds
+        let cfg = RouterConfig {
+            fleet: 1,
+            sessions_per_worker: 1,
+            max_queue: 0,
+            queue_timeout: Duration::from_millis(200),
+            ..test_cfg()
+        };
+        // slow steps so the first session is still running when the
+        // second arrives
+        let (router, addr) =
+            start(cfg, InProcessLauncher::new(Duration::from_millis(30), 4));
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        writeln!(s1, "GEN 20 0 0 0 -1 1 2").unwrap();
+        let mut r1 = BufReader::new(s1.try_clone().unwrap());
+        let mut first = String::new();
+        r1.read_line(&mut first).unwrap();
+        assert!(first.starts_with("TOK "), "{first}");
+        // second session: must shed promptly, not queue behind 20 slow steps
+        let t0 = std::time::Instant::now();
+        let (toks, end) = run_session(addr, "GEN 2 0 0 0 -1 3 4");
+        assert!(toks.is_empty());
+        assert!(end.starts_with("END shed 0"), "{end}");
+        assert!(t0.elapsed() < Duration::from_secs(2), "shed must not stall");
+        let (rest, end1) = read_session(&mut r1);
+        assert_eq!(rest.len(), 19);
+        assert!(end1.starts_with("END max_tokens"), "{end1}");
+        router.drain();
+    }
+
+    #[test]
+    fn per_client_fairness_cap_sheds_the_hog() {
+        let cfg = RouterConfig {
+            fleet: 1,
+            sessions_per_worker: 8,
+            client_cap: 1,
+            ..test_cfg()
+        };
+        let (router, addr) =
+            start(cfg, InProcessLauncher::new(Duration::from_millis(20), 8));
+        // all test clients share 127.0.0.1, so with cap 1 a second
+        // concurrent session from "the same client" must shed even
+        // though worker capacity is plentiful
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        writeln!(s1, "GEN 30 0 0 0 -1 1 2").unwrap();
+        let mut r1 = BufReader::new(s1.try_clone().unwrap());
+        let mut first = String::new();
+        r1.read_line(&mut first).unwrap();
+        let (_, end) = run_session(addr, "GEN 2 0 0 0 -1 3 4");
+        assert!(end.starts_with("END shed 0"), "{end}");
+        let (_, end1) = read_session(&mut r1);
+        assert!(end1.starts_with("END max_tokens"), "{end1}");
+        // with the hog gone, the same client is admitted again (the
+        // router releases its slot just after forwarding the terminal,
+        // so allow it a beat)
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            let (toks, end2) = run_session(addr, "GEN 2 0 0 0 -1 3 4");
+            if end2.starts_with("END max_tokens") {
+                assert_eq!(toks.len(), 2);
+                break;
+            }
+            assert!(end2.starts_with("END shed"), "{end2}");
+            assert!(std::time::Instant::now() < deadline, "cap slot never released");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        router.drain();
+    }
+
+    #[test]
+    fn killed_worker_gives_terminal_event_and_restarts() {
+        let cfg = RouterConfig {
+            fleet: 1,
+            ..test_cfg()
+        };
+        let (router, addr) =
+            start(cfg, InProcessLauncher::new(Duration::from_millis(25), 4));
+        // long session under way on the only worker
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        writeln!(s1, "GEN 1000 0 0 0 -1 1 2").unwrap();
+        let mut r1 = BufReader::new(s1.try_clone().unwrap());
+        let mut first = String::new();
+        r1.read_line(&mut first).unwrap();
+        assert!(first.starts_with("TOK "), "{first}");
+        router.kill_worker(0);
+        // the client must get a terminal line, never a hung stream: the
+        // worker's abort path yields END shutdown; a harder death (EOF
+        // mid-stream) yields ERR worker lost — both are terminal
+        let (_, end) = read_session(&mut r1);
+        assert!(
+            end.starts_with("END shutdown") || end.starts_with("ERR"),
+            "terminal event required, got {end}"
+        );
+        // health loop notices and restarts with backoff; a subsequent
+        // session must succeed
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let (toks, end) = run_session(addr, "GEN 2 0 0 0 -1 5 6");
+            if toks.len() == 2 && end.starts_with("END max_tokens") {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "worker never came back: {end}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(stat_field(&stats(addr), "restarts") >= 1);
+        router.drain();
+    }
+
+    #[test]
+    fn relay_reports_worker_lost_on_mid_stream_eof() {
+        // a raw fake worker that streams two TOKs then slams the door —
+        // the relay must surface a terminal ERR, not hang or truncate
+        let (listener, waddr) = crate::util::net::listen_reuse(0).unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut line = String::new();
+            BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+            writeln!(s, "TOK 0 7 100").unwrap();
+            writeln!(s, "TOK 1 8 100").unwrap();
+            // no END: connection dies mid-stream
+        });
+        let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
+        let client = std::thread::spawn(move || {
+            let s = TcpStream::connect(caddr).unwrap();
+            read_session(&mut BufReader::new(s))
+        });
+        let (mut server_side, _) = client_listener.accept().unwrap();
+        let outcome = proxy::relay_session(
+            &mut server_side,
+            waddr,
+            "GEN 5 0 0 0 -1 1",
+            Duration::from_secs(2),
+        );
+        assert_eq!(outcome, proxy::RelayOutcome::WorkerLost { tokens: 2 });
+        writeln!(server_side, "ERR worker lost").unwrap();
+        drop(server_side);
+        let (toks, end) = client.join().unwrap();
+        assert_eq!(toks, vec![7, 8]);
+        assert!(end.starts_with("ERR worker lost"), "{end}");
+    }
+
+    #[test]
+    fn restart_backoff_retries_after_launch_failures() {
+        let cfg = RouterConfig {
+            fleet: 1,
+            ..test_cfg()
+        };
+        let launcher = Arc::new(InProcessLauncher::new(Duration::ZERO, 4));
+        let router = Router::start(cfg, launcher.clone()).unwrap();
+        // make the next relaunch fail once, then kill the worker: the
+        // health loop must eat the failure, back off, and retry until
+        // one launch sticks
+        launcher.fail_next(1);
+        router.kill_worker(0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while router.fleet.healthy() == 0 {
+            assert!(std::time::Instant::now() < deadline, "restart never happened");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(router.fleet.views()[0].restarts >= 1);
+        assert!(
+            launcher.launch_count() >= 3,
+            "boot + injected failure + successful retry, got {}",
+            launcher.launch_count()
+        );
+        router.drain();
+    }
+
+    #[test]
+    fn drain_under_load_loses_no_accepted_session() {
+        let cfg = RouterConfig {
+            fleet: 2,
+            sessions_per_worker: 2,
+            max_queue: 8,
+            ..test_cfg()
+        };
+        let (router, addr) =
+            start(cfg, InProcessLauncher::new(Duration::from_millis(10), 2));
+        // saturate: 4 admitted + several queued
+        let clients: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    run_session(addr, &format!("GEN 12 0 0 0 -1 1 {i}"))
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(60));
+        router.request_drain();
+        // every accepted session still reaches a terminal event; nobody
+        // hangs and nobody gets a silently-closed stream mid-session
+        let mut completed = 0;
+        for c in clients {
+            let (toks, end) = c.join().unwrap();
+            if end.starts_with("END max_tokens") {
+                assert_eq!(toks.len(), 12);
+                completed += 1;
+            } else {
+                assert!(
+                    end.starts_with("END shutdown") || end.starts_with("END shed"),
+                    "non-terminal outcome {end}"
+                );
+            }
+        }
+        assert!(completed >= 4, "the admitted sessions must complete, got {completed}");
+        assert!(router.drain(), "drain must report loss-free");
+    }
+
+    #[test]
+    fn drain_command_over_the_wire_stops_the_router() {
+        let (router, addr) = start(test_cfg(), InProcessLauncher::new(Duration::ZERO, 4));
+        let (toks, _) = run_session(addr, "GEN 2 0 0 0 -1 1 2");
+        assert_eq!(toks.len(), 2);
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "DRAIN").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "OK draining");
+        // new sessions now get the draining terminal (until the accept
+        // loop fully winds down) or a refused connect after it does
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !router.stopping() {
+            assert!(std::time::Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                if writeln!(s, "GEN 2 0 0 0 -1 1 2").is_ok() {
+                    let (_, end) = read_session(&mut BufReader::new(s));
+                    assert!(
+                        end.starts_with("END shutdown") || end == "EOF",
+                        "draining router must terminate new sessions: {end}"
+                    );
+                }
+            }
+            Err(_) => {} // listener already down — also a clean outcome
+        }
+    }
+
+    #[test]
+    fn malformed_line_gets_err_and_close_without_burning_capacity() {
+        let (router, addr) = start(test_cfg(), InProcessLauncher::new(Duration::ZERO, 4));
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN not a request").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR bad request:"), "{line}");
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "close after ERR");
+        let line = stats(addr);
+        assert_eq!(stat_field(&line, "routed"), 0, "{line}");
+        assert_eq!(stat_field(&line, "shed"), 0, "garbage must not shed-count: {line}");
+        router.drain();
+    }
+}

@@ -1,0 +1,207 @@
+//! Client-facing protocol handling and the per-session relay.
+//!
+//! The router speaks the exact `GEN`/`TOK`/`END` line protocol the
+//! workers do, so existing clients (`bench-client`, the CI bash smoke)
+//! point at the router unchanged.  Each admitted `GEN` opens a fresh
+//! TCP connection to its placed worker and relays lines verbatim —
+//! session-granular proxying, no re-framing, so streams through the
+//! router are byte-identical to direct streams (pinned by
+//! `rust/tests/serving.rs`).
+//!
+//! Router-specific terminals, all explicit and immediate:
+//!
+//! * `END shed 0 <us>` — admission shed the session (queue full, client
+//!   cap, or a bounded queue wait expired).
+//! * `END shutdown 0 <us>` — the router is draining.
+//! * `ERR worker lost` — the placed worker died mid-stream; the session
+//!   is over (generation state died with the worker) but the client got
+//!   a terminal event, not a hung stream.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{IpAddr, SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::parse_gen_line;
+
+use super::admission::Ticket;
+use super::Router;
+
+/// Worker-side per-event read budget while relaying (generous: a step
+/// may warm caches on first use, mirroring the server's own timeout).
+const RELAY_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// What became of one relayed session.
+#[derive(Debug, PartialEq, Eq)]
+pub(super) enum RelayOutcome {
+    /// Worker delivered a terminal line (`END` or `ERR`).
+    Done { tokens: u64 },
+    /// Worker connection failed or went EOF before a terminal line.
+    WorkerLost { tokens: u64 },
+    /// The client stopped accepting writes; session abandoned (dropping
+    /// the worker connection cancels the session worker-side).
+    ClientGone,
+}
+
+/// Relay one `GEN` line to `addr`, forwarding every reply line to
+/// `client` until the worker's terminal line.
+pub(super) fn relay_session(
+    client: &mut TcpStream,
+    addr: SocketAddr,
+    gen_line: &str,
+    connect_timeout: Duration,
+) -> RelayOutcome {
+    let worker = (|| -> Result<TcpStream> {
+        let s = TcpStream::connect_timeout(&addr, connect_timeout)?;
+        s.set_read_timeout(Some(RELAY_READ_TIMEOUT))?;
+        s.set_nodelay(true).ok();
+        Ok(s)
+    })();
+    let Ok(mut worker) = worker else {
+        return RelayOutcome::WorkerLost { tokens: 0 };
+    };
+    if writeln!(worker, "{gen_line}").is_err() {
+        return RelayOutcome::WorkerLost { tokens: 0 };
+    }
+    let mut reader = BufReader::new(worker);
+    let mut tokens = 0u64;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return RelayOutcome::WorkerLost { tokens },
+            Ok(_) => {}
+        }
+        if client.write_all(line.as_bytes()).is_err() {
+            return RelayOutcome::ClientGone;
+        }
+        if line.starts_with("TOK ") {
+            tokens += 1;
+        } else if line.starts_with("END ") || line.starts_with("ERR") {
+            return RelayOutcome::Done { tokens };
+        }
+        // anything else (future protocol lines) is forwarded verbatim
+    }
+}
+
+/// Run one admitted-or-rejected session for `client_ip`.
+pub(super) fn proxy_session(
+    router: &Router,
+    writer: &mut TcpStream,
+    gen_line: &str,
+    client_ip: IpAddr,
+) -> Result<()> {
+    let t0 = Instant::now();
+    match router.admission.acquire(client_ip) {
+        Ticket::Shed => {
+            router.stats.shed.fetch_add(1, Ordering::Relaxed);
+            writeln!(writer, "END shed 0 {}", t0.elapsed().as_micros())?;
+            return Ok(());
+        }
+        Ticket::Draining => {
+            writeln!(writer, "END shutdown 0 {}", t0.elapsed().as_micros())?;
+            return Ok(());
+        }
+        Ticket::Admitted => {}
+    }
+    let Some((idx, addr)) = router.fleet.place() else {
+        // capacity said yes but every worker died in between — terminal
+        // error, never a hang
+        router.admission.release(client_ip);
+        router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
+        writeln!(writer, "ERR no healthy worker")?;
+        return Ok(());
+    };
+    let outcome = relay_session(writer, addr, gen_line, router.cfg.connect_timeout);
+    let (tokens, client_gone) = match outcome {
+        RelayOutcome::Done { tokens } => {
+            router.stats.routed.fetch_add(1, Ordering::Relaxed);
+            (tokens, false)
+        }
+        RelayOutcome::WorkerLost { tokens } => {
+            router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
+            // terminal event for the client; the health thread will
+            // notice the corpse and schedule the restart
+            let _ = writeln!(writer, "ERR worker lost");
+            (tokens, false)
+        }
+        RelayOutcome::ClientGone => (0, true),
+    };
+    router.stats.tokens.fetch_add(tokens, Ordering::Relaxed);
+    router.fleet.complete(idx, tokens);
+    router.admission.release(client_ip);
+    if client_gone {
+        anyhow::bail!("client disconnected mid-stream");
+    }
+    Ok(())
+}
+
+/// One client connection: commands and sessions until QUIT/EOF/stop.
+/// Mirrors the worker server's loop — stop-aware reads so a drain is
+/// never wedged by an idle client, one `ERR` then close on garbage.
+pub(super) fn handle_client(stream: TcpStream, router: Arc<Router>) -> Result<()> {
+    let client_ip = stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or_else(|_| IpAddr::from([127, 0, 0, 1]));
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if router.stopping() {
+            // drain/stop between sessions: close rather than accept more
+            return Ok(());
+        }
+        // read one line, waking on the timeout to observe stop/drain;
+        // bytes read before a timeout stay in `line` (read_until's
+        // contract), so slow lines are never truncated
+        line.clear();
+        let eof = loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => break true,
+                Ok(_) => break false,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if router.stopping() {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if eof && line.trim().is_empty() {
+            return Ok(());
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "QUIT" {
+            return Ok(());
+        }
+        if line == "STATS" {
+            writeln!(writer, "{}", router.stats_line())?;
+            continue;
+        }
+        if line == "DRAIN" {
+            writeln!(writer, "OK draining")?;
+            router.request_drain();
+            return Ok(());
+        }
+        // validate before consuming admission or a worker slot: garbage
+        // must not count against capacity or the client's fairness cap
+        if let Err(e) = parse_gen_line(line) {
+            writeln!(writer, "ERR bad request: {e:#}")?;
+            return Ok(());
+        }
+        proxy_session(&router, &mut writer, line, client_ip)?;
+    }
+}

@@ -1,0 +1,336 @@
+//! Worker lifecycle: how the router launches, watches, and reaps the
+//! `bmoe serve` processes behind it.
+//!
+//! The supervisor logic (health checks, restart with backoff, drain) is
+//! written against two small traits so the whole router can be
+//! exercised hermetically in unit tests: [`ProcessLauncher`] spawns
+//! real `bmoe serve --port 0` child processes and discovers their
+//! ephemeral port from the machine-parseable `[listening]` stdout line,
+//! while the test-only [`InProcessLauncher`] boots the same TCP serving
+//! stack as threads inside the test binary (over the deterministic
+//! `CountBackend` fixture) — same wire protocol, same supervision
+//! paths, no fork/exec.
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// A launched worker the router can watch and stop.
+pub trait WorkerHandle: Send {
+    /// Is the worker still running?  (Liveness of the *process/thread*;
+    /// responsiveness is probed separately via `STATS` polls.)
+    fn is_alive(&mut self) -> bool;
+    /// Block up to `timeout` for a voluntary exit; true when it exited.
+    fn wait_exit(&mut self, timeout: Duration) -> bool;
+    /// Forcibly terminate and reap the worker.
+    fn kill(&mut self);
+    /// OS pid for RSS accounting, when the worker is a real process.
+    fn pid(&self) -> Option<u32>;
+}
+
+/// Launch worker `index`, returning the address it serves on plus its
+/// lifecycle handle.  Called at startup and again on every restart.
+pub trait WorkerLauncher: Send + Sync {
+    fn launch(&self, index: usize) -> Result<(SocketAddr, Box<dyn WorkerHandle>)>;
+}
+
+/// Spawns real `bmoe serve` child processes: `<bin> serve <args>` with
+/// stdout piped so the `[listening] <addr>` line can be parsed (the
+/// workers run `--port 0`, so the kernel picks their ports and this
+/// line is the only way to learn them).  Stderr is inherited — worker
+/// logs interleave with the router's, prefixed by serve itself.
+pub struct ProcessLauncher {
+    /// Path to the `bmoe` binary (usually `std::env::current_exe()`).
+    pub bin: std::path::PathBuf,
+    /// Arguments after `serve` — model path, `--load mmap`, shape flags.
+    /// `--port 0` is appended automatically.
+    pub args: Vec<String>,
+    /// How long to wait for the `[listening]` line before declaring the
+    /// launch failed.
+    pub startup_timeout: Duration,
+}
+
+impl ProcessLauncher {
+    pub fn new(bin: std::path::PathBuf, args: Vec<String>) -> Self {
+        ProcessLauncher {
+            bin,
+            args,
+            startup_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Parse the machine-parseable announce line: `[listening] 127.0.0.1:N`.
+pub fn parse_listening_line(line: &str) -> Option<SocketAddr> {
+    line.trim().strip_prefix("[listening] ")?.trim().parse().ok()
+}
+
+struct ProcessHandle {
+    child: std::process::Child,
+}
+
+impl WorkerHandle for ProcessHandle {
+    fn is_alive(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(None))
+    }
+
+    fn wait_exit(&mut self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return true,
+                Err(_) => return true, // already reaped
+                Ok(None) => {}
+            }
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait(); // reap; never leave a zombie
+    }
+
+    fn pid(&self) -> Option<u32> {
+        Some(self.child.id())
+    }
+}
+
+impl WorkerLauncher for ProcessLauncher {
+    fn launch(&self, index: usize) -> Result<(SocketAddr, Box<dyn WorkerHandle>)> {
+        use std::io::BufRead;
+        let mut cmd = std::process::Command::new(&self.bin);
+        cmd.arg("serve")
+            .args(&self.args)
+            .args(["--port", "0"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit());
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawn worker {index}: {}", self.bin.display()))?;
+        let stdout = child.stdout.take().context("worker stdout")?;
+        let (tx, rx) = std::sync::mpsc::channel::<SocketAddr>();
+        // Reader thread: forward the announce line, then keep draining
+        // stdout forever so the child can never block on a full pipe.
+        std::thread::Builder::new()
+            .name(format!("bmoe-worker{index}-stdout"))
+            .spawn(move || {
+                let reader = std::io::BufReader::new(stdout);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if let Some(addr) = parse_listening_line(&line) {
+                        let _ = tx.send(addr);
+                    }
+                }
+            })
+            .context("spawn stdout reader")?;
+        match rx.recv_timeout(self.startup_timeout) {
+            Ok(addr) => Ok((addr, Box::new(ProcessHandle { child }))),
+            Err(_) => {
+                let mut h = ProcessHandle { child };
+                h.kill();
+                anyhow::bail!(
+                    "worker {index} did not announce [listening] within {:?}",
+                    self.startup_timeout
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process worker for hermetic tests
+// ---------------------------------------------------------------------------
+
+/// Test-only launcher: each "worker" is a real TCP serving stack
+/// (`serve_on` over a [`crate::testutil::CountBackend`] coordinator)
+/// running as threads in this process.  Same wire protocol as a child
+/// process, so placement, shedding, health, restart, and drain are all
+/// testable without fork/exec.  `fail_next_launches` makes the next N
+/// launch attempts error, for restart-backoff tests.
+#[cfg(any(test, feature = "testutil"))]
+pub struct InProcessLauncher {
+    /// Per-step artificial delay of each worker's backend (slow workers
+    /// make in-flight sessions observable).
+    pub step_delay: Duration,
+    /// `max_batch` of each worker's scheduler.
+    pub max_batch: usize,
+    pub fail_next_launches: std::sync::atomic::AtomicUsize,
+    /// Every launch ever made, for `launch_count` assertions.
+    launches: std::sync::atomic::AtomicUsize,
+}
+
+#[cfg(any(test, feature = "testutil"))]
+impl InProcessLauncher {
+    pub fn new(step_delay: Duration, max_batch: usize) -> Self {
+        InProcessLauncher {
+            step_delay,
+            max_batch,
+            fail_next_launches: std::sync::atomic::AtomicUsize::new(0),
+            launches: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn launch_count(&self) -> usize {
+        self.launches.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Make the next `n` launch attempts fail (restart-backoff tests).
+    pub fn fail_next(&self, n: usize) {
+        self.fail_next_launches
+            .store(n, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+#[cfg(any(test, feature = "testutil"))]
+pub struct InProcessHandle {
+    coord: std::sync::Arc<crate::coordinator::Coordinator>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+#[cfg(any(test, feature = "testutil"))]
+impl WorkerHandle for InProcessHandle {
+    fn is_alive(&mut self) -> bool {
+        self.thread.as_ref().is_some_and(|t| !t.is_finished())
+    }
+
+    fn wait_exit(&mut self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.is_alive() {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        true
+    }
+
+    fn kill(&mut self) {
+        // Abrupt from the clients' point of view: the coordinator aborts
+        // every in-flight session (terminal events on the wire), the
+        // accept loop stops, and the serve thread exits.
+        self.coord.shutdown();
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    fn pid(&self) -> Option<u32> {
+        None
+    }
+}
+
+#[cfg(any(test, feature = "testutil"))]
+impl WorkerLauncher for InProcessLauncher {
+    fn launch(&self, index: usize) -> Result<(SocketAddr, Box<dyn WorkerHandle>)> {
+        use std::sync::atomic::Ordering;
+        self.launches.fetch_add(1, Ordering::SeqCst);
+        let failures = self.fail_next_launches.load(Ordering::SeqCst);
+        if failures > 0 {
+            self.fail_next_launches.store(failures - 1, Ordering::SeqCst);
+            anyhow::bail!("injected launch failure for worker {index}");
+        }
+        let backend = crate::testutil::CountBackend::new().with_delay(self.step_delay);
+        let backend = std::sync::Arc::new(crate::testutil::CountBackend {
+            max_batch: self.max_batch,
+            ..backend
+        });
+        let coord = crate::coordinator::Coordinator::start(
+            backend,
+            crate::coordinator::SchedulerConfig::new(self.max_batch, Duration::from_millis(1)),
+        );
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (listener, addr) = crate::util::net::listen_reuse(0)?;
+        let thread = {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name(format!("bmoe-test-worker{index}"))
+                .spawn(move || {
+                    let _ = crate::coordinator::serve_on(listener, coord, stop);
+                })?
+        };
+        Ok((
+            addr,
+            Box::new(InProcessHandle {
+                coord,
+                stop,
+                thread: Some(thread),
+            }),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listening_line_parses_and_rejects() {
+        assert_eq!(
+            parse_listening_line("[listening] 127.0.0.1:41523"),
+            Some("127.0.0.1:41523".parse().unwrap())
+        );
+        assert_eq!(
+            parse_listening_line("  [listening] 127.0.0.1:7070\n"),
+            Some("127.0.0.1:7070".parse().unwrap())
+        );
+        assert_eq!(parse_listening_line("[serve] listening on 127.0.0.1:7070"), None);
+        assert_eq!(parse_listening_line("[listening] nonsense"), None);
+    }
+
+    #[test]
+    fn in_process_worker_serves_and_dies_on_kill() {
+        use std::io::{BufRead, BufReader, Write};
+        let launcher = InProcessLauncher::new(Duration::ZERO, 4);
+        let (addr, mut handle) = launcher.launch(0).unwrap();
+        assert!(handle.is_alive());
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN 2 0 0 0 -1 1 2 3").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let done = line.starts_with("END");
+            lines.push(line);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(lines.len(), 3, "2 TOK + END: {lines:?}");
+        handle.kill();
+        assert!(!handle.is_alive());
+        assert!(handle.wait_exit(Duration::from_millis(100)));
+        assert!(
+            std::net::TcpStream::connect(addr).is_err()
+                || std::io::Read::read(
+                    &mut std::net::TcpStream::connect(addr).unwrap(),
+                    &mut [0u8; 1]
+                )
+                .map(|n| n == 0)
+                .unwrap_or(true),
+            "killed worker must stop serving"
+        );
+    }
+
+    #[test]
+    fn injected_launch_failures_consume_then_recover() {
+        let launcher = InProcessLauncher::new(Duration::ZERO, 4);
+        launcher.fail_next(2);
+        assert!(launcher.launch(0).is_err());
+        assert!(launcher.launch(0).is_err());
+        let (_, mut h) = launcher.launch(0).unwrap();
+        assert_eq!(launcher.launch_count(), 3);
+        h.kill();
+    }
+}

@@ -14,7 +14,9 @@
 //! suites are built on.
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::coordinator::{Backend, InflightBatch, StepOutput};
 use crate::moe::ButterflyMoeLayer;
 use crate::parallel::WorkerPool;
 use crate::quant::{ternary_quantize, TernaryQuant};
@@ -53,6 +55,77 @@ pub fn butterfly_layer(
 pub fn normal_vec(len: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed);
     (0..len).map(|_| rng.normal_f32(1.0)).collect()
+}
+
+/// Instant deterministic [`Backend`]: logits peak at (context length %
+/// vocab), so greedy decode yields a stream that depends only on prompt
+/// length — the `CountBackend` fixture the scheduler, server, and
+/// router suites share.  An optional per-step [`Duration`] turns it
+/// into the old `SlowBackend` for shutdown/ordering/crash tests.
+pub struct CountBackend {
+    pub vocab: usize,
+    pub max_batch: usize,
+    pub delay: Duration,
+}
+
+impl CountBackend {
+    /// The historical defaults (vocab 32, max_batch 8, no delay).
+    pub fn new() -> Self {
+        CountBackend {
+            vocab: 32,
+            max_batch: 8,
+            delay: Duration::ZERO,
+        }
+    }
+
+    pub fn with_vocab(mut self, vocab: usize) -> Self {
+        self.vocab = vocab;
+        self
+    }
+
+    /// Sleep this long inside every `step` (the `SlowBackend` behaviour).
+    pub fn with_delay(mut self, delay: Duration) -> Self {
+        self.delay = delay;
+        self
+    }
+}
+
+impl Default for CountBackend {
+    fn default() -> Self {
+        CountBackend::new()
+    }
+}
+
+impl Backend for CountBackend {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn seq_len(&self) -> usize {
+        64
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn name(&self) -> String {
+        "count".into()
+    }
+    fn step(&self, batch: &mut InflightBatch) -> anyhow::Result<Vec<StepOutput>> {
+        if self.delay > Duration::ZERO {
+            std::thread::sleep(self.delay);
+        }
+        Ok(batch
+            .seqs
+            .iter()
+            .map(|s| {
+                let mut logits = vec![0.0f32; self.vocab];
+                logits[s.tokens.len() % self.vocab] = 1.0;
+                StepOutput {
+                    seq_id: s.id,
+                    logits,
+                }
+            })
+            .collect())
+    }
 }
 
 /// Worker pool sized by the environment (`BMOE_WORKERS`, else cores) —

@@ -1,0 +1,181 @@
+//! TCP listener construction with `SO_REUSEADDR`.
+//!
+//! `std::net::TcpListener::bind` gives no way to set socket options
+//! before `bind(2)`, and the offline vendor set carries neither `libc`
+//! nor `socket2`.  Serving processes restart frequently (the router
+//! restarts crashed workers, CI boots fleets back to back), so without
+//! `SO_REUSEADDR` a fixed port sits unusable for the TIME_WAIT interval
+//! after every exit — a guaranteed bind race.  On Linux and macOS the
+//! listener is therefore built by hand (`socket` → `setsockopt` →
+//! `bind` → `listen`, raw `extern "C"` bindings in the style of
+//! `vendor/mman`) and handed to `std` via `FromRawFd`; every other
+//! target falls back to plain `TcpListener::bind` (best effort, no
+//! `SO_REUSEADDR`).
+//!
+//! Port 0 is fully supported: the kernel picks an ephemeral port and
+//! `TcpListener::local_addr` reports the real one — how `bmoe serve
+//! --port 0` workers get collision-free ports under `bmoe route`.
+
+use std::net::{SocketAddr, TcpListener};
+
+use anyhow::{Context, Result};
+
+/// Loopback listener on `port` (0 = kernel-assigned) with
+/// `SO_REUSEADDR` where the platform path exists.  Returns the listener
+/// plus its actually-bound address.
+pub fn listen_reuse(port: u16) -> Result<(TcpListener, SocketAddr)> {
+    let listener = bind_loopback(port)
+        .with_context(|| format!("bind 127.0.0.1:{port}"))?;
+    let addr = listener.local_addr().context("local_addr")?;
+    Ok((listener, addr))
+}
+
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+fn bind_loopback(port: u16) -> Result<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+    use sys::*;
+
+    // SAFETY: plain POSIX socket calls on a fresh fd; the fd is either
+    // handed to TcpListener (which owns closing it) or closed on the
+    // error paths below.
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error()).context("socket");
+        }
+        fn fail(fd: i32, what: &'static str) -> Result<TcpListener> {
+            let err = std::io::Error::last_os_error();
+            unsafe { super::sys::close(fd) };
+            Err(err).context(what)
+        }
+        let one: i32 = 1;
+        if setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_REUSEADDR,
+            &one as *const i32 as *const core::ffi::c_void,
+            core::mem::size_of::<i32>() as u32,
+        ) < 0
+        {
+            return fail(fd, "setsockopt SO_REUSEADDR");
+        }
+        let addr = sockaddr_in_loopback(port);
+        if bind(
+            fd,
+            &addr as *const SockaddrIn as *const core::ffi::c_void,
+            core::mem::size_of::<SockaddrIn>() as u32,
+        ) < 0
+        {
+            return fail(fd, "bind");
+        }
+        if listen(fd, 128) < 0 {
+            return fail(fd, "listen");
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn bind_loopback(port: u16) -> Result<TcpListener> {
+    // No raw-socket path on this target: std bind, without SO_REUSEADDR.
+    Ok(TcpListener::bind(("127.0.0.1", port))?)
+}
+
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+mod sys {
+    //! Raw socket bindings (see `vendor/mman` for the policy: the few
+    //! POSIX calls std doesn't surface are declared here and resolve
+    //! against the C library std already links).
+    use core::ffi::c_void;
+
+    pub const AF_INET: i32 = 2;
+    pub const SOCK_STREAM: i32 = 1;
+    #[cfg(target_os = "linux")]
+    pub const SOL_SOCKET: i32 = 1;
+    #[cfg(target_os = "macos")]
+    pub const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(target_os = "linux")]
+    pub const SO_REUSEADDR: i32 = 2;
+    #[cfg(target_os = "macos")]
+    pub const SO_REUSEADDR: i32 = 0x0004;
+
+    /// `struct sockaddr_in`.  Linux leads with a 16-bit family; the BSDs
+    /// (macOS) split it into a length byte plus an 8-bit family.
+    #[repr(C)]
+    pub struct SockaddrIn {
+        #[cfg(target_os = "macos")]
+        pub sin_len: u8,
+        #[cfg(target_os = "macos")]
+        pub sin_family: u8,
+        #[cfg(target_os = "linux")]
+        pub sin_family: u16,
+        /// Network byte order.
+        pub sin_port: u16,
+        /// Network byte order.
+        pub sin_addr: u32,
+        pub sin_zero: [u8; 8],
+    }
+
+    /// 127.0.0.1:`port` in the platform's `sockaddr_in` layout.
+    pub fn sockaddr_in_loopback(port: u16) -> SockaddrIn {
+        SockaddrIn {
+            #[cfg(target_os = "macos")]
+            sin_len: core::mem::size_of::<SockaddrIn>() as u8,
+            #[cfg(target_os = "macos")]
+            sin_family: AF_INET as u8,
+            #[cfg(target_os = "linux")]
+            sin_family: AF_INET as u16,
+            sin_port: port.to_be(),
+            sin_addr: u32::from(std::net::Ipv4Addr::LOCALHOST).to_be(),
+            sin_zero: [0; 8],
+        }
+    }
+
+    extern "C" {
+        pub fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        pub fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const c_void,
+            len: u32,
+        ) -> i32;
+        pub fn bind(fd: i32, addr: *const c_void, len: u32) -> i32;
+        pub fn listen(fd: i32, backlog: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn port_zero_reports_real_ephemeral_port() {
+        let (listener, addr) = listen_reuse(0).unwrap();
+        assert_ne!(addr.port(), 0, "kernel must assign a concrete port");
+        assert!(addr.ip().is_loopback());
+        // the listener actually accepts on that address
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        client.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn rebinding_a_just_released_port_succeeds() {
+        // SO_REUSEADDR's observable contract: bind, drop, immediately
+        // bind the same port again.  Without the option this can fail
+        // when a connection leaves the socket in TIME_WAIT.
+        let (listener, addr) = listen_reuse(0).unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let _srv = listener.accept().unwrap();
+        drop(client);
+        drop(listener);
+        let (_l2, addr2) = listen_reuse(addr.port()).unwrap();
+        assert_eq!(addr2.port(), addr.port());
+    }
+}

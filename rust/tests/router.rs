@@ -1,0 +1,251 @@
+//! Integration: the fleet router end-to-end over REAL `bmoe serve`
+//! child processes — the supervision paths that in-process unit tests
+//! (rust/src/router/) cannot exercise: fork/exec launch with
+//! `[listening]` discovery, SIGKILL mid-stream, process restart, and
+//! the `bmoe route` CLI verb's drain-to-exit-0 contract.
+//!
+//! Hermetic-worker coverage (placement, shedding, fairness, backoff)
+//! lives in the router's unit tests; stream equality through the router
+//! lives in rust/tests/serving.rs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::artifact::{synthesize, SynthSpec};
+use butterfly_moe::router::{worker::ProcessLauncher, Router, RouterConfig};
+
+fn bmoe_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_bmoe"))
+}
+
+/// Pack a model deep enough that a 28-token session takes visibly long
+/// (several decode milliseconds per token), so kills and drains land
+/// mid-stream instead of racing session completion.
+fn pack_model(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bmoe_router_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let spec = SynthSpec {
+        d_model: 256,
+        d_ff: 1024,
+        n_experts: 4,
+        top_k: 2,
+        n_layers: 4,
+        vocab: 128,
+        seq_len: 32,
+        depth: None,
+        seed: 7,
+    };
+    synthesize(&spec).pack(&path).unwrap();
+    path
+}
+
+fn worker_args(model: &Path) -> Vec<String> {
+    [
+        "--native",
+        "--model",
+        model.to_str().unwrap(),
+        "--load",
+        "mmap",
+        "--max-batch",
+        "4",
+        "--workers",
+        "1",
+        "--no-warmup",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Read TOK lines until a terminal; returns (tokens, terminal line).
+fn read_session(r: &mut BufReader<TcpStream>) -> (Vec<i32>, String) {
+    let mut toks = Vec::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line).unwrap_or(0) == 0 {
+            return (toks, "EOF".into());
+        }
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            toks.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+        } else {
+            return (toks, line.trim().to_string());
+        }
+    }
+}
+
+fn run_session(addr: SocketAddr, gen: &str) -> (Vec<i32>, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "{gen}").unwrap();
+    read_session(&mut BufReader::new(s))
+}
+
+fn stat_field(line: &str, key: &str) -> u64 {
+    line.split_whitespace()
+        .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
+        .unwrap_or_else(|| panic!("missing {key} in {line}"))
+}
+
+/// SIGKILLed worker mid-stream: the client gets a terminal event (never
+/// a silent hang), the supervisor relaunches the process, and
+/// subsequent sessions succeed — the ISSUE's crash-recovery contract,
+/// over a real child process.
+#[test]
+fn killed_worker_process_yields_terminal_event_and_restarts() {
+    let model = pack_model("crash.bmoe");
+    let cfg = RouterConfig {
+        port: 0,
+        fleet: 1,
+        sessions_per_worker: 4,
+        health_interval: Duration::from_millis(100),
+        backoff_base: Duration::from_millis(100),
+        ..RouterConfig::default()
+    };
+    let launcher = Arc::new(ProcessLauncher::new(bmoe_bin(), worker_args(&model)));
+    let (listener, addr) = butterfly_moe::util::net::listen_reuse(0).unwrap();
+    let router = Router::start(cfg, launcher).unwrap();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || router.serve(listener));
+    }
+    // long session under way; 4-layer model => multi-ms per token, so
+    // the kill lands mid-stream
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "GEN 28 0 0 0 -1 1 2").unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut first = String::new();
+    r.read_line(&mut first).unwrap();
+    assert!(first.starts_with("TOK "), "{first}");
+    router.kill_worker(0);
+    let (_, end) = read_session(&mut r);
+    assert!(
+        end.starts_with("ERR") || end.starts_with("END"),
+        "client must get a terminal event after SIGKILL, got {end}"
+    );
+    // supervisor relaunches the process (mmap load, no warmup: fast);
+    // sessions succeed again once it is back
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (toks, end) = run_session(addr, "GEN 3 0 0 0 -1 5 6");
+        if toks.len() == 3 && end.starts_with("END max_tokens") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "worker never recovered; last outcome: {end}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(router.fleet.views()[0].restarts >= 1, "restart must be counted");
+    router.drain();
+}
+
+/// The `bmoe route` CLI verb end-to-end: boots 2 mmap workers, spreads
+/// a sequential burst across both, completes in-flight sessions through
+/// a DRAIN issued mid-stream (loss-free), and exits 0.
+#[test]
+fn route_cli_spreads_load_and_drains_to_exit_zero() {
+    let model = pack_model("cli.bmoe");
+    let mut child = std::process::Command::new(bmoe_bin())
+        .args([
+            "route",
+            "--fleet",
+            "2",
+            "--model",
+            model.to_str().unwrap(),
+            "--load",
+            "mmap",
+            "--port",
+            "0",
+            "--sessions-per-worker",
+            "4",
+            "--max-batch",
+            "4",
+            "--workers",
+            "1",
+            "--health-interval-ms",
+            "100",
+            "--no-warmup",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .unwrap();
+    // the router's own [listening] line announces the front door; a
+    // reader thread guards against a wedged boot
+    let stdout = child.stdout.take().unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<SocketAddr>();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if let Some(rest) = line.trim().strip_prefix("[listening] ") {
+                if let Ok(addr) = rest.trim().parse() {
+                    let _ = tx.send(addr);
+                }
+            }
+        }
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("route never announced [listening]");
+
+    // sequential short burst: round-robin tie-breaking must put tokens
+    // on both workers
+    for i in 0..6 {
+        let (toks, end) = run_session(addr, &format!("GEN 3 0 0 0 -1 1 {i}"));
+        assert_eq!(toks.len(), 3, "burst session {i}: {end}");
+        assert!(end.starts_with("END max_tokens"), "{end}");
+    }
+    // counters are bumped just after the terminal is forwarded — poll
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "STATS").unwrap();
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        if stat_field(&line, "routed") == 6 {
+            assert!(stat_field(&line, "w0_tokens") > 0, "{line}");
+            assert!(stat_field(&line, "w1_tokens") > 0, "{line}");
+            assert_eq!(stat_field(&line, "shed"), 0, "{line}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "routed never reached 6: {line}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // two long sessions in flight, then DRAIN mid-stream: both must
+    // still run to their terminal (accepted means completed)
+    let mut inflight = Vec::new();
+    for i in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN 28 0 0 0 -1 9 {i}").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut first = String::new();
+        r.read_line(&mut first).unwrap();
+        assert!(first.starts_with("TOK "), "{first}");
+        inflight.push((s, r));
+    }
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "DRAIN").unwrap();
+    let mut ack = String::new();
+    BufReader::new(s).read_line(&mut ack).unwrap();
+    assert_eq!(ack.trim(), "OK draining");
+    for (_s, mut r) in inflight {
+        let (toks, end) = read_session(&mut r);
+        assert_eq!(toks.len(), 27, "in-flight session must finish through drain: {end}");
+        assert!(end.starts_with("END max_tokens"), "{end}");
+    }
+    // loss-free drain then a clean exit
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            break st;
+        }
+        assert!(Instant::now() < deadline, "route process never exited after DRAIN");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "bmoe route must exit 0 after drain, got {status:?}");
+}

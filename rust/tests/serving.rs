@@ -183,6 +183,72 @@ fn mixed_length_workload_short_finishes_first() {
     coord.shutdown();
 }
 
+/// Router transparency: the fleet front door relays sessions verbatim,
+/// so a seeded session through `bmoe route` decodes the exact token
+/// stream a direct connection to a worker does.  Pinned over the wire
+/// with in-process workers (same serving stack as child processes).
+#[test]
+fn router_in_front_streams_identical_tokens_to_direct() {
+    use butterfly_moe::router::worker::{InProcessLauncher, WorkerLauncher};
+    use butterfly_moe::router::{Router, RouterConfig};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+
+    fn session_tokens(addr: SocketAddr, gen: &str) -> (Vec<i32>, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{gen}").unwrap();
+        let mut reader = BufReader::new(s);
+        let mut toks = Vec::new();
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "stream truncated");
+            if let Some(rest) = line.strip_prefix("TOK ") {
+                toks.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+            } else {
+                return (toks, line.trim().to_string());
+            }
+        }
+    }
+
+    let launcher = Arc::new(InProcessLauncher::new(Duration::ZERO, 8));
+    // a standalone worker for the direct baseline...
+    let (direct_addr, mut direct) = launcher.launch(100).unwrap();
+    // ...and a 2-worker fleet behind a router
+    let router = Router::start(
+        RouterConfig {
+            port: 0,
+            fleet: 2,
+            sessions_per_worker: 8,
+            ..RouterConfig::default()
+        },
+        launcher,
+    )
+    .unwrap();
+    let (listener, router_addr) = butterfly_moe::util::net::listen_reuse(0).unwrap();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || router.serve(listener));
+    }
+    // seeded temperature sampling: the decoded stream depends on the
+    // seed, so equality means the router changed nothing
+    for seed in [3u64, 99, 12345] {
+        let gen = format!("GEN 12 0.8 8 {seed} -1 1 2 3");
+        let (direct_toks, direct_end) = session_tokens(direct_addr, &gen);
+        assert_eq!(direct_toks.len(), 12, "{direct_end}");
+        for _ in 0..2 {
+            // twice: round-robin lands the session on both fleet workers
+            let (routed_toks, routed_end) = session_tokens(router_addr, &gen);
+            assert_eq!(
+                routed_toks, direct_toks,
+                "same seed must decode identically through the router"
+            );
+            assert!(routed_end.starts_with("END max_tokens"), "{routed_end}");
+        }
+    }
+    router.drain();
+    direct.kill();
+}
+
 #[test]
 fn shutdown_denies_queued_sessions_with_terminal_events() {
     // capacity 1 so most sessions are queued when shutdown hits; raise
