@@ -1,0 +1,151 @@
+//! Observability overhead bench: proves `--trace-sample` at the
+//! documented default rate ([`DEFAULT_SAMPLE`]) costs at most 2% of
+//! decode throughput versus tracing off, and that the decoded token
+//! streams are bit-identical either way (the determinism contract of
+//! DESIGN.md §7, pinned independently by rust/tests/determinism.rs).
+//!
+//! Method: a fixed closed-loop workload (N greedy sessions × M tokens
+//! over the seeded native backend) decoded repeatedly with tracing off
+//! and at rate [`DEFAULT_SAMPLE`], interleaved A/B so drift (thermal,
+//! page cache, scheduler) hits both arms equally.  The headline is the
+//! ratio of median tok/s.
+//!
+//! Output: machine-readable `BENCH_obs.json` at the repo root.
+//!
+//! Run: `cargo bench --bench obs_overhead`
+//! CI:  `cargo bench --bench obs_overhead -- smoke` — smaller workload,
+//! same gates: streams identical, sampling actually recorded, ratio
+//! >= 0.98.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::coordinator::{
+    collect_stream, warm, Backend, Coordinator, GenerateRequest, NativeMoeBackend,
+    SchedulerConfig,
+};
+use butterfly_moe::moe::ButterflyMoeLayer;
+use butterfly_moe::obs::trace::{self, DEFAULT_SAMPLE};
+use butterfly_moe::parallel::WorkerPool;
+use butterfly_moe::util::Rng;
+
+struct RunResult {
+    tokens_per_sec: f64,
+    streams: Vec<Vec<i32>>,
+    /// Stage occurrences recorded into the trace registry during the run.
+    samples: u64,
+}
+
+/// Decode the fixed workload once at `sample` rate; the backend is
+/// rebuilt and warmed outside the measured window.
+fn decode_run(sample: u32, sessions: usize, budget: usize) -> anyhow::Result<RunResult> {
+    trace::set_sample(sample);
+    trace::reset();
+    let mut layer_rng = Rng::new(7);
+    let mut layer = ButterflyMoeLayer::random(128, 512, 8, 2, None, &mut layer_rng);
+    layer.attach_worker_pool(Arc::new(WorkerPool::new(2)));
+    let backend: Arc<dyn Backend> = Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, 32, 16));
+    warm(backend.as_ref())?;
+    let coord = Coordinator::start(backend, SchedulerConfig::new(16, Duration::from_millis(2)));
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..sessions)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..8).map(|j| ((i * 89 + j * 13) % 512) as i32).collect();
+            coord.submit(GenerateRequest::greedy(prompt, budget))
+        })
+        .collect();
+    let mut tokens = 0u64;
+    let mut streams = Vec::new();
+    for rx in rxs {
+        let c = collect_stream(&rx, Duration::from_secs(120))?;
+        tokens += c.tokens.len() as u64;
+        streams.push(c.tokens);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    let samples: u64 = trace::snapshot().iter().map(|s| s.hist.n).sum();
+    trace::set_sample(0);
+    trace::reset();
+    Ok(RunResult {
+        tokens_per_sec: tokens as f64 / wall,
+        streams,
+        samples,
+    })
+}
+
+fn median(v: &mut Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn run(mode: &str) -> anyhow::Result<()> {
+    let smoke = mode == "smoke";
+    let (sessions, budget, reps) = if smoke { (12, 16, 3) } else { (32, 32, 5) };
+
+    let mut off_tps = Vec::new();
+    let mut on_tps = Vec::new();
+    let mut on_samples = 0u64;
+    let mut reference: Option<Vec<Vec<i32>>> = None;
+    for rep in 0..reps {
+        // interleave the arms so environmental drift cancels
+        let off = decode_run(0, sessions, budget)?;
+        let on = decode_run(DEFAULT_SAMPLE, sessions, budget)?;
+        anyhow::ensure!(
+            off.samples == 0,
+            "tracing off must record nothing, got {} samples",
+            off.samples
+        );
+        anyhow::ensure!(
+            on.samples > 0,
+            "rate {DEFAULT_SAMPLE} recorded no samples — instrumentation not hit"
+        );
+        on_samples += on.samples;
+        match &reference {
+            None => reference = Some(off.streams.clone()),
+            Some(want) => anyhow::ensure!(
+                &off.streams == want,
+                "rep {rep}: tracing-off streams diverged across reps"
+            ),
+        }
+        anyhow::ensure!(
+            off.streams == on.streams,
+            "rep {rep}: tracing at rate {DEFAULT_SAMPLE} changed decoded bits"
+        );
+        off_tps.push(off.tokens_per_sec);
+        on_tps.push(on.tokens_per_sec);
+    }
+    let off_med = median(&mut off_tps);
+    let on_med = median(&mut on_tps);
+    let ratio = on_med / off_med.max(1e-9);
+    println!(
+        "obs overhead ({mode}): off {off_med:.0} tok/s, sample {DEFAULT_SAMPLE} {on_med:.0} tok/s \
+         (ratio {ratio:.4}, {on_samples} stage samples over {reps} reps)"
+    );
+
+    let body = format!(
+        "{{\n  \"schema\": \"bmoe_obs_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"sample_rate\": {DEFAULT_SAMPLE},\n  \
+         \"sessions\": {sessions},\n  \"budget\": {budget},\n  \"reps\": {reps},\n  \
+         \"tokens_per_sec_off\": {off_med:.1},\n  \
+         \"tokens_per_sec_sampled\": {on_med:.1},\n  \
+         \"ratio\": {ratio:.4},\n  \
+         \"stage_samples\": {on_samples},\n  \
+         \"streams_identical\": true\n}}\n"
+    );
+    std::fs::write("BENCH_obs.json", body)?;
+    println!("wrote BENCH_obs.json (mode {mode})");
+
+    anyhow::ensure!(
+        ratio >= 0.98,
+        "tracing at rate {DEFAULT_SAMPLE} cost more than 2% of throughput: \
+         {on_med:.0} vs {off_med:.0} tok/s (ratio {ratio:.4})"
+    );
+    println!("gates OK: streams identical, {on_samples} samples recorded, ratio {ratio:.4} >= 0.98");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke")
+        || std::env::var("BMOE_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    run(if smoke { "smoke" } else { "full" })
+}

@@ -151,6 +151,18 @@ COMMON FLAGS:
   --health-interval-ms M
                         route: STATS health-poll cadence; crashed workers
                         restart with exponential backoff (default 500)
+  --trace-sample N      serve/route: time every Nth hot-path stage
+                        occurrence (gather/rotate/GEMM/reduce/...) into
+                        per-layer histograms surfaced by METRICS; 0
+                        (default) = off, one atomic load per site.
+                        Token streams are bit-identical at every rate
+  --log-json PATH|-     serve/route: structured JSONL event log (session
+                        and worker lifecycle + all [tagged] log lines);
+                        '-' = stdout.  Recent events are also kept in an
+                        in-memory flight ring dumped to
+                        bmoe-flight-<pid>.jsonl on panic, worker death,
+                        or protocol ERR (dir: $BMOE_FLIGHT_DIR, else
+                        the OS temp dir)
   --max-new-tokens N    bench-client: token budget requested per session
   --temperature F       bench-client: sampling temperature (0 = greedy)
   --top-k N             bench-client: top-k truncation (0 = full vocab)
@@ -165,9 +177,14 @@ The serve wire protocol is documented in coordinator/server.rs:
 streams back 'TOK <index> <token> <latency_us>' lines and a terminal
 'END <reason> <n_tokens> <total_us>'.  'STATS' returns one key=value
 telemetry line including the expert cache's hit rate / resident bytes.
+'METRICS' returns Prometheus text exposition (counters, gauges, and
+cumulative-bucket histograms incl. the per-stage --trace-sample
+timings), terminated by a '# EOF' line.
 The router speaks the same protocol (clients point at it unchanged) and
 adds 'DRAIN' (loss-free fleet shutdown) plus the terminals 'END shed'
-(admission) and 'ERR worker lost' (worker died mid-stream).";
+(admission) and 'ERR worker lost' (worker died mid-stream); its METRICS
+aggregates every worker's exposition under worker=\"wN\" labels plus
+fleet-level bmoe_router_* series.";
 
 #[cfg(test)]
 mod tests {

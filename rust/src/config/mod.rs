@@ -161,6 +161,15 @@ pub struct RuntimeConfig {
     /// router: health-poll cadence in milliseconds
     /// (`--health-interval-ms`)
     pub health_interval_ms: u64,
+    /// observability: hot-path trace sample rate (`--trace-sample`);
+    /// 0 = off (the default — one atomic load per instrumented site),
+    /// N = time every Nth occurrence per stage (see `obs::trace`).
+    /// Decoded token streams are bit-identical at every rate.
+    pub trace_sample: u32,
+    /// observability: JSONL structured-event sink (`--log-json`);
+    /// empty = none, `-` = stdout, else an append-mode file path
+    /// (see `obs::event`)
+    pub log_json: String,
     pub checkpoint_every: usize,
     pub out_dir: String,
 }
@@ -190,6 +199,8 @@ impl Default for RuntimeConfig {
             route_queue: 64,
             client_cap: 0,
             health_interval_ms: 500,
+            trace_sample: 0,
+            log_json: String::new(),
             checkpoint_every: 100,
             out_dir: "runs".into(),
         }
@@ -242,6 +253,8 @@ impl RuntimeConfig {
                 self.health_interval_ms = value.parse().context("health_interval_ms")?;
                 anyhow::ensure!(self.health_interval_ms >= 1, "health_interval_ms must be >= 1");
             }
+            "trace_sample" => self.trace_sample = value.parse().context("trace_sample")?,
+            "log_json" => self.log_json = value.into(),
             "checkpoint_every" => {
                 self.checkpoint_every = value.parse().context("checkpoint_every")?
             }
@@ -381,6 +394,20 @@ mod tests {
         assert!(r.set("fleet", "0").is_err());
         assert!(r.set("sessions_per_worker", "0").is_err());
         assert!(r.set("health_interval_ms", "0").is_err());
+    }
+
+    #[test]
+    fn observability_overrides() {
+        let mut r = RuntimeConfig::default();
+        assert_eq!(r.trace_sample, 0, "tracing is off by default");
+        assert!(r.log_json.is_empty(), "no JSONL sink by default");
+        r.set("trace_sample", "64").unwrap();
+        r.set("log_json", "-").unwrap();
+        assert_eq!(r.trace_sample, 64);
+        assert_eq!(r.log_json, "-");
+        r.set("log_json", "/tmp/events.jsonl").unwrap();
+        assert_eq!(r.log_json, "/tmp/events.jsonl");
+        assert!(r.set("trace_sample", "often").is_err());
     }
 
     #[test]

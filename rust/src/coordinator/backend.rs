@@ -376,7 +376,9 @@ impl NativeLmBackend {
     /// The one attach policy the packed and synthetic construction
     /// paths share (so they cannot drift — the parity the tests pin):
     /// the worker pool is shared across layers, the cache budget splits
-    /// evenly (a split that rounds to zero attaches no cache).
+    /// evenly (a split that rounds to zero attaches no cache), and each
+    /// block learns its stack index so sampled stage timings carry a
+    /// `layer` label (see `crate::obs::trace`).
     fn attach_stack(
         layers: Vec<crate::moe::ButterflyMoeLayer>,
         pool: Option<Arc<crate::parallel::WorkerPool>>,
@@ -385,7 +387,9 @@ impl NativeLmBackend {
         let per_layer_budget = cache_budget_bytes / layers.len().max(1);
         layers
             .into_iter()
-            .map(|mut layer| {
+            .enumerate()
+            .map(|(i, mut layer)| {
+                layer.set_trace_layer(i as u32);
                 if let Some(p) = &pool {
                     layer.attach_worker_pool(p.clone());
                 }

@@ -1,12 +1,16 @@
 //! Coordinator telemetry for token streaming: counters plus latency
 //! histograms (queue wait, time-to-first-token, inter-token latency,
-//! end-to-end session time), shared across threads.
+//! end-to-end session time), shared across threads.  [`Metrics::prometheus`]
+//! renders everything — including the sampled per-stage hot-path timings
+//! from [`crate::obs::trace`] — as Prometheus text exposition for the
+//! `METRICS` wire verb (DESIGN.md §7).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::expertcache::CacheStatsSnapshot;
+use crate::obs::prom::PromText;
 use crate::util::stats::LatencyHistogram;
 
 pub struct Metrics {
@@ -44,6 +48,11 @@ struct Inner {
     /// Latest expert-residency-cache counters (gauge semantics: the
     /// engine loop overwrites it after every decode step).
     cache: Option<CacheStatsSnapshot>,
+    /// When the first request arrived.  Throughput is measured from here,
+    /// not from construction: a server that sits idle before its first
+    /// request would otherwise report a tokens/sec diluted by the idle
+    /// span, which made bench-vs-serve numbers incomparable.
+    first_activity: Option<Instant>,
 }
 
 impl Default for Metrics {
@@ -105,6 +114,10 @@ impl Metrics {
 
     pub fn record_enqueue(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.first_activity.is_none() {
+            inner.first_activity = Some(Instant::now());
+        }
     }
 
     /// Time a request spent queued before admission.
@@ -165,7 +178,13 @@ impl Metrics {
         let inner = self.inner.lock().unwrap();
         let steps = self.steps.load(Ordering::Relaxed);
         let tokens = self.tokens.load(Ordering::Relaxed);
-        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        // Throughput counts from the first recorded activity, not from
+        // construction — pre-request idle must not dilute tokens/sec.
+        let elapsed = inner
+            .first_activity
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -193,6 +212,73 @@ impl Metrics {
             latency_mean: inner.e2e.mean(),
             cache: inner.cache.clone(),
         }
+    }
+
+    /// Render everything as Prometheus text exposition (the `METRICS`
+    /// wire verb's reply body), framed by the `# EOF` terminator line.
+    ///
+    /// Includes the coordinator counters/gauges, the four session
+    /// latency histograms as cumulative-bucket series, the expert-cache
+    /// counters when a cache is attached, and one
+    /// `bmoe_stage_seconds{stage=...,layer=...}` histogram per sampled
+    /// hot-path stage from [`crate::obs::trace`].
+    pub fn prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let hists = {
+            let inner = self.inner.lock().unwrap();
+            [
+                ("bmoe_queue_wait_seconds", "Queue wait before admission", inner.queue_wait.clone()),
+                ("bmoe_ttft_seconds", "Enqueue-to-first-token latency", inner.ttft.clone()),
+                ("bmoe_itl_seconds", "Gap between consecutive tokens of a session", inner.itl.clone()),
+                ("bmoe_session_seconds", "End-to-end session time", inner.e2e.clone()),
+            ]
+        };
+        let mut p = PromText::new();
+        for (name, help, value) in [
+            ("bmoe_requests_total", "Sessions submitted", snap.requests),
+            ("bmoe_responses_total", "Sessions that reached a terminal event", snap.responses),
+            ("bmoe_tokens_total", "Tokens generated across all sessions", snap.tokens),
+            ("bmoe_decode_steps_total", "Decode steps executed", snap.steps),
+            ("bmoe_cancelled_total", "Sessions retired because the client dropped", snap.cancelled),
+            ("bmoe_errors_total", "Sessions that ended in an error", snap.errors),
+        ] {
+            p.counter(name, help, &[], value as f64);
+        }
+        p.gauge("bmoe_queue_depth", "Requests queued behind the running batch", &[], snap.queue_depth as f64);
+        p.gauge("bmoe_inflight", "Sequences resident in the running batch", &[], snap.inflight as f64);
+        p.gauge("bmoe_mean_batch_size", "Mean resident sequences per decode step", &[], snap.mean_batch_size);
+        p.gauge("bmoe_tokens_per_sec", "Tokens per second since first activity", &[], snap.tokens_per_sec);
+        p.gauge("bmoe_uptime_seconds", "Seconds since the metrics epoch", &[], self.started.elapsed().as_secs_f64());
+        for (name, help, h) in &hists {
+            p.histogram(name, help, &[], h);
+        }
+        if let Some(c) = &snap.cache {
+            for (name, help, value) in [
+                ("bmoe_cache_hits_total", "Expert dispatches served from a resident decode", c.hits),
+                ("bmoe_cache_misses_total", "Expert dispatches that fell back to synthesis", c.misses),
+                ("bmoe_cache_evictions_total", "Experts evicted from the residency cache", c.evictions),
+                ("bmoe_cache_materializations_total", "Experts materialized into the cache", c.materializations),
+            ] {
+                p.counter(name, help, &[], value as f64);
+            }
+            p.gauge("bmoe_cache_resident_bytes", "Bytes resident in the expert cache", &[], c.resident_bytes as f64);
+            p.gauge("bmoe_cache_budget_bytes", "Expert-cache byte budget", &[], c.budget_bytes as f64);
+        }
+        p.gauge(
+            "bmoe_trace_sample",
+            "Hot-path stage sampling rate (0 = tracing off)",
+            &[],
+            crate::obs::trace::sample() as f64,
+        );
+        for s in crate::obs::trace::snapshot() {
+            p.histogram(
+                "bmoe_stage_seconds",
+                "Sampled wall time of one hot-path stage occurrence",
+                &[("stage", s.stage.name().to_string()), ("layer", s.layer.to_string())],
+                &s.hist,
+            );
+        }
+        p.finish()
     }
 }
 
@@ -268,6 +354,87 @@ mod tests {
         m.record_load(0, 1);
         let s = m.snapshot();
         assert_eq!((s.queue_depth, s.inflight), (0, 1));
+    }
+
+    #[test]
+    fn tokens_per_sec_ignores_prerequest_idle() {
+        let m = Metrics::new();
+        // No activity yet: no throughput (and no division blowup).
+        assert_eq!(m.snapshot().tokens_per_sec, 0.0);
+        // Simulate a server idling before its first request.  If the
+        // epoch were `Metrics::new()` the idle span would dilute the
+        // rate to <= 100 tokens / 0.2 s = 500 tok/s; measured from the
+        // first request it is orders of magnitude higher.
+        std::thread::sleep(Duration::from_millis(200));
+        m.record_enqueue();
+        for _ in 0..100 {
+            m.record_token();
+        }
+        let s = m.snapshot();
+        assert!(
+            s.tokens_per_sec > 1_000.0,
+            "pre-request idle diluted throughput: {} tok/s",
+            s.tokens_per_sec
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_has_families_and_eof() {
+        let m = Metrics::new();
+        m.record_enqueue();
+        m.record_token();
+        m.record_token();
+        m.record_ttft(Duration::from_millis(3));
+        m.record_finished(Duration::from_millis(5));
+        m.record_load(1, 2);
+        let text = m.prometheus();
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        assert!(text.contains("# TYPE bmoe_requests_total counter"), "{text}");
+        assert!(text.contains("bmoe_requests_total 1\n"), "{text}");
+        assert!(text.contains("bmoe_tokens_total 2\n"), "{text}");
+        assert!(text.contains("bmoe_queue_depth 1\n"), "{text}");
+        assert!(text.contains("bmoe_inflight 2\n"), "{text}");
+        assert!(text.contains("# TYPE bmoe_ttft_seconds histogram"), "{text}");
+        assert!(text.contains("bmoe_ttft_seconds_count 1\n"), "{text}");
+        assert!(text.contains("bmoe_session_seconds_count 1\n"), "{text}");
+        assert!(text.contains("le=\"+Inf\""), "{text}");
+        assert!(text.contains("bmoe_trace_sample"), "{text}");
+        // no cache attached -> no cache families
+        assert!(!text.contains("bmoe_cache_hits_total"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_includes_cache_and_stage_series() {
+        let m = Metrics::new();
+        m.record_cache(CacheStatsSnapshot {
+            enabled: true,
+            hits: 4,
+            misses: 1,
+            resident_bytes: 512,
+            budget_bytes: 1024,
+            ..Default::default()
+        });
+        // Stage histograms come from the process-global trace registry;
+        // serialize with the trace tests that also mutate it.
+        let _g = crate::obs::trace::TEST_MUTEX
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::trace::set_sample(1);
+        {
+            let _t = crate::obs::trace::stage_timer(
+                crate::obs::trace::Stage::DownProject,
+                11,
+            );
+        }
+        crate::obs::trace::set_sample(0);
+        let text = m.prometheus();
+        assert!(text.contains("bmoe_cache_hits_total 4\n"), "{text}");
+        assert!(text.contains("bmoe_cache_resident_bytes 512\n"), "{text}");
+        assert!(
+            text.contains("stage=\"down_project\",layer=\"11\""),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE bmoe_stage_seconds histogram"), "{text}");
     }
 
     #[test]

@@ -17,6 +17,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs;
+
 use super::backend::{Backend, InflightBatch, InflightSeq};
 use super::metrics::Metrics;
 use super::session::{FinishReason, GenerateRequest, Sampler, StopCriteria, TokenEvent};
@@ -73,6 +75,9 @@ pub struct QueuedRequest {
 
 /// Per-sequence serving state the backend doesn't need to see.
 struct SeqMeta {
+    /// Session id (mirrors the batch entry's; kept here so lifecycle
+    /// events can be emitted after the batch slot is already retired).
+    id: u64,
     reply: Sender<TokenEvent>,
     sampler: Sampler,
     stop: StopCriteria,
@@ -119,6 +124,10 @@ impl ContinuousScheduler {
         self.metrics.record_queue_wait(now.duration_since(q.enqueued));
         if q.request.prompt.is_empty() {
             self.metrics.record_error();
+            obs::Event::new("session_error")
+                .u64("session", q.id)
+                .str("error", "empty prompt")
+                .emit();
             let _ = q.reply.send(TokenEvent::Done {
                 reason: FinishReason::Error("empty prompt".into()),
                 tokens: Vec::new(),
@@ -128,6 +137,11 @@ impl ContinuousScheduler {
         }
         if q.request.stop.max_new_tokens == 0 {
             self.metrics.record_finished(now.duration_since(q.enqueued));
+            obs::Event::new("session_finish")
+                .u64("session", q.id)
+                .str("reason", "max_tokens")
+                .u64("tokens", 0)
+                .emit();
             let _ = q.reply.send(TokenEvent::Done {
                 reason: FinishReason::MaxTokens,
                 tokens: Vec::new(),
@@ -135,11 +149,16 @@ impl ContinuousScheduler {
             });
             return;
         }
+        obs::Event::new("session_admit")
+            .u64("session", q.id)
+            .u64("queue_wait_us", now.duration_since(q.enqueued).as_micros() as u64)
+            .emit();
         // server-side cap: wire input can't reserve a slot forever
         let mut stop = q.request.stop;
         stop.max_new_tokens = stop.max_new_tokens.min(self.max_session_tokens);
         self.batch.push(InflightSeq::new(q.id, q.request.prompt));
         self.meta.push(SeqMeta {
+            id: q.id,
             reply: q.reply,
             sampler: Sampler::new(q.request.sampling),
             stop,
@@ -200,6 +219,10 @@ impl ContinuousScheduler {
             m.new_tokens.push(token);
             if index == 0 {
                 self.metrics.record_ttft(now.duration_since(m.enqueued));
+                obs::Event::new("session_first_token")
+                    .u64("session", m.id)
+                    .u64("ttft_us", now.duration_since(m.enqueued).as_micros() as u64)
+                    .emit();
             } else {
                 self.metrics.record_itl(latency);
             }
@@ -214,9 +237,13 @@ impl ContinuousScheduler {
             {
                 // the client dropped its receiver: cancel the session so
                 // a dead connection can't keep occupying a batch slot
-                self.meta.swap_remove(i);
+                let m = self.meta.swap_remove(i);
                 self.batch.seqs.swap_remove(i);
                 self.metrics.record_cancelled();
+                obs::Event::new("session_cancel")
+                    .u64("session", m.id)
+                    .u64("tokens", m.new_tokens.len() as u64)
+                    .emit();
                 finished += 1;
                 continue;
             }
@@ -234,6 +261,12 @@ impl ContinuousScheduler {
                 self.batch.seqs.swap_remove(i);
                 let total = now.duration_since(m.enqueued);
                 self.metrics.record_finished(total);
+                obs::Event::new("session_finish")
+                    .u64("session", m.id)
+                    .str("reason", format!("{reason}"))
+                    .u64("tokens", m.new_tokens.len() as u64)
+                    .u64("total_us", total.as_micros() as u64)
+                    .emit();
                 let _ = m.reply.send(TokenEvent::Done {
                     reason,
                     tokens: m.new_tokens,
@@ -251,6 +284,11 @@ impl ContinuousScheduler {
         let now = Instant::now();
         self.batch.seqs.clear();
         for m in self.meta.drain(..) {
+            obs::Event::new("session_abort")
+                .u64("session", m.id)
+                .str("reason", format!("{reason}"))
+                .u64("tokens", m.new_tokens.len() as u64)
+                .emit();
             let _ = m.reply.send(TokenEvent::Done {
                 reason: reason.clone(),
                 tokens: m.new_tokens,

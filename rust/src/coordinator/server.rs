@@ -23,6 +23,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs;
+use crate::obs::trace::Stage;
+
 use super::backend::Backend;
 use super::metrics::Metrics;
 use super::scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};
@@ -84,6 +87,11 @@ impl Coordinator {
         match guard.as_ref() {
             Some(tx) => {
                 self.metrics.record_enqueue();
+                obs::Event::new("session_enqueue")
+                    .u64("session", id)
+                    .u64("prompt_len", request.prompt.len() as u64)
+                    .u64("max_new", request.stop.max_new_tokens as u64)
+                    .emit();
                 let q = QueuedRequest {
                     id,
                     request,
@@ -214,12 +222,18 @@ fn engine_loop(
         // batch size, not just the historical occupancy mean
         metrics.record_load(pending.len(), sched.in_flight());
         if sched.in_flight() > 0 {
-            // on backend failure the scheduler already streamed terminal
-            // error events; keep serving subsequent requests
-            let _ = sched.step(backend.as_ref());
-            // step-time residency tick: fold gating stats, admit/evict
-            // hot experts, publish the counters for STATS readers
-            backend.tick_caches();
+            {
+                // on backend failure the scheduler already streamed
+                // terminal error events; keep serving subsequent requests
+                let _t = obs::stage_timer(Stage::SchedStep, 0);
+                let _ = sched.step(backend.as_ref());
+            }
+            {
+                // step-time residency tick: fold gating stats, admit or
+                // evict hot experts, publish counters for STATS readers
+                let _t = obs::stage_timer(Stage::CacheTick, 0);
+                backend.tick_caches();
+            }
             if let Some(cs) = backend.cache_stats() {
                 metrics.record_cache(cs);
             }
@@ -262,6 +276,12 @@ fn engine_loop(
 // least-loaded placement keys on.  The cache_* fields report the
 // expert-residency cache (zeros when the backend serves without one —
 // `--expert-cache-mb` unset).
+//
+// "METRICS" returns the same telemetry (plus the latency histograms and
+// the sampled per-stage hot-path timings) as Prometheus text
+// exposition, terminated by a `# EOF` line so scrapers and the router's
+// fleet aggregation can read a bounded reply without closing the
+// connection (DESIGN.md §7).  The STATS format above stays unchanged.
 // ---------------------------------------------------------------------------
 
 /// Bind `127.0.0.1:<port>` (0 = ephemeral) with `SO_REUSEADDR`, announce
@@ -422,6 +442,12 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>
             writeln!(writer, "{}", stats_line(&coord.metrics.snapshot()))?;
             continue;
         }
+        if line == "METRICS" {
+            // the exposition is framed by its own trailing `# EOF` line
+            write!(writer, "{}", coord.metrics.prometheus())?;
+            writer.flush()?;
+            continue;
+        }
         match parse_gen_line(line) {
             Ok(req) => {
                 let rx = coord.submit(req);
@@ -454,6 +480,9 @@ fn stream_session(writer: &mut TcpStream, rx: &Receiver<TokenEvent>) -> Result<(
                 ..
             }) => {
                 writeln!(writer, "ERR {e}")?;
+                // a protocol ERR is a postmortem moment: keep the
+                // preceding event history (DESIGN.md §7)
+                obs::flight::dump("session error");
                 return Ok(());
             }
             Ok(TokenEvent::Done {
@@ -466,6 +495,7 @@ fn stream_session(writer: &mut TcpStream, rx: &Receiver<TokenEvent>) -> Result<(
             }
             Err(_) => {
                 writeln!(writer, "ERR stream stalled")?;
+                obs::flight::dump("stream stalled");
                 return Ok(());
             }
         }
@@ -711,6 +741,45 @@ mod tests {
         // load gauges (idle after END): present and drained to zero
         assert!(line.contains("queue_depth=0"), "{line}");
         assert!(line.contains("inflight=0"), "{line}");
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn metrics_wire_verb_returns_framed_exposition() {
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN 2 0 0 0 -1 1 2").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            if line.starts_with("END") {
+                break;
+            }
+        }
+        writeln!(s, "METRICS").unwrap();
+        let mut body = String::new();
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "EOF before the # EOF frame:\n{body}");
+            if line.trim() == "# EOF" {
+                break;
+            }
+            body.push_str(&line);
+        }
+        assert!(body.contains("bmoe_tokens_total 2\n"), "{body}");
+        assert!(body.contains("bmoe_requests_total 1\n"), "{body}");
+        assert!(body.contains("# TYPE bmoe_ttft_seconds histogram"), "{body}");
+        assert!(body.contains("le=\"+Inf\""), "{body}");
+        // the connection stays usable after a METRICS exchange
+        writeln!(s, "STATS").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STATS "), "{line}");
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::SeqCst);
         coord.shutdown();

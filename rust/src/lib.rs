@@ -55,6 +55,7 @@ pub mod jsonx;
 pub mod kernels;
 pub mod memmodel;
 pub mod moe;
+pub mod obs;
 pub mod parallel;
 pub mod quant;
 pub mod router;

@@ -46,6 +46,8 @@ fn main() -> Result<()> {
         ("route_queue", args.flag("route-queue")),
         ("client_cap", args.flag("client-cap")),
         ("health_interval_ms", args.flag("health-interval-ms")),
+        ("trace_sample", args.flag("trace-sample")),
+        ("log_json", args.flag("log-json")),
         ("out_dir", args.flag("out")),
     ] {
         if let Some(v) = v {
@@ -269,13 +271,18 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use butterfly_moe::artifact::{synthesize, LoadMode, ModelArtifact, SynthSpec};
     use butterfly_moe::coordinator::{Backend, NativeLmBackend};
     use butterfly_moe::moe::MoeLayer;
+    use butterfly_moe::obs;
+    obs::init(rt.trace_sample, &rt.log_json)?;
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         // pure-rust edge backend: serves without compiled artifacts (and
         // without a PJRT runtime) — a packed .bmoe model file, or the
         // seeded synthetic stand-in when no --model is given
         let workers = butterfly_moe::parallel::resolve_workers(rt.workers);
         let pool = Arc::new(butterfly_moe::parallel::WorkerPool::new(workers));
-        eprintln!("[serve] workers: {workers} (decoded streams are worker-count invariant)");
+        obs::log(
+            "serve",
+            format!("workers: {workers} (decoded streams are worker-count invariant)"),
+        );
         let cache_bytes = (rt.expert_cache_mb * 1048576.0) as usize;
         let backend = if !rt.model_path.is_empty() {
             let mode = LoadMode::parse(&rt.load_mode)?;
@@ -284,14 +291,17 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             let backend =
                 NativeLmBackend::from_artifact(&artifact, rt.max_batch, Some(pool), cache_bytes)?;
             let (borrowed, copied) = artifact.zero_copy_stats();
-            eprintln!(
-                "[serve] model: {} — {} layers, {} ({} load in {:.1} ms; \
-                 {borrowed} tensors zero-copy, {copied} copied)",
-                rt.model_path,
-                artifact.manifest.n_layers,
-                human_bytes(artifact.file_bytes() as f64),
-                mode.name(),
-                sw.millis(),
+            obs::log(
+                "serve",
+                format!(
+                    "model: {} — {} layers, {} ({} load in {:.1} ms; \
+                     {borrowed} tensors zero-copy, {copied} copied)",
+                    rt.model_path,
+                    artifact.manifest.n_layers,
+                    human_bytes(artifact.file_bytes() as f64),
+                    mode.name(),
+                    sw.millis(),
+                ),
             );
             backend
         } else {
@@ -303,42 +313,52 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             // blocks (a split that rounds to zero attaches no cache)
             match backend.layers()[0].expert_cache() {
                 Some(cache) => {
-                    eprintln!(
-                        "[serve] expert cache: {} per layer x {} layers = {} resident experts \
-                         max per layer ({} each)",
-                        human_bytes(cache.budget_bytes() as f64),
-                        backend.n_layers(),
-                        cache.capacity_experts(),
-                        human_bytes(cache.entry_bytes() as f64),
+                    obs::log(
+                        "serve",
+                        format!(
+                            "expert cache: {} per layer x {} layers = {} resident experts \
+                             max per layer ({} each)",
+                            human_bytes(cache.budget_bytes() as f64),
+                            backend.n_layers(),
+                            cache.capacity_experts(),
+                            human_bytes(cache.entry_bytes() as f64),
+                        ),
                     );
                     if !cache.enabled() {
-                        eprintln!(
-                            "[serve] warning: --expert-cache-mb {} splits below one working set \
-                             per layer ({}); cache DISABLED, serving pure sub-linear",
-                            rt.expert_cache_mb,
-                            human_bytes(cache.entry_bytes() as f64),
+                        obs::log(
+                            "serve",
+                            format!(
+                                "warning: --expert-cache-mb {} splits below one working set \
+                                 per layer ({}); cache DISABLED, serving pure sub-linear",
+                                rt.expert_cache_mb,
+                                human_bytes(cache.entry_bytes() as f64),
+                            ),
                         );
                     }
                 }
-                None => eprintln!(
-                    "[serve] warning: --expert-cache-mb {} rounds to zero bytes per layer; \
-                     cache DISABLED, serving pure sub-linear",
-                    rt.expert_cache_mb
+                None => obs::log(
+                    "serve",
+                    format!(
+                        "warning: --expert-cache-mb {} rounds to zero bytes per layer; \
+                         cache DISABLED, serving pure sub-linear",
+                        rt.expert_cache_mb
+                    ),
                 ),
             }
         }
         Arc::new(backend)
     } else {
         if rt.expert_cache_mb > 0.0 {
-            eprintln!("[serve] note: --expert-cache-mb applies to the --native backend only");
+            obs::log("serve", "note: --expert-cache-mb applies to the --native backend only");
         }
         if rt.workers > 0 {
-            eprintln!("[serve] note: --workers applies to the --native backend only");
+            obs::log("serve", "note: --workers applies to the --native backend only");
         }
         if !rt.model_path.is_empty() {
-            eprintln!(
-                "[serve] note: --model names a native .bmoe artifact; the PJRT backend \
-                 loads checkpoints via --from instead"
+            obs::log(
+                "serve",
+                "note: --model names a native .bmoe artifact; the PJRT backend \
+                 loads checkpoints via --from instead",
             );
         }
         let ckpt = args.flag("from").map(Path::new);
@@ -346,7 +366,7 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             PjrtLmBackend::start(Path::new(&rt.artifacts_dir), &rt.config, ckpt)?;
         Arc::new(backend)
     };
-    eprintln!("[serve] backend: {}", backend.name());
+    obs::log("serve", format!("backend: {}", backend.name()));
     if !args.has_switch("no-warmup") {
         // drive every bucket once and pre-materialize the cache working
         // set so the first real request's TTFT pays neither cost
@@ -365,7 +385,7 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             if metrics_stop.load(std::sync::atomic::Ordering::SeqCst) {
                 break;
             }
-            eprintln!("[metrics] {}", coord.metrics.snapshot().summary());
+            obs::log("metrics", coord.metrics.snapshot().summary());
         });
     }
     butterfly_moe::coordinator::server::serve_tcp(coord, rt.port, stop)
@@ -378,7 +398,9 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
 /// model pages from the page cache, so fleet RSS grows sub-linearly in
 /// worker count (measured by benches/router_load.rs).
 fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    use butterfly_moe::obs;
     use butterfly_moe::router::{run, worker::ProcessLauncher, RouterConfig};
+    obs::init(rt.trace_sample, &rt.log_json)?;
     let bin = std::env::current_exe().context("locate the bmoe binary for worker spawns")?;
     // Workers inherit the serve-relevant settings; --port 0 is appended
     // by the launcher so each picks its own ephemeral port.
@@ -391,7 +413,7 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             rt.load_mode.clone(),
         ]);
     } else {
-        eprintln!("[route] no --model: every worker synthesizes its own seeded stand-in model");
+        obs::log("route", "no --model: every worker synthesizes its own seeded stand-in model");
         wargs.extend(["--layers".into(), rt.n_layers.to_string()]);
     }
     for (flag, value) in [
@@ -408,6 +430,17 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     if args.has_switch("no-warmup") {
         wargs.push("--no-warmup".into());
     }
+    // Observability passes through: each worker samples its own hot
+    // path (the router's METRICS aggregation relabels per worker), and
+    // all processes append to the same JSONL sink (O_APPEND, one line
+    // per write).  A `-` sink stays router-local: worker stdout is the
+    // [listening] discovery channel, not a log stream.
+    if rt.trace_sample > 0 {
+        wargs.extend(["--trace-sample".into(), rt.trace_sample.to_string()]);
+    }
+    if !rt.log_json.is_empty() && rt.log_json != "-" {
+        wargs.extend(["--log-json".into(), rt.log_json.clone()]);
+    }
     let cfg = RouterConfig {
         port: rt.port,
         fleet: rt.fleet,
@@ -417,11 +450,14 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         health_interval: Duration::from_millis(rt.health_interval_ms),
         ..RouterConfig::default()
     };
-    eprintln!(
-        "[route] spawning {} x `{} serve {}`",
-        cfg.fleet,
-        bin.display(),
-        wargs.join(" ")
+    obs::log(
+        "route",
+        &format!(
+            "spawning {} x `{} serve {}`",
+            cfg.fleet,
+            bin.display(),
+            wargs.join(" ")
+        ),
     );
     run(cfg, Arc::new(ProcessLauncher::new(bin, wargs)))
 }

@@ -16,6 +16,7 @@ use crate::artifact::ShTensor;
 use crate::butterfly::Butterfly;
 use crate::expertcache::{ExpertCacheConfig, ExpertResidencyCache};
 use crate::kernels::{self, TernaryScratch};
+use crate::obs::{self, trace::Stage};
 use crate::parallel::{chunk_ranges, DisjointSliceMut, WorkerPool};
 use crate::quant::{ternary_quantize, TernaryQuant};
 use crate::tensor::store::TensorStore;
@@ -52,6 +53,7 @@ pub trait MoeLayer: Send + Sync {
         }
         let wd = self.w_down();
         assert_eq!(y.len(), t * d);
+        let _t = obs::stage_timer(Stage::DownProject, self.trace_layer());
         match self.worker_pool() {
             Some(pool) if pool.threads() > 1 => {
                 let ranges = chunk_ranges(d, pool.threads() * 4);
@@ -97,6 +99,13 @@ pub trait MoeLayer: Send + Sync {
     /// bit-identical either way (see [`crate::parallel`]).
     fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
         None
+    }
+
+    /// Index used as the `layer` label on sampled stage timings
+    /// ([`crate::obs::trace`]); stacks set it at assembly, standalone
+    /// layers report 0.
+    fn trace_layer(&self) -> u32 {
+        0
     }
 }
 
@@ -214,6 +223,8 @@ pub struct ButterflyMoeLayer {
     /// panic-propagation path from a real decode step.
     #[cfg(any(test, feature = "testutil"))]
     pub poison_expert: Option<usize>,
+    /// `layer` label for sampled stage timings (set by stack assembly).
+    trace_layer: u32,
     d_model: usize,
     d_ff: usize,
 }
@@ -262,9 +273,16 @@ impl ButterflyMoeLayer {
             scratch: Mutex::new(Vec::new()),
             #[cfg(any(test, feature = "testutil"))]
             poison_expert: None,
+            trace_layer: 0,
             d_model,
             d_ff,
         }
+    }
+
+    /// Set the `layer` label sampled stage timings report for this
+    /// layer (the stack assemblers call this with the block index).
+    pub fn set_trace_layer(&mut self, layer: u32) {
+        self.trace_layer = layer;
     }
 
     /// Row-major `(d_model, d_ff)` down-projection data (what the model
@@ -462,12 +480,18 @@ impl MoeLayer for ButterflyMoeLayer {
                 }
                 let ex = &self.experts[e];
                 let n = toks.len();
-                block.xg.clear();
-                block.xg.reserve(n * d);
-                for &(ti, _) in toks {
-                    block.xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
+                {
+                    let _t = obs::stage_timer(Stage::Gather, self.trace_layer);
+                    block.xg.clear();
+                    block.xg.reserve(n * d);
+                    for &(ti, _) in toks {
+                        block.xg.extend_from_slice(&x[ti * d..(ti + 1) * d]);
+                    }
                 }
-                ex.theta.apply_transpose_batch_with(&mut block.xg, &mut block.bfly);
+                {
+                    let _t = obs::stage_timer(Stage::Rotate, self.trace_layer);
+                    ex.theta.apply_transpose_batch_with(&mut block.xg, &mut block.bfly);
+                }
                 block.hg.resize(n * dff, 0.0);
                 // Fast path: a resident expert is served from its decoded
                 // working set — bit-identical arithmetic to the synthesis
@@ -478,16 +502,25 @@ impl MoeLayer for ButterflyMoeLayer {
                 // variants reuse this block's retained kernel scratch:
                 // steady-state decode allocates nothing.
                 match cache.and_then(|c| c.lookup(e)) {
-                    Some(dec) => dec.gemm(&block.xg, n, &mut block.hg),
+                    Some(dec) => {
+                        let _t = obs::stage_timer(Stage::CachedGemm, self.trace_layer);
+                        dec.gemm(&block.xg, n, &mut block.hg)
+                    }
                     None if self.act_quant => {
+                        let _t = obs::stage_timer(Stage::TernaryGemm, self.trace_layer);
                         self.substrate
                             .gemm_a8_with(&block.xg, n, &mut block.hg, &mut block.kernel)
                     }
-                    None => self
-                        .substrate
-                        .gemm_with(&block.xg, n, &mut block.hg, &mut block.kernel),
+                    None => {
+                        let _t = obs::stage_timer(Stage::TernaryGemm, self.trace_layer);
+                        self.substrate
+                            .gemm_with(&block.xg, n, &mut block.hg, &mut block.kernel)
+                    }
                 }
-                ex.phi.apply_batch_with(&mut block.hg, &mut block.bfly);
+                {
+                    let _t = obs::stage_timer(Stage::Rotate, self.trace_layer);
+                    ex.phi.apply_batch_with(&mut block.hg, &mut block.bfly);
+                }
             };
             run_on(pool, active.len(), &synth);
         }
@@ -516,6 +549,7 @@ impl MoeLayer for ButterflyMoeLayer {
                     }
                 }
             };
+            let _t = obs::stage_timer(Stage::Reduce, self.trace_layer);
             run_on(pool, ranges.len(), &scatter);
         }
         loads
@@ -539,6 +573,10 @@ impl MoeLayer for ButterflyMoeLayer {
 
     fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
         self.pool.as_ref()
+    }
+
+    fn trace_layer(&self) -> u32 {
+        self.trace_layer
     }
 }
 

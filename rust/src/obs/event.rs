@@ -1,0 +1,207 @@
+//! The structured event logger (DESIGN.md §7).
+//!
+//! One emission path for the whole stack.  Every event is rendered once
+//! as a compact JSON object carrying `ts_us` (monotonic µs since
+//! process start), `seq` (global per-process counter), `pid`, `event`
+//! (the kind), and the caller's typed fields, then fanned out to:
+//!
+//! 1. the flight-recorder ring (always — postmortems need history even
+//!    with no sink configured),
+//! 2. the JSONL sink when `--log-json <path|->` set one (append mode;
+//!    `-` = stdout),
+//! 3. for [`log`] lines only: a human-readable stderr mirror
+//!    (`[component] message`, on by default) — the exact format the
+//!    pre-obs `eprintln!` sites used, so operator output is unchanged.
+//!
+//! Lifecycle events (session enqueue/admit/first-token/finish/cancel/
+//! shed/error, worker spawn/up/down/restart/drain) are *not* mirrored
+//! to stderr: they are machine telemetry, and mirroring them would spam
+//! a terminal at session rate.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::jsonx::Json;
+
+use super::flight;
+
+/// A typed event under construction (builder style):
+///
+/// ```ignore
+/// obs::Event::new("session_finish")
+///     .u64("session", id)
+///     .str("reason", "max_tokens")
+///     .u64("tokens", n)
+///     .emit();
+/// ```
+pub struct Event {
+    kind: &'static str,
+    fields: Vec<(&'static str, Json)>,
+}
+
+impl Event {
+    pub fn new(kind: &'static str) -> Event {
+        Event {
+            kind,
+            fields: Vec::new(),
+        }
+    }
+
+    pub fn u64(mut self, key: &'static str, v: u64) -> Event {
+        self.fields.push((key, Json::num(v as f64)));
+        self
+    }
+
+    pub fn f64(mut self, key: &'static str, v: f64) -> Event {
+        self.fields.push((key, Json::num(v)));
+        self
+    }
+
+    pub fn str(mut self, key: &'static str, v: impl Into<String>) -> Event {
+        self.fields.push((key, Json::Str(v.into())));
+        self
+    }
+
+    /// Render once, stamp ts/seq/pid, and fan out (ring + sink).
+    pub fn emit(self) {
+        let line = render(self.kind, &self.fields);
+        dispatch(&line);
+    }
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static STDERR_MIRROR: AtomicBool = AtomicBool::new(true);
+
+enum Sink {
+    Stdout,
+    File(std::fs::File),
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Toggle the human-readable stderr mirror for [`log`] lines (default
+/// on).
+pub fn set_stderr_mirror(on: bool) {
+    STDERR_MIRROR.store(on, Ordering::Relaxed);
+}
+
+/// Point the JSONL sink at `path` (append + create), or stdout for
+/// `"-"`.  Every subsequent event goes there, one JSON object per line.
+pub fn set_json_sink(path: &str) -> Result<()> {
+    let sink = if path == "-" {
+        Sink::Stdout
+    } else {
+        Sink::File(
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("open --log-json {path}"))?,
+        )
+    };
+    *SINK.lock().unwrap_or_else(|e| e.into_inner()) = Some(sink);
+    Ok(())
+}
+
+/// Render the canonical JSONL form.  `seq` is claimed here so ring and
+/// sink agree on ordering.
+fn render(kind: &str, fields: &[(&'static str, Json)]) -> String {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("ts_us", Json::num(super::monotonic_us() as f64)),
+        ("seq", Json::num(seq as f64)),
+        ("pid", Json::num(std::process::id() as f64)),
+        ("event", Json::str(kind)),
+    ];
+    pairs.extend(fields.iter().map(|(k, v)| (*k, v.clone())));
+    Json::obj(pairs).to_string()
+}
+
+fn dispatch(line: &str) {
+    flight::record(line);
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    match sink.as_mut() {
+        None => {}
+        Some(Sink::Stdout) => {
+            let mut out = std::io::stdout().lock();
+            let _ = writeln!(out, "{line}");
+        }
+        Some(Sink::File(f)) => {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Human log line: mirrors to stderr as `[component] message` (unless
+/// the mirror is off) and emits a structured `log` event.  This is the
+/// drop-in replacement for the old ad-hoc `eprintln!("[x] ...")` sites.
+pub fn log(component: &str, msg: impl AsRef<str>) {
+    let msg = msg.as_ref();
+    if STDERR_MIRROR.load(Ordering::Relaxed) {
+        eprintln!("[{component}] {msg}");
+    }
+    let line = render(
+        "log",
+        &[
+            ("component", Json::str(component)),
+            ("msg", Json::str(msg)),
+        ],
+    );
+    dispatch(&line);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendered_events_are_valid_jsonl_with_envelope() {
+        let line = render(
+            "session_finish",
+            &[
+                ("session", Json::num(42.0)),
+                ("reason", Json::str("max_tokens")),
+            ],
+        );
+        assert!(!line.contains('\n'), "one line per event");
+        let v = Json::parse(&line).expect("line parses as JSON");
+        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "session_finish");
+        assert_eq!(v.get("session").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "max_tokens");
+        assert!(v.get("ts_us").unwrap().as_f64().is_some());
+        assert!(v.get("seq").unwrap().as_f64().is_some());
+        assert!(v.get("pid").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn seq_is_strictly_increasing_across_renders() {
+        let a = render("a", &[]);
+        let b = render("b", &[]);
+        let sa = Json::parse(&a).unwrap().get("seq").unwrap().as_f64().unwrap();
+        let sb = Json::parse(&b).unwrap().get("seq").unwrap().as_f64().unwrap();
+        assert!(sb > sa, "seq must increase: {sa} then {sb}");
+    }
+
+    #[test]
+    fn json_sink_receives_events() {
+        let dir = std::env::temp_dir().join("bmoe_obs_event_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("events-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        set_json_sink(path.to_str().unwrap()).unwrap();
+        Event::new("test_sink_event").u64("k", 7).emit();
+        // detach so other tests don't keep appending here
+        *SINK.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.contains("test_sink_event"))
+            .expect("event written to sink");
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("k").unwrap().as_usize().unwrap(), 7);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,193 @@
+//! Flight recorder: a fixed-size lock-free ring of the most recent
+//! events, dumped for postmortems (DESIGN.md §7).
+//!
+//! Every emitted event lands here regardless of whether a JSONL sink is
+//! configured, so a crash always has recent history.  The ring holds
+//! the last [`RING`] rendered lines; writers claim a monotonically
+//! increasing slot sequence and `swap` their boxed entry into
+//! `slot = seq % RING` — each swap transfers unique ownership of the
+//! previous pointer, so concurrent writers never free the same entry
+//! and never block.
+//!
+//! [`dump`] drains the ring (swapping nulls back in), sorts by
+//! sequence, and writes `bmoe-flight-<pid>.jsonl` into the flight
+//! directory (`BMOE_FLIGHT_DIR`, else the OS temp dir; tests override
+//! via [`set_dir`]).  It is called from the installed panic hook, from
+//! the router when a worker is declared down, and from the server's
+//! protocol-`ERR` paths.  Draining means each event appears in at most
+//! one dump; the newest dump wins the fixed file name.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Ring capacity (events). 256 recent events ≈ the last few seconds of
+/// session/worker lifecycle at serving rates — enough context for a
+/// worker-lost postmortem without unbounded memory.
+pub const RING: usize = 256;
+
+struct Entry {
+    seq: u64,
+    line: String,
+}
+
+static SLOT_SEQ: AtomicU64 = AtomicU64::new(0);
+static CELLS: OnceLock<Box<[AtomicPtr<Entry>]>> = OnceLock::new();
+static DIR_OVERRIDE: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+fn cells() -> &'static [AtomicPtr<Entry>] {
+    CELLS.get_or_init(|| {
+        (0..RING)
+            .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+            .collect()
+    })
+}
+
+/// Append one rendered event line to the ring (lock-free).
+pub fn record(line: &str) {
+    let seq = SLOT_SEQ.fetch_add(1, Ordering::Relaxed);
+    let entry = Box::into_raw(Box::new(Entry {
+        seq,
+        line: line.to_string(),
+    }));
+    let prev = cells()[(seq % RING as u64) as usize].swap(entry, Ordering::AcqRel);
+    if !prev.is_null() {
+        // the swap made us the unique owner of the displaced entry
+        unsafe { drop(Box::from_raw(prev)) };
+    }
+}
+
+/// Override the dump directory (tests).  `None` restores the default
+/// (`BMOE_FLIGHT_DIR` env var, else the OS temp dir).
+pub fn set_dir(dir: Option<PathBuf>) {
+    *DIR_OVERRIDE.lock().unwrap_or_else(|e| e.into_inner()) = dir;
+}
+
+fn dir() -> PathBuf {
+    if let Some(d) = DIR_OVERRIDE
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+    {
+        return d;
+    }
+    match std::env::var_os("BMOE_FLIGHT_DIR") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir(),
+    }
+}
+
+/// The path this process dumps to.
+pub fn dump_path() -> PathBuf {
+    dir().join(format!("bmoe-flight-{}.jsonl", std::process::id()))
+}
+
+/// Drain the ring and write a postmortem dump.  The first line is a
+/// `flight_dump` header (reason + timestamp), followed by the drained
+/// events in emission order.  Returns the path on success; failures are
+/// swallowed (a postmortem writer must never take the process down).
+pub fn dump(reason: &str) -> Option<PathBuf> {
+    let mut entries: Vec<Entry> = Vec::with_capacity(RING);
+    for cell in cells() {
+        let p = cell.swap(std::ptr::null_mut(), Ordering::AcqRel);
+        if !p.is_null() {
+            entries.push(*unsafe { Box::from_raw(p) });
+        }
+    }
+    entries.sort_by_key(|e| e.seq);
+    let path = dump_path();
+    let header = crate::jsonx::Json::obj(vec![
+        ("event", crate::jsonx::Json::str("flight_dump")),
+        ("reason", crate::jsonx::Json::str(reason)),
+        (
+            "ts_us",
+            crate::jsonx::Json::num(super::monotonic_us() as f64),
+        ),
+        (
+            "pid",
+            crate::jsonx::Json::num(std::process::id() as f64),
+        ),
+        ("events", crate::jsonx::Json::num(entries.len() as f64)),
+    ]);
+    let mut body = String::with_capacity(64 * (entries.len() + 1));
+    body.push_str(&header.to_string());
+    body.push('\n');
+    for e in &entries {
+        body.push_str(&e.line);
+        body.push('\n');
+    }
+    match std::fs::write(&path, body) {
+        Ok(()) => {
+            // plain stderr, not an event: emitting here would re-seed
+            // the ring we just drained (and recurse through dispatch)
+            eprintln!("[obs] flight recorder dumped ({reason}) -> {}", path.display());
+            Some(path)
+        }
+        Err(_) => None,
+    }
+}
+
+/// Serializes tests that mutate the process-global ring or the dump
+/// directory override (this module's and the router's flight tests).
+#[doc(hidden)]
+pub static TEST_MUTEX: Mutex<()> = Mutex::new(());
+
+static PANIC_HOOK: Once = Once::new();
+
+/// Chain a dump onto the process panic hook (idempotent): any panic
+/// writes the flight dump first, then runs the previous hook.
+pub fn install_panic_hook() {
+    PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let _ = dump("panic");
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_most_recent_and_dump_orders_by_seq() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("bmoe_obs_flight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        set_dir(Some(dir));
+        let _ = dump("drain-before-test"); // start from an empty ring
+        for i in 0..(RING + 50) {
+            record(&format!("{{\"i\":{i}}}"));
+        }
+        let path = dump("test").expect("dump writes");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("\"flight_dump\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"reason\":\"test\""), "{}", lines[0]);
+        // capacity-bounded: at most RING events survive, the newest win
+        // (unrelated tests may emit events concurrently, so assert
+        // containment rather than exact ring contents)
+        assert!(lines.len() <= 1 + RING, "{} lines", lines.len());
+        assert!(
+            text.contains(&format!("{{\"i\":{}}}", RING + 49)),
+            "newest record must survive"
+        );
+        assert!(
+            !text.contains("{\"i\":0}"),
+            "oldest records must be displaced"
+        );
+        // emission order: i-records appear sorted by seq
+        let idx: Vec<usize> = lines
+            .iter()
+            .filter_map(|l| l.strip_prefix("{\"i\":")?.strip_suffix('}')?.parse().ok())
+            .collect();
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "dump must be seq-ordered");
+        // dump drains: a second dump carries none of our records
+        let path2 = dump("again").unwrap();
+        let text2 = std::fs::read_to_string(&path2).unwrap();
+        assert!(!text2.contains("{\"i\":"), "drained ring must not re-dump");
+        set_dir(None);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,61 @@
+//! Observability: sampled hot-path tracing, structured events, flight
+//! recorder, and Prometheus exposition (DESIGN.md §7).
+//!
+//! Zero-dependency and determinism-neutral by construction — nothing in
+//! this module influences decoded bits:
+//!
+//! * [`trace`] — per-stage latency sampling around the serving hot path
+//!   (gather → rotate → ternary/cached GEMM → reduce → down-project,
+//!   plus scheduler step and cache tick).  Off by default: the cost at
+//!   every instrumented site is one relaxed atomic load and a branch.
+//!   `--trace-sample N` records every Nth occurrence per stage into a
+//!   per-(stage, layer) [`LatencyHistogram`](crate::util::stats::
+//!   LatencyHistogram).  Timers only read the clock and write into a
+//!   side registry, so token streams are bit-identical with tracing on
+//!   or off at any rate (pinned by rust/tests/determinism.rs).
+//! * [`event`] — one structured logger for the whole stack: typed
+//!   session/worker lifecycle events and human log lines, rendered as
+//!   JSONL (`--log-json <path|->`) with monotonic µs timestamps and a
+//!   global sequence number.  Human log lines also mirror to stderr
+//!   (on by default) in the `[component] message` format the scattered
+//!   `eprintln!`s used, so operator UX is unchanged.
+//! * [`flight`] — a fixed-size lock-free ring of the most recent
+//!   events, dumped to `bmoe-flight-<pid>.jsonl` from the panic hook,
+//!   on worker death, and on protocol `ERR` — postmortems for
+//!   `ERR worker lost` have history even when no JSONL sink was set.
+//! * [`prom`] — the Prometheus text-exposition encoder behind the
+//!   `METRICS` wire verb (serve: process metrics + per-stage
+//!   histograms; route: fleet aggregation with `worker="wN"` labels).
+
+pub mod event;
+pub mod flight;
+pub mod prom;
+pub mod trace;
+
+pub use event::{log, set_stderr_mirror, Event};
+pub use trace::{stage_timer, Stage, StageTimer, DEFAULT_SAMPLE};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic microseconds since the first call in this process — the
+/// timestamp every event carries.  Monotonic (never wall-clock) so
+/// event ordering survives clock steps.
+pub fn monotonic_us() -> u64 {
+    PROCESS_START.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// One-stop initialization from the CLI/runtime config: set the trace
+/// sample rate, open the JSONL sink (`""` = none, `"-"` = stdout), and
+/// install the flight-recorder panic hook.  Idempotent.
+pub fn init(trace_sample: u32, log_json: &str) -> anyhow::Result<()> {
+    let _ = monotonic_us(); // pin the epoch before any event
+    trace::set_sample(trace_sample);
+    if !log_json.is_empty() {
+        event::set_json_sink(log_json)?;
+    }
+    flight::install_panic_hook();
+    Ok(())
+}

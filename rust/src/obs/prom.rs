@@ -1,0 +1,219 @@
+//! Prometheus text-exposition encoder for the `METRICS` wire verb
+//! (DESIGN.md §7).
+//!
+//! Hand-rolled against the text format v0.0.4: `# HELP` / `# TYPE`
+//! comment lines once per metric family, `name{label="value"} value`
+//! sample lines, histograms as cumulative `_bucket{le="..."}` series
+//! plus `_sum` and `_count`.  The reply is framed by a final `# EOF`
+//! line so wire clients (and the router's fleet aggregation) know where
+//! the exposition ends without closing the connection.
+//!
+//! [`inject_label`] is the router's relabeling half: it adds a
+//! `worker="wN"` pair to every sample line of a scraped worker
+//! exposition, so fleet-aggregated series stay distinguishable.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::util::stats::LatencyHistogram;
+
+/// The terminator line framing a `METRICS` reply on the wire.
+pub const EOF_LINE: &str = "# EOF";
+
+/// Escape a label *value* per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(&str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Builder for one exposition document.  HELP/TYPE headers are emitted
+/// once per family even when a family is written several times with
+/// different label sets (e.g. one histogram per stage/layer).
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, typ: &str) {
+        if self.seen.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {typ}");
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, String)], value: f64) {
+        let _ = writeln!(self.out, "{name}{} {value}", fmt_labels(labels));
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, String)], value: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, labels, value);
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, String)], value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// Write one histogram series: cumulative `le` buckets (ascending,
+    /// closed by `+Inf` carrying `n`), then `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, String)],
+        h: &LatencyHistogram,
+    ) {
+        self.header(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        for (le, c) in h.cumulative_buckets() {
+            let mut ls: Vec<(&str, String)> = labels.to_vec();
+            ls.push(("le", format!("{le}")));
+            self.sample(&bucket, &ls, c as f64);
+        }
+        let mut ls: Vec<(&str, String)> = labels.to_vec();
+        ls.push(("le", "+Inf".to_string()));
+        self.sample(&bucket, &ls, h.n as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum);
+        self.sample(&format!("{name}_count"), labels, h.n as f64);
+    }
+
+    /// Finish the document: append the `# EOF` frame and return it.
+    pub fn finish(mut self) -> String {
+        self.out.push_str(EOF_LINE);
+        self.out.push('\n');
+        self.out
+    }
+
+    /// The document so far, unframed (router aggregation concatenates
+    /// several parts before framing once).
+    pub fn into_unframed(self) -> String {
+        self.out
+    }
+}
+
+/// Add `key="value"` to every sample line of an exposition fragment
+/// (comment lines and blanks pass through).  Lines that already carry
+/// labels get the pair prepended inside the braces; bare-name lines
+/// grow a label set.
+pub fn inject_label(text: &str, key: &str, value: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 32);
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            out.push_str(line);
+        } else if let Some(brace) = line.find('{') {
+            out.push_str(&line[..brace + 1]);
+            let _ = write!(out, "{key}=\"{}\",", escape_label(value));
+            out.push_str(&line[brace + 1..]);
+        } else if let Some(space) = line.find(' ') {
+            out.push_str(&line[..space]);
+            let _ = write!(out, "{{{key}=\"{}\"}}", escape_label(value));
+            out.push_str(&line[space..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label(r#"a"b"#), r#"a\"b"#);
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+        let mut p = PromText::new();
+        p.gauge("g", "h", &[("k", "v\"w\n\\x".to_string())], 1.0);
+        let text = p.finish();
+        assert!(text.contains(r#"g{k="v\"w\n\\x"} 1"#), "{text}");
+    }
+
+    #[test]
+    fn headers_once_per_family_and_eof_frame() {
+        let mut p = PromText::new();
+        p.counter("c_total", "help", &[("a", "1".into())], 2.0);
+        p.counter("c_total", "help", &[("a", "2".into())], 3.0);
+        let text = p.finish();
+        assert_eq!(text.matches("# HELP c_total").count(), 1);
+        assert_eq!(text.matches("# TYPE c_total counter").count(), 1);
+        assert_eq!(text.matches("c_total{a=").count(), 2);
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_sum_count_consistent() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-4);
+        }
+        let mut p = PromText::new();
+        p.histogram("lat_seconds", "help", &[], &h);
+        let text = p.finish();
+        // parse the bucket series back out
+        let mut counts = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("lat_seconds_bucket{le=\"") {
+                let (_le, tail) = rest.split_once("\"}").unwrap();
+                counts.push(tail.trim().parse::<f64>().unwrap());
+            }
+        }
+        assert!(counts.len() >= 2, "{text}");
+        assert!(
+            counts.windows(2).all(|w| w[1] >= w[0]),
+            "bucket counts must be cumulative/monotone: {counts:?}"
+        );
+        assert_eq!(*counts.last().unwrap(), 100.0, "+Inf bucket carries n");
+        // _count == n, _sum == recorded sum
+        let count_line = text
+            .lines()
+            .find(|l| l.starts_with("lat_seconds_count"))
+            .unwrap();
+        assert_eq!(count_line, "lat_seconds_count 100");
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("lat_seconds_sum"))
+            .unwrap();
+        let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((sum - h.sum).abs() < 1e-12, "{sum_line} vs {}", h.sum);
+        assert!(text.contains("# TYPE lat_seconds histogram"));
+    }
+
+    #[test]
+    fn inject_label_handles_bare_and_labeled_lines() {
+        let src = "# HELP x h\n# TYPE x counter\nx 5\ny{a=\"b\"} 7\n";
+        let out = inject_label(src, "worker", "w3");
+        assert!(out.contains("# HELP x h\n"), "{out}");
+        assert!(out.contains("x{worker=\"w3\"} 5\n"), "{out}");
+        assert!(out.contains("y{worker=\"w3\",a=\"b\"} 7\n"), "{out}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Sampled per-stage hot-path timing (DESIGN.md §7).
+//!
+//! Every instrumented site calls [`stage_timer`]; with sampling off
+//! (rate 0, the default) that is one relaxed atomic load and a branch —
+//! cheap enough to leave in the per-expert decode loop.  At rate `N`
+//! each stage keeps its own decimation counter and times every Nth
+//! occurrence, recording the elapsed seconds into a per-(stage, layer)
+//! [`LatencyHistogram`] under a registry mutex that is only touched for
+//! *sampled* occurrences.
+//!
+//! Determinism: the timer reads `Instant` and writes a side registry —
+//! it never touches activations, weights, RNG state, or scheduling
+//! decisions, so decoded token streams are bit-identical at any rate
+//! (rust/tests/determinism.rs pins rate 1 vs off).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+/// The sample rate `benches/obs_overhead.rs` gates at ≤ 2% tok/s cost —
+/// what `--trace-sample` documentation calls the default-on rate (the
+/// actual default is 0 = off).
+pub const DEFAULT_SAMPLE: u32 = 64;
+
+/// The stages of the serving hot path, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Token-row gather into the per-expert dispatch block.
+    Gather,
+    /// Butterfly orbit rotation (theta transpose-apply or phi apply).
+    Rotate,
+    /// Shared-substrate ternary GEMM (synthesis path, f32 or a8).
+    TernaryGemm,
+    /// Dense GEMM over a resident decoded expert (cache hit path).
+    CachedGemm,
+    /// Deterministic ascending-expert scatter/reduce into token rows.
+    Reduce,
+    /// Shared down projection.
+    DownProject,
+    /// One `ContinuousScheduler::step` (admission + decode + retire).
+    SchedStep,
+    /// One `Backend::tick_caches` residency sweep.
+    CacheTick,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 8] = [
+        Stage::Gather,
+        Stage::Rotate,
+        Stage::TernaryGemm,
+        Stage::CachedGemm,
+        Stage::Reduce,
+        Stage::DownProject,
+        Stage::SchedStep,
+        Stage::CacheTick,
+    ];
+
+    /// Stable snake_case name — the `stage` label value in `METRICS`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Gather => "gather",
+            Stage::Rotate => "rotate",
+            Stage::TernaryGemm => "ternary_gemm",
+            Stage::CachedGemm => "cached_gemm",
+            Stage::Reduce => "reduce",
+            Stage::DownProject => "down_project",
+            Stage::SchedStep => "sched_step",
+            Stage::CacheTick => "cache_tick",
+        }
+    }
+}
+
+static SAMPLE: AtomicU32 = AtomicU32::new(0);
+
+/// Per-stage decimation counters (every instrumented occurrence bumps
+/// its stage's counter; every Nth arms a timer).
+static DECIM: [AtomicU64; 8] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+static REGISTRY: Mutex<BTreeMap<(Stage, u32), LatencyHistogram>> = Mutex::new(BTreeMap::new());
+
+/// Set the global sample rate: 0 = off, N = time every Nth occurrence
+/// per stage.  Process-global (`--trace-sample`).
+pub fn set_sample(n: u32) {
+    SAMPLE.store(n, Ordering::Relaxed);
+}
+
+pub fn sample() -> u32 {
+    SAMPLE.load(Ordering::Relaxed)
+}
+
+/// Drop guard for one stage occurrence: unsampled guards carry nothing
+/// and drop for free; sampled guards record elapsed seconds on drop.
+pub struct StageTimer {
+    armed: Option<(Stage, u32, Instant)>,
+}
+
+/// Start (or skip) a timer around one occurrence of `stage` in layer
+/// `layer` (0 for the layerless stages).  The off fast path is a single
+/// relaxed load + branch.
+#[inline]
+pub fn stage_timer(stage: Stage, layer: u32) -> StageTimer {
+    let n = SAMPLE.load(Ordering::Relaxed);
+    if n == 0 {
+        return StageTimer { armed: None };
+    }
+    let tick = DECIM[stage as usize].fetch_add(1, Ordering::Relaxed);
+    if tick % n as u64 != 0 {
+        return StageTimer { armed: None };
+    }
+    StageTimer {
+        armed: Some((stage, layer, Instant::now())),
+    }
+}
+
+impl Drop for StageTimer {
+    fn drop(&mut self) {
+        if let Some((stage, layer, t0)) = self.armed.take() {
+            let secs = t0.elapsed().as_secs_f64();
+            let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+            reg.entry((stage, layer)).or_default().record(secs);
+        }
+    }
+}
+
+/// One (stage, layer) timing series, cloned out of the registry.
+#[derive(Clone, Debug)]
+pub struct StageStat {
+    pub stage: Stage,
+    pub layer: u32,
+    pub hist: LatencyHistogram,
+}
+
+/// Snapshot every populated (stage, layer) histogram, ordered by stage
+/// then layer.  Empty when sampling is off or nothing ran yet.
+pub fn snapshot() -> Vec<StageStat> {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter()
+        .map(|(&(stage, layer), hist)| StageStat {
+            stage,
+            layer,
+            hist: hist.clone(),
+        })
+        .collect()
+}
+
+/// Serializes tests that mutate the process-global sample rate or
+/// registry (used here and by `coordinator::metrics` tests) so the
+/// harness can stay parallel.
+#[doc(hidden)]
+pub static TEST_MUTEX: Mutex<()> = Mutex::new(());
+
+/// Clear recorded histograms and decimation counters (benches/tests).
+pub fn reset() {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    for c in &DECIM {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_by_default_records_nothing_and_rate_one_records_everything() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = sample();
+        set_sample(0);
+        reset();
+        {
+            let _t = stage_timer(Stage::Gather, 3);
+        }
+        assert!(
+            snapshot().iter().all(|s| s.stage != Stage::Gather || s.layer != 3),
+            "rate 0 must not record"
+        );
+        set_sample(1);
+        for _ in 0..5 {
+            let _t = stage_timer(Stage::Gather, 3);
+        }
+        let snap = snapshot();
+        let got = snap
+            .iter()
+            .find(|s| s.stage == Stage::Gather && s.layer == 3)
+            .expect("rate 1 records every occurrence");
+        assert_eq!(got.hist.n, 5);
+        set_sample(prev);
+    }
+
+    #[test]
+    fn decimation_samples_every_nth() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = sample();
+        set_sample(10);
+        reset();
+        for _ in 0..100 {
+            let _t = stage_timer(Stage::CacheTick, 7);
+        }
+        let snap = snapshot();
+        let got = snap
+            .iter()
+            .find(|s| s.stage == Stage::CacheTick && s.layer == 7)
+            .expect("sampled stage present");
+        assert_eq!(got.hist.n, 10, "100 occurrences at rate 10 -> 10 samples");
+        set_sample(prev);
+    }
+
+    #[test]
+    fn stage_names_are_stable_and_unique() {
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len(), "label values must be unique");
+    }
+}

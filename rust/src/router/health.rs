@@ -29,6 +29,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs;
+
 use super::admission::Admission;
 use super::balance::Fleet;
 use super::worker::{WorkerHandle, WorkerLauncher};
@@ -96,11 +98,23 @@ pub fn health_sweep(ctx: &HealthCtx) {
             Ok((addr, handle)) => {
                 ctx.handles.lock().unwrap()[idx] = Some(handle);
                 ctx.fleet.mark_up(idx, addr, false);
-                eprintln!("[route] worker {idx} restarted on {addr}");
+                obs::log("route", &format!("worker {idx} restarted on {addr}"));
+                obs::Event::new("worker_restart")
+                    .u64("worker", idx as u64)
+                    .str("addr", addr.to_string())
+                    .emit();
             }
             Err(e) => {
                 let backoff = ctx.fleet.mark_down(idx);
-                eprintln!("[route] worker {idx} relaunch failed ({e:#}); retry in {backoff:?}");
+                obs::log(
+                    "route",
+                    &format!("worker {idx} relaunch failed ({e:#}); retry in {backoff:?}"),
+                );
+                obs::Event::new("worker_spawn_failed")
+                    .u64("worker", idx as u64)
+                    .u64("backoff_ms", backoff.as_millis() as u64)
+                    .str("error", format!("{e:#}"))
+                    .emit();
             }
         }
     }
@@ -114,7 +128,15 @@ fn declare_down(ctx: &HealthCtx, idx: usize, why: &str) {
         h.kill();
     }
     let backoff = ctx.fleet.mark_down(idx);
-    eprintln!("[route] worker {idx} down ({why}); restart in {backoff:?}");
+    obs::log("route", &format!("worker {idx} down ({why}); restart in {backoff:?}"));
+    obs::Event::new("worker_down")
+        .u64("worker", idx as u64)
+        .u64("backoff_ms", backoff.as_millis() as u64)
+        .str("why", why)
+        .emit();
+    // a worker death is one of the flight recorder's dump triggers
+    // (DESIGN.md §7): preserve the recent event window for post-mortems
+    obs::flight::dump("worker down");
 }
 
 /// Run sweeps every `interval` until `stop`.

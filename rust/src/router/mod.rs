@@ -51,6 +51,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs;
+
 use admission::Admission;
 use balance::Fleet;
 use health::HealthCtx;
@@ -147,12 +149,20 @@ impl Router {
         for idx in 0..cfg.fleet {
             match launcher.launch(idx) {
                 Ok((addr, handle)) => {
-                    eprintln!("[route] worker {idx} up on {addr}");
+                    obs::log("route", &format!("worker {idx} up on {addr}"));
+                    obs::Event::new("worker_up")
+                        .u64("worker", idx as u64)
+                        .str("addr", addr.to_string())
+                        .emit();
                     fleet.mark_up(idx, addr, true);
                     handles.push(Some(handle));
                 }
                 Err(e) => {
-                    eprintln!("[route] worker {idx} failed to start: {e:#}");
+                    obs::log("route", &format!("worker {idx} failed to start: {e:#}"));
+                    obs::Event::new("worker_spawn_failed")
+                        .u64("worker", idx as u64)
+                        .str("error", format!("{e:#}"))
+                        .emit();
                     fleet.mark_down(idx);
                     handles.push(None);
                 }
@@ -204,7 +214,9 @@ impl Router {
     /// `END shutdown`), the accept loop winds down, and `serve` runs
     /// the full teardown before returning.
     pub fn request_drain(&self) {
-        self.drain_req.store(true, Ordering::SeqCst);
+        if !self.drain_req.swap(true, Ordering::SeqCst) {
+            obs::Event::new("router_drain").u64("fleet", self.cfg.fleet as u64).emit();
+        }
         self.admission.begin_drain();
     }
 
@@ -254,15 +266,119 @@ impl Router {
         line
     }
 
+    /// Fleet-wide Prometheus exposition for the `METRICS` verb: scrape
+    /// every Up worker's own `METRICS`, tag each sample with a
+    /// `worker="wN"` label, dedup the `# HELP`/`# TYPE` headers shared
+    /// across workers, and append the router's own `bmoe_router_*`
+    /// series.  Framed once with `# EOF` (DESIGN.md §7).  Workers that
+    /// fail to answer within the connect timeout are skipped — a scrape
+    /// must never wedge behind a dying worker.
+    pub fn metrics_text(&self) -> String {
+        use crate::obs::prom::{self, PromText};
+        let views = self.fleet.views();
+        let mut merged = String::new();
+        let mut seen_headers = std::collections::BTreeSet::new();
+        for (i, v) in views.iter().enumerate() {
+            if !v.up {
+                continue;
+            }
+            let Some(addr) = self.fleet.addr(i) else { continue };
+            let Ok(text) = scrape_metrics(addr, self.cfg.connect_timeout) else {
+                continue;
+            };
+            let labeled = prom::inject_label(&text, "worker", &format!("w{i}"));
+            for line in labeled.lines() {
+                if line == prom::EOF_LINE {
+                    continue;
+                }
+                if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                    if !seen_headers.insert(line.to_string()) {
+                        continue;
+                    }
+                }
+                merged.push_str(line);
+                merged.push('\n');
+            }
+        }
+        let (inflight, queued, capacity, _draining) = self.admission.counts();
+        let mut p = PromText::new();
+        p.counter(
+            "bmoe_router_routed_total",
+            "Sessions relayed to a worker terminal.",
+            &[],
+            self.stats.routed.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "bmoe_router_shed_total",
+            "Sessions shed by admission.",
+            &[],
+            self.stats.shed.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "bmoe_router_worker_lost_total",
+            "Sessions whose worker died mid-relay.",
+            &[],
+            self.stats.worker_lost.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "bmoe_router_relayed_tokens_total",
+            "Tokens relayed across all sessions.",
+            &[],
+            self.stats.tokens.load(Ordering::Relaxed) as f64,
+        );
+        p.gauge(
+            "bmoe_router_workers_up",
+            "Healthy workers in the fleet.",
+            &[],
+            self.fleet.healthy() as f64,
+        );
+        p.gauge(
+            "bmoe_router_fleet_size",
+            "Configured fleet size.",
+            &[],
+            views.len() as f64,
+        );
+        p.gauge(
+            "bmoe_router_capacity",
+            "Admission capacity (healthy workers x sessions per worker).",
+            &[],
+            capacity as f64,
+        );
+        p.gauge("bmoe_router_inflight", "Sessions in flight.", &[], inflight as f64);
+        p.gauge("bmoe_router_queued", "Sessions queued in admission.", &[], queued as f64);
+        for (i, v) in views.iter().enumerate() {
+            let labels = [("worker", format!("w{i}"))];
+            p.gauge(
+                "bmoe_router_worker_up",
+                "Per-worker liveness (1 = up).",
+                &labels,
+                v.up as u8 as f64,
+            );
+            p.counter(
+                "bmoe_router_worker_restarts_total",
+                "Per-worker restarts by the health loop.",
+                &labels,
+                v.restarts as f64,
+            );
+        }
+        merged.push_str(&p.into_unframed());
+        merged.push_str(prom::EOF_LINE);
+        merged.push('\n');
+        merged
+    }
+
     /// Drain and tear the fleet down.  Returns `true` when every
     /// accepted session completed inside the drain window (loss-free).
     pub fn drain(&self) -> bool {
         self.request_drain();
         let lossless = self.admission.wait_idle(self.cfg.drain_timeout);
         if !lossless {
-            eprintln!(
-                "[route] drain window ({:?}) expired with sessions still in flight; forcing",
-                self.cfg.drain_timeout
+            obs::log(
+                "route",
+                &format!(
+                    "drain window ({:?}) expired with sessions still in flight; forcing",
+                    self.cfg.drain_timeout
+                ),
             );
         }
         // stop supervision *before* retiring workers so the health loop
@@ -279,7 +395,7 @@ impl Router {
                 let _ = send_shutdown(addr);
             }
             if !handle.wait_exit(Duration::from_secs(10)) {
-                eprintln!("[route] worker {idx} ignored SHUTDOWN; killing");
+                obs::log("route", &format!("worker {idx} ignored SHUTDOWN; killing"));
                 handle.kill();
             }
         }
@@ -318,6 +434,28 @@ impl Router {
     }
 }
 
+/// Scrape one worker's `METRICS` exposition, reading up to (and
+/// swallowing) the `# EOF` frame line.
+fn scrape_metrics(addr: std::net::SocketAddr, timeout: Duration) -> Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect_timeout(&addr, timeout)?;
+    s.set_read_timeout(Some(timeout))?;
+    writeln!(s, "METRICS")?;
+    s.flush()?;
+    let mut reader = BufReader::new(s);
+    let mut out = String::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("worker closed before # EOF");
+        }
+        if line.trim_end() == crate::obs::prom::EOF_LINE {
+            return Ok(out);
+        }
+        out.push_str(&line);
+    }
+}
+
 /// Ask a worker to shut down gracefully over the wire.
 fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
@@ -337,10 +475,13 @@ pub fn run(cfg: RouterConfig, launcher: Arc<dyn WorkerLauncher>) -> Result<()> {
     println!("[listening] {addr}");
     use std::io::Write;
     std::io::stdout().flush().ok();
-    eprintln!(
-        "[route] fleet of {} ({} healthy) behind {addr}; DRAIN to shut down",
-        router.cfg.fleet,
-        router.fleet.healthy()
+    obs::log(
+        "route",
+        &format!(
+            "fleet of {} ({} healthy) behind {addr}; DRAIN to shut down",
+            router.cfg.fleet,
+            router.fleet.healthy()
+        ),
     );
     router.serve(listener)
 }
@@ -412,6 +553,22 @@ mod tests {
         line.split_whitespace()
             .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
             .unwrap_or_else(|| panic!("missing {key} in {line}"))
+    }
+
+    /// Send METRICS and read the framed exposition through `# EOF`.
+    fn metrics(addr: std::net::SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "METRICS").unwrap();
+        let mut r = BufReader::new(s);
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            assert!(r.read_line(&mut line).unwrap() > 0, "EOF before # EOF frame");
+            text.push_str(&line);
+            if line.trim_end() == crate::obs::prom::EOF_LINE {
+                return text;
+            }
+        }
     }
 
     #[test]
@@ -681,6 +838,74 @@ mod tests {
             }
             Err(_) => {} // listener already down — also a clean outcome
         }
+    }
+
+    #[test]
+    fn metrics_verb_aggregates_fleet_with_worker_labels() {
+        let (router, addr) = start(test_cfg(), InProcessLauncher::new(Duration::ZERO, 4));
+        let (toks, end) = run_session(addr, "GEN 2 0 0 0 -1 1 2");
+        assert_eq!(toks.len(), 2, "{end}");
+        let text = metrics(addr);
+        // every worker's series carries its slot label
+        assert!(text.contains("worker=\"w0\""), "{text}");
+        assert!(text.contains("worker=\"w1\""), "{text}");
+        assert!(text.contains("bmoe_requests_total{worker=\"w0\"}"), "{text}");
+        // shared HELP/TYPE headers are deduped across workers
+        assert_eq!(text.matches("# HELP bmoe_requests_total ").count(), 1, "{text}");
+        assert_eq!(text.matches("# TYPE bmoe_requests_total counter").count(), 1, "{text}");
+        // the router's own fleet-level series are appended
+        assert!(text.contains("# TYPE bmoe_router_routed_total counter"), "{text}");
+        assert!(text.contains("bmoe_router_workers_up 2"), "{text}");
+        assert!(text.contains("bmoe_router_fleet_size 2"), "{text}");
+        assert!(text.contains("bmoe_router_worker_up{worker=\"w0\"} 1"), "{text}");
+        // framed exactly once, at the very end
+        assert_eq!(text.matches("# EOF").count(), 1, "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        // STATS is unchanged next to METRICS on the same front door
+        assert!(stats(addr).starts_with("STATS fleet=2 "), "{}", stats(addr));
+        router.drain();
+    }
+
+    #[test]
+    fn worker_death_dumps_flight_recorder() {
+        // ring + dump dir are process-global; serialize with the other
+        // flight tests
+        let _g = crate::obs::flight::TEST_MUTEX
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("bmoe_route_flight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::obs::flight::set_dir(Some(dir));
+        let dump = crate::obs::flight::dump_path();
+        let _ = std::fs::remove_file(&dump);
+        let cfg = RouterConfig {
+            fleet: 1,
+            ..test_cfg()
+        };
+        let (router, addr) = start(cfg, InProcessLauncher::new(Duration::ZERO, 4));
+        let (toks, _) = run_session(addr, "GEN 2 0 0 0 -1 1 2");
+        assert_eq!(toks.len(), 2);
+        router.kill_worker(0);
+        // the health loop declares the worker down and dumps the ring
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let text = loop {
+            if let Ok(text) = std::fs::read_to_string(&dump) {
+                if text.contains("worker down") || text.contains("worker_down") {
+                    break text;
+                }
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "no flight dump at {} after worker kill",
+                dump.display()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("\"event\":\"flight_dump\""), "{first}");
+        crate::obs::flight::set_dir(None);
+        router.drain();
+        let _ = std::fs::remove_file(&dump);
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * `ERR worker lost` — the placed worker died mid-stream; the session
 //!   is over (generation state died with the worker) but the client got
 //!   a terminal event, not a hung stream.
+//!
+//! Control verbs: `STATS` (one key=value line, format unchanged),
+//! `DRAIN` (loss-free shutdown), and `METRICS` — the fleet-aggregated
+//! Prometheus exposition from [`Router::metrics_text`], framed by a
+//! trailing `# EOF` line (DESIGN.md §7).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{IpAddr, SocketAddr, TcpStream};
@@ -26,6 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::parse_gen_line;
+use crate::obs;
 
 use super::admission::Ticket;
 use super::Router;
@@ -98,6 +104,9 @@ pub(super) fn proxy_session(
     match router.admission.acquire(client_ip) {
         Ticket::Shed => {
             router.stats.shed.fetch_add(1, Ordering::Relaxed);
+            obs::Event::new("session_shed")
+                .str("client", client_ip.to_string())
+                .emit();
             writeln!(writer, "END shed 0 {}", t0.elapsed().as_micros())?;
             return Ok(());
         }
@@ -112,6 +121,10 @@ pub(super) fn proxy_session(
         // error, never a hang
         router.admission.release(client_ip);
         router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
+        obs::Event::new("session_error")
+            .str("error", "no healthy worker")
+            .emit();
+        obs::flight::dump("no healthy worker");
         writeln!(writer, "ERR no healthy worker")?;
         return Ok(());
     };
@@ -123,6 +136,14 @@ pub(super) fn proxy_session(
         }
         RelayOutcome::WorkerLost { tokens } => {
             router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
+            obs::Event::new("session_error")
+                .u64("worker", idx as u64)
+                .u64("tokens", tokens)
+                .str("error", "worker lost")
+                .emit();
+            // a protocol ERR is a flight-recorder dump trigger
+            // (DESIGN.md §7): the ring holds the events leading here
+            obs::flight::dump("worker lost");
             // terminal event for the client; the health thread will
             // notice the corpse and schedule the restart
             let _ = writeln!(writer, "ERR worker lost");
@@ -189,6 +210,12 @@ pub(super) fn handle_client(stream: TcpStream, router: Arc<Router>) -> Result<()
         }
         if line == "STATS" {
             writeln!(writer, "{}", router.stats_line())?;
+            continue;
+        }
+        if line == "METRICS" {
+            // fleet-aggregated Prometheus exposition, framed by `# EOF`
+            write!(writer, "{}", router.metrics_text())?;
+            writer.flush()?;
             continue;
         }
         if line == "DRAIN" {

@@ -56,7 +56,7 @@ impl Engine {
                 .compile(&comp)
                 .with_context(|| format!("XLA compile {name}"))?,
         );
-        eprintln!("[engine] compiled {name} in {:.2}s", sw.secs());
+        crate::obs::log("engine", &format!("compiled {name} in {:.2}s", sw.secs()));
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }

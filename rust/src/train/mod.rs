@@ -176,9 +176,12 @@ impl<'e> Trainer<'e> {
                 step_secs: sw.secs(),
             });
             if !self.quiet && (step % self.log_every == 0 || step + 1 == self.rt.steps) {
-                eprintln!(
-                    "[train {config}] step {step:>5} loss {loss:.4} ce {ce:.4} bal {bal:.5} ({:.0} ms)",
-                    sw.millis()
+                crate::obs::log(
+                    &format!("train {config}"),
+                    &format!(
+                        "step {step:>5} loss {loss:.4} ce {ce:.4} bal {bal:.5} ({:.0} ms)",
+                        sw.millis()
+                    ),
                 );
             }
             if self.rt.checkpoint_every > 0
@@ -248,7 +251,10 @@ pub fn ensure_checkpoint(
     if path.exists() {
         return Ok(path);
     }
-    eprintln!("[ensure_checkpoint] training {config} for {steps} steps (cached at {})", path.display());
+    crate::obs::log(
+        "ensure_checkpoint",
+        &format!("training {config} for {steps} steps (cached at {})", path.display()),
+    );
     let rt = RuntimeConfig {
         steps,
         lr: 3e-3,

@@ -71,6 +71,9 @@ pub struct LatencyHistogram {
     pub n: u64,
     pub sum: f64,
     pub max: f64,
+    /// Smallest recorded sample; `f64::INFINITY` until the first record
+    /// (read it through [`Self::min`], which reports 0.0 when empty).
+    min: f64,
 }
 
 impl Default for LatencyHistogram {
@@ -88,6 +91,7 @@ impl LatencyHistogram {
             n: 0,
             sum: 0.0,
             max: 0.0,
+            min: f64::INFINITY,
         }
     }
 
@@ -96,6 +100,9 @@ impl LatencyHistogram {
         self.sum += secs;
         if secs > self.max {
             self.max = secs;
+        }
+        if secs < self.min {
+            self.min = secs;
         }
         let idx = if secs <= self.base {
             0
@@ -112,6 +119,31 @@ impl LatencyHistogram {
         } else {
             self.sum / self.n as f64
         }
+    }
+
+    /// Smallest recorded sample (0.0 while empty, mirroring `max`).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Cumulative buckets as `(upper_edge_secs, cumulative_count)` in
+    /// ascending edge order — exactly the Prometheus `le` convention:
+    /// the count paired with an edge is the number of samples `<=` that
+    /// edge, and the last entry carries `n`.  Bucket `i` is reported at
+    /// its upper edge `base * ratio^(i+1)` (the same edge `quantile`
+    /// returns); bucket 0 also absorbs samples at or below the base, and
+    /// the last bucket absorbs overflow, so the running sum is
+    /// monotonically non-decreasing and complete by construction.
+    pub fn cumulative_buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        let mut acc = 0u64;
+        self.counts.iter().enumerate().map(move |(i, &c)| {
+            acc += c;
+            (self.base * self.ratio.powi(i as i32 + 1), acc)
+        })
     }
 
     /// Approximate quantile from bucket boundaries (upper edge).
@@ -138,6 +170,7 @@ impl LatencyHistogram {
         self.n += other.n;
         self.sum += other.sum;
         self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
     }
 }
 
@@ -194,5 +227,53 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.n, 2);
         assert!((a.mean() - 1.5e-3).abs() < 1e-9);
+        assert!((a.min() - 1e-3).abs() < 1e-12);
+        assert!((a.max - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_min_tracking() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.min(), 0.0, "empty histogram reports 0");
+        h.record(5e-3);
+        assert!((h.min() - 5e-3).abs() < 1e-12, "one sample: min == sample");
+        assert!((h.max - 5e-3).abs() < 1e-12);
+        h.record(2e-3);
+        h.record(9e-3);
+        assert!((h.min() - 2e-3).abs() < 1e-12);
+        assert!((h.max - 9e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cumulative_buckets_empty_and_one_sample() {
+        let h = LatencyHistogram::new(1e-6, 2.0, 8);
+        let edges: Vec<(f64, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(edges.len(), 8);
+        assert!(edges.iter().all(|&(_, c)| c == 0), "empty: all zero");
+        assert!((edges[0].0 - 2e-6).abs() < 1e-18, "first edge is base*ratio");
+
+        let mut h = LatencyHistogram::new(1e-6, 2.0, 8);
+        h.record(3e-6); // bucket 1: [2e-6, 4e-6)
+        let edges: Vec<(f64, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(edges[0].1, 0, "below the sample's bucket");
+        assert!(edges[1..].iter().all(|&(_, c)| c == 1), "at and above it");
+        assert_eq!(edges.last().unwrap().1, h.n, "last bucket carries n");
+    }
+
+    #[test]
+    fn cumulative_buckets_boundaries_and_monotonicity() {
+        let mut h = LatencyHistogram::new(1e-6, 2.0, 8);
+        h.record(5e-7); // below base -> clamps into bucket 0
+        h.record(1e-6); // exactly base -> bucket 0
+        h.record(2e-6); // exactly bucket-0 upper edge -> bucket 1
+        h.record(1.0); // far past the last edge -> clamps into the last bucket
+        let edges: Vec<(f64, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(edges[0].1, 2, "base-and-below samples land in bucket 0");
+        assert_eq!(edges[1].1, 3, "edge sample rolls into the next bucket");
+        assert_eq!(edges.last().unwrap().1, 4, "overflow clamps, total intact");
+        for w in edges.windows(2) {
+            assert!(w[1].1 >= w[0].1, "cumulative counts must be monotonic");
+            assert!(w[1].0 > w[0].0, "edges strictly ascend");
+        }
     }
 }

@@ -119,6 +119,42 @@ fn token_streams_bitwise_identical_across_workers_and_budgets() {
     }
 }
 
+/// Observability must be determinism-neutral: `--trace-sample 1` (every
+/// occurrence timed — the most invasive setting) yields token streams
+/// bitwise identical to tracing off.  Timers only read the clock and
+/// write a side registry (DESIGN.md §7), so the decoded bits cannot
+/// depend on the sample rate.
+#[test]
+fn token_streams_bitwise_identical_with_tracing_on() {
+    use butterfly_moe::obs::trace;
+    // trace state is process-global; serialize with other mutating tests
+    let _g = trace::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_sample(0);
+    trace::reset();
+    let reference = decode_streams(2, 0);
+    assert!(reference.iter().all(|s| !s.is_empty()));
+    assert!(
+        trace::snapshot().is_empty(),
+        "sample 0 must record nothing"
+    );
+    trace::set_sample(1);
+    let traced = decode_streams(2, 0);
+    let stages = trace::snapshot();
+    trace::set_sample(0);
+    trace::reset();
+    assert_eq!(traced, reference, "tracing at sample 1 changed decoded bits");
+    // the run above must actually have exercised the instrumentation —
+    // a vacuous pass (timers compiled out / never hit) is a test bug
+    assert!(
+        stages.iter().any(|s| s.stage == trace::Stage::TernaryGemm && s.hist.n > 0),
+        "no ternary-GEMM samples recorded: {stages:?}"
+    );
+    assert!(
+        stages.iter().any(|s| s.stage == trace::Stage::SchedStep && s.hist.n > 0),
+        "no scheduler-step samples recorded: {stages:?}"
+    );
+}
+
 #[test]
 fn experts_forward_outputs_and_load_vectors_identical_across_workers() {
     let x = testutil::normal_vec(11 * D, 0x5EED);
