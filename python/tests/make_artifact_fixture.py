@@ -5,9 +5,13 @@ Writes a tiny multi-layer native model in the ``.bmoe`` model-artifact
 format (DESIGN.md §3) through ``compile.bmoe_io`` — the normative python
 writer — plus ``expected.*`` tensors holding reference logits computed
 by a numpy mirror of the Rust native engine
-(``NativeLmBackend::step``): mean-pooled embedding, L residual
-ButterflyMoE blocks (top-k gate → θᵀx → ternary substrate GEMV → φ →
-GELU → w_down), readout logits.
+(``NativeLmBackend::step``): each context token's embedding row runs
+the L residual ButterflyMoE blocks independently (top-k gate → θᵀx →
+ternary substrate GEMV → φ → GELU → w_down per block), the per-token
+feature rows are folded left-to-right into a running mean, and the
+readout scores of that mean are the logits.  The per-token function is
+what makes chunked prefill bit-invariant on the Rust side (DESIGN.md
+§2), so the mirror must be per-token too.
 
 The Rust side (``rust/tests/artifact.rs``) loads this file via both
 heap and mmap loaders, asserts the two are bitwise identical, and pins
@@ -155,20 +159,24 @@ def try_build(seed):
         [16, 0, 25, 9],
     ]
 
-    # reference logits: one decode step per prompt (greedy_next semantics)
+    # reference logits: one decode step per prompt (greedy_next
+    # semantics).  Per-token mirror of NativeLmBackend::step: every
+    # context token's embedding row runs the residual stack on its own,
+    # then the feature rows fold left-to-right into a running mean.
     expected = np.zeros((len(prompts), VOCAB), dtype=F32)
     next_tokens = np.zeros(len(prompts), dtype=np.int32)
     for i, prompt in enumerate(prompts):
         ctx = prompt[-SEQ_LEN:]
-        x = np.zeros(D, dtype=F32)
+        pool = np.zeros(D, dtype=F32)
         for t in ctx:
-            x = (x + embed[t % VOCAB]).astype(F32)
-        x = (x * F32(1.0 / len(ctx))).astype(F32)
-        for layer in layers:
-            y, margin = layer.forward(x)
-            if margin <= 2e-3:
-                return None
-            x = (x + y).astype(F32)
+            x = embed[t % VOCAB].astype(F32).copy()
+            for layer in layers:
+                y, margin = layer.forward(x)
+                if margin <= 2e-3:
+                    return None
+                x = (x + y).astype(F32)
+            pool = (pool + x).astype(F32)
+        x = (pool * F32(1.0 / len(ctx))).astype(F32)
         logits = (readout @ x).astype(F32)
         expected[i] = logits
         srt = np.sort(logits)

@@ -70,7 +70,10 @@ fn run_trial(path: &Path, mode: LoadMode) -> anyhow::Result<(Trial, Vec<f32>)> {
     let mut b = batch();
     let out = backend.step(&mut b)?;
     let first_step_ms = sw.millis();
-    let logits = out[0].logits.clone();
+    let logits = out[0]
+        .logits
+        .clone()
+        .expect("all-at-once prefill emits logits");
     let sw = Stopwatch::start();
     let iters = 3;
     for _ in 0..iters {

@@ -6,11 +6,21 @@
 //! Reports sustained tokens/sec, TTFT, inter-token latency, and the
 //! continuous-batching headline: short sessions *overtake* long ones
 //! that were submitted earlier, instead of convoying behind them.
+//! Prefill and decode throughput are measured and reported separately —
+//! both as columns of the session CSVs (prompt tokens and decoded
+//! tokens move at very different rates through the same engine loop)
+//! and as a dedicated two-window measurement written to the
+//! machine-readable `BENCH_serving.json` at the repo root.
 //!
 //! Runs the native backend always, and the PJRT LM backend when
 //! `make artifacts` has produced `artifacts/manifest.json`.
 //!
 //! Run: `cargo bench --bench serving_throughput`
+//! `cargo bench --bench serving_throughput -- smoke` (or
+//! `BMOE_BENCH_SMOKE=1`) is the CI gate: only the prefill/decode
+//! split runs, `BENCH_serving.json` (mode "smoke") is written, and the
+//! bench exits nonzero unless chunked prefill moves prompt tokens at
+//! least as fast as the decode loop moves generated ones.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -29,7 +39,10 @@ const SHORT_TOKENS: usize = 4;
 const LONG_TOKENS: usize = 32;
 
 struct WorkloadResult {
+    /// decoded (generated) tokens per wall second
     tok_per_sec: f64,
+    /// prompt tokens consumed per wall second over the same window
+    prefill_tok_per_sec: f64,
     ttft: Vec<f64>,
     short_e2e: Vec<f64>,
     long_e2e: Vec<f64>,
@@ -104,6 +117,7 @@ fn drive(
     let snap = coord.metrics.snapshot();
     Ok(WorkloadResult {
         tok_per_sec: tokens as f64 / wall,
+        prefill_tok_per_sec: snap.prefill_tokens as f64 / wall,
         ttft,
         short_e2e,
         long_e2e,
@@ -126,7 +140,8 @@ fn bench_backend(
         &format!("Serving sessions ({label}): mixed 4/32-token workload, batch<=16, wait<=2ms"),
         &[
             "Offered sess/s",
-            "tok/s",
+            "Decode tok/s",
+            "Prefill tok/s",
             "Occupancy",
             "TTFT p50 ms",
             "TTFT p99 ms",
@@ -147,6 +162,7 @@ fn bench_backend(
         t.row(&[
             format!("{sps:.0}"),
             format!("{:.0}", r.tok_per_sec),
+            format!("{:.0}", r.prefill_tok_per_sec),
             format!("{:.1}", r.occupancy),
             format!("{:.2}", 1e3 * stats::percentile(&r.ttft, 50.0)),
             format!("{:.2}", 1e3 * stats::percentile(&r.ttft, 99.0)),
@@ -313,10 +329,101 @@ fn bench_layer_scaling(out: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Two-window prefill-vs-decode split over the seeded native backend,
+/// written to `BENCH_serving.json` at the repo root.
+///
+/// Window A (prefill): sessions whose prompt fills the whole model
+/// window (32 tokens) decode a single token each, with `--prefill-chunk
+/// 8`, so nearly all engine work is chunked prompt ingestion.  Window B
+/// (decode): 1-token prompts generate 32 tokens each, so nearly all
+/// work is the one-token-per-tick decode loop.  Chunked prefill shares
+/// one dispatch-block gather across every token of a chunk and crosses
+/// the session channel zero times mid-prompt, so its tokens/s must be
+/// at least the decode loop's — `smoke` turns that into a hard gate.
+fn bench_prefill_vs_decode(mode: &str) -> anyhow::Result<(f64, f64)> {
+    const PREFILL_CHUNK: usize = 8;
+    const PROMPT: usize = 32; // == seq_len: the full model window
+    let sessions = if mode == "smoke" { 24 } else { 96 };
+    let make_coord = |chunk: usize| {
+        let mut layer_rng = Rng::new(7);
+        let mut layer = ButterflyMoeLayer::random(256, 1024, 8, 2, None, &mut layer_rng);
+        layer.attach_worker_pool(Arc::new(WorkerPool::new(
+            butterfly_moe::parallel::resolve_workers(0),
+        )));
+        let backend: Arc<dyn Backend> =
+            Arc::new(NativeMoeBackend::new(Arc::new(layer), 512, PROMPT, 16));
+        butterfly_moe::coordinator::warm(backend.as_ref()).unwrap();
+        Coordinator::start(
+            backend,
+            SchedulerConfig::new(16, Duration::from_millis(2)).with_prefill_chunk(chunk),
+        )
+    };
+    let run = |coord: &Coordinator, prompt_len: usize, budget: usize| -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..sessions)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..prompt_len)
+                    .map(|j| ((i * 89 + j * 13) % 512) as i32)
+                    .collect();
+                coord.submit(GenerateRequest::greedy(prompt, budget))
+            })
+            .collect();
+        for rx in rxs {
+            collect_stream(&rx, Duration::from_secs(120))?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    // window A: full-window prompts, one decoded token each
+    let coord = make_coord(PREFILL_CHUNK);
+    let wall = run(&coord, PROMPT, 1)?;
+    let snap = coord.metrics.snapshot();
+    anyhow::ensure!(snap.prefill_tokens == (sessions * PROMPT) as u64);
+    let prefill_tok_s = snap.prefill_tokens as f64 / wall;
+    coord.shutdown();
+
+    // window B: one-token prompts, full decode budgets
+    let coord = make_coord(PREFILL_CHUNK);
+    let wall = run(&coord, 1, PROMPT)?;
+    let decode_tok_s = (sessions * PROMPT) as f64 / wall;
+    coord.shutdown();
+
+    println!(
+        "[prefill/decode] chunk {PREFILL_CHUNK}: prefill {prefill_tok_s:.0} tok/s | \
+         decode {decode_tok_s:.0} tok/s ({:.2}x)",
+        prefill_tok_s / decode_tok_s.max(1e-9)
+    );
+    let body = format!(
+        "{{\n  \"schema\": \"bmoe_serving_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"prefill_chunk\": {PREFILL_CHUNK},\n  \"sessions\": {sessions},\n  \
+         \"prompt_tokens\": {PROMPT},\n  \"prefill_tok_s\": {prefill_tok_s:.1},\n  \
+         \"decode_tok_s\": {decode_tok_s:.1}\n}}\n"
+    );
+    std::fs::write("BENCH_serving.json", body)?;
+    println!("wrote BENCH_serving.json (mode {mode})");
+    Ok((prefill_tok_s, decode_tok_s))
+}
+
 fn main() -> anyhow::Result<()> {
+    if std::env::args().any(|a| a == "smoke" || a == "--smoke")
+        || std::env::var("BMOE_BENCH_SMOKE").is_ok_and(|v| v == "1")
+    {
+        let (prefill, decode) = bench_prefill_vs_decode("smoke")?;
+        anyhow::ensure!(
+            prefill >= decode,
+            "SMOKE FAIL: chunked prefill ({prefill:.0} tok/s) slower than \
+             the decode loop ({decode:.0} tok/s)"
+        );
+        println!("serving gate OK: prefill tok/s >= decode tok/s");
+        return Ok(());
+    }
     let out = std::path::Path::new("runs/tables");
     std::fs::create_dir_all(out)?;
     let mut rng = Rng::new(0x5EE);
+
+    // prefill vs decode split + BENCH_serving.json (reported, not gated,
+    // outside smoke)
+    bench_prefill_vs_decode("full")?;
 
     // tokens/s-vs-workers scaling curve for the native backend
     bench_worker_scaling(out)?;

@@ -115,6 +115,12 @@ COMMON FLAGS:
   --steps N  --lr F     training options
   --port P              serving: TCP port (default 7070)
   --max-batch N         serving: max sequences resident per decode step
+  --prefill-chunk N     serving/route: max prompt tokens ingested per
+                        engine tick per joining sequence; 0 (default) =
+                        whole prompt at once.  Small chunks bound
+                        batch-mates' inter-token latency under long
+                        prompts; decoded streams are bit-identical for
+                        every N
   --expert-cache-mb MB  serving (--native): byte budget for the expert
                         residency cache — hot experts keep a materialized
                         working set served by a plain dense GEMM,
@@ -175,7 +181,7 @@ Any bare key=value is applied to the runtime config (see config/mod.rs).
 The serve wire protocol is documented in coordinator/server.rs:
   GEN <max_new> <temperature> <top_k> <seed> <eos|-1> <tok> <tok> ...
 streams back 'TOK <index> <token> <latency_us>' lines and a terminal
-'END <reason> <n_tokens> <total_us>'.  'STATS' returns one key=value
+'END <reason> <n_tokens> <total_us> <truncated>'.  'STATS' returns one key=value
 telemetry line including the expert cache's hit rate / resident bytes.
 'METRICS' returns Prometheus text exposition (counters, gauges, and
 cumulative-bucket histograms incl. the per-stage --trace-sample

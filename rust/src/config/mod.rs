@@ -116,6 +116,11 @@ pub struct RuntimeConfig {
     /// continuous batching: idle-start admission deadline in milliseconds
     /// (how long the first batch may wait to fill)
     pub max_wait_ms: u64,
+    /// continuous batching: max prompt tokens ingested per engine tick
+    /// per prefilling sequence (`--prefill-chunk`); 0 = the whole
+    /// prompt at once.  Decoded streams are bit-identical for every
+    /// value (DESIGN.md §2)
+    pub prefill_chunk: usize,
     /// session parameters used by client-side commands (`bench-client`);
     /// the wire protocol carries them explicitly per request
     pub max_new_tokens: usize,
@@ -185,6 +190,7 @@ impl Default for RuntimeConfig {
             seed: 0,
             max_batch: 16,
             max_wait_ms: 5,
+            prefill_chunk: 0,
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
@@ -219,6 +225,7 @@ impl RuntimeConfig {
             "seed" => self.seed = value.parse().context("seed")?,
             "max_batch" => self.max_batch = value.parse().context("max_batch")?,
             "max_wait_ms" => self.max_wait_ms = value.parse().context("max_wait_ms")?,
+            "prefill_chunk" => self.prefill_chunk = value.parse().context("prefill_chunk")?,
             "max_new_tokens" => self.max_new_tokens = value.parse().context("max_new_tokens")?,
             "temperature" => self.temperature = value.parse().context("temperature")?,
             "top_k" => self.top_k = value.parse().context("top_k")?,
@@ -346,18 +353,22 @@ mod tests {
     #[test]
     fn serving_overrides() {
         let mut r = RuntimeConfig::default();
+        assert_eq!(r.prefill_chunk, 0, "default: whole prompt in one tick");
         r.set("max_new_tokens", "64").unwrap();
         r.set("temperature", "0.7").unwrap();
         r.set("top_k", "40").unwrap();
         r.set("expert_cache_mb", "24.5").unwrap();
         r.set("workers", "4").unwrap();
+        r.set("prefill_chunk", "8").unwrap();
         assert_eq!(r.max_new_tokens, 64);
         assert_eq!(r.temperature, 0.7);
         assert_eq!(r.top_k, 40);
         assert_eq!(r.expert_cache_mb, 24.5);
         assert_eq!(r.workers, 4);
+        assert_eq!(r.prefill_chunk, 8);
         assert!(r.set("expert_cache_mb", "lots").is_err());
         assert!(r.set("workers", "many").is_err());
+        assert!(r.set("prefill_chunk", "some").is_err());
     }
 
     #[test]

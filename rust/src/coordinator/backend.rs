@@ -1,12 +1,15 @@
 //! Execution backends for the coordinator.
 //!
-//! The core backend operation is a **decode step over an in-flight
-//! sequence set**: given the current context of every running sequence,
-//! produce a next-token logit row per sequence.  Admission ("prefill")
-//! is implicit in the first step a sequence participates in; both
-//! backends here are stateless across steps and re-feed the grown
-//! context each time, which is exactly what the compiled bucket graphs
-//! support.
+//! The core backend operation is a **step over an in-flight sequence
+//! set**: fold every running sequence's pending tokens into its state
+//! and produce a next-token logit row for each sequence that is past
+//! prefill.  An admitted sequence starts in the [`SeqPhase::Prefill`]
+//! phase and consumes its prompt in multi-token chunks (bounded by
+//! [`InflightBatch::prefill_chunk`], the `--prefill-chunk` knob), so the
+//! blocked butterfly/GEMM kernels see `t > 1` row batches on the prompt
+//! path while in-flight decode inter-token latency stays bounded; once
+//! the prompt is consumed the sequence decodes one token per step
+//! (DESIGN.md §2).
 //!
 //! * [`PjrtLmBackend`] — the full AOT-compiled LM (L2 graph with the L1
 //!   Pallas kernels inside).  Each step is split into chunks that fit
@@ -30,6 +33,17 @@ use crate::moe::MoeLayer;
 use crate::runtime::{spawn_engine_thread, EngineHandle, Manifest, Value};
 use crate::tensor::{IntTensor, Tensor};
 
+/// Lifecycle phase of an in-flight sequence (DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Prompt ingestion: `consumed` prompt positions folded so far
+    /// (window-skipped positions count as consumed, see
+    /// [`InflightSeq::next_span`]).
+    Prefill { consumed: usize },
+    /// Prompt fully ingested; every step samples one new token.
+    Decode,
+}
+
 /// One running sequence: prompt plus everything generated so far.
 #[derive(Clone, Debug)]
 pub struct InflightSeq {
@@ -37,6 +51,19 @@ pub struct InflightSeq {
     /// Full context: prompt tokens followed by generated tokens.
     pub tokens: Vec<i32>,
     pub prompt_len: usize,
+    /// Prefill/decode phase machine; backends advance it via
+    /// [`Self::next_span`].
+    pub phase: SeqPhase,
+    /// Prompt tokens dropped at prefill start because the prompt
+    /// exceeds the model window (surfaced on the wire `END` line and as
+    /// a `session_truncated` event — never silent).
+    pub truncated: usize,
+    /// Backend-owned pooled feature state: running sum of per-token
+    /// feature rows plus the number of rows folded in.  Lazily sized by
+    /// the native backend; backends that recompute from the raw context
+    /// (PJRT) leave it empty.
+    pub pool_sum: Vec<f32>,
+    pub pool_count: usize,
 }
 
 impl InflightSeq {
@@ -46,6 +73,10 @@ impl InflightSeq {
             id,
             tokens: prompt,
             prompt_len,
+            phase: SeqPhase::Prefill { consumed: 0 },
+            truncated: 0,
+            pool_sum: Vec::new(),
+            pool_count: 0,
         }
     }
 
@@ -59,6 +90,44 @@ impl InflightSeq {
         let take = self.tokens.len().min(seq_len);
         &self.tokens[self.tokens.len() - take..]
     }
+
+    /// True once every surviving prompt token has been folded — the
+    /// sequence samples a token on each step from here on.
+    pub fn prefill_done(&self) -> bool {
+        matches!(self.phase, SeqPhase::Decode)
+    }
+
+    /// Advance the phase machine and return the next span of `tokens`
+    /// to fold this step: the next `chunk`-capped bite of prompt during
+    /// prefill (`chunk == 0` means the whole remainder — the
+    /// all-at-once behaviour), or the single newly sampled token during
+    /// decode.  On first contact the span skips prompt positions that
+    /// already fell out of the `seq_len` window (no prefill steps are
+    /// burned on tokens the model would never see) and records the drop
+    /// in [`Self::truncated`].
+    pub fn next_span(&mut self, seq_len: usize, chunk: usize) -> std::ops::Range<usize> {
+        match self.phase {
+            SeqPhase::Prefill { mut consumed } => {
+                if consumed == 0 {
+                    let skip = self.prompt_len.saturating_sub(seq_len);
+                    self.truncated = skip;
+                    consumed = skip;
+                }
+                let end = if chunk == 0 {
+                    self.prompt_len
+                } else {
+                    (consumed + chunk).min(self.prompt_len)
+                };
+                self.phase = if end >= self.prompt_len {
+                    SeqPhase::Decode
+                } else {
+                    SeqPhase::Prefill { consumed: end }
+                };
+                consumed..end
+            }
+            SeqPhase::Decode => self.tokens.len().saturating_sub(1)..self.tokens.len(),
+        }
+    }
 }
 
 /// The set of sequences currently resident in the decode loop.
@@ -67,11 +136,17 @@ impl InflightSeq {
 #[derive(Debug, Default)]
 pub struct InflightBatch {
     pub seqs: Vec<InflightSeq>,
+    /// Max prompt tokens one step may ingest per prefilling sequence
+    /// (the `--prefill-chunk` knob); 0 = unlimited, i.e. the whole
+    /// prompt in the sequence's first step.  Small chunks bound the
+    /// inter-token latency of in-flight decode batch-mates; large
+    /// chunks amortize better (DESIGN.md §2).
+    pub prefill_chunk: usize,
 }
 
 impl InflightBatch {
     pub fn new() -> Self {
-        InflightBatch { seqs: Vec::new() }
+        InflightBatch::default()
     }
 
     pub fn len(&self) -> usize {
@@ -87,12 +162,19 @@ impl InflightBatch {
     }
 }
 
-/// Per-sequence result of one decode step.
+/// Per-sequence result of one step.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
     pub seq_id: u64,
-    /// Next-token logits over the backend's vocabulary.
-    pub logits: Vec<f32>,
+    /// Next-token logits over the backend's vocabulary; `None` while
+    /// the sequence is still mid-prefill (nothing to sample yet).  The
+    /// step that ingests the final prompt chunk also emits logits, so
+    /// an all-at-once prefill reproduces the historical one-step
+    /// behaviour exactly.
+    pub logits: Option<Vec<f32>>,
+    /// Prompt tokens folded this step (0 during decode) — the
+    /// scheduler's prefill-throughput accounting.
+    pub prefilled: usize,
 }
 
 /// A serving backend advances every in-flight sequence by one token.
@@ -103,8 +185,10 @@ pub trait Backend: Send + Sync {
     fn seq_len(&self) -> usize;
     /// Vocabulary size (length of every [`StepOutput::logits`] row).
     fn vocab(&self) -> usize;
-    /// One decode step: next-token logits for every sequence in the
-    /// batch, in batch order.
+    /// One step: fold each sequence's pending tokens (the next prompt
+    /// chunk during prefill, the newly sampled token during decode) and
+    /// return one [`StepOutput`] per sequence, in batch order.  Logits
+    /// are `None` for sequences still mid-prefill.
     fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>>;
     fn name(&self) -> String;
     /// Batch sizes worth driving once before measuring anything (the
@@ -155,7 +239,13 @@ pub fn greedy_next(backend: &dyn Backend, prompts: &[Vec<i32>]) -> Result<Vec<i3
             batch.push(InflightSeq::new(i as u64, p.clone()));
         }
         for o in backend.step(&mut batch)? {
-            out.push(argmax(&o.logits) as i32);
+            // one-shot batches keep the default prefill_chunk = 0, so
+            // every prompt completes prefill (and yields logits) in the
+            // single step above
+            let logits = o
+                .logits
+                .context("backend returned no logits for an all-at-once prefill")?;
+            out.push(argmax(&logits) as i32);
         }
     }
     Ok(out)
@@ -218,7 +308,7 @@ impl PjrtLmBackend {
 
     /// Run one compiled forward over a chunk of at most `max_batch`
     /// sequences, appending a logits row per sequence to `out`.
-    fn run_chunk(&self, seqs: &[InflightSeq], out: &mut Vec<StepOutput>) -> Result<()> {
+    fn run_chunk(&self, seqs: &[&InflightSeq], out: &mut Vec<Vec<f32>>) -> Result<()> {
         let bi = pick_bucket(&self.buckets, seqs.len())?;
         let (bucket, art) = self.buckets[bi].clone();
         let l = self.seq_len;
@@ -236,11 +326,7 @@ impl PjrtLmBackend {
         let v = self.vocab;
         for (i, s) in seqs.iter().enumerate() {
             let pos = s.context(l).len().max(1) - 1;
-            let row = &logits.data[(i * l + pos) * v..(i * l + pos + 1) * v];
-            out.push(StepOutput {
-                seq_id: s.id,
-                logits: row.to_vec(),
-            });
+            out.push(logits.data[(i * l + pos) * v..(i * l + pos + 1) * v].to_vec());
         }
         Ok(())
     }
@@ -279,10 +365,33 @@ impl Backend for PjrtLmBackend {
 
     fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
         anyhow::ensure!(!batch.is_empty());
-        let mut out = Vec::with_capacity(batch.len());
+        // The compiled graphs are stateless and re-feed the whole
+        // context window each step, so mid-prefill steps only advance
+        // the phase machine, and the step that completes a prefill
+        // reads logits from the full window — chunk-size invariance is
+        // structural on this backend.
+        let chunk = batch.prefill_chunk;
+        let mut out: Vec<StepOutput> = Vec::with_capacity(batch.len());
+        for s in batch.seqs.iter_mut() {
+            let was_prefill = !s.prefill_done();
+            let span = s.next_span(self.seq_len, chunk);
+            out.push(StepOutput {
+                seq_id: s.id,
+                logits: None,
+                prefilled: if was_prefill { span.len() } else { 0 },
+            });
+        }
+        let need: Vec<usize> = (0..batch.len())
+            .filter(|&i| batch.seqs[i].prefill_done())
+            .collect();
         // split oversized steps across compiled buckets (no silent drop)
-        for chunk in batch.seqs.chunks(self.max_batch()) {
-            self.run_chunk(chunk, &mut out)?;
+        for idx in need.chunks(self.max_batch()) {
+            let seqs: Vec<&InflightSeq> = idx.iter().map(|&i| &batch.seqs[i]).collect();
+            let mut rows = Vec::with_capacity(seqs.len());
+            self.run_chunk(&seqs, &mut rows)?;
+            for (&i, row) in idx.iter().zip(rows) {
+                out[i].logits = Some(row);
+            }
         }
         Ok(out)
     }
@@ -299,9 +408,20 @@ impl Backend for PjrtLmBackend {
 /// …)` is [`NativeLmBackend::new`], which wraps one layer.
 pub type NativeMoeBackend = NativeLmBackend;
 
-/// Native multi-layer LM backend: embeds each sequence's context by
-/// mean-pooling a token table, runs `L` residual ButterflyMoE blocks
-/// (`x ← x + block(x)`), and returns the readout scores as logits.
+/// Native multi-layer LM backend: each context token's embedding row
+/// runs the `L` residual ButterflyMoE blocks (`x ← x + block(x)`)
+/// independently, the resulting feature rows are folded left-to-right
+/// into a per-sequence running mean, and the readout scores of that
+/// mean are the logits.
+///
+/// Because the per-token function is row-independent and the fold
+/// order is fixed by token position, the pooled state — and therefore
+/// every decoded token — is bit-identical no matter how the prompt is
+/// split into prefill chunks (DESIGN.md §2).  A prefill chunk of `c`
+/// tokens reaches the blocked kernels as one `t = c` row batch (summed
+/// across prefilling sequences), so the per-expert dispatch-block
+/// gather is shared across the chunk; decode folds exactly one new row
+/// per step, making it O(1) in context length.
 ///
 /// Two ways to build one:
 ///
@@ -462,22 +582,6 @@ impl NativeLmBackend {
         self.file_bytes
     }
 
-    /// Mean-pool the context's embeddings into one d_model vector.
-    fn pool(&self, ctx: &[i32], out: &mut [f32]) {
-        let d = self.layers[0].d_model();
-        let embed = self.embed.data();
-        out.fill(0.0);
-        for &t in ctx {
-            let row = &embed[(t as usize % self.vocab) * d..][..d];
-            for (o, &e) in out.iter_mut().zip(row) {
-                *o += e;
-            }
-        }
-        let inv = 1.0 / ctx.len().max(1) as f32;
-        for o in out.iter_mut() {
-            *o *= inv;
-        }
-    }
 }
 
 impl Backend for NativeLmBackend {
@@ -556,38 +660,92 @@ impl Backend for NativeLmBackend {
     fn step(&self, batch: &mut InflightBatch) -> Result<Vec<StepOutput>> {
         anyhow::ensure!(!batch.is_empty());
         let d = self.layers[0].d_model();
-        let t = batch.len();
-        let mut x = vec![0.0f32; t * d];
-        for (i, s) in batch.seqs.iter().enumerate() {
-            self.pool(s.context(self.seq_len), &mut x[i * d..(i + 1) * d]);
+        let chunk = batch.prefill_chunk;
+        // 1) Advance every sequence's phase machine and collect this
+        //    step's pending spans: the next prompt chunk for prefilling
+        //    sequences, the one newly sampled token for decoding ones.
+        let mut spans = Vec::with_capacity(batch.len());
+        let mut rows = 0usize;
+        let mut prefill_rows = 0usize;
+        for s in batch.seqs.iter_mut() {
+            let was_prefill = !s.prefill_done();
+            let span = s.next_span(self.seq_len, chunk);
+            if was_prefill {
+                prefill_rows += span.len();
+            }
+            rows += span.len();
+            spans.push((span, was_prefill));
         }
-        // L residual ButterflyMoE blocks: x <- x + block(x)
-        let mut y = vec![0.0f32; t * d];
-        for layer in &self.layers {
-            layer.forward(&x, t, &mut y);
-            for (xv, &yv) in x.iter_mut().zip(&y) {
-                *xv += yv;
+        // Steps that ingest prompt rows are sampled as the `prefill`
+        // stage; the timer writes a side registry only (DESIGN.md §7).
+        let _prefill_timer = (prefill_rows > 0).then(|| {
+            crate::obs::stage_timer(crate::obs::Stage::Prefill, 0)
+        });
+        // 2) One batched residual-stack forward over every pending row:
+        //    each token's embedding runs the L blocks independently, so
+        //    a prefill chunk reaches the blocked kernels as a t > 1 row
+        //    batch and the per-expert dispatch gather is shared across
+        //    the chunk's tokens.
+        let embed = self.embed.data();
+        let mut x = vec![0.0f32; rows * d];
+        let mut r = 0usize;
+        for (s, (span, _)) in batch.seqs.iter().zip(&spans) {
+            for &tok in &s.tokens[span.clone()] {
+                // negative wire tokens are rejected at parse time
+                // (`parse_gen_line`); unchecked, `tok as usize` would
+                // wrap and alias an arbitrary embedding row
+                debug_assert!(tok >= 0, "negative token {tok} reached the embed gather");
+                let row = &embed[(tok as usize % self.vocab) * d..][..d];
+                x[r * d..(r + 1) * d].copy_from_slice(row);
+                r += 1;
             }
         }
+        if rows > 0 {
+            // L residual ButterflyMoE blocks: x <- x + block(x)
+            let mut y = vec![0.0f32; rows * d];
+            for layer in &self.layers {
+                layer.forward(&x, rows, &mut y);
+                for (xv, &yv) in x.iter_mut().zip(&y) {
+                    *xv += yv;
+                }
+            }
+        }
+        // 3) Fold each sequence's feature rows into its running pooled
+        //    sum left-to-right.  The fold order is a function of token
+        //    position only — chunk boundaries change *when* rows enter
+        //    the pool, never the float association — which is the whole
+        //    chunk-size-invariance argument (DESIGN.md §2).
         let readout = self.readout.data();
-        Ok(batch
-            .seqs
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let yi = &x[i * d..(i + 1) * d];
-                let logits: Vec<f32> = (0..self.vocab)
+        let mut out = Vec::with_capacity(batch.len());
+        let mut r = 0usize;
+        for (s, (span, was_prefill)) in batch.seqs.iter_mut().zip(&spans) {
+            if s.pool_sum.is_empty() {
+                s.pool_sum = vec![0.0f32; d];
+            }
+            for _ in span.clone() {
+                for (a, &b) in s.pool_sum.iter_mut().zip(&x[r * d..(r + 1) * d]) {
+                    *a += b;
+                }
+                s.pool_count += 1;
+                r += 1;
+            }
+            let logits = s.prefill_done().then(|| {
+                let inv = 1.0 / s.pool_count.max(1) as f32;
+                let yi: Vec<f32> = s.pool_sum.iter().map(|v| v * inv).collect();
+                (0..self.vocab)
                     .map(|v| {
                         let row = &readout[v * d..(v + 1) * d];
-                        row.iter().zip(yi).map(|(a, b)| a * b).sum()
+                        row.iter().zip(&yi).map(|(a, b)| a * b).sum()
                     })
-                    .collect();
-                StepOutput {
-                    seq_id: s.id,
-                    logits,
-                }
-            })
-            .collect())
+                    .collect()
+            });
+            out.push(StepOutput {
+                seq_id: s.id,
+                logits,
+                prefilled: if *was_prefill { span.len() } else { 0 },
+            });
+        }
+        Ok(out)
     }
 }
 
@@ -619,10 +777,11 @@ mod tests {
         let o1 = b.step(&mut b1).unwrap();
         let o2 = b.step(&mut b2).unwrap();
         assert_eq!(o1.len(), 2);
-        for (a, c) in o1.iter().zip(&o2) {
+        for ((a, c), p) in o1.iter().zip(&o2).zip(&[3usize, 2]) {
             assert_eq!(a.seq_id, c.seq_id);
             assert_eq!(a.logits, c.logits);
-            assert_eq!(a.logits.len(), b.vocab());
+            assert_eq!(a.prefilled, *p, "all-at-once prefill folds the whole prompt");
+            assert_eq!(a.logits.as_ref().unwrap().len(), b.vocab());
         }
     }
 
@@ -633,7 +792,7 @@ mod tests {
         let next = greedy_next(&b, &prompts).unwrap();
         let outs = b.step(&mut batch_of(&prompts)).unwrap();
         for (n, o) in next.iter().zip(&outs) {
-            assert_eq!(*n, argmax(&o.logits) as i32);
+            assert_eq!(*n, argmax(o.logits.as_ref().unwrap()) as i32);
             assert!((*n as usize) < 64);
         }
     }
@@ -708,8 +867,9 @@ mod tests {
         let o2 = b3.step(&mut batch_of(&prompts)).unwrap();
         for (a, c) in o1.iter().zip(&o2) {
             assert_eq!(a.logits, c.logits);
-            assert_eq!(a.logits.len(), 64);
-            assert!(a.logits.iter().all(|v| v.is_finite()));
+            let l = a.logits.as_ref().unwrap();
+            assert_eq!(l.len(), 64);
+            assert!(l.iter().all(|v| v.is_finite()));
         }
         // the residual stack is real: depth changes the logits (layer 0
         // weights are identical across the two builds by seeding)
@@ -725,6 +885,98 @@ mod tests {
         assert_eq!(s.context(4), &[6, 7, 8, 9]);
         assert_eq!(s.context(16).len(), 10);
         assert_eq!(s.generated(), 0);
+        assert!(!s.prefill_done());
+    }
+
+    #[test]
+    fn next_span_phase_machine() {
+        let mut s = InflightSeq::new(0, (0..10).collect());
+        assert_eq!(s.next_span(16, 4), 0..4);
+        assert_eq!(s.next_span(16, 4), 4..8);
+        assert!(!s.prefill_done());
+        assert_eq!(s.next_span(16, 4), 8..10);
+        assert!(s.prefill_done());
+        assert_eq!(s.truncated, 0);
+        // decode: the span is the one newly pushed token
+        s.tokens.push(99);
+        assert_eq!(s.next_span(16, 4), 10..11);
+        // chunk 0 = the whole remainder in one span
+        let mut a = InflightSeq::new(1, (0..10).collect());
+        assert_eq!(a.next_span(16, 0), 0..10);
+        assert!(a.prefill_done());
+        // oversized prompts skip the out-of-window prefix on first
+        // contact and record the drop
+        let mut t = InflightSeq::new(2, (0..10).collect());
+        assert_eq!(t.next_span(4, 3), 6..9);
+        assert_eq!(t.truncated, 6);
+        assert_eq!(t.next_span(4, 3), 9..10);
+        assert!(t.prefill_done());
+    }
+
+    /// Greedy-decode `n` tokens of one prompt, prefilled in
+    /// `chunk`-token bites, driving the backend the way the scheduler
+    /// does.  Returns (tokens, prefill steps, first logits row).
+    fn decode_with_chunk(
+        b: &dyn Backend,
+        prompt: &[i32],
+        chunk: usize,
+        n: usize,
+    ) -> (Vec<i32>, usize, Vec<f32>) {
+        let mut batch = InflightBatch::new();
+        batch.prefill_chunk = chunk;
+        batch.push(InflightSeq::new(0, prompt.to_vec()));
+        let mut toks = Vec::new();
+        let mut prefill_steps = 0;
+        let mut first_logits = Vec::new();
+        while toks.len() < n {
+            let outs = b.step(&mut batch).unwrap();
+            if outs[0].prefilled > 0 {
+                prefill_steps += 1;
+            }
+            if let Some(l) = &outs[0].logits {
+                if first_logits.is_empty() {
+                    first_logits = l.clone();
+                }
+                let t = argmax(l) as i32;
+                toks.push(t);
+                batch.seqs[0].tokens.push(t);
+            }
+        }
+        (toks, prefill_steps, first_logits)
+    }
+
+    #[test]
+    fn prefill_chunk_size_never_changes_the_stream() {
+        let b = native(); // d16, vocab 64, seq_len 8
+        let prompt = [5, 9, 2, 33, 17, 4, 8];
+        let (all, steps_all, logits_all) = decode_with_chunk(&b, &prompt, 0, 6);
+        assert_eq!(steps_all, 1, "chunk 0 = all-at-once single prefill step");
+        for chunk in [1usize, 2, 3, 4] {
+            let (toks, steps, logits) = decode_with_chunk(&b, &prompt, chunk, 6);
+            assert_eq!(toks, all, "chunk {chunk} changed the decoded stream");
+            assert_eq!(
+                logits, logits_all,
+                "chunk {chunk} changed the first logits row bitwise"
+            );
+            assert_eq!(steps, (prompt.len() + chunk - 1) / chunk);
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_skips_window_and_reports_truncated() {
+        let b = native(); // seq_len 8
+        let long: Vec<i32> = (0..20).collect();
+        // chunked prefill must not burn steps on the 12 tokens that
+        // already fell out of the window: 8 survivors / chunk 4 = 2
+        let (_, steps, logits_long) = decode_with_chunk(&b, &long, 4, 1);
+        assert_eq!(steps, 2, "out-of-window prefix must be skipped, not fed");
+        // the surviving suffix alone produces bit-identical logits
+        let (_, _, logits_tail) = decode_with_chunk(&b, &long[12..], 0, 1);
+        assert_eq!(logits_long, logits_tail);
+        let mut batch = InflightBatch::new();
+        batch.push(InflightSeq::new(0, long));
+        b.step(&mut batch).unwrap();
+        assert_eq!(batch.seqs[0].truncated, 12);
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct Metrics {
     pub responses: AtomicU64,
     /// Tokens generated across all sessions.
     pub tokens: AtomicU64,
+    /// Prompt tokens ingested by prefill across all sessions (distinct
+    /// from `tokens`, which counts decoded tokens only).
+    pub prefill_tokens: AtomicU64,
     /// Decode steps executed (each advances every resident sequence).
     pub steps: AtomicU64,
     /// Sum of batch occupancy over all steps (mean = / steps).
@@ -67,6 +70,8 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
     pub tokens: u64,
+    /// Prompt tokens ingested by prefill.
+    pub prefill_tokens: u64,
     pub steps: u64,
     pub cancelled: u64,
     pub errors: u64,
@@ -77,12 +82,20 @@ pub struct MetricsSnapshot {
     /// Mean resident sequences per decode step (continuous-batching
     /// occupancy; the old "mean batch size").
     pub mean_batch_size: f64,
-    /// Generated tokens per wall-clock second since the metrics epoch.
+    /// Generated (decode) tokens per wall-clock second since the
+    /// metrics epoch.
     pub tokens_per_sec: f64,
+    /// Prompt tokens ingested per wall-clock second since the metrics
+    /// epoch — the prefill side of the throughput split.
+    pub prefill_tok_s: f64,
     pub queue_wait_p50: f64,
     pub queue_wait_p99: f64,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
+    /// TTFT samples recorded — exactly one per session that produced a
+    /// decoded token (prefill chunks never record TTFT), so invariance
+    /// tests can assert the count non-vacuously.
+    pub ttft_count: u64,
     pub itl_p50: f64,
     pub itl_p99: f64,
     pub latency_p50: f64,
@@ -101,6 +114,7 @@ impl Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             tokens: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
             steps: AtomicU64::new(0),
             stepped_seqs: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
@@ -134,6 +148,11 @@ impl Metrics {
 
     pub fn record_token(&self) {
         self.tokens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` prompt tokens were folded by a prefill step.
+    pub fn record_prefill_tokens(&self, n: u64) {
+        self.prefill_tokens.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Enqueue-to-first-token latency of one session.
@@ -178,6 +197,7 @@ impl Metrics {
         let inner = self.inner.lock().unwrap();
         let steps = self.steps.load(Ordering::Relaxed);
         let tokens = self.tokens.load(Ordering::Relaxed);
+        let prefill_tokens = self.prefill_tokens.load(Ordering::Relaxed);
         // Throughput counts from the first recorded activity, not from
         // construction — pre-request idle must not dilute tokens/sec.
         let elapsed = inner
@@ -189,6 +209,7 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             tokens,
+            prefill_tokens,
             steps,
             cancelled: self.cancelled.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -200,10 +221,12 @@ impl Metrics {
                 self.stepped_seqs.load(Ordering::Relaxed) as f64 / steps as f64
             },
             tokens_per_sec: tokens as f64 / elapsed,
+            prefill_tok_s: prefill_tokens as f64 / elapsed,
             queue_wait_p50: inner.queue_wait.quantile(0.5),
             queue_wait_p99: inner.queue_wait.quantile(0.99),
             ttft_p50: inner.ttft.quantile(0.5),
             ttft_p99: inner.ttft.quantile(0.99),
+            ttft_count: inner.ttft.n,
             itl_p50: inner.itl.quantile(0.5),
             itl_p99: inner.itl.quantile(0.99),
             latency_p50: inner.e2e.quantile(0.5),
@@ -238,6 +261,7 @@ impl Metrics {
             ("bmoe_requests_total", "Sessions submitted", snap.requests),
             ("bmoe_responses_total", "Sessions that reached a terminal event", snap.responses),
             ("bmoe_tokens_total", "Tokens generated across all sessions", snap.tokens),
+            ("bmoe_prefill_tokens_total", "Prompt tokens ingested by prefill", snap.prefill_tokens),
             ("bmoe_decode_steps_total", "Decode steps executed", snap.steps),
             ("bmoe_cancelled_total", "Sessions retired because the client dropped", snap.cancelled),
             ("bmoe_errors_total", "Sessions that ended in an error", snap.errors),
@@ -248,6 +272,7 @@ impl Metrics {
         p.gauge("bmoe_inflight", "Sequences resident in the running batch", &[], snap.inflight as f64);
         p.gauge("bmoe_mean_batch_size", "Mean resident sequences per decode step", &[], snap.mean_batch_size);
         p.gauge("bmoe_tokens_per_sec", "Tokens per second since first activity", &[], snap.tokens_per_sec);
+        p.gauge("bmoe_prefill_tok_s", "Prompt tokens ingested per second since first activity", &[], snap.prefill_tok_s);
         p.gauge("bmoe_uptime_seconds", "Seconds since the metrics epoch", &[], self.started.elapsed().as_secs_f64());
         for (name, help, h) in &hists {
             p.histogram(name, help, &[], h);
@@ -289,13 +314,15 @@ impl MetricsSnapshot {
             _ => String::new(),
         };
         format!(
-            "req={} done={} cancelled={} err={} tokens={} ({:.0} tok/s) steps={} (occupancy {:.1}) ttft p50/p99 {:.2}/{:.2} ms itl p50/p99 {:.2}/{:.2} ms e2e p50/p95/p99 {:.2}/{:.2}/{:.2} ms{cache}",
+            "req={} done={} cancelled={} err={} tokens={} ({:.0} tok/s) prefill={} ({:.0} tok/s) steps={} (occupancy {:.1}) ttft p50/p99 {:.2}/{:.2} ms itl p50/p99 {:.2}/{:.2} ms e2e p50/p95/p99 {:.2}/{:.2}/{:.2} ms{cache}",
             self.requests,
             self.responses,
             self.cancelled,
             self.errors,
             self.tokens,
             self.tokens_per_sec,
+            self.prefill_tokens,
+            self.prefill_tok_s,
             self.steps,
             self.mean_batch_size,
             self.ttft_p50 * 1e3,
@@ -324,6 +351,7 @@ mod tests {
         for _ in 0..3 {
             m.record_token();
         }
+        m.record_prefill_tokens(5);
         m.record_ttft(Duration::from_millis(4));
         m.record_itl(Duration::from_millis(2));
         m.record_finished(Duration::from_millis(5));
@@ -332,6 +360,8 @@ mod tests {
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
         assert_eq!(s.tokens, 3);
+        assert_eq!(s.prefill_tokens, 5);
+        assert!(s.prefill_tok_s > 0.0);
         assert_eq!(s.steps, 2);
         assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
         assert!(s.tokens_per_sec > 0.0);

@@ -15,7 +15,7 @@
 //!   (greedy, or temperature/top-k with a seeded RNG), [`StopCriteria`]
 //!   (max new tokens and/or EOS) — and receives a channel of
 //!   [`TokenEvent`]s: one `Token { token, index, latency }` per decoded
-//!   position, terminated by `Done { reason, tokens, total }`.
+//!   position, terminated by `Done { reason, tokens, total, truncated }`.
 //! * The [`ContinuousScheduler`] keeps sequences *resident* across
 //!   decode steps.  Between steps, finished sequences leave and queued
 //!   requests join (up to `max_batch`), so short requests stream out
@@ -23,8 +23,12 @@
 //!   the loop is idle, the first batch waits up to `max_wait` to fill —
 //!   the classic size-or-deadline knob, but only for cold starts.
 //! * [`Backend::step`] advances every sequence in an [`InflightBatch`]
-//!   by one token (logits per sequence; prefill is the sequence's first
-//!   step).  The PJRT backend packs each step into the smallest
+//!   by one engine tick.  A joining sequence starts in
+//!   [`SeqPhase::Prefill`] and consumes its prompt in chunks of up to
+//!   `--prefill-chunk` tokens per tick (0 = all at once); mid-prefill
+//!   ticks return no logits, and the tick that finishes the prompt also
+//!   decodes the first token.  Decode ticks yield one logit row per
+//!   sequence.  The PJRT backend packs each step into the smallest
 //!   compiled batch bucket and splits oversized steps across buckets.
 //! * [`Metrics`] tracks queue wait, time-to-first-token, inter-token
 //!   latency, end-to-end session time, step occupancy, and tokens/sec.
@@ -40,7 +44,9 @@
 //! server:  TOK 0 17 1523\n        (first token 17, TTFT 1523 µs)
 //!          TOK 1 99 812\n         (second token, 812 µs after the first)
 //!          ...
-//!          END max_tokens 8 9120\n
+//!          END max_tokens 8 9120 0\n
+//!          └── reason, token count, total µs, prompt tokens truncated
+//!              to fit the model window (0 = the model saw it all)
 //! ```
 //!
 //! Greedy decoding is `GEN 8 0 0 0 -1 <prompt…>`; `QUIT` closes the
@@ -72,7 +78,7 @@ pub mod session;
 
 pub use backend::{
     greedy_next, warm, Backend, InflightBatch, InflightSeq, NativeLmBackend, NativeMoeBackend,
-    PjrtLmBackend, StepOutput,
+    PjrtLmBackend, SeqPhase, StepOutput,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{ContinuousScheduler, QueuedRequest, SchedulerConfig};

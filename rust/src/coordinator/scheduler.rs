@@ -37,6 +37,11 @@ pub struct SchedulerConfig {
     /// asking for more are clamped at admission, so untrusted wire input
     /// cannot pin a batch slot forever.
     pub max_session_tokens: usize,
+    /// Max prompt tokens one engine tick may ingest per prefilling
+    /// sequence (`--prefill-chunk`); 0 = the whole prompt at once.
+    /// Small chunks bound in-flight decode inter-token latency; large
+    /// chunks amortize the blocked kernels better (DESIGN.md §2).
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -45,6 +50,7 @@ impl Default for SchedulerConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(5),
             max_session_tokens: 4096,
+            prefill_chunk: 0,
         }
     }
 }
@@ -60,6 +66,11 @@ impl SchedulerConfig {
 
     pub fn with_session_cap(mut self, max_session_tokens: usize) -> Self {
         self.max_session_tokens = max_session_tokens;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, prefill_chunk: usize) -> Self {
+        self.prefill_chunk = prefill_chunk;
         self
     }
 }
@@ -108,6 +119,13 @@ impl ContinuousScheduler {
         }
     }
 
+    /// Cap prompt ingestion at `chunk` tokens per engine tick per
+    /// sequence (0 = all at once, the default).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.batch.prefill_chunk = chunk;
+        self
+    }
+
     pub fn in_flight(&self) -> usize {
         self.batch.len()
     }
@@ -132,6 +150,7 @@ impl ContinuousScheduler {
                 reason: FinishReason::Error("empty prompt".into()),
                 tokens: Vec::new(),
                 total: now.duration_since(q.enqueued),
+                truncated: 0,
             });
             return;
         }
@@ -146,6 +165,7 @@ impl ContinuousScheduler {
                 reason: FinishReason::MaxTokens,
                 tokens: Vec::new(),
                 total: now.duration_since(q.enqueued),
+                truncated: 0,
             });
             return;
         }
@@ -208,7 +228,30 @@ impl ContinuousScheduler {
         // walk backwards so swap_remove never disturbs unvisited entries
         let mut finished = 0;
         for i in (0..outs.len()).rev() {
-            let token = self.meta[i].sampler.sample(&outs[i].logits);
+            // prefill bookkeeping: throughput accounting, plus the
+            // one-shot transition events on the step that finished this
+            // sequence's prompt ingestion
+            if outs[i].prefilled > 0 {
+                self.metrics.record_prefill_tokens(outs[i].prefilled as u64);
+                let s = &self.batch.seqs[i];
+                if s.prefill_done() {
+                    if s.truncated > 0 {
+                        obs::Event::new("session_truncated")
+                            .u64("session", s.id)
+                            .u64("dropped", s.truncated as u64)
+                            .u64("prompt", s.prompt_len as u64)
+                            .emit();
+                    }
+                    obs::Event::new("session_prefill_done")
+                        .u64("session", s.id)
+                        .u64("prompt_tokens", (s.prompt_len - s.truncated) as u64)
+                        .emit();
+                }
+            }
+            let Some(logits) = outs[i].logits.as_ref() else {
+                continue; // still mid-prefill: nothing to sample yet
+            };
+            let token = self.meta[i].sampler.sample(logits);
             let now = Instant::now();
             self.batch.seqs[i].tokens.push(token);
 
@@ -217,16 +260,6 @@ impl ContinuousScheduler {
             m.last_event = now;
             let index = m.new_tokens.len();
             m.new_tokens.push(token);
-            if index == 0 {
-                self.metrics.record_ttft(now.duration_since(m.enqueued));
-                obs::Event::new("session_first_token")
-                    .u64("session", m.id)
-                    .u64("ttft_us", now.duration_since(m.enqueued).as_micros() as u64)
-                    .emit();
-            } else {
-                self.metrics.record_itl(latency);
-            }
-            self.metrics.record_token();
             if m.reply
                 .send(TokenEvent::Token {
                     token,
@@ -236,7 +269,9 @@ impl ContinuousScheduler {
                 .is_err()
             {
                 // the client dropped its receiver: cancel the session so
-                // a dead connection can't keep occupying a batch slot
+                // a dead connection can't keep occupying a batch slot.
+                // Nothing was recorded for this token — token/latency
+                // series must not keep inflating after a client is gone.
                 let m = self.meta.swap_remove(i);
                 self.batch.seqs.swap_remove(i);
                 self.metrics.record_cancelled();
@@ -247,6 +282,19 @@ impl ContinuousScheduler {
                 finished += 1;
                 continue;
             }
+            // token metrics only after the send succeeded (see above);
+            // TTFT is the first *decoded* token — prefill chunks never
+            // reach this point because they carry no logits
+            if index == 0 {
+                self.metrics.record_ttft(now.duration_since(m.enqueued));
+                obs::Event::new("session_first_token")
+                    .u64("session", m.id)
+                    .u64("ttft_us", now.duration_since(m.enqueued).as_micros() as u64)
+                    .emit();
+            } else {
+                self.metrics.record_itl(latency);
+            }
+            self.metrics.record_token();
 
             let m = &mut self.meta[i];
             let reason = if m.stop.eos == Some(token) {
@@ -257,6 +305,7 @@ impl ContinuousScheduler {
                 None
             };
             if let Some(reason) = reason {
+                let truncated = self.batch.seqs[i].truncated;
                 let m = self.meta.swap_remove(i);
                 self.batch.seqs.swap_remove(i);
                 let total = now.duration_since(m.enqueued);
@@ -271,6 +320,7 @@ impl ContinuousScheduler {
                     reason,
                     tokens: m.new_tokens,
                     total,
+                    truncated,
                 });
                 finished += 1;
             }
@@ -282,6 +332,12 @@ impl ContinuousScheduler {
     /// shutdown and on backend failure) so no client waits forever.
     pub fn abort_all(&mut self, reason: FinishReason) {
         let now = Instant::now();
+        let truncated: std::collections::HashMap<u64, usize> = self
+            .batch
+            .seqs
+            .iter()
+            .map(|s| (s.id, s.truncated))
+            .collect();
         self.batch.seqs.clear();
         for m in self.meta.drain(..) {
             obs::Event::new("session_abort")
@@ -293,6 +349,7 @@ impl ContinuousScheduler {
                 reason: reason.clone(),
                 tokens: m.new_tokens,
                 total: now.duration_since(m.enqueued),
+                truncated: truncated.get(&m.id).copied().unwrap_or(0),
             });
         }
     }
@@ -498,6 +555,71 @@ mod tests {
         let (toks, reason) = drain(&rx);
         assert_eq!(toks.len(), 3, "server-side cap must bound generation");
         assert_eq!(reason, Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn cancelled_sessions_add_no_token_metrics() {
+        let be = CountBackend::new().with_vocab(16);
+        let metrics = Arc::new(Metrics::new());
+        let mut s = ContinuousScheduler::new(4, usize::MAX, metrics.clone());
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![1, 2], 100));
+        s.admit(q);
+        drop(rx); // client gone before any token is delivered
+        s.step(&be).unwrap();
+        assert_eq!(s.in_flight(), 0);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.tokens, 0, "undelivered tokens must not inflate the series");
+        assert_eq!(snap.ttft_count, 0, "no TTFT for a client that never got a token");
+        assert_eq!(snap.cancelled, 1);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_all_at_once_and_counts_prompt_tokens() {
+        let run = |chunk: usize| {
+            let be = CountBackend::new().with_vocab(64);
+            let metrics = Arc::new(Metrics::new());
+            let mut s =
+                ContinuousScheduler::new(4, usize::MAX, metrics.clone()).with_prefill_chunk(chunk);
+            let (q, rx) = queued(1, GenerateRequest::greedy(vec![0; 6], 4));
+            s.admit(q);
+            let mut steps = 0;
+            while s.in_flight() > 0 {
+                s.step(&be).unwrap();
+                steps += 1;
+            }
+            let snap = metrics.snapshot();
+            assert_eq!(snap.prefill_tokens, 6, "every prompt token counted once");
+            assert_eq!(snap.ttft_count, 1, "TTFT = first decoded token, recorded once");
+            assert_eq!(snap.tokens, 4);
+            let (toks, reason) = drain(&rx);
+            assert_eq!(reason, Some(FinishReason::MaxTokens));
+            (toks, steps)
+        };
+        let (all, steps_all) = run(0);
+        assert_eq!(steps_all, 4, "chunk 0: the first step prefills and decodes");
+        let (chunked, steps_chunked) = run(2);
+        assert_eq!(chunked, all, "prefill chunking must not change the stream");
+        // 6 prompt tokens at chunk 2: two logit-less steps, then the
+        // completing chunk decodes the first token in the same tick
+        assert_eq!(steps_chunked, steps_all + 2);
+    }
+
+    #[test]
+    fn oversized_prompt_reports_truncation_on_done() {
+        let be = CountBackend::new().with_vocab(1024); // seq_len 64
+        let mut s = sched(4);
+        let (q, rx) = queued(1, GenerateRequest::greedy(vec![7; 100], 2));
+        s.admit(q);
+        while s.in_flight() > 0 {
+            s.step(&be).unwrap();
+        }
+        let mut truncated = None;
+        while let Ok(ev) = rx.try_recv() {
+            if let TokenEvent::Done { truncated: t, .. } = ev {
+                truncated = Some(t);
+            }
+        }
+        assert_eq!(truncated, Some(36), "100-token prompt into a 64 window drops 36");
     }
 
     #[test]

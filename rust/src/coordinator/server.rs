@@ -3,10 +3,14 @@
 //!
 //! One engine thread owns the backend and the
 //! [`ContinuousScheduler`]: each iteration admits queued requests into
-//! the running batch (up to `max_batch`), executes one decode step, and
-//! streams a [`TokenEvent`] to every resident session.  Finished
-//! sequences leave between steps, so a short completion never waits for
-//! a long batch-mate to finish.
+//! the running batch (up to `max_batch`), executes one engine step, and
+//! streams a [`TokenEvent`] to every resident session.  A joining
+//! session's prompt is ingested over one or more *prefill* steps
+//! (`--prefill-chunk` tokens per tick; 0 = all at once) before its
+//! first token decodes, so a long prompt never stalls the batch-mates'
+//! inter-token latency for its whole length.  Finished sequences leave
+//! between steps, so a short completion never waits for a long
+//! batch-mate to finish.
 //!
 //! Shutdown is loss-free for *waiters*: every in-flight session receives
 //! a terminal `Done { reason: Shutdown }` and every still-queued request
@@ -107,6 +111,7 @@ impl Coordinator {
                     reason: FinishReason::Shutdown,
                     tokens: Vec::new(),
                     total: Duration::ZERO,
+                    truncated: 0,
                 });
             }
         }
@@ -139,6 +144,7 @@ fn deny(q: QueuedRequest) {
         reason: FinishReason::Shutdown,
         tokens: Vec::new(),
         total: q.enqueued.elapsed(),
+        truncated: 0,
     });
 }
 
@@ -150,7 +156,8 @@ fn engine_loop(
     stop: Arc<AtomicBool>,
 ) {
     let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
-    let mut sched = ContinuousScheduler::new(max_batch, cfg.max_session_tokens, metrics);
+    let mut sched = ContinuousScheduler::new(max_batch, cfg.max_session_tokens, metrics)
+        .with_prefill_chunk(cfg.prefill_chunk);
     let mut pending: VecDeque<QueuedRequest> = VecDeque::new();
     let mut disconnected = false;
     loop {
@@ -248,15 +255,22 @@ fn engine_loop(
 //
 //   client:  GEN <max_new> <temperature> <top_k> <seed> <eos> <tok> <tok> ...
 //   server:  TOK <index> <token> <latency_us>      (one per generated token)
-//            END <reason> <n_tokens> <total_us>    (terminal; reason is
-//                                                   max_tokens|eos|shutdown)
+//            END <reason> <n_tokens> <total_us> <truncated>
+//                                                  (terminal; reason is
+//                                                   max_tokens|eos|shutdown;
+//                                                   truncated = prompt tokens
+//                                                   dropped to fit the model
+//                                                   window, usually 0)
 //       or:  ERR <message>                         (terminal)
 //
 // `<eos>` is -1 for "no EOS token"; `<temperature>` 0 means greedy (then
-// `<top_k>`/`<seed>` are ignored; pass 0).  "QUIT" closes the connection.
-// A malformed request gets exactly one terminal `ERR <reason>` line and
-// the connection is closed (a client that can't frame a GEN line can't
-// be trusted to stay in sync with a stream).
+// `<top_k>`/`<seed>` are ignored; pass 0).  Prompt tokens are
+// non-negative vocabulary ids — a negative token would alias into the
+// embedding table via the vocab modulus, so it is rejected at parse
+// time instead of silently decoding someone else's row.  "QUIT" closes
+// the connection.  A malformed request gets exactly one terminal
+// `ERR <reason>` line and the connection is closed (a client that can't
+// frame a GEN line can't be trusted to stay in sync with a stream).
 //
 // "SHUTDOWN" begins graceful process shutdown: the server stops
 // accepting, lets in-flight sessions finish streaming, then runs the
@@ -374,7 +388,13 @@ pub fn parse_gen_line(line: &str) -> Result<GenerateRequest> {
     let seed: u64 = it.next().context("missing seed")?.parse().context("seed")?;
     let eos: i64 = it.next().context("missing eos")?.parse().context("eos")?;
     let prompt: Vec<i32> = it
-        .map(|t| t.parse::<i32>().with_context(|| format!("bad token '{t}'")))
+        .map(|t| {
+            let tok = t.parse::<i32>().with_context(|| format!("bad token '{t}'"))?;
+            // negative ids would alias into the embed table through the
+            // vocab modulus — reject here, not deep in a gather
+            anyhow::ensure!(tok >= 0, "negative token '{t}'");
+            Ok(tok)
+        })
         .collect::<Result<_>>()?;
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     let mut stop = StopCriteria::max_tokens(max_new);
@@ -489,8 +509,14 @@ fn stream_session(writer: &mut TcpStream, rx: &Receiver<TokenEvent>) -> Result<(
                 reason,
                 tokens,
                 total,
+                truncated,
             }) => {
-                writeln!(writer, "END {reason} {} {}", tokens.len(), total.as_micros())?;
+                writeln!(
+                    writer,
+                    "END {reason} {} {} {truncated}",
+                    tokens.len(),
+                    total.as_micros()
+                )?;
                 return Ok(());
             }
             Err(_) => {
@@ -680,6 +706,8 @@ mod tests {
             ("GEN 4 0 0 -9 -1 1", "seed"),
             ("GEN 4 0 0 0 end 1", "eos"),
             ("GEN 4 0 0 0 -1 1 two 3", "bad token 'two'"),
+            ("GEN 4 0 0 0 -1 1 -5 3", "negative token '-5'"),
+            ("GEN 4 0 0 0 -1 -1", "negative token '-1'"),
         ] {
             let err = format!("{:#}", parse_gen_line(line).unwrap_err());
             assert!(err.contains(want), "line {line:?}: err {err:?} should name {want:?}");
@@ -703,6 +731,7 @@ mod tests {
                 "END" => {
                     assert_eq!(parts[1], "max_tokens");
                     assert_eq!(parts[2], "3");
+                    assert_eq!(parts[4], "0", "in-window prompt: nothing truncated");
                     break;
                 }
                 other => panic!("unexpected line kind {other}"),
@@ -713,6 +742,88 @@ mod tests {
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::SeqCst);
         coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_reports_truncation_on_the_wire() {
+        // CountBackend's window is 64: a 100-token prompt loses its
+        // first 36 positions, and the END line must say so instead of
+        // silently serving the tail
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
+        let prompt: String = (0..100).map(|_| " 7").collect();
+        writeln!(s, "GEN 2 0 0 0 -1{prompt}").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts[0] == "END" {
+                assert_eq!(parts[1], "max_tokens");
+                assert_eq!(parts[2], "2");
+                assert_eq!(parts[4], "36", "100-token prompt in a 64 window drops 36: {line}");
+                break;
+            }
+            assert_eq!(parts[0], "TOK", "unexpected line {line:?}");
+        }
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn negative_prompt_token_rejected_on_the_wire() {
+        // a negative id would alias into the embedding table via the
+        // vocab modulus — the server must refuse it with a field-naming
+        // ERR, not decode someone else's row
+        let (coord, addr, stop, _serve) =
+            serve_fixture(CountBackend::new(), cfg(4, 1));
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "GEN 2 0 0 0 -1 1 -7 3").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR bad request:"), "{line:?}");
+        assert!(line.contains("negative token '-7'"), "{line:?}");
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "connection closes after ERR");
+        stop.store(true, Ordering::SeqCst);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wire_sessions_chunk_invariant_through_the_engine_loop() {
+        // the same GEN line over servers configured with different
+        // prefill chunks must stream identical tokens — the engine-loop
+        // end of the determinism contract (DESIGN.md §2)
+        let run = |chunk: usize| {
+            let (coord, addr, stop, _serve) =
+                serve_fixture(CountBackend::new(), cfg(4, 1).with_prefill_chunk(chunk));
+            let mut s = TcpStream::connect(addr).unwrap();
+            writeln!(s, "GEN 3 0 0 0 -1 1 2 3 4 5").unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut toks = Vec::new();
+            loop {
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let parts: Vec<&str> = line.split_whitespace().collect();
+                match parts[0] {
+                    "TOK" => toks.push(parts[2].parse::<i32>().unwrap()),
+                    "END" => break,
+                    other => panic!("unexpected line kind {other}"),
+                }
+            }
+            writeln!(s, "QUIT").unwrap();
+            stop.store(true, Ordering::SeqCst);
+            coord.shutdown();
+            toks
+        };
+        let all_at_once = run(0);
+        assert_eq!(all_at_once, vec![5, 6, 7]);
+        for chunk in [1, 2, 4] {
+            assert_eq!(run(chunk), all_at_once, "chunk {chunk} changed the stream");
+        }
     }
 
     #[test]

@@ -165,6 +165,10 @@ pub enum TokenEvent {
         tokens: Vec<i32>,
         /// End-to-end time from enqueue to finish.
         total: Duration,
+        /// Prompt tokens dropped because the prompt exceeded the model
+        /// window (0 = nothing truncated) — surfaced so clients learn
+        /// the model never saw their prompt's head.
+        truncated: usize,
     },
 }
 
@@ -176,6 +180,8 @@ pub struct Completion {
     /// Time to first token (None when the request died before any token).
     pub ttft: Option<Duration>,
     pub total: Duration,
+    /// Prompt tokens dropped to fit the model window (0 = none).
+    pub truncated: usize,
 }
 
 /// Drain a session's event stream into a [`Completion`].  `timeout`
@@ -193,12 +199,14 @@ pub fn collect_stream(rx: &Receiver<TokenEvent>, timeout: Duration) -> Result<Co
                 reason,
                 tokens,
                 total,
+                truncated,
             }) => {
                 return Ok(Completion {
                     tokens,
                     reason,
                     ttft,
                     total,
+                    truncated,
                 })
             }
             Err(RecvTimeoutError::Timeout) => bail!("generation stream stalled for {timeout:?}"),

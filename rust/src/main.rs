@@ -33,6 +33,7 @@ fn main() -> Result<()> {
         ("port", args.flag("port")),
         ("max_batch", args.flag("max-batch")),
         ("max_wait_ms", args.flag("max-wait-ms")),
+        ("prefill_chunk", args.flag("prefill-chunk")),
         ("max_new_tokens", args.flag("max-new-tokens")),
         ("temperature", args.flag("temperature")),
         ("top_k", args.flag("top-k")),
@@ -374,7 +375,8 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     }
     let coord = Coordinator::start(
         backend,
-        SchedulerConfig::new(rt.max_batch, Duration::from_millis(rt.max_wait_ms)),
+        SchedulerConfig::new(rt.max_batch, Duration::from_millis(rt.max_wait_ms))
+            .with_prefill_chunk(rt.prefill_chunk),
     );
     let stop = Arc::new(AtomicBool::new(false));
     {
@@ -419,6 +421,7 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     for (flag, value) in [
         ("--max-batch", rt.max_batch.to_string()),
         ("--max-wait-ms", rt.max_wait_ms.to_string()),
+        ("--prefill-chunk", rt.prefill_chunk.to_string()),
         ("--workers", rt.workers.to_string()),
         ("--seed", rt.seed.to_string()),
     ] {

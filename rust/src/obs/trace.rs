@@ -40,6 +40,8 @@ pub enum Stage {
     Reduce,
     /// Shared down projection.
     DownProject,
+    /// One backend step that ingests prompt rows (chunked prefill).
+    Prefill,
     /// One `ContinuousScheduler::step` (admission + decode + retire).
     SchedStep,
     /// One `Backend::tick_caches` residency sweep.
@@ -47,13 +49,14 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const ALL: [Stage; 8] = [
+    pub const ALL: [Stage; 9] = [
         Stage::Gather,
         Stage::Rotate,
         Stage::TernaryGemm,
         Stage::CachedGemm,
         Stage::Reduce,
         Stage::DownProject,
+        Stage::Prefill,
         Stage::SchedStep,
         Stage::CacheTick,
     ];
@@ -67,6 +70,7 @@ impl Stage {
             Stage::CachedGemm => "cached_gemm",
             Stage::Reduce => "reduce",
             Stage::DownProject => "down_project",
+            Stage::Prefill => "prefill",
             Stage::SchedStep => "sched_step",
             Stage::CacheTick => "cache_tick",
         }
@@ -77,7 +81,8 @@ static SAMPLE: AtomicU32 = AtomicU32::new(0);
 
 /// Per-stage decimation counters (every instrumented occurrence bumps
 /// its stage's counter; every Nth arms a timer).
-static DECIM: [AtomicU64; 8] = [
+static DECIM: [AtomicU64; 9] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

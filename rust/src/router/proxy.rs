@@ -10,9 +10,12 @@
 //!
 //! Router-specific terminals, all explicit and immediate:
 //!
-//! * `END shed 0 <us>` — admission shed the session (queue full, client
-//!   cap, or a bounded queue wait expired).
-//! * `END shutdown 0 <us>` — the router is draining.
+//! * `END shed 0 <us> 0` — admission shed the session (queue full,
+//!   client cap, or a bounded queue wait expired).
+//! * `END shutdown 0 <us> 0` — the router is draining.
+//!
+//! (The trailing field mirrors the worker END line's truncated count —
+//! always 0 here, since a shed session never reached a model window.)
 //! * `ERR worker lost` — the placed worker died mid-stream; the session
 //!   is over (generation state died with the worker) but the client got
 //!   a terminal event, not a hung stream.
@@ -107,11 +110,11 @@ pub(super) fn proxy_session(
             obs::Event::new("session_shed")
                 .str("client", client_ip.to_string())
                 .emit();
-            writeln!(writer, "END shed 0 {}", t0.elapsed().as_micros())?;
+            writeln!(writer, "END shed 0 {} 0", t0.elapsed().as_micros())?;
             return Ok(());
         }
         Ticket::Draining => {
-            writeln!(writer, "END shutdown 0 {}", t0.elapsed().as_micros())?;
+            writeln!(writer, "END shutdown 0 {} 0", t0.elapsed().as_micros())?;
             return Ok(());
         }
         Ticket::Admitted => {}

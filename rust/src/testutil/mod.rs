@@ -113,15 +113,26 @@ impl Backend for CountBackend {
         if self.delay > Duration::ZERO {
             std::thread::sleep(self.delay);
         }
+        let (seq_len, chunk) = (self.seq_len(), batch.prefill_chunk);
         Ok(batch
             .seqs
-            .iter()
+            .iter_mut()
             .map(|s| {
-                let mut logits = vec![0.0f32; self.vocab];
-                logits[s.tokens.len() % self.vocab] = 1.0;
+                let was_prefill = !s.prefill_done();
+                let span = s.next_span(seq_len, chunk);
+                // mid-prefill steps carry no logits; once the prompt is
+                // consumed, logits peak at (context length % vocab) so
+                // greedy streams depend only on prompt length — the
+                // historical behaviour at the default chunk 0
+                let logits = s.prefill_done().then(|| {
+                    let mut logits = vec![0.0f32; self.vocab];
+                    logits[s.tokens.len() % self.vocab] = 1.0;
+                    logits
+                });
                 StepOutput {
                     seq_id: s.id,
                     logits,
+                    prefilled: if was_prefill { span.len() } else { 0 },
                 }
             })
             .collect())

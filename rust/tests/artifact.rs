@@ -73,7 +73,7 @@ fn step_logits(backend: &NativeLmBackend) -> Vec<Vec<f32>> {
         .step(&mut probe_batch())
         .unwrap()
         .into_iter()
-        .map(|o| o.logits)
+        .map(|o| o.logits.expect("all-at-once prefill emits logits"))
         .collect()
 }
 
@@ -196,16 +196,16 @@ fn python_fixture_loads_and_pins_logits() {
         let scale = want.iter().fold(0.0f32, |a, v| a.max(v.abs()));
         let mut logits_per_prompt = Vec::new();
         for (i, o) in out.iter().enumerate() {
+            let logits = o.logits.as_ref().expect("all-at-once prefill emits logits");
             let row = &want[i * m.vocab..(i + 1) * m.vocab];
-            for (j, (&got, &exp)) in o.logits.iter().zip(row).enumerate() {
+            for (j, (&got, &exp)) in logits.iter().zip(row).enumerate() {
                 assert!(
                     (got - exp).abs() / scale < 1e-3,
                     "{} load, prompt {i} logit {j}: got {got}, python reference {exp}",
                     mode.name()
                 );
             }
-            let argmax = o
-                .logits
+            let argmax = logits
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -217,7 +217,7 @@ fn python_fixture_loads_and_pins_logits() {
                 "{} load, prompt {i}: decoded token diverged from the python reference",
                 mode.name()
             );
-            logits_per_prompt.push(o.logits.clone());
+            logits_per_prompt.push(logits.clone());
         }
         per_mode.push(logits_per_prompt);
     }

@@ -19,7 +19,8 @@
 //! * and the multi-layer model artifact composes with all of it: a
 //!   packed 2-layer model decodes streams identical to the in-memory
 //!   stack it was packed from, for every loader (mmap/heap) × worker
-//!   count × cache budget (DESIGN.md §3's bit-identity contract).
+//!   count × cache budget × prefill chunk size ({1, 4, all} — chunked
+//!   prompt ingestion never changes decoded bits, DESIGN.md §2/§3).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -153,6 +154,10 @@ fn token_streams_bitwise_identical_with_tracing_on() {
         stages.iter().any(|s| s.stage == trace::Stage::SchedStep && s.hist.n > 0),
         "no scheduler-step samples recorded: {stages:?}"
     );
+    assert!(
+        stages.iter().any(|s| s.stage == trace::Stage::Prefill && s.hist.n > 0),
+        "no prefill samples recorded: {stages:?}"
+    );
 }
 
 #[test]
@@ -204,22 +209,39 @@ fn full_forward_identical_across_workers() {
 // Multi-layer packed model (the artifact subsystem's determinism story)
 // ---------------------------------------------------------------------------
 
-/// Stream the prompt set through a coordinator over `backend`.
-fn streams_of(backend: Arc<NativeLmBackend>) -> Vec<Vec<i32>> {
+/// Stream the prompt set through a coordinator over `backend`, with
+/// prompts ingested in `prefill_chunk`-token bites (0 = all at once).
+fn streams_of(backend: Arc<NativeLmBackend>, prefill_chunk: usize) -> Vec<Vec<i32>> {
     warm(backend.as_ref()).unwrap();
-    let coord = Coordinator::start(backend, SchedulerConfig::new(6, Duration::from_millis(200)));
+    let coord = Coordinator::start(
+        backend,
+        SchedulerConfig::new(6, Duration::from_millis(200)).with_prefill_chunk(prefill_chunk),
+    );
+    let n_sessions = prompt_set().len() as u64;
     let rxs: Vec<_> = prompt_set().into_iter().map(|r| coord.submit(r)).collect();
     let streams = rxs
         .into_iter()
         .map(|rx| collect_stream(&rx, Duration::from_secs(60)).unwrap().tokens)
         .collect();
+    // TTFT fires once per session, on the first *decoded* token — never
+    // per prefill chunk (the non-vacuous check: ttft_count would read
+    // high under chunked prefill if mid-prefill steps recorded it)
+    let snap = coord.metrics.snapshot();
+    assert_eq!(
+        snap.ttft_count, n_sessions,
+        "chunk {prefill_chunk}: TTFT must be recorded exactly once per session"
+    );
     coord.shutdown();
     streams
 }
 
 /// A packed 2-layer model must decode the exact token streams of the
 /// in-memory model it was packed from — for every load mode (mmap /
-/// heap), worker count, and cache budget.  This is the multi-layer
+/// heap), worker count, cache budget, **and prefill chunk size**
+/// ({1, 4, all}: a prompt prefilled one token at a time, in 4-token
+/// bites, or all at once decodes the bit-identical stream — chunking
+/// changes *when* rows enter the pooled state, never the float
+/// association of a step, DESIGN.md §2).  This is the multi-layer
 /// extension of the single-layer invariants above, and the acceptance
 /// gate of `bmoe pack-model` + `bmoe serve --native --model`.
 #[test]
@@ -240,8 +262,8 @@ fn packed_multi_layer_streams_identical_across_loaders_workers_budgets() {
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("lm2.bmoe");
     model.pack(&path).unwrap();
-    // reference: the in-memory stack, sequential, uncached
-    let reference = streams_of(Arc::new(NativeLmBackend::from_synth(model, 8, None, 0)));
+    // reference: the in-memory stack, sequential, uncached, all-at-once
+    let reference = streams_of(Arc::new(NativeLmBackend::from_synth(model, 8, None, 0)), 0);
     assert!(reference.iter().all(|s| !s.is_empty()));
 
     let modes = if Mmap::supported() {
@@ -254,21 +276,24 @@ fn packed_multi_layer_streams_identical_across_loaders_workers_budgets() {
     for mode in modes {
         for workers in [1usize, 8] {
             for budget in [0usize, partial] {
-                let artifact = ModelArtifact::load(&path, mode).unwrap();
-                let backend = NativeLmBackend::from_artifact(
-                    &artifact,
-                    8,
-                    Some(Arc::new(WorkerPool::new(workers))),
-                    budget,
-                )
-                .unwrap();
-                let streams = streams_of(Arc::new(backend));
-                assert_eq!(
-                    streams, reference,
-                    "{} load, workers={workers}, budget={budget}: token streams \
-                     diverged from the in-memory model",
-                    mode.name()
-                );
+                for chunk in [1usize, 4, 0] {
+                    let artifact = ModelArtifact::load(&path, mode).unwrap();
+                    let backend = NativeLmBackend::from_artifact(
+                        &artifact,
+                        8,
+                        Some(Arc::new(WorkerPool::new(workers))),
+                        budget,
+                    )
+                    .unwrap();
+                    let streams = streams_of(Arc::new(backend), chunk);
+                    assert_eq!(
+                        streams, reference,
+                        "{} load, workers={workers}, budget={budget}, \
+                         prefill_chunk={chunk}: token streams diverged from the \
+                         in-memory model",
+                        mode.name()
+                    );
+                }
             }
         }
     }

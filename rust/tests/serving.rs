@@ -162,6 +162,69 @@ fn eos_cuts_generation_short() {
 }
 
 #[test]
+fn oversized_prompt_truncates_explicitly_and_decodes_the_tail() {
+    // native fixture window is 32: a 100-token prompt drops its first
+    // 68 positions, the completion says so, and the decoded stream is
+    // exactly what the surviving 32-token suffix alone produces
+    let coord = Coordinator::start(
+        native_backend(8),
+        SchedulerConfig::new(8, Duration::from_millis(1)),
+    );
+    let long: Vec<i32> = (0..100).map(|i| (i * 7) % 512).collect();
+    let tail = long[68..].to_vec();
+    let c_long = coord
+        .generate(GenerateRequest::greedy(long, 6))
+        .unwrap();
+    assert_eq!(c_long.truncated, 68, "dropped prompt head must be surfaced");
+    let c_tail = coord.generate(GenerateRequest::greedy(tail, 6)).unwrap();
+    assert_eq!(c_tail.truncated, 0, "in-window prompt truncates nothing");
+    assert_eq!(
+        c_long.tokens, c_tail.tokens,
+        "the model must see exactly the surviving suffix"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn chunked_prefill_streams_identical_to_all_at_once() {
+    // coordinator-level chunk invariance over the real native backend:
+    // same sessions, chunks {1, 4, 0} — identical streams, and TTFT
+    // fires once per session (on the first decoded token)
+    let run = |chunk: usize| {
+        let coord = Coordinator::start(
+            native_backend(8),
+            SchedulerConfig::new(8, Duration::from_millis(2)).with_prefill_chunk(chunk),
+        );
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                coord.submit(GenerateRequest::greedy(
+                    (0..9).map(|j| ((i * 131 + j * 17) % 512) as i32).collect(),
+                    6,
+                ))
+            })
+            .collect();
+        let streams: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| collect_stream(&rx, Duration::from_secs(30)).unwrap().tokens)
+            .collect();
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.ttft_count, 4, "chunk {chunk}: one TTFT per session");
+        assert_eq!(snap.tokens, 24, "chunk {chunk}: 4 sessions x 6 tokens");
+        assert_eq!(
+            snap.prefill_tokens, 4 * 9,
+            "chunk {chunk}: every prompt token counted exactly once"
+        );
+        coord.shutdown();
+        streams
+    };
+    let reference = run(0);
+    assert!(reference.iter().all(|s| s.len() == 6));
+    for chunk in [1usize, 4] {
+        assert_eq!(run(chunk), reference, "chunk {chunk} changed a stream");
+    }
+}
+
+#[test]
 fn mixed_length_workload_short_finishes_first() {
     let coord = Coordinator::start(
         native_backend(8),
