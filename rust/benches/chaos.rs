@@ -1,0 +1,355 @@
+//! Chaos bench: deterministic fault schedules against a REAL fleet —
+//! the robustness companion to `router_load` (DESIGN.md §8).
+//!
+//! Boots `bmoe route` machinery over real child `bmoe serve --native
+//! --model <tiny.bmoe> --load mmap` processes and drives sequential
+//! generation sessions while a seeded fault plan SIGKILLs placed
+//! workers mid-stream (`kill_after` relayed tokens).  Because the
+//! engine's determinism contract pins bit-identical streams across
+//! workers, every completed session is compared token-for-token against
+//! a fault-free reference — failover must be invisible to the client.
+//!
+//! Reports, per fault level: sessions completed / shed / lost,
+//! failovers taken, replayed (verified + suppressed) tokens, and how
+//! long the fleet took to return to full healthy capacity after the
+//! plan cleared.
+//!
+//! Output: `runs/tables/chaos.csv` and machine-readable
+//! `BENCH_chaos.json` at the repo root.
+//!
+//! Run: `cargo bench --bench chaos`
+//! CI:  `cargo bench --bench chaos -- smoke` — one kill per run, gating
+//! zero lost accepted sessions, >= 1 failover, bit-identical completed
+//! streams, and recovery to full capacity.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use butterfly_moe::artifact::{synthesize, SynthSpec};
+use butterfly_moe::bench::Table;
+use butterfly_moe::faults::{self, FaultPlan};
+use butterfly_moe::router::{worker::ProcessLauncher, Router, RouterConfig};
+
+const BUDGET: usize = 24;
+const KILL_AFTER: u64 = 8;
+
+fn pack_tiny_model(dir: &Path) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("chaos_bench_tiny.bmoe");
+    let spec = SynthSpec {
+        d_model: 64,
+        d_ff: 256,
+        n_experts: 4,
+        top_k: 2,
+        n_layers: 1,
+        vocab: 128,
+        seq_len: 32,
+        depth: None,
+        seed: 7,
+    };
+    synthesize(&spec).pack(&path)?;
+    Ok(path)
+}
+
+fn boot_router(model: &Path, fleet: usize) -> anyhow::Result<(Arc<Router>, SocketAddr)> {
+    let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_bmoe"));
+    let wargs: Vec<String> = [
+        "--native",
+        "--model",
+        model.to_str().unwrap(),
+        "--load",
+        "mmap",
+        "--max-batch",
+        "8",
+        "--workers",
+        "1",
+        "--no-warmup",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let cfg = RouterConfig {
+        port: 0,
+        fleet,
+        sessions_per_worker: 8,
+        max_queue: 32,
+        client_cap: 0,
+        health_interval: Duration::from_millis(100),
+        backoff_base: Duration::from_millis(100),
+        failover_retries: 4,
+        failover_wait: Duration::from_secs(30),
+        ..RouterConfig::default()
+    };
+    let (listener, addr) = butterfly_moe::util::net::listen_reuse(0)?;
+    let router = Router::start(cfg, Arc::new(ProcessLauncher::new(bin, wargs)))?;
+    {
+        let router = router.clone();
+        std::thread::spawn(move || router.serve(listener));
+    }
+    Ok((router, addr))
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Completed,
+    Shed,
+    Lost,
+}
+
+/// One session over the wire; returns the outcome and the deterministic
+/// payload (`<index> <token>`) of every TOK line, for bit-identity
+/// comparison against the fault-free reference.
+fn run_session(addr: SocketAddr, gen: &str) -> (Outcome, Vec<String>) {
+    let mut payloads = Vec::new();
+    let Ok(mut s) = TcpStream::connect(addr) else {
+        return (Outcome::Lost, payloads);
+    };
+    s.set_nodelay(true).ok();
+    if writeln!(s, "{gen}").is_err() {
+        return (Outcome::Lost, payloads);
+    }
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return (Outcome::Lost, payloads),
+            Ok(_) => {}
+        }
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            let mut it = rest.split_whitespace();
+            if let (Some(i), Some(t)) = (it.next(), it.next()) {
+                payloads.push(format!("{i} {t}"));
+            }
+        } else if line.starts_with("END shed") || line.starts_with("END shutdown") {
+            return (Outcome::Shed, payloads);
+        } else if line.starts_with("END ") {
+            return (Outcome::Completed, payloads);
+        } else {
+            return (Outcome::Lost, payloads);
+        }
+    }
+}
+
+fn wait_full_capacity(router: &Router, fleet: usize, budget: Duration) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    while router.fleet.healthy() != fleet {
+        anyhow::ensure!(
+            t0.elapsed() < budget,
+            "fleet never returned to full capacity ({}/{fleet} healthy)",
+            router.fleet.healthy()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    Ok(1e3 * t0.elapsed().as_secs_f64())
+}
+
+struct Level {
+    name: &'static str,
+    kill_prob: f64,
+    kill_limit: u64,
+    sessions: usize,
+}
+
+struct LevelResult {
+    completed: usize,
+    shed: usize,
+    lost: usize,
+    mismatched: usize,
+    failovers: u64,
+    replayed: u64,
+    recovery_ms: f64,
+}
+
+/// Run one fault level: install the plan, drive sequential sessions,
+/// clear the plan, and wait out fleet recovery.
+fn drive_level(
+    router: &Arc<Router>,
+    addr: SocketAddr,
+    fleet: usize,
+    gen: &str,
+    reference: &[String],
+    level: &Level,
+) -> anyhow::Result<LevelResult> {
+    let failovers0 = router.stats.failovers.load(Ordering::Relaxed);
+    let replayed0 = router.stats.replayed_tokens.lock().unwrap().sum as u64;
+    faults::install(FaultPlan {
+        seed: 0xC4A05,
+        kill_after: if level.kill_prob > 0.0 { KILL_AFTER } else { 0 },
+        kill_prob: level.kill_prob,
+        kill_limit: level.kill_limit,
+        ..FaultPlan::default()
+    });
+    let (mut completed, mut shed, mut lost, mut mismatched) = (0usize, 0usize, 0usize, 0usize);
+    for _ in 0..level.sessions {
+        let (outcome, payloads) = run_session(addr, gen);
+        match outcome {
+            Outcome::Completed => {
+                completed += 1;
+                if payloads != reference {
+                    mismatched += 1;
+                }
+            }
+            Outcome::Shed => shed += 1,
+            Outcome::Lost => lost += 1,
+        }
+    }
+    faults::clear();
+    let recovery_ms = wait_full_capacity(router, fleet, Duration::from_secs(60))?;
+    Ok(LevelResult {
+        completed,
+        shed,
+        lost,
+        mismatched,
+        failovers: router.stats.failovers.load(Ordering::Relaxed) - failovers0,
+        replayed: router.stats.replayed_tokens.lock().unwrap().sum as u64 - replayed0,
+        recovery_ms,
+    })
+}
+
+fn level_json_row(l: &Level, r: &LevelResult) -> String {
+    format!(
+        "    {{\"level\": \"{}\", \"kill_prob\": {:.2}, \"kill_limit\": {}, \
+         \"sessions\": {}, \"completed\": {}, \"shed\": {}, \"lost\": {}, \
+         \"mismatched\": {}, \"failovers\": {}, \"replayed_tokens\": {}, \
+         \"recovery_ms\": {:.0}}}",
+        l.name,
+        l.kill_prob,
+        l.kill_limit,
+        l.sessions,
+        r.completed,
+        r.shed,
+        r.lost,
+        r.mismatched,
+        r.failovers,
+        r.replayed,
+        r.recovery_ms,
+    )
+}
+
+fn write_bench_json(mode: &str, levels: &[String]) -> std::io::Result<()> {
+    let body = format!(
+        "{{\n  \"schema\": \"bmoe_chaos_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"budget_tokens\": {BUDGET},\n  \"kill_after\": {KILL_AFTER},\n  \
+         \"levels\": [\n{}\n  ]\n}}\n",
+        levels.join(",\n"),
+    );
+    std::fs::write("BENCH_chaos.json", body)?;
+    println!("\nwrote BENCH_chaos.json (mode {mode})");
+    Ok(())
+}
+
+fn run(mode: &str) -> anyhow::Result<()> {
+    let smoke = mode == "smoke";
+    let out = Path::new("runs/tables");
+    std::fs::create_dir_all(out)?;
+    let model = pack_tiny_model(out)?;
+    let fleet = 2usize;
+    let gen = format!("GEN {BUDGET} 0 0 0 -1 1 2");
+    let levels: &[Level] = if smoke {
+        &[Level { name: "one_kill", kill_prob: 1.0, kill_limit: 1, sessions: 8 }]
+    } else {
+        &[
+            Level { name: "calm", kill_prob: 0.0, kill_limit: 0, sessions: 16 },
+            Level { name: "kill_half", kill_prob: 0.5, kill_limit: 0, sessions: 24 },
+            Level { name: "kill_every", kill_prob: 1.0, kill_limit: 0, sessions: 24 },
+        ]
+    };
+
+    let (router, addr) = boot_router(&model, fleet)?;
+    // fault-free reference stream: the bit-identity yardstick for every
+    // completed session below
+    let (outcome, reference) = run_session(addr, &gen);
+    anyhow::ensure!(outcome == Outcome::Completed, "reference session failed");
+    anyhow::ensure!(reference.len() == BUDGET, "reference length {}", reference.len());
+
+    let mut table = Table::new(
+        &format!("Chaos schedules (fleet={fleet}, kill after {KILL_AFTER} of {BUDGET} tokens)"),
+        &[
+            "Level",
+            "Kill prob",
+            "Sessions",
+            "Completed",
+            "Shed",
+            "Lost",
+            "Mismatched",
+            "Failovers",
+            "Replayed tok",
+            "Recovery ms",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for level in levels {
+        let r = drive_level(&router, addr, fleet, &gen, &reference, level)?;
+        table.row(&[
+            level.name.to_string(),
+            format!("{:.2}", level.kill_prob),
+            level.sessions.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.lost.to_string(),
+            r.mismatched.to_string(),
+            r.failovers.to_string(),
+            r.replayed.to_string(),
+            format!("{:.0}", r.recovery_ms),
+        ]);
+        rows.push(level_json_row(level, &r));
+        results.push(r);
+    }
+    let lossless = router.drain();
+    table.print();
+    table.write_csv(&out.join("chaos.csv"))?;
+    write_bench_json(mode, &rows)?;
+
+    // ------------------------------------------------------------------
+    // gates: failover must be invisible — no accepted session lost or
+    // shed, every completed stream bit-identical, fleet recovered
+    // ------------------------------------------------------------------
+    for (level, r) in levels.iter().zip(&results) {
+        anyhow::ensure!(
+            r.lost == 0,
+            "level {}: {} accepted session(s) lost — failover must absorb kills",
+            level.name,
+            r.lost
+        );
+        anyhow::ensure!(r.shed == 0, "level {}: {} shed under sequential load", level.name, r.shed);
+        anyhow::ensure!(
+            r.completed == level.sessions,
+            "level {}: {}/{} sessions completed",
+            level.name,
+            r.completed,
+            level.sessions
+        );
+        anyhow::ensure!(
+            r.mismatched == 0,
+            "level {}: {} completed stream(s) diverged from the fault-free reference",
+            level.name,
+            r.mismatched
+        );
+        if level.kill_prob >= 1.0 {
+            anyhow::ensure!(
+                r.failovers >= 1,
+                "level {}: kills were scheduled but no failover happened",
+                level.name
+            );
+        }
+    }
+    anyhow::ensure!(lossless, "final drain must be loss-free");
+    let total_failovers: u64 = results.iter().map(|r| r.failovers).sum();
+    println!(
+        "gates OK: every session completed bit-identically through {total_failovers} failover(s), \
+         0 lost, fleet recovered after every level"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke")
+        || std::env::var("BMOE_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    run(if smoke { "smoke" } else { "full" })
+}

@@ -100,9 +100,19 @@ impl MappedStore {
     pub fn open(path: &Path, mode: LoadMode) -> Result<MappedStore> {
         let backing = match mode {
             LoadMode::Mmap => Backing::Mapped(Mmap::map(path)?),
-            LoadMode::Heap => Backing::Heap(
-                std::fs::read(path).with_context(|| format!("read {}", path.display()))?,
-            ),
+            LoadMode::Heap => {
+                let mut bytes =
+                    std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+                // chaos hook (inert without a fault plan): simulate bit
+                // rot on the loaded image to exercise the checksum path
+                if let Some(off) = crate::faults::artifact_bitflip(&mut bytes) {
+                    crate::obs::log(
+                        "faults",
+                        &format!("flipped artifact byte at offset {off} of {}", path.display()),
+                    );
+                }
+                Backing::Heap(bytes)
+            }
         };
         Self::parse(Arc::new(backing), mode).with_context(|| format!("parse {}", path.display()))
     }

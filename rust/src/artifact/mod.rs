@@ -81,6 +81,76 @@ pub struct ModelManifest {
     pub depth_out: usize,
 }
 
+/// Integrity record embedded in the `__model__` manifest since the
+/// checksum-era packer: per-tensor CRC-32s plus whole-payload totals, so
+/// a truncated or bit-rotted artifact is rejected *before* any decode
+/// (DESIGN.md §8).  Optional on read — manifests packed before this
+/// existed still load; they just can't be verified.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelIntegrity {
+    /// Total bytes of checksummed tensor payloads (everything except the
+    /// manifest itself and `__pad.*` fillers, whose sizes depend on the
+    /// manifest's own length — excluding them keeps the record
+    /// non-circular).
+    pub payload_bytes: u64,
+    /// CRC-32 over the checksummed payloads concatenated in file order.
+    pub payload_crc: u32,
+    /// Per-tensor CRC-32 keyed by tensor name.
+    pub checksums: std::collections::BTreeMap<String, u32>,
+}
+
+/// Is `name` covered by the integrity record?
+fn integrity_covers(name: &str) -> bool {
+    name != MANIFEST_TENSOR && !name.starts_with("__pad.")
+}
+
+impl ModelIntegrity {
+    /// JSON fields spliced into the manifest object (no outer braces).
+    fn to_json_fields(&self) -> String {
+        let sums: Vec<String> = self
+            .checksums
+            .iter()
+            .map(|(k, v)| format!("\"{k}\":{v}"))
+            .collect();
+        format!(
+            "\"payload_bytes\":{},\"payload_crc\":{},\"checksums\":{{{}}}",
+            self.payload_bytes,
+            self.payload_crc,
+            sums.join(",")
+        )
+    }
+
+    /// Parse from the manifest bytes.  `Ok(None)` when the manifest
+    /// predates integrity records.
+    pub fn parse(bytes: &[u8]) -> Result<Option<ModelIntegrity>> {
+        let text = std::str::from_utf8(bytes).context("model manifest is not utf-8")?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("model manifest: {e}"))?;
+        let Some(payload_bytes) = j.get("payload_bytes").and_then(Json::as_f64) else {
+            return Ok(None);
+        };
+        let payload_crc = j
+            .get("payload_crc")
+            .and_then(Json::as_f64)
+            .context("manifest has payload_bytes but no payload_crc")? as u32;
+        let obj = j
+            .get("checksums")
+            .and_then(Json::as_obj)
+            .context("manifest has payload_bytes but no checksums object")?;
+        let mut checksums = std::collections::BTreeMap::new();
+        for (k, v) in obj {
+            let c = v
+                .as_f64()
+                .with_context(|| format!("checksum for tensor '{k}' is not a number"))?;
+            checksums.insert(k.clone(), c as u32);
+        }
+        Ok(Some(ModelIntegrity {
+            payload_bytes: payload_bytes as u64,
+            payload_crc,
+            checksums,
+        }))
+    }
+}
+
 impl ModelManifest {
     pub fn to_json(&self) -> String {
         format!(
@@ -276,43 +346,50 @@ fn u64_bytes(v: &[u64]) -> Vec<u8> {
     out
 }
 
-/// Pack a ButterflyMoE layer stack (+ embed/readout) into a `.bmoe`
-/// model artifact at `path`.  Tensor naming and layout are normative in
-/// DESIGN.md §3; both the raw angle tensors (provenance / python
-/// interop) and the precomputed `*_cs` (cos, sin) serving tables are
-/// written, so a loaded model performs bit-identical arithmetic to the
-/// in-memory stack that was packed — no trig at load time.
-pub fn pack_model(
-    path: &Path,
-    manifest: &ModelManifest,
+/// One tensor staged for packing (two-pass: checksums over the staged
+/// payloads go *into* the manifest, which is written first).
+struct Pending {
+    name: String,
+    code: u8,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+    /// bulk tensors get a `__pad.*` filler so their payload is
+    /// [`DATA_ALIGN`]-aligned; scalars skip it
+    aligned: bool,
+}
+
+/// Stage every model tensor (everything except the manifest) in file
+/// order.
+fn stage_tensors(
+    m: &ModelManifest,
     embed: &[f32],
     readout: &[f32],
     layers: &[ButterflyMoeLayer],
-) -> Result<PackStats> {
-    let m = manifest;
-    anyhow::ensure!(m.n_layers == layers.len(), "manifest/layer-count mismatch");
-    anyhow::ensure!(embed.len() == m.vocab * m.d_model, "embed shape mismatch");
-    anyhow::ensure!(readout.len() == m.vocab * m.d_model, "readout shape mismatch");
-    let mut w = PackWriter::create(path)?;
-    let json = m.to_json();
-    w.raw_tensor(
-        MANIFEST_TENSOR,
-        mapped::DTYPE_U8,
-        &[json.len()],
-        json.as_bytes(),
-    )?;
-    w.aligned_tensor(
-        "embed",
+) -> Result<Vec<Pending>> {
+    let mut out = Vec::new();
+    let mut push = |name: String, code: u8, shape: Vec<usize>, data: Vec<u8>, aligned: bool| {
+        out.push(Pending {
+            name,
+            code,
+            shape,
+            data,
+            aligned,
+        });
+    };
+    push(
+        "embed".into(),
         mapped::DTYPE_F32,
-        &[m.vocab, m.d_model],
-        &f32_bytes(embed),
-    )?;
-    w.aligned_tensor(
-        "readout",
+        vec![m.vocab, m.d_model],
+        f32_bytes(embed),
+        true,
+    );
+    push(
+        "readout".into(),
         mapped::DTYPE_F32,
-        &[m.vocab, m.d_model],
-        &f32_bytes(readout),
-    )?;
+        vec![m.vocab, m.d_model],
+        f32_bytes(readout),
+        true,
+    );
     let (half_in, half_out) = (m.d_model / 2, m.d_ff / 2);
     for (l, layer) in layers.iter().enumerate() {
         anyhow::ensure!(
@@ -324,30 +401,34 @@ pub fn pack_model(
         let sub = &layer.substrate;
         let wpr = sub.words_per_row();
         let prefix = format!("layers.{l}");
-        w.aligned_tensor(
-            &format!("{prefix}.gate"),
+        push(
+            format!("{prefix}.gate"),
             mapped::DTYPE_F32,
-            &[m.n_experts, m.d_model],
-            &f32_bytes(&layer.gate.w.data),
-        )?;
-        w.raw_tensor(
-            &format!("{prefix}.substrate.gamma"),
+            vec![m.n_experts, m.d_model],
+            f32_bytes(&layer.gate.w.data),
+            true,
+        );
+        push(
+            format!("{prefix}.substrate.gamma"),
             mapped::DTYPE_F32,
-            &[],
-            &sub.gamma.to_le_bytes(),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.substrate.plus"),
+            vec![],
+            sub.gamma.to_le_bytes().to_vec(),
+            false,
+        );
+        push(
+            format!("{prefix}.substrate.plus"),
             mapped::DTYPE_U8,
-            &[m.d_ff, wpr * 8],
-            &u64_bytes(sub.plus_words()),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.substrate.minus"),
+            vec![m.d_ff, wpr * 8],
+            u64_bytes(sub.plus_words()),
+            true,
+        );
+        push(
+            format!("{prefix}.substrate.minus"),
             mapped::DTYPE_U8,
-            &[m.d_ff, wpr * 8],
-            &u64_bytes(sub.minus_words()),
-        )?;
+            vec![m.d_ff, wpr * 8],
+            u64_bytes(sub.minus_words()),
+            true,
+        );
         // stacked per-expert tables: angles then serving (cos, sin)
         let mut theta = Vec::with_capacity(m.n_experts * m.depth_in * half_in);
         let mut theta_cs = Vec::with_capacity(2 * theta.capacity());
@@ -363,36 +444,101 @@ pub fn pack_model(
             phi.extend_from_slice(ex.phi.angles());
             phi_cs.extend_from_slice(ex.phi.cs_table());
         }
-        w.aligned_tensor(
-            &format!("{prefix}.theta"),
+        push(
+            format!("{prefix}.theta"),
             mapped::DTYPE_F32,
-            &[m.n_experts, m.depth_in, half_in],
-            &f32_bytes(&theta),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.theta_cs"),
+            vec![m.n_experts, m.depth_in, half_in],
+            f32_bytes(&theta),
+            true,
+        );
+        push(
+            format!("{prefix}.theta_cs"),
             mapped::DTYPE_F32,
-            &[m.n_experts, m.depth_in, half_in, 2],
-            &f32_bytes(&theta_cs),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.phi"),
+            vec![m.n_experts, m.depth_in, half_in, 2],
+            f32_bytes(&theta_cs),
+            true,
+        );
+        push(
+            format!("{prefix}.phi"),
             mapped::DTYPE_F32,
-            &[m.n_experts, m.depth_out, half_out],
-            &f32_bytes(&phi),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.phi_cs"),
+            vec![m.n_experts, m.depth_out, half_out],
+            f32_bytes(&phi),
+            true,
+        );
+        push(
+            format!("{prefix}.phi_cs"),
             mapped::DTYPE_F32,
-            &[m.n_experts, m.depth_out, half_out, 2],
-            &f32_bytes(&phi_cs),
-        )?;
-        w.aligned_tensor(
-            &format!("{prefix}.w_down"),
+            vec![m.n_experts, m.depth_out, half_out, 2],
+            f32_bytes(&phi_cs),
+            true,
+        );
+        push(
+            format!("{prefix}.w_down"),
             mapped::DTYPE_F32,
-            &[m.d_model, m.d_ff],
-            &f32_bytes(layer.w_down_data()),
-        )?;
+            vec![m.d_model, m.d_ff],
+            f32_bytes(layer.w_down_data()),
+            true,
+        );
+    }
+    Ok(out)
+}
+
+/// Pack a ButterflyMoE layer stack (+ embed/readout) into a `.bmoe`
+/// model artifact at `path`.  Tensor naming and layout are normative in
+/// DESIGN.md §3; both the raw angle tensors (provenance / python
+/// interop) and the precomputed `*_cs` (cos, sin) serving tables are
+/// written, so a loaded model performs bit-identical arithmetic to the
+/// in-memory stack that was packed — no trig at load time.
+///
+/// Two passes: tensors are staged first so their CRC-32s and total
+/// payload length land *inside* the manifest (written first in the
+/// file), giving loaders an integrity record to preflight against
+/// (DESIGN.md §8).
+pub fn pack_model(
+    path: &Path,
+    manifest: &ModelManifest,
+    embed: &[f32],
+    readout: &[f32],
+    layers: &[ButterflyMoeLayer],
+) -> Result<PackStats> {
+    use crate::util::crc32::{crc32, crc32_update};
+    let m = manifest;
+    anyhow::ensure!(m.n_layers == layers.len(), "manifest/layer-count mismatch");
+    anyhow::ensure!(embed.len() == m.vocab * m.d_model, "embed shape mismatch");
+    anyhow::ensure!(readout.len() == m.vocab * m.d_model, "readout shape mismatch");
+    let staged = stage_tensors(m, embed, readout, layers)?;
+    let mut checksums = std::collections::BTreeMap::new();
+    let mut payload_bytes = 0u64;
+    let mut payload_crc = 0u32;
+    for t in &staged {
+        checksums.insert(t.name.clone(), crc32(&t.data));
+        payload_bytes += t.data.len() as u64;
+        payload_crc = crc32_update(payload_crc, &t.data);
+    }
+    let integrity = ModelIntegrity {
+        payload_bytes,
+        payload_crc,
+        checksums,
+    };
+    // splice the integrity fields into the manifest object
+    let mut json = m.to_json();
+    anyhow::ensure!(json.pop() == Some('}'), "manifest json not an object");
+    json.push(',');
+    json.push_str(&integrity.to_json_fields());
+    json.push('}');
+    let mut w = PackWriter::create(path)?;
+    w.raw_tensor(
+        MANIFEST_TENSOR,
+        mapped::DTYPE_U8,
+        &[json.len()],
+        json.as_bytes(),
+    )?;
+    for t in &staged {
+        if t.aligned {
+            w.aligned_tensor(&t.name, t.code, &t.shape, &t.data)?;
+        } else {
+            w.raw_tensor(&t.name, t.code, &t.shape, &t.data)?;
+        }
     }
     w.finish()
 }
@@ -407,6 +553,9 @@ pub fn pack_model(
 /// its stats — the layers themselves keep the backing alive.
 pub struct ModelArtifact {
     pub manifest: ModelManifest,
+    /// Checksum record, when the packer recorded one (older artifacts:
+    /// `None` — they load, but cannot be verified).
+    pub integrity: Option<ModelIntegrity>,
     pub path: PathBuf,
     store: MappedStore,
 }
@@ -416,21 +565,112 @@ impl ModelArtifact {
     /// without mmap support (non-unix / 32-bit) silently degrades to
     /// [`LoadMode::Heap`] — identical bits, no zero-copy win; the
     /// artifact's [`mode`](Self::mode) reports what actually happened.
+    ///
+    /// Integrity (DESIGN.md §8): when the manifest carries a checksum
+    /// record, the directory's payload accounting is preflighted against
+    /// it unconditionally (a truncated file fails here with a clean
+    /// error, not a SIGBUS mid-decode), and [`LoadMode::Heap`] loads —
+    /// which have every byte in hand anyway — verify all checksums
+    /// eagerly.  Mmap loads skip the eager pass by default (it would
+    /// fault in every page and defeat the lazy cold start); opt in with
+    /// [`ModelArtifact::load_verified`] or `bmoe verify-model`.
     pub fn load(path: &Path, mode: LoadMode) -> Result<ModelArtifact> {
+        Self::load_opts(path, mode, false)
+    }
+
+    /// [`load`](Self::load), but always verify every tensor checksum
+    /// before returning; errors when the artifact has no checksum record.
+    pub fn load_verified(path: &Path, mode: LoadMode) -> Result<ModelArtifact> {
+        Self::load_opts(path, mode, true)
+    }
+
+    fn load_opts(path: &Path, mode: LoadMode, verify: bool) -> Result<ModelArtifact> {
         let mode = if mode == LoadMode::Mmap && !Mmap::supported() {
             LoadMode::Heap
         } else {
             mode
         };
         let store = MappedStore::open(path, mode)?;
-        let manifest = ModelManifest::parse(store.bytes(MANIFEST_TENSOR).with_context(|| {
+        let mbytes = store.bytes(MANIFEST_TENSOR).with_context(|| {
             format!("{}: not a model artifact (no {MANIFEST_TENSOR} tensor)", path.display())
-        })?)?;
-        Ok(ModelArtifact {
+        })?;
+        let manifest = ModelManifest::parse(mbytes)?;
+        let integrity = ModelIntegrity::parse(mbytes)?;
+        let art = ModelArtifact {
             manifest,
+            integrity,
             path: path.to_path_buf(),
             store,
-        })
+        };
+        if let Some(integ) = &art.integrity {
+            let present: u64 = art
+                .store
+                .entries()
+                .iter()
+                .filter(|e| integrity_covers(&e.name))
+                .map(|e| e.byte_len as u64)
+                .sum();
+            anyhow::ensure!(
+                present == integ.payload_bytes,
+                "{}: payload is {present} bytes but the manifest records {} — \
+                 artifact truncated or tensors missing",
+                path.display(),
+                integ.payload_bytes
+            );
+        }
+        if verify || art.mode() == LoadMode::Heap {
+            if art.integrity.is_some() {
+                art.verify_checksums()?;
+            } else if verify {
+                anyhow::bail!(
+                    "{}: no checksums recorded (packed before integrity support); \
+                     re-pack to enable verification",
+                    path.display()
+                );
+            }
+        }
+        Ok(art)
+    }
+
+    /// Check every covered tensor's bytes against the manifest's CRC-32
+    /// record, plus the whole-payload totals.  Errors name the first
+    /// corrupt tensor.  In mmap mode this faults in the entire file.
+    pub fn verify_checksums(&self) -> Result<()> {
+        use crate::util::crc32::{crc32, crc32_update};
+        let integ = self.integrity.as_ref().with_context(|| {
+            format!("{}: no checksums recorded in manifest", self.path.display())
+        })?;
+        let mut running = 0u32;
+        let mut seen = 0usize;
+        for e in self.store.entries() {
+            if !integrity_covers(&e.name) {
+                continue;
+            }
+            let data = self.store.bytes(&e.name)?;
+            let want = *integ.checksums.get(&e.name).with_context(|| {
+                format!("tensor '{}' has no recorded checksum", e.name)
+            })?;
+            let got = crc32(data);
+            anyhow::ensure!(
+                got == want,
+                "tensor '{}': checksum mismatch (file {got:#010x}, manifest {want:#010x}) — \
+                 artifact corrupt",
+                e.name
+            );
+            running = crc32_update(running, data);
+            seen += 1;
+        }
+        anyhow::ensure!(
+            seen == integ.checksums.len(),
+            "manifest records {} checksums but the file has {seen} covered tensors",
+            integ.checksums.len()
+        );
+        anyhow::ensure!(
+            running == integ.payload_crc,
+            "whole-payload checksum mismatch (file {running:#010x}, manifest {:#010x})",
+            integ.payload_crc
+        );
+        Ok(())
     }
 
     pub fn mode(&self) -> LoadMode {
@@ -781,6 +1021,126 @@ mod tests {
         );
         s.write(&path).unwrap();
         assert!(ModelArtifact::load(&path, LoadMode::Heap).is_err());
+    }
+
+    #[test]
+    fn integrity_record_roundtrips_and_verifies() {
+        let model = synthesize(&tiny_spec());
+        let path = tmp("integrity.bmoe");
+        model.pack(&path).unwrap();
+        // heap load verifies eagerly; reaching here means it passed
+        let art = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+        let integ = art.integrity.as_ref().expect("packer records integrity");
+        assert!(integ.payload_bytes > 0);
+        assert!(
+            integ.checksums.contains_key("embed")
+                && integ.checksums.contains_key("layers.1.w_down"),
+            "per-tensor checksums recorded: {:?}",
+            integ.checksums.keys().collect::<Vec<_>>()
+        );
+        assert!(!integ.checksums.keys().any(|k| k.starts_with("__pad.")));
+        art.verify_checksums().unwrap();
+        // explicit verification works in both modes
+        ModelArtifact::load_verified(&path, LoadMode::Mmap).unwrap();
+        ModelArtifact::load_verified(&path, LoadMode::Heap).unwrap();
+    }
+
+    #[test]
+    fn truncated_artifact_is_rejected_cleanly() {
+        let model = synthesize(&tiny_spec());
+        let packed = tmp("trunc_src.bmoe");
+        model.pack(&packed).unwrap();
+        let mut bytes = std::fs::read(&packed).unwrap();
+        bytes.truncate(bytes.len() - 100);
+        let path = tmp("trunc.bmoe");
+        std::fs::write(&path, &bytes).unwrap();
+        for mode in [LoadMode::Heap, LoadMode::Mmap] {
+            let err = ModelArtifact::load(&path, mode).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("truncated"),
+                "{mode:?}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flip_is_caught_before_any_decode() {
+        let model = synthesize(&tiny_spec());
+        let clean = tmp("flip_src.bmoe");
+        model.pack(&clean).unwrap();
+        // flip one byte inside a known tensor payload (not the directory)
+        let off = {
+            let art = ModelArtifact::load(&clean, LoadMode::Heap).unwrap();
+            art.store().entry("embed").unwrap().off
+        };
+        let mut bytes = std::fs::read(&clean).unwrap();
+        bytes[off + 5] ^= 0x40;
+        let path = tmp("flip.bmoe");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load(&path, LoadMode::Heap).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum mismatch"),
+            "heap load must verify eagerly: {err:#}"
+        );
+        if Mmap::supported() {
+            // mmap load stays lazy (no eager page-in) but opt-in
+            // verification catches the same corruption
+            let art = ModelArtifact::load(&path, LoadMode::Mmap).unwrap();
+            assert!(art.verify_checksums().is_err());
+            assert!(ModelArtifact::load_verified(&path, LoadMode::Mmap).is_err());
+        }
+    }
+
+    #[test]
+    fn artifacts_without_checksums_still_load() {
+        // a pre-integrity artifact: plain manifest JSON, no checksum keys
+        let m = tiny_spec().manifest();
+        let json = m.to_json();
+        let path = tmp("legacy.bmoe");
+        let mut s = crate::tensor::store::TensorStore::default();
+        s.insert(
+            MANIFEST_TENSOR,
+            crate::tensor::store::Entry::U8 {
+                shape: vec![json.len()],
+                data: json.clone().into_bytes(),
+            },
+        );
+        s.write(&path).unwrap();
+        let art = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+        assert!(art.integrity.is_none(), "legacy manifest has no integrity");
+        assert_eq!(art.manifest, m);
+        // but explicit verification of an unverifiable artifact is an error
+        let err = ModelArtifact::load_verified(&path, LoadMode::Heap).unwrap_err();
+        assert!(format!("{err:#}").contains("no checksums"), "{err:#}");
+    }
+
+    #[test]
+    fn preflight_rejects_wrong_payload_accounting() {
+        // integrity claims far more payload than the file holds — the
+        // missing-tensor shape of truncation, caught before any decode
+        let m = tiny_spec().manifest();
+        let mut json = m.to_json();
+        json.pop();
+        json.push_str(",\"payload_bytes\":999999,\"payload_crc\":0,\"checksums\":{}}");
+        let path = tmp("preflight.bmoe");
+        let mut s = crate::tensor::store::TensorStore::default();
+        s.insert(
+            MANIFEST_TENSOR,
+            crate::tensor::store::Entry::U8 {
+                shape: vec![json.len()],
+                data: json.into_bytes(),
+            },
+        );
+        s.insert(
+            "embed",
+            crate::tensor::store::Entry::F32(Tensor::from_vec(&[2], vec![1.0, 2.0])),
+        );
+        s.write(&path).unwrap();
+        let err = ModelArtifact::load(&path, LoadMode::Heap).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated or tensors missing"),
+            "{err:#}"
+        );
     }
 
     #[test]

@@ -78,7 +78,7 @@ impl Args {
 fn is_switch(name: &str) -> bool {
     matches!(
         name,
-        "quick" | "verbose" | "help" | "csv" | "paper" | "native" | "pjrt" | "no-warmup"
+        "quick" | "verbose" | "help" | "csv" | "paper" | "native" | "pjrt" | "no-warmup" | "verify"
     )
 }
 
@@ -103,7 +103,13 @@ COMMANDS:
                         health-checked restart, loss-free drain (DRAIN)
   pack-model            synthesize a multi-layer native model and pack it
                         into a .bmoe artifact (--out model.bmoe); serving
-                        it reproduces the in-memory model bit-for-bit
+                        it reproduces the in-memory model bit-for-bit.
+                        The manifest records per-tensor CRC-32 checksums
+                        and payload totals for load-time integrity checks
+  verify-model FILE     verify a packed artifact's integrity record:
+                        payload-accounting preflight plus every tensor's
+                        CRC-32 against the manifest; exits nonzero on any
+                        mismatch, truncation, or a checksum-less artifact
   bench-client          stream sessions from a running server, report
                         TTFT / inter-token latency / tokens per second
   tables                regenerate every paper table/figure (analytic ones)
@@ -143,6 +149,10 @@ COMMON FLAGS:
                         cold start, page-cache shared across processes);
                         heap eagerly deserializes.  Token streams are
                         bit-identical either way (default: mmap)
+  --verify              serving (--native --model): verify every tensor
+                        checksum before serving.  Heap loads verify
+                        eagerly regardless; this forces the full pass for
+                        mmap loads too (faults in the whole file)
   --fleet N             route: worker processes to spawn (default 2)
   --sessions-per-worker N
                         route: concurrent sessions placed on one worker
@@ -157,6 +167,17 @@ COMMON FLAGS:
   --health-interval-ms M
                         route: STATS health-poll cadence; crashed workers
                         restart with exponential backoff (default 500)
+  --failover-retries N  route: when a worker dies mid-stream the session
+                        fails over — re-placed on a healthy worker, the
+                        deterministic replay's already-delivered prefix
+                        verified and suppressed, the stream resumed
+                        seamlessly — up to N times before the terminal
+                        'ERR worker lost' (default 2; 0 disables)
+  --fault SPEC          serve/route: deterministic fault injection for
+                        chaos testing ('key=value;...', e.g.
+                        'seed=7;kill_after=5;kill_prob=0.5'); inert when
+                        absent.  Also read from the BMOE_FAULT env var.
+                        See faults/mod.rs for the injection points
   --trace-sample N      serve/route: time every Nth hot-path stage
                         occurrence (gather/rotate/GEMM/reduce/...) into
                         per-layer histograms surfaced by METRICS; 0
@@ -188,9 +209,12 @@ cumulative-bucket histograms incl. the per-stage --trace-sample
 timings), terminated by a '# EOF' line.
 The router speaks the same protocol (clients point at it unchanged) and
 adds 'DRAIN' (loss-free fleet shutdown) plus the terminals 'END shed'
-(admission) and 'ERR worker lost' (worker died mid-stream); its METRICS
-aggregates every worker's exposition under worker=\"wN\" labels plus
-fleet-level bmoe_router_* series.";
+(admission), 'ERR worker lost' (worker died mid-stream and every
+failover retry was exhausted — sessions fail over transparently first;
+see --failover-retries) and 'ERR replay diverged' (a failover replay
+contradicted the already-delivered prefix); its METRICS aggregates
+every worker's exposition under worker=\"wN\" labels plus fleet-level
+bmoe_router_* series.";
 
 #[cfg(test)]
 mod tests {

@@ -166,6 +166,14 @@ pub struct RuntimeConfig {
     /// router: health-poll cadence in milliseconds
     /// (`--health-interval-ms`)
     pub health_interval_ms: u64,
+    /// router: max transparent failovers per session
+    /// (`--failover-retries`); a worker lost mid-stream is re-placed and
+    /// its delivered prefix replay-verified this many times before the
+    /// terminal `ERR worker lost` (see `router::proxy`)
+    pub failover_retries: u32,
+    /// fault-injection spec (`--fault`, else the `BMOE_FAULT` env var);
+    /// empty = inert.  `key=value` pairs separated by `;` — see `faults`
+    pub fault: String,
     /// observability: hot-path trace sample rate (`--trace-sample`);
     /// 0 = off (the default — one atomic load per instrumented site),
     /// N = time every Nth occurrence per stage (see `obs::trace`).
@@ -205,6 +213,8 @@ impl Default for RuntimeConfig {
             route_queue: 64,
             client_cap: 0,
             health_interval_ms: 500,
+            failover_retries: 2,
+            fault: String::new(),
             trace_sample: 0,
             log_json: String::new(),
             checkpoint_every: 100,
@@ -259,6 +269,15 @@ impl RuntimeConfig {
             "health_interval_ms" => {
                 self.health_interval_ms = value.parse().context("health_interval_ms")?;
                 anyhow::ensure!(self.health_interval_ms >= 1, "health_interval_ms must be >= 1");
+            }
+            "failover_retries" => {
+                self.failover_retries = value.parse().context("failover_retries")?
+            }
+            "fault" => {
+                // validate eagerly: a typo'd spec must fail at startup,
+                // not silently run a different chaos schedule
+                crate::faults::FaultPlan::parse(value)?;
+                self.fault = value.into();
             }
             "trace_sample" => self.trace_sample = value.parse().context("trace_sample")?,
             "log_json" => self.log_json = value.into(),
@@ -392,19 +411,26 @@ mod tests {
         let mut r = RuntimeConfig::default();
         assert_eq!(r.fleet, 2);
         assert_eq!(r.client_cap, 0);
+        assert_eq!(r.failover_retries, 2, "failover on by default");
+        assert!(r.fault.is_empty(), "no fault plan by default");
         r.set("fleet", "4").unwrap();
         r.set("sessions_per_worker", "8").unwrap();
         r.set("route_queue", "32").unwrap();
         r.set("client_cap", "2").unwrap();
         r.set("health_interval_ms", "250").unwrap();
+        r.set("failover_retries", "0").unwrap();
+        r.set("fault", "seed=7;kill_after=3").unwrap();
         assert_eq!(r.fleet, 4);
         assert_eq!(r.sessions_per_worker, 8);
         assert_eq!(r.route_queue, 32);
         assert_eq!(r.client_cap, 2);
         assert_eq!(r.health_interval_ms, 250);
+        assert_eq!(r.failover_retries, 0);
+        assert_eq!(r.fault, "seed=7;kill_after=3");
         assert!(r.set("fleet", "0").is_err());
         assert!(r.set("sessions_per_worker", "0").is_err());
         assert!(r.set("health_interval_ms", "0").is_err());
+        assert!(r.set("fault", "frobnicate=1").is_err(), "typo'd fault spec fails at set time");
     }
 
     #[test]

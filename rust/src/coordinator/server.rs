@@ -444,6 +444,15 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     while read_wire_line(&mut reader, &mut line, &stop)? {
+        // Fault injection (inert unless a plan is installed; see
+        // DESIGN.md §8): an unresponsive worker that still holds its
+        // TCP connections, and a flipped byte on the wire.
+        if let Some(d) = crate::faults::server_stall() {
+            std::thread::sleep(d);
+        }
+        if line.starts_with("GEN ") {
+            crate::faults::corrupt_wire_line(&mut line);
+        }
         let line = line.trim();
         if line.is_empty() {
             continue;

@@ -1,0 +1,402 @@
+//! Deterministic fault injection for chaos testing (DESIGN.md §8).
+//!
+//! Compiled in unconditionally — like [`crate::testutil`] it ships in
+//! the binary but is **default-inert**: every hook below starts with one
+//! relaxed atomic load and a branch, so the serving hot path pays
+//! nothing until a plan is installed.  A plan comes from the
+//! `BMOE_FAULT` environment variable or the `--fault <spec>` flag
+//! (`key=value` pairs separated by `;` or `,`), or programmatically via
+//! [`install`] from the chaos tests and `benches/chaos.rs`.
+//!
+//! Every decision is **seeded**: a hook's nth draw is a pure function of
+//! `(plan.seed, injection point, n)`, so a failing chaos schedule can be
+//! replayed exactly by re-running with the same spec.  Nothing here
+//! touches decoded bits — faults only decide *when* infrastructure
+//! breaks, and the determinism contract (DESIGN.md §5) is what makes
+//! the recovery paths verifiable afterwards.
+//!
+//! Injection points and the spec keys that drive them:
+//!
+//! | key                 | point                                                       |
+//! |---------------------|-------------------------------------------------------------|
+//! | `seed=N`            | seeds every draw below                                      |
+//! | `spawn_fail=P`      | worker launch attempt fails (both launchers)                |
+//! | `kill_after=N`      | SIGKILL a session's placed worker after N relayed tokens    |
+//! | `kill_prob=P`       | probability per session that `kill_after` fires (default 1) |
+//! | `kill_limit=N`      | total kills across the process (0 = unlimited)              |
+//! | `stall_ms=N`        | worker stops responding: sleep before answering a wire line |
+//! | `stall_prob=P`      | probability per wire line that the stall fires (default 1)  |
+//! | `corrupt_line=P`    | mangle an inbound worker `GEN` line (always parse-visible)  |
+//! | `bitflip=1`         | flip one byte of a heap-loaded artifact (once per process)  |
+//! | `client_stall_ms=N` | load generators: how long a stalled client reader sleeps    |
+//! | `client_stall_prob=P` | probability per session of the client stall (default 1)   |
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// A parsed fault plan.  All probabilities are in `[0, 1]`; the
+/// `*_prob` knobs default to 1 so e.g. `kill_after=5` alone means
+/// "every session".  The inert default plan injects nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a worker launch attempt fails.
+    pub spawn_fail: f64,
+    /// SIGKILL the placed worker after this many relayed tokens (0 = off).
+    pub kill_after: u64,
+    /// Per-session probability that the kill fires.
+    pub kill_prob: f64,
+    /// Cap on total kills fired by this process (0 = unlimited).
+    pub kill_limit: u64,
+    /// Worker-side stall before answering a wire line, ms (0 = off).
+    pub stall_ms: u64,
+    /// Per-line probability that the stall fires.
+    pub stall_prob: f64,
+    /// Probability an inbound worker `GEN` line is corrupted.
+    pub corrupt_line: f64,
+    /// Flip one byte of the next heap-loaded artifact.
+    pub bitflip: bool,
+    /// Stalled-client-reader sleep for load generators, ms (0 = off).
+    pub client_stall_ms: u64,
+    /// Per-session probability of the client stall.
+    pub client_stall_prob: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            spawn_fail: 0.0,
+            kill_after: 0,
+            kill_prob: 1.0,
+            kill_limit: 0,
+            stall_ms: 0,
+            stall_prob: 1.0,
+            corrupt_line: 0.0,
+            bitflip: false,
+            client_stall_ms: 0,
+            client_stall_prob: 1.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value[;key=value...]` spec (`,` also separates).
+    /// Unknown keys are errors — a typo'd fault spec must never run a
+    /// silently different chaos schedule.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut p = FaultPlan::default();
+        for pair in spec.split([';', ',']).map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = pair
+                .split_once('=')
+                .with_context(|| format!("fault spec item '{pair}' is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let int = || -> Result<u64> {
+                value.parse().with_context(|| format!("fault key {key}: bad integer '{value}'"))
+            };
+            let prob = || -> Result<f64> {
+                let v: f64 = value
+                    .parse()
+                    .with_context(|| format!("fault key {key}: bad probability '{value}'"))?;
+                anyhow::ensure!((0.0..=1.0).contains(&v), "fault key {key}: '{value}' not in [0,1]");
+                Ok(v)
+            };
+            match key {
+                "seed" => p.seed = int()?,
+                "spawn_fail" => p.spawn_fail = prob()?,
+                "kill_after" => p.kill_after = int()?,
+                "kill_prob" => p.kill_prob = prob()?,
+                "kill_limit" => p.kill_limit = int()?,
+                "stall_ms" => p.stall_ms = int()?,
+                "stall_prob" => p.stall_prob = prob()?,
+                "corrupt_line" => p.corrupt_line = prob()?,
+                "bitflip" => p.bitflip = int()? != 0,
+                "client_stall_ms" => p.client_stall_ms = int()?,
+                "client_stall_prob" => p.client_stall_prob = prob()?,
+                _ => anyhow::bail!("unknown fault key '{key}' in '{pair}'"),
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Fast inert-path gate: one relaxed load on every hook.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+// Per-injection-point draw counters: the nth draw at a point is
+// deterministic in (seed, point, n) regardless of thread interleaving
+// *of other points*.  (Interleaving within one point still orders its
+// draws; chaos tests pin outcomes, not which session drew which.)
+static SPAWN_N: AtomicU64 = AtomicU64::new(0);
+static KILL_N: AtomicU64 = AtomicU64::new(0);
+static KILLS_FIRED: AtomicU64 = AtomicU64::new(0);
+static STALL_N: AtomicU64 = AtomicU64::new(0);
+static CORRUPT_N: AtomicU64 = AtomicU64::new(0);
+static CLIENT_N: AtomicU64 = AtomicU64::new(0);
+static BITFLIP_DONE: AtomicBool = AtomicBool::new(false);
+
+/// Install a plan (resets all draw counters).  Used by chaos tests and
+/// benches; the CLI path goes through [`init_from`].
+pub fn install(plan: FaultPlan) {
+    let mut guard = PLAN.lock().unwrap();
+    for c in [&SPAWN_N, &KILL_N, &KILLS_FIRED, &STALL_N, &CORRUPT_N, &CLIENT_N] {
+        c.store(0, Ordering::SeqCst);
+    }
+    BITFLIP_DONE.store(false, Ordering::SeqCst);
+    *guard = Some(plan);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Back to inert — every hook returns to its one-load fast path.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// CLI/runtime entry: install from `--fault <spec>` if given, else from
+/// `BMOE_FAULT` if set, else stay inert.
+pub fn init_from(flag_spec: &str) -> Result<()> {
+    let spec = if !flag_spec.is_empty() {
+        flag_spec.to_string()
+    } else {
+        match std::env::var("BMOE_FAULT") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(()),
+        }
+    };
+    let plan = FaultPlan::parse(&spec).with_context(|| format!("parse fault spec '{spec}'"))?;
+    crate::obs::log("faults", &format!("fault plan active: {plan:?}"));
+    install(plan);
+    Ok(())
+}
+
+/// Is any plan installed?  (The one-load fast path every hook starts
+/// with.)
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+fn plan() -> Option<FaultPlan> {
+    if !active() {
+        return None;
+    }
+    PLAN.lock().unwrap().clone()
+}
+
+/// SplitMix64: the standard seeded mixer — a pure function of its
+/// input, so draws replay exactly.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The nth unit-interval draw at an injection point.
+fn unit(seed: u64, point: u64, n: u64) -> f64 {
+    let bits = splitmix64(seed ^ point.wrapping_mul(0xA076_1D64_78BD_642F) ^ n);
+    (bits >> 11) as f64 / (1u64 << 53) as f64
+}
+
+const POINT_SPAWN: u64 = 1;
+const POINT_KILL: u64 = 2;
+const POINT_STALL: u64 = 3;
+const POINT_CORRUPT: u64 = 4;
+const POINT_BITFLIP: u64 = 5;
+const POINT_CLIENT: u64 = 6;
+
+/// Should this worker launch attempt fail?  (Hooked in both launchers.)
+pub fn spawn_failure(worker: usize) -> bool {
+    let Some(p) = plan() else { return false };
+    if p.spawn_fail <= 0.0 {
+        return false;
+    }
+    let n = SPAWN_N.fetch_add(1, Ordering::SeqCst);
+    let _ = worker; // failure schedule is draw-ordered, not slot-keyed
+    unit(p.seed, POINT_SPAWN, n) < p.spawn_fail
+}
+
+/// Per-session draw: kill the placed worker after this many relayed
+/// tokens?  Counts toward `kill_limit` at draw time.
+pub fn session_kill_after() -> Option<u64> {
+    let p = plan()?;
+    if p.kill_after == 0 {
+        return None;
+    }
+    let n = KILL_N.fetch_add(1, Ordering::SeqCst);
+    if unit(p.seed, POINT_KILL, n) >= p.kill_prob {
+        return None;
+    }
+    if p.kill_limit > 0 && KILLS_FIRED.fetch_add(1, Ordering::SeqCst) >= p.kill_limit {
+        return None;
+    }
+    Some(p.kill_after)
+}
+
+/// Worker-side: how long to stall before answering this wire line.
+pub fn server_stall() -> Option<Duration> {
+    let p = plan()?;
+    if p.stall_ms == 0 {
+        return None;
+    }
+    let n = STALL_N.fetch_add(1, Ordering::SeqCst);
+    (unit(p.seed, POINT_STALL, n) < p.stall_prob).then(|| Duration::from_millis(p.stall_ms))
+}
+
+/// Worker-side: maybe corrupt an inbound `GEN` line in place.  The
+/// corruption byte (`#`) is outside the `GEN` grammar, so a corrupted
+/// line always *fails to parse* — it can never silently become a
+/// different valid request (which would break the bit-identity chaos
+/// gates).  Returns whether the line was mangled.
+pub fn corrupt_wire_line(line: &mut String) -> bool {
+    let Some(p) = plan() else { return false };
+    if p.corrupt_line <= 0.0 || line.is_empty() {
+        return false;
+    }
+    let n = CORRUPT_N.fetch_add(1, Ordering::SeqCst);
+    if unit(p.seed, POINT_CORRUPT, n) >= p.corrupt_line {
+        return false;
+    }
+    let idx = (unit(p.seed, POINT_CORRUPT, n ^ 0x5EED) * line.len() as f64) as usize;
+    let idx = idx.min(line.len() - 1);
+    // operate on bytes: '#' is ASCII, and we only replace ASCII-safe
+    // positions (skip if it would split a UTF-8 sequence)
+    let mut bytes = std::mem::take(line).into_bytes();
+    if bytes[idx].is_ascii() {
+        bytes[idx] = b'#';
+    } else {
+        bytes[0] = b'#';
+    }
+    *line = String::from_utf8_lossy(&bytes).into_owned();
+    true
+}
+
+/// Flip one byte of a heap-loaded artifact image, once per process.
+/// The flip lands in the second half of the file — the bulk tensor
+/// payload region — so it exercises the checksum path rather than the
+/// directory bounds checks.  Returns the flipped offset.
+pub fn artifact_bitflip(bytes: &mut [u8]) -> Option<usize> {
+    let p = plan()?;
+    if !p.bitflip || bytes.len() < 2 {
+        return None;
+    }
+    if BITFLIP_DONE.swap(true, Ordering::SeqCst) {
+        return None;
+    }
+    let half = bytes.len() / 2;
+    let idx = half + (unit(p.seed, POINT_BITFLIP, 0) * (bytes.len() - half) as f64) as usize;
+    let idx = idx.min(bytes.len() - 1);
+    bytes[idx] ^= 0xFF;
+    Some(idx)
+}
+
+/// Load generators: per-session draw of a stalled-client-reader sleep.
+pub fn client_stall() -> Option<Duration> {
+    let p = plan()?;
+    if p.client_stall_ms == 0 {
+        return None;
+    }
+    let n = CLIENT_N.fetch_add(1, Ordering::SeqCst);
+    (unit(p.seed, POINT_CLIENT, n) < p.client_stall_prob)
+        .then(|| Duration::from_millis(p.client_stall_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan is process-global; tests that install one serialize here.
+    pub(crate) static TEST_MUTEX: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn spec_parses_round_trip_and_rejects_garbage() {
+        let p = FaultPlan::parse("seed=7;kill_after=5,kill_prob=0.5; kill_limit=2").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.kill_after, 5);
+        assert_eq!(p.kill_prob, 0.5);
+        assert_eq!(p.kill_limit, 2);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("kill_after").is_err(), "not key=value");
+        assert!(FaultPlan::parse("frobnicate=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("kill_prob=1.5").is_err(), "probability range");
+        assert!(FaultPlan::parse("kill_after=x").is_err(), "bad integer");
+    }
+
+    #[test]
+    fn inert_by_default_and_after_clear() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        clear();
+        assert!(!active());
+        assert!(!spawn_failure(0));
+        assert!(session_kill_after().is_none());
+        assert!(server_stall().is_none());
+        let mut line = "GEN 4 0 0 0 -1 1".to_string();
+        assert!(!corrupt_wire_line(&mut line));
+        assert_eq!(line, "GEN 4 0 0 0 -1 1");
+        let mut bytes = vec![1u8; 64];
+        assert!(artifact_bitflip(&mut bytes).is_none());
+        assert!(bytes.iter().all(|&b| b == 1));
+        install(FaultPlan { kill_after: 3, ..FaultPlan::default() });
+        assert_eq!(session_kill_after(), Some(3));
+        clear();
+        assert!(session_kill_after().is_none());
+    }
+
+    #[test]
+    fn draws_are_deterministic_in_seed_and_order() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let run = |seed: u64| -> Vec<bool> {
+            install(FaultPlan { seed, spawn_fail: 0.5, ..FaultPlan::default() });
+            (0..32).map(|_| spawn_failure(0)).collect()
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        clear();
+        assert_eq!(a, b, "same seed => same schedule");
+        assert_ne!(a, c, "different seed => different schedule");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!((4..=28).contains(&fired), "p=0.5 of 32 draws, got {fired}");
+    }
+
+    #[test]
+    fn kill_limit_caps_total_kills() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        install(FaultPlan { kill_after: 4, kill_limit: 2, ..FaultPlan::default() });
+        let fired = (0..10).filter(|_| session_kill_after().is_some()).count();
+        clear();
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn corrupted_line_never_parses_as_a_gen_request() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        install(FaultPlan { seed: 9, corrupt_line: 1.0, ..FaultPlan::default() });
+        for i in 0..16 {
+            let mut line = format!("GEN 8 0 0 {i} -1 1 2 3");
+            assert!(corrupt_wire_line(&mut line));
+            assert!(
+                crate::coordinator::parse_gen_line(&line).is_err(),
+                "corruption must be parse-visible, got valid '{line}'"
+            );
+        }
+        clear();
+    }
+
+    #[test]
+    fn bitflip_fires_once_in_payload_half() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        install(FaultPlan { seed: 3, bitflip: true, ..FaultPlan::default() });
+        let mut bytes = vec![0u8; 256];
+        let idx = artifact_bitflip(&mut bytes).expect("first flip fires");
+        assert!(idx >= 128, "flip must land in the payload half, got {idx}");
+        assert_eq!(bytes[idx], 0xFF);
+        assert!(artifact_bitflip(&mut bytes).is_none(), "once per process");
+        clear();
+    }
+}

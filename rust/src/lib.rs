@@ -51,6 +51,7 @@ pub mod data;
 pub mod devices;
 pub mod energy;
 pub mod expertcache;
+pub mod faults;
 pub mod jsonx;
 pub mod kernels;
 pub mod memmodel;

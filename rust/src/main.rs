@@ -47,6 +47,8 @@ fn main() -> Result<()> {
         ("route_queue", args.flag("route-queue")),
         ("client_cap", args.flag("client-cap")),
         ("health_interval_ms", args.flag("health-interval-ms")),
+        ("failover_retries", args.flag("failover-retries")),
+        ("fault", args.flag("fault")),
         ("trace_sample", args.flag("trace-sample")),
         ("log_json", args.flag("log-json")),
         ("out_dir", args.flag("out")),
@@ -67,6 +69,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&rt, &args),
         "route" => cmd_route(&rt, &args),
         "pack-model" => cmd_pack_model(&rt, &args),
+        "verify-model" => cmd_verify_model(&rt, &args),
         "bench-client" => cmd_bench_client(&rt, &args),
         "tables" => cmd_tables(&rt),
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
@@ -109,6 +112,32 @@ fn cmd_pack_model(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         sw.millis(),
     );
     println!("  serve it:  bmoe serve --native --model {out}");
+    Ok(())
+}
+
+/// Verify a packed model artifact's integrity record: preflight the
+/// payload accounting against the directory, then check every tensor's
+/// CRC-32 against the manifest.  Exits nonzero on any mismatch,
+/// truncation, or when the artifact records no checksums (packed before
+/// integrity support).
+fn cmd_verify_model(rt: &RuntimeConfig, args: &Args) -> Result<()> {
+    use butterfly_moe::artifact::{LoadMode, ModelArtifact};
+    let path = match args.positional.first() {
+        Some(p) => p.clone(),
+        None if !rt.model_path.is_empty() => rt.model_path.clone(),
+        None => bail!("verify-model: name the artifact (positional or --model)"),
+    };
+    let mode = LoadMode::parse(&rt.load_mode)?;
+    let sw = butterfly_moe::util::Stopwatch::start();
+    let art = ModelArtifact::load_verified(Path::new(&path), mode)?;
+    let integ = art.integrity.as_ref().expect("load_verified implies integrity");
+    println!(
+        "{path}: OK — {} tensors verified, {} payload (crc {:#010x}) in {:.0} ms",
+        integ.checksums.len(),
+        human_bytes(integ.payload_bytes as f64),
+        integ.payload_crc,
+        sw.millis(),
+    );
     Ok(())
 }
 
@@ -274,6 +303,7 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use butterfly_moe::moe::MoeLayer;
     use butterfly_moe::obs;
     obs::init(rt.trace_sample, &rt.log_json)?;
+    butterfly_moe::faults::init_from(&rt.fault)?;
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         // pure-rust edge backend: serves without compiled artifacts (and
         // without a PJRT runtime) — a packed .bmoe model file, or the
@@ -288,7 +318,13 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         let backend = if !rt.model_path.is_empty() {
             let mode = LoadMode::parse(&rt.load_mode)?;
             let sw = butterfly_moe::util::Stopwatch::start();
-            let artifact = ModelArtifact::load(Path::new(&rt.model_path), mode)?;
+            // --verify: check every tensor checksum before serving (heap
+            // loads verify eagerly either way; this forces it for mmap)
+            let artifact = if args.has_switch("verify") {
+                ModelArtifact::load_verified(Path::new(&rt.model_path), mode)?
+            } else {
+                ModelArtifact::load(Path::new(&rt.model_path), mode)?
+            };
             let backend =
                 NativeLmBackend::from_artifact(&artifact, rt.max_batch, Some(pool), cache_bytes)?;
             let (borrowed, copied) = artifact.zero_copy_stats();
@@ -403,6 +439,7 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use butterfly_moe::obs;
     use butterfly_moe::router::{run, worker::ProcessLauncher, RouterConfig};
     obs::init(rt.trace_sample, &rt.log_json)?;
+    butterfly_moe::faults::init_from(&rt.fault)?;
     let bin = std::env::current_exe().context("locate the bmoe binary for worker spawns")?;
     // Workers inherit the serve-relevant settings; --port 0 is appended
     // by the launcher so each picks its own ephemeral port.
@@ -444,6 +481,12 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     if !rt.log_json.is_empty() && rt.log_json != "-" {
         wargs.extend(["--log-json".into(), rt.log_json.clone()]);
     }
+    // Fault plans pass through: worker-side points (stall, wire
+    // corruption, artifact bit rot) live in the serve processes, while
+    // the router keeps the spawn/kill points — one spec drives both.
+    if !rt.fault.is_empty() {
+        wargs.extend(["--fault".into(), rt.fault.clone()]);
+    }
     let cfg = RouterConfig {
         port: rt.port,
         fleet: rt.fleet,
@@ -451,6 +494,7 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
         max_queue: rt.route_queue,
         client_cap: rt.client_cap,
         health_interval: Duration::from_millis(rt.health_interval_ms),
+        failover_retries: rt.failover_retries,
         ..RouterConfig::default()
     };
     obs::log(

@@ -49,6 +49,8 @@ pub struct SlotView {
     pub queue_depth: u64,
     pub tokens_relayed: u64,
     pub restarts: u64,
+    /// Consecutive relaunches without a surviving poll (backoff driver).
+    pub attempts: u32,
 }
 
 struct Inner {
@@ -105,11 +107,17 @@ impl Fleet {
 
     /// Worker `idx` is serving on `addr`.  `initial` distinguishes the
     /// fleet boot from a crash recovery (which counts as a restart).
+    ///
+    /// Deliberately does **not** reset the backoff counter: a relaunch
+    /// that merely announces proves nothing — a crash-looping worker
+    /// (boots, then dies instantly) would otherwise restart in a tight
+    /// loop at `backoff_base` forever.  `attempts` resets in
+    /// [`Fleet::record_poll`], i.e. only once the worker survives its
+    /// first successful post-restart health poll.
     pub fn mark_up(&self, idx: usize, addr: SocketAddr, initial: bool) {
         let mut inner = self.inner.lock().unwrap();
         let s = &mut inner.slots[idx];
         s.state = SlotState::Up { addr };
-        s.attempts = 0;
         s.stats_failures = 0;
         s.queue_depth = 0;
         s.inflight = 0;
@@ -123,7 +131,28 @@ impl Fleet {
     /// Returns the delay chosen, for logging.
     pub fn mark_down(&self, idx: usize) -> Duration {
         let mut inner = self.inner.lock().unwrap();
-        let s = &mut inner.slots[idx];
+        self.down_slot(&mut inner.slots[idx])
+    }
+
+    /// Declare `idx` down only if it is still `Up` on `addr`.  The
+    /// relay's view of a worker can be stale — between losing the
+    /// connection and reporting it, the health loop may have already
+    /// declared the death and restarted the slot on a new address.  The
+    /// guard makes the relay's report a no-op in that race instead of
+    /// downing a freshly restarted worker.  Returns whether the
+    /// transition happened.
+    pub fn mark_down_if_up_on(&self, idx: usize, addr: SocketAddr) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.slots[idx].state {
+            SlotState::Up { addr: cur } if cur == addr => {
+                self.down_slot(&mut inner.slots[idx]);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn down_slot(&self, s: &mut Slot) -> Duration {
         let exp = s.attempts.min(16);
         let backoff = self
             .backoff_base
@@ -149,13 +178,19 @@ impl Fleet {
             .collect()
     }
 
-    /// Record a successful `STATS` poll of worker `idx`.
+    /// Record a successful `STATS` poll of worker `idx`.  Answering a
+    /// poll is the proof-of-life that ends a restart's probation: the
+    /// backoff schedule (`attempts`) resets here rather than at
+    /// [`Fleet::mark_up`], so a worker that announces and immediately
+    /// dies keeps escalating its backoff instead of crash-looping at
+    /// `backoff_base`.
     pub fn record_poll(&self, idx: usize, queue_depth: u64, inflight: u64) {
         let mut inner = self.inner.lock().unwrap();
         let s = &mut inner.slots[idx];
         s.queue_depth = queue_depth;
         s.inflight = inflight;
         s.stats_failures = 0;
+        s.attempts = 0;
     }
 
     /// Record a failed `STATS` poll; returns the consecutive-failure
@@ -230,6 +265,7 @@ impl Fleet {
                 queue_depth: s.queue_depth,
                 tokens_relayed: s.tokens_relayed,
                 restarts: s.restarts,
+                attempts: s.attempts,
             })
             .collect()
     }
@@ -322,10 +358,52 @@ mod tests {
         assert_eq!(f.mark_down(0), Duration::from_millis(40));
         assert_eq!(f.mark_down(0), Duration::from_millis(45), "capped");
         assert_eq!(f.mark_down(0), Duration::from_millis(45));
-        // successful relaunch resets the schedule and counts a restart
+        // a relaunch that merely announces counts a restart but does NOT
+        // reset the schedule: if it dies again the backoff keeps growing
         f.mark_up(0, addr(9000), false);
         assert_eq!(f.views()[0].restarts, 1);
+        assert_eq!(f.mark_down(0), Duration::from_millis(45), "still capped");
+        // only surviving a health poll ends probation
+        f.mark_up(0, addr(9000), false);
+        f.record_poll(0, 0, 0);
         assert_eq!(f.mark_down(0), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn crash_loop_announce_without_poll_keeps_escalating() {
+        // regression: mark_up used to reset `attempts`, so a worker that
+        // boots and dies instantly retried at backoff_base forever
+        let f = Fleet::new(1, Duration::from_millis(10), Duration::from_secs(60));
+        let mut backoffs = Vec::new();
+        for _ in 0..4 {
+            backoffs.push(f.mark_down(0));
+            f.mark_up(0, addr(9000), false); // announces...
+                                             // ...and dies before any poll
+        }
+        assert_eq!(
+            backoffs,
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(40),
+                Duration::from_millis(80),
+            ],
+            "backoff must escalate across announce-then-die cycles"
+        );
+        assert_eq!(f.views()[0].attempts, 4);
+    }
+
+    #[test]
+    fn mark_down_if_up_on_is_addr_guarded() {
+        let f = fleet(1);
+        let stale = addr(9999);
+        assert!(!f.mark_down_if_up_on(0, stale), "wrong addr: no-op");
+        assert_eq!(f.healthy(), 1);
+        assert!(f.mark_down_if_up_on(0, addr(9000)));
+        assert_eq!(f.healthy(), 0);
+        // already down: a second (racing) report is a no-op too
+        assert!(!f.mark_down_if_up_on(0, addr(9000)));
+        assert_eq!(f.views()[0].attempts, 1, "one transition, one attempt");
     }
 
     #[test]

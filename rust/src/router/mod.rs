@@ -85,6 +85,18 @@ pub struct RouterConfig {
     /// Drain barrier: how long to wait for in-flight sessions before a
     /// forced teardown.
     pub drain_timeout: Duration,
+    /// Mid-stream failovers attempted per session before the terminal
+    /// `ERR worker lost` (0 = the pre-failover behavior).
+    pub failover_retries: u32,
+    /// How long a failing-over session waits for a healthy replacement
+    /// worker (covers a fleet-of-one waiting out restart backoff).
+    pub failover_wait: Duration,
+    /// Worker-side per-event read budget while relaying; a stalled
+    /// worker trips this and enters the failover path.
+    pub relay_read_timeout: Duration,
+    /// Client-side write budget: a client that stops reading cancels
+    /// its session like a disconnect instead of pinning the relay.
+    pub client_write_timeout: Duration,
 }
 
 impl Default for RouterConfig {
@@ -101,22 +113,48 @@ impl Default for RouterConfig {
             connect_timeout: Duration::from_secs(5),
             queue_timeout: Duration::from_secs(60),
             drain_timeout: Duration::from_secs(60),
+            failover_retries: 2,
+            failover_wait: Duration::from_secs(30),
+            relay_read_timeout: Duration::from_secs(120),
+            client_write_timeout: Duration::from_secs(30),
         }
     }
 }
 
 /// Router-level counters (worker-level ones live in [`balance::Fleet`]).
-#[derive(Default)]
 pub struct RouterStats {
     /// Sessions relayed to a worker terminal (`END`/`ERR` from it).
     pub routed: AtomicU64,
     /// Sessions shed by admission (`END shed`).
     pub shed: AtomicU64,
-    /// Sessions whose worker died mid-relay (`ERR worker lost` /
-    /// `ERR no healthy worker`).
+    /// Sessions that *ended* in `ERR worker lost` / `ERR no healthy
+    /// worker` — i.e. a worker death that failover could not absorb.
     pub worker_lost: AtomicU64,
     /// Tokens relayed across all sessions.
     pub tokens: AtomicU64,
+    /// Mid-stream failovers where a replacement worker took the replay.
+    pub failovers: AtomicU64,
+    /// Sessions terminated with `ERR replay diverged` (a replayed
+    /// prefix failed byte-for-byte verification — should be zero
+    /// forever; nonzero means the determinism contract broke).
+    pub replay_diverged: AtomicU64,
+    /// Distribution of delivered tokens verified + suppressed per
+    /// failover (unit: tokens, power-of-two buckets).
+    pub replayed_tokens: Mutex<crate::util::stats::LatencyHistogram>,
+}
+
+impl Default for RouterStats {
+    fn default() -> Self {
+        RouterStats {
+            routed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            worker_lost: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            replay_diverged: AtomicU64::new(0),
+            replayed_tokens: Mutex::new(crate::util::stats::LatencyHistogram::new(1.0, 2.0, 16)),
+        }
+    }
 }
 
 /// The supervisor: owns the fleet, admission gate, and health thread.
@@ -220,12 +258,31 @@ impl Router {
         self.admission.begin_drain();
     }
 
-    /// Kill worker `idx`'s process outright (chaos testing: the client
-    /// on it sees a terminal event and the health loop restarts it).
+    /// Kill worker `idx`'s process outright (chaos testing: sessions on
+    /// it fail over to a healthy worker and the health loop restarts it).
     pub fn kill_worker(&self, idx: usize) {
         if let Some(h) = self.health_ctx.handles.lock().unwrap()[idx].as_mut() {
             h.kill();
         }
+    }
+
+    /// A relay lost its connection to worker `idx` mid-session: declare
+    /// the worker down *now* — addr-guarded, so if the health loop
+    /// already restarted the slot on a new address this is a no-op —
+    /// and reap the corpse, instead of letting further placements land
+    /// on it until the next health sweep.
+    pub(crate) fn note_worker_lost(&self, idx: usize, addr: std::net::SocketAddr) {
+        if !self.fleet.mark_down_if_up_on(idx, addr) {
+            return;
+        }
+        if let Some(mut h) = self.health_ctx.handles.lock().unwrap()[idx].take() {
+            h.kill();
+        }
+        obs::log("route", &format!("worker {idx} lost mid-relay; marked down"));
+        obs::Event::new("worker_down")
+            .u64("worker", idx as u64)
+            .str("why", "relay lost connection")
+            .emit();
     }
 
     /// OS pids of the live workers, slot-indexed (`None` for down slots
@@ -245,9 +302,11 @@ impl Router {
         let (inflight, queued, capacity, draining) = self.admission.counts();
         let views = self.fleet.views();
         let restarts: u64 = views.iter().map(|v| v.restarts).sum();
+        let replayed_sum = self.stats.replayed_tokens.lock().unwrap().sum as u64;
         let mut line = format!(
             "STATS fleet={} healthy={} capacity={capacity} inflight={inflight} \
-             queued={queued} draining={} routed={} shed={} worker_lost={} tokens={} \
+             queued={queued} draining={} routed={} shed={} worker_lost={} \
+             failovers={} replayed={replayed_sum} diverged={} tokens={} \
              restarts={restarts}",
             views.len(),
             self.fleet.healthy(),
@@ -255,6 +314,8 @@ impl Router {
             self.stats.routed.load(Ordering::Relaxed),
             self.stats.shed.load(Ordering::Relaxed),
             self.stats.worker_lost.load(Ordering::Relaxed),
+            self.stats.failovers.load(Ordering::Relaxed),
+            self.stats.replay_diverged.load(Ordering::Relaxed),
             self.stats.tokens.load(Ordering::Relaxed),
         );
         for (i, v) in views.iter().enumerate() {
@@ -325,6 +386,24 @@ impl Router {
             "Tokens relayed across all sessions.",
             &[],
             self.stats.tokens.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "bmoe_failover_total",
+            "Mid-stream session failovers (replay accepted by a replacement worker).",
+            &[],
+            self.stats.failovers.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "bmoe_router_replay_diverged_total",
+            "Failover replays whose delivered prefix failed verification.",
+            &[],
+            self.stats.replay_diverged.load(Ordering::Relaxed) as f64,
+        );
+        p.histogram(
+            "bmoe_failover_replayed_tokens",
+            "Tokens verified and suppressed per failover replay.",
+            &[],
+            &self.stats.replayed_tokens.lock().unwrap(),
         );
         p.gauge(
             "bmoe_router_workers_up",
@@ -669,14 +748,61 @@ mod tests {
     }
 
     #[test]
-    fn killed_worker_gives_terminal_event_and_restarts() {
+    fn killed_worker_fails_over_mid_stream_seamlessly() {
+        // fleet of ONE: the hard case.  The worker dies mid-stream, the
+        // relay declares it down, waits out the health loop's relaunch,
+        // replays the seeded GEN line on the restarted worker, verifies
+        // + suppresses the delivered prefix, and the client receives one
+        // complete stream bit-identical to a fault-free run — no ERR.
         let cfg = RouterConfig {
             fleet: 1,
             ..test_cfg()
         };
         let (router, addr) =
             start(cfg, InProcessLauncher::new(Duration::from_millis(25), 4));
-        // long session under way on the only worker
+        // fault-free baseline of the exact same session (CountBackend
+        // streams depend only on prompt length — deterministic)
+        let (baseline, base_end) = run_session(addr, "GEN 40 0 0 0 -1 1 2");
+        assert_eq!(baseline.len(), 40);
+        assert!(base_end.starts_with("END max_tokens 40 "), "{base_end}");
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        writeln!(s1, "GEN 40 0 0 0 -1 1 2").unwrap();
+        let mut r1 = BufReader::new(s1.try_clone().unwrap());
+        let mut first = String::new();
+        r1.read_line(&mut first).unwrap();
+        assert!(first.starts_with("TOK "), "{first}");
+        router.kill_worker(0);
+        let (rest, end) = read_session(&mut r1);
+        let mut full: Vec<i32> = vec![first
+            .strip_prefix("TOK ")
+            .unwrap()
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap()];
+        full.extend(rest);
+        assert_eq!(full, baseline, "failover stream must be bit-identical");
+        assert!(end.starts_with("END max_tokens 40 "), "no ERR on failover: {end}");
+        let line = stats(addr);
+        assert!(stat_field(&line, "failovers") >= 1, "{line}");
+        assert_eq!(stat_field(&line, "worker_lost"), 0, "{line}");
+        assert_eq!(stat_field(&line, "diverged"), 0, "{line}");
+        assert!(stat_field(&line, "restarts") >= 1, "{line}");
+        router.drain();
+    }
+
+    #[test]
+    fn failover_disabled_gives_terminal_err() {
+        // failover_retries = 0 restores the old contract: the client
+        // gets the explicit terminal ERR, never a hung stream
+        let cfg = RouterConfig {
+            fleet: 1,
+            failover_retries: 0,
+            ..test_cfg()
+        };
+        let (router, addr) =
+            start(cfg, InProcessLauncher::new(Duration::from_millis(25), 4));
         let mut s1 = TcpStream::connect(addr).unwrap();
         writeln!(s1, "GEN 1000 0 0 0 -1 1 2").unwrap();
         let mut r1 = BufReader::new(s1.try_clone().unwrap());
@@ -684,63 +810,237 @@ mod tests {
         r1.read_line(&mut first).unwrap();
         assert!(first.starts_with("TOK "), "{first}");
         router.kill_worker(0);
-        // the client must get a terminal line, never a hung stream: the
-        // worker's abort path yields END shutdown; a harder death (EOF
-        // mid-stream) yields ERR worker lost — both are terminal
         let (_, end) = read_session(&mut r1);
-        assert!(
-            end.starts_with("END shutdown") || end.starts_with("ERR"),
-            "terminal event required, got {end}"
-        );
-        // health loop notices and restarts with backoff; a subsequent
-        // session must succeed
-        let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        loop {
-            let (toks, end) = run_session(addr, "GEN 2 0 0 0 -1 5 6");
-            if toks.len() == 2 && end.starts_with("END max_tokens") {
-                break;
-            }
-            assert!(
-                std::time::Instant::now() < deadline,
-                "worker never came back: {end}"
-            );
-            std::thread::sleep(Duration::from_millis(50));
-        }
-        assert!(stat_field(&stats(addr), "restarts") >= 1);
+        assert!(end.starts_with("ERR worker lost"), "{end}");
+        let line = stats(addr);
+        assert!(stat_field(&line, "worker_lost") >= 1, "{line}");
         router.drain();
     }
 
     #[test]
-    fn relay_reports_worker_lost_on_mid_stream_eof() {
-        // a raw fake worker that streams two TOKs then slams the door —
-        // the relay must surface a terminal ERR, not hang or truncate
+    fn crash_looping_relaunch_keeps_escalating_backoff() {
+        // regression for the mark_up reset bug: a worker that announces
+        // and dies instantly must escalate `attempts`, not restart in a
+        // tight loop at backoff_base forever
+        let cfg = RouterConfig {
+            fleet: 1,
+            health_interval: Duration::from_millis(20),
+            backoff_base: Duration::from_millis(30),
+            backoff_cap: Duration::from_secs(60),
+            ..test_cfg()
+        };
+        let launcher = Arc::new(InProcessLauncher::new(Duration::ZERO, 4));
+        let router = Router::start(cfg, launcher.clone()).unwrap();
+        launcher.die_next(usize::MAX);
+        router.kill_worker(0);
+        // every relaunch reports in (mark_up) then dies before its first
+        // poll; with the bug, attempts oscillates 0/1 and never grows
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while router.fleet.views()[0].attempts < 3 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "backoff never escalated past attempts={} (crash loop at backoff_base?)",
+                router.fleet.views()[0].attempts
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // stop the scripted deaths: the next relaunch survives, answers
+        // a poll, and the slot's probation ends (attempts back to 0)
+        launcher.die_next(0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while router.fleet.healthy() == 0 || router.fleet.views()[0].attempts != 0 {
+            assert!(std::time::Instant::now() < deadline, "worker never recovered");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        router.drain();
+    }
+
+    fn relay_opts() -> proxy::RelayOpts {
+        proxy::RelayOpts {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// Fake worker: answers the first line with the given reply lines,
+    /// then closes.  Returns the address to relay to.
+    fn fake_worker(lines: &'static [&'static str]) -> std::net::SocketAddr {
         let (listener, waddr) = crate::util::net::listen_reuse(0).unwrap();
         std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
             let mut line = String::new();
             BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
-            writeln!(s, "TOK 0 7 100").unwrap();
-            writeln!(s, "TOK 1 8 100").unwrap();
-            // no END: connection dies mid-stream
+            for l in lines {
+                writeln!(s, "{l}").unwrap();
+            }
         });
+        waddr
+    }
+
+    #[test]
+    fn relay_reports_worker_lost_on_mid_stream_eof() {
+        // a raw fake worker that streams two TOKs then slams the door —
+        // the relay must surface the loss (for failover), not hang
+        let waddr = fake_worker(&["TOK 0 7 100", "TOK 1 8 100"]);
         let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
         let client = std::thread::spawn(move || {
             let s = TcpStream::connect(caddr).unwrap();
             read_session(&mut BufReader::new(s))
         });
         let (mut server_side, _) = client_listener.accept().unwrap();
+        let mut delivered = Vec::new();
         let outcome = proxy::relay_session(
             &mut server_side,
             waddr,
             "GEN 5 0 0 0 -1 1",
-            Duration::from_secs(2),
+            &relay_opts(),
+            &mut delivered,
+            |_| {},
         );
-        assert_eq!(outcome, proxy::RelayOutcome::WorkerLost { tokens: 2 });
+        assert_eq!(outcome, proxy::RelayOutcome::WorkerLost);
+        assert_eq!(delivered, vec!["0 7".to_string(), "1 8".to_string()]);
         writeln!(server_side, "ERR worker lost").unwrap();
         drop(server_side);
         let (toks, end) = client.join().unwrap();
         assert_eq!(toks, vec![7, 8]);
         assert!(end.starts_with("ERR worker lost"), "{end}");
+    }
+
+    #[test]
+    fn relay_replay_suppresses_verified_prefix_and_resumes() {
+        // second attempt of a failed-over session: worker replays the
+        // full stream; the two delivered tokens are verified+suppressed
+        // (latency fields may differ — they are not part of the
+        // deterministic payload) and only the continuation reaches the
+        // client
+        let waddr = fake_worker(&[
+            "TOK 0 7 999",
+            "TOK 1 8 5",
+            "TOK 2 9 100",
+            "END max_tokens 3 1234 0",
+        ]);
+        let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
+        let client = std::thread::spawn(move || {
+            let s = TcpStream::connect(caddr).unwrap();
+            read_session(&mut BufReader::new(s))
+        });
+        let (mut server_side, _) = client_listener.accept().unwrap();
+        let mut delivered = vec!["0 7".to_string(), "1 8".to_string()];
+        let outcome = proxy::relay_session(
+            &mut server_side,
+            waddr,
+            "GEN 3 0 0 0 -1 1",
+            &relay_opts(),
+            &mut delivered,
+            |_| {},
+        );
+        assert_eq!(outcome, proxy::RelayOutcome::Done);
+        assert_eq!(delivered.len(), 3, "continuation appended: {delivered:?}");
+        drop(server_side);
+        let (toks, end) = client.join().unwrap();
+        assert_eq!(toks, vec![9], "prefix suppressed, only new tokens forwarded");
+        assert!(end.starts_with("END max_tokens 3"), "{end}");
+    }
+
+    #[test]
+    fn relay_replay_divergence_is_detected_not_forwarded() {
+        // the replay's second token differs from what the client got:
+        // the relay must abort with ReplayDiverged and forward NOTHING
+        let waddr = fake_worker(&["TOK 0 7 100", "TOK 1 999 100", "TOK 2 9 100"]);
+        let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
+        let client = std::thread::spawn(move || {
+            let s = TcpStream::connect(caddr).unwrap();
+            read_session(&mut BufReader::new(s))
+        });
+        let (mut server_side, _) = client_listener.accept().unwrap();
+        let mut delivered = vec!["0 7".to_string(), "1 8".to_string()];
+        let outcome = proxy::relay_session(
+            &mut server_side,
+            waddr,
+            "GEN 3 0 0 0 -1 1",
+            &relay_opts(),
+            &mut delivered,
+            |_| {},
+        );
+        match outcome {
+            proxy::RelayOutcome::ReplayDiverged { at, want, got } => {
+                assert_eq!(at, 1);
+                assert_eq!(want, "1 8");
+                assert_eq!(got, "1 999");
+            }
+            other => panic!("expected ReplayDiverged, got {other:?}"),
+        }
+        writeln!(server_side, "ERR replay diverged").unwrap();
+        drop(server_side);
+        let (toks, end) = client.join().unwrap();
+        assert!(toks.is_empty(), "diverged replay must forward no tokens: {toks:?}");
+        assert!(end.starts_with("ERR replay diverged"), "{end}");
+    }
+
+    #[test]
+    fn relay_short_replay_is_divergence_too() {
+        // replay ends (END) before reproducing the delivered prefix:
+        // wrong bits by omission — also a divergence, never silent
+        let waddr = fake_worker(&["TOK 0 7 100", "END max_tokens 1 50 0"]);
+        let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
+        let _client = TcpStream::connect(caddr).unwrap();
+        let (mut server_side, _) = client_listener.accept().unwrap();
+        let mut delivered = vec!["0 7".to_string(), "1 8".to_string()];
+        let outcome = proxy::relay_session(
+            &mut server_side,
+            waddr,
+            "GEN 3 0 0 0 -1 1",
+            &relay_opts(),
+            &mut delivered,
+            |_| {},
+        );
+        assert!(
+            matches!(outcome, proxy::RelayOutcome::ReplayDiverged { at: 1, .. }),
+            "short replay must diverge, got {outcome:?}"
+        );
+    }
+
+    #[test]
+    fn stalled_client_reader_is_cancelled_by_write_timeout() {
+        // a fake worker pumps TOK lines forever; the client socket is
+        // deliberately never read.  Once the kernel buffers fill, the
+        // relay's write must trip the client write timeout and cancel
+        // the session like a disconnect — not pin the thread forever.
+        let (listener, waddr) = crate::util::net::listen_reuse(0).unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut line = String::new();
+            BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+            let mut i = 0u64;
+            // stops when the relay drops the worker connection
+            while writeln!(s, "TOK {i} 7 100").is_ok() {
+                i += 1;
+            }
+        });
+        let (client_listener, caddr) = crate::util::net::listen_reuse(0).unwrap();
+        let _client = TcpStream::connect(caddr).unwrap(); // never read
+        let (mut server_side, _) = client_listener.accept().unwrap();
+        let opts = proxy::RelayOpts {
+            write_timeout: Duration::from_millis(250),
+            ..relay_opts()
+        };
+        let mut delivered = Vec::new();
+        let t0 = std::time::Instant::now();
+        let outcome = proxy::relay_session(
+            &mut server_side,
+            waddr,
+            "GEN 5 0 0 0 -1 1",
+            &opts,
+            &mut delivered,
+            |_| {},
+        );
+        assert_eq!(outcome, proxy::RelayOutcome::ClientGone);
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "write timeout never fired ({:?})",
+            t0.elapsed()
+        );
     }
 
     #[test]

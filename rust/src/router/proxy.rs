@@ -1,4 +1,5 @@
-//! Client-facing protocol handling and the per-session relay.
+//! Client-facing protocol handling, the per-session relay, and
+//! deterministic mid-stream failover.
 //!
 //! The router speaks the exact `GEN`/`TOK`/`END` line protocol the
 //! workers do, so existing clients (`bench-client`, the CI bash smoke)
@@ -8,6 +9,21 @@
 //! router are byte-identical to direct streams (pinned by
 //! `rust/tests/serving.rs`).
 //!
+//! **Failover** (DESIGN.md §8): when the placed worker dies mid-stream
+//! (connection EOF, read timeout, or a worker-side `END shutdown`
+//! abort), the session is *not* over.  The router holds the full seeded
+//! `GEN` line and the engine's determinism contract pins bit-identical
+//! token streams across workers and loaders (`rust/tests/
+//! determinism.rs`), so the relay re-places the session on a healthy
+//! worker, replays the same `GEN` line, verifies the already-delivered
+//! token prefix byte-for-byte against the recorded payloads, suppresses
+//! the duplicate prefix, and resumes the client's stream seamlessly.
+//! Replays are bounded by `--failover-retries`; only when they are
+//! exhausted (or no replacement worker appears) does the client see the
+//! terminal `ERR worker lost`.  A replay whose prefix does not match is
+//! terminated with `ERR replay diverged` — the client must never
+//! silently receive wrong bits.
+//!
 //! Router-specific terminals, all explicit and immediate:
 //!
 //! * `END shed 0 <us> 0` — admission shed the session (queue full,
@@ -16,9 +32,13 @@
 //!
 //! (The trailing field mirrors the worker END line's truncated count —
 //! always 0 here, since a shed session never reached a model window.)
-//! * `ERR worker lost` — the placed worker died mid-stream; the session
-//!   is over (generation state died with the worker) but the client got
-//!   a terminal event, not a hung stream.
+//! * `ERR worker lost` — the placed worker died mid-stream **and**
+//!   failover could not complete the session (retries exhausted, or no
+//!   healthy replacement within the failover window).  Still a terminal
+//!   event, never a hung stream.
+//! * `ERR replay diverged` — a failover replay produced a token prefix
+//!   that differs from what the client already received; the session is
+//!   aborted rather than continued with wrong bits.
 //!
 //! Control verbs: `STATS` (one key=value line, format unchanged),
 //! `DRAIN` (loss-free shutdown), and `METRICS` — the fleet-aggregated
@@ -34,65 +54,170 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::parse_gen_line;
+use crate::faults;
 use crate::obs;
 
 use super::admission::Ticket;
 use super::Router;
 
-/// Worker-side per-event read budget while relaying (generous: a step
-/// may warm caches on first use, mirroring the server's own timeout).
-const RELAY_READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// Timeouts one relay attempt runs under.
+pub(super) struct RelayOpts {
+    /// Per-worker connect timeout when starting (or failing over) a relay.
+    pub connect_timeout: Duration,
+    /// Worker-side per-event read budget (generous: a step may warm
+    /// caches on first use, mirroring the server's own timeout).  A
+    /// stalled worker trips this and enters the failover path.
+    pub read_timeout: Duration,
+    /// Client-side write budget: a client that stops reading its socket
+    /// cancels the session like a disconnect, instead of pinning this
+    /// relay thread, its worker connection, and a batch slot forever.
+    pub write_timeout: Duration,
+}
 
-/// What became of one relayed session.
+/// What became of one relay attempt.
 #[derive(Debug, PartialEq, Eq)]
 pub(super) enum RelayOutcome {
-    /// Worker delivered a terminal line (`END` or `ERR`).
-    Done { tokens: u64 },
-    /// Worker connection failed or went EOF before a terminal line.
-    WorkerLost { tokens: u64 },
+    /// Worker delivered this session's terminal line (`END`/`ERR`).
+    Done,
+    /// Worker connection failed, timed out, went EOF, or the worker
+    /// aborted the session with a mid-stream `END shutdown` — the
+    /// stream is incomplete and a replay elsewhere can finish it.
+    WorkerLost,
     /// The client stopped accepting writes; session abandoned (dropping
     /// the worker connection cancels the session worker-side).
     ClientGone,
+    /// A failover replay's token prefix differs from what the client
+    /// already received — determinism was violated somewhere, and the
+    /// session must die loudly rather than resume with wrong bits.
+    ReplayDiverged { at: usize, want: String, got: String },
 }
 
-/// Relay one `GEN` line to `addr`, forwarding every reply line to
-/// `client` until the worker's terminal line.
+/// Relay one `GEN` line to `addr`, forwarding reply lines to `client`
+/// until the worker's terminal line.
+///
+/// `delivered` carries the payloads of every `TOK` line already
+/// forwarded to the client by earlier attempts of this session (see
+/// [`tok_payload`]).  The first `delivered.len()` tokens from this
+/// worker are verified against it and suppressed instead of forwarded —
+/// the failover replay — and each newly forwarded token's payload is
+/// appended, so the caller can retry with a longer verified prefix.
+/// `on_token` fires after each *newly* forwarded token with the
+/// cumulative delivered count (the chaos kill-after-N injection point).
 pub(super) fn relay_session(
     client: &mut TcpStream,
     addr: SocketAddr,
     gen_line: &str,
-    connect_timeout: Duration,
+    opts: &RelayOpts,
+    delivered: &mut Vec<String>,
+    mut on_token: impl FnMut(u64),
 ) -> RelayOutcome {
     let worker = (|| -> Result<TcpStream> {
-        let s = TcpStream::connect_timeout(&addr, connect_timeout)?;
-        s.set_read_timeout(Some(RELAY_READ_TIMEOUT))?;
+        let s = TcpStream::connect_timeout(&addr, opts.connect_timeout)?;
+        s.set_read_timeout(Some(opts.read_timeout))?;
         s.set_nodelay(true).ok();
         Ok(s)
     })();
     let Ok(mut worker) = worker else {
-        return RelayOutcome::WorkerLost { tokens: 0 };
+        return RelayOutcome::WorkerLost;
     };
     if writeln!(worker, "{gen_line}").is_err() {
-        return RelayOutcome::WorkerLost { tokens: 0 };
+        return RelayOutcome::WorkerLost;
     }
+    client.set_write_timeout(Some(opts.write_timeout)).ok();
     let mut reader = BufReader::new(worker);
-    let mut tokens = 0u64;
+    // prefix tokens verified + suppressed so far in THIS attempt
+    let mut replayed = 0usize;
     let mut line = String::new();
     loop {
         line.clear();
         match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => return RelayOutcome::WorkerLost { tokens },
+            Ok(0) | Err(_) => return RelayOutcome::WorkerLost,
             Ok(_) => {}
         }
-        if client.write_all(line.as_bytes()).is_err() {
-            return RelayOutcome::ClientGone;
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            let payload = tok_payload(rest);
+            if replayed < delivered.len() {
+                // failover replay: verify byte-for-byte, don't re-send
+                if payload != delivered[replayed] {
+                    return RelayOutcome::ReplayDiverged {
+                        at: replayed,
+                        want: delivered[replayed].clone(),
+                        got: payload,
+                    };
+                }
+                replayed += 1;
+                continue;
+            }
+            if client.write_all(line.as_bytes()).is_err() {
+                return RelayOutcome::ClientGone;
+            }
+            delivered.push(payload);
+            on_token(delivered.len() as u64);
+        } else if line.starts_with("END shutdown") {
+            // the worker aborted the session on its own kill/drain path;
+            // the stream is incomplete — same as losing the connection.
+            // (A router-drain never SHUTDOWNs a worker with sessions in
+            // flight, so this is always a worker dying under us.)
+            return RelayOutcome::WorkerLost;
+        } else if line.starts_with("ERR") && replayed < delivered.len() {
+            // a worker-side error before the prefix was reproduced is a
+            // transient failure of THIS worker (the original accepted
+            // and streamed the same request) — retry elsewhere
+            return RelayOutcome::WorkerLost;
+        } else if line.starts_with("END ") {
+            if replayed < delivered.len() {
+                // terminal before the already-delivered prefix was
+                // reproduced: the replay fell short — wrong bits by
+                // omission, never forwarded silently
+                return RelayOutcome::ReplayDiverged {
+                    at: replayed,
+                    want: delivered[replayed].clone(),
+                    got: line.trim().to_string(),
+                };
+            }
+            if client.write_all(line.as_bytes()).is_err() {
+                return RelayOutcome::ClientGone;
+            }
+            return RelayOutcome::Done;
+        } else if line.starts_with("ERR") {
+            if client.write_all(line.as_bytes()).is_err() {
+                return RelayOutcome::ClientGone;
+            }
+            return RelayOutcome::Done;
+        } else {
+            // anything else (future protocol lines) is forwarded verbatim
+            if client.write_all(line.as_bytes()).is_err() {
+                return RelayOutcome::ClientGone;
+            }
         }
-        if line.starts_with("TOK ") {
-            tokens += 1;
-        } else if line.starts_with("END ") || line.starts_with("ERR") {
-            return RelayOutcome::Done { tokens };
+    }
+}
+
+/// The deterministic payload of a `TOK` line: `<index> <token>`.  The
+/// third field (per-token latency µs) varies run to run by nature, so
+/// "byte-for-byte" prefix verification applies to the fields the
+/// determinism contract actually pins.
+fn tok_payload(rest: &str) -> String {
+    let mut it = rest.split_whitespace();
+    match (it.next(), it.next()) {
+        (Some(i), Some(t)) => format!("{i} {t}"),
+        _ => rest.trim().to_string(),
+    }
+}
+
+/// Wait (bounded) for a healthy worker to place a failover replay on.
+/// Polls rather than subscribes: the health loop's relaunch cadence is
+/// tens of milliseconds, and failover is rare.
+fn wait_for_replacement(router: &Router) -> Option<(usize, SocketAddr)> {
+    let deadline = Instant::now() + router.cfg.failover_wait;
+    loop {
+        if let Some(p) = router.fleet.place() {
+            return Some(p);
         }
-        // anything else (future protocol lines) is forwarded verbatim
+        if Instant::now() >= deadline || router.stopping() {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(10));
     }
 }
 
@@ -119,7 +244,7 @@ pub(super) fn proxy_session(
         }
         Ticket::Admitted => {}
     }
-    let Some((idx, addr)) = router.fleet.place() else {
+    let Some((mut idx, mut addr)) = router.fleet.place() else {
         // capacity said yes but every worker died in between — terminal
         // error, never a hang
         router.admission.release(client_ip);
@@ -131,36 +256,106 @@ pub(super) fn proxy_session(
         writeln!(writer, "ERR no healthy worker")?;
         return Ok(());
     };
-    let outcome = relay_session(writer, addr, gen_line, router.cfg.connect_timeout);
-    let (tokens, client_gone) = match outcome {
-        RelayOutcome::Done { tokens } => {
-            router.stats.routed.fetch_add(1, Ordering::Relaxed);
-            (tokens, false)
-        }
-        RelayOutcome::WorkerLost { tokens } => {
-            router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
-            obs::Event::new("session_error")
-                .u64("worker", idx as u64)
-                .u64("tokens", tokens)
-                .str("error", "worker lost")
-                .emit();
-            // a protocol ERR is a flight-recorder dump trigger
-            // (DESIGN.md §7): the ring holds the events leading here
-            obs::flight::dump("worker lost");
-            // terminal event for the client; the health thread will
-            // notice the corpse and schedule the restart
-            let _ = writeln!(writer, "ERR worker lost");
-            (tokens, false)
-        }
-        RelayOutcome::ClientGone => (0, true),
+    let opts = RelayOpts {
+        connect_timeout: router.cfg.connect_timeout,
+        read_timeout: router.cfg.relay_read_timeout,
+        write_timeout: router.cfg.client_write_timeout,
     };
-    router.stats.tokens.fetch_add(tokens, Ordering::Relaxed);
-    router.fleet.complete(idx, tokens);
+    // every TOK payload the client has received, across all attempts
+    let mut delivered: Vec<String> = Vec::new();
+    // chaos injection: SIGKILL the placed worker after N relayed tokens
+    let kill_after = faults::session_kill_after();
+    let mut kill_fired = false;
+    let mut failovers = 0u32;
+    let mut client_gone = false;
+    loop {
+        let before = delivered.len();
+        let cur_idx = idx;
+        let outcome = relay_session(writer, addr, gen_line, &opts, &mut delivered, |n| {
+            if !kill_fired && kill_after == Some(n) {
+                kill_fired = true;
+                router.kill_worker(cur_idx);
+            }
+        });
+        let new_tokens = (delivered.len() - before) as u64;
+        router.stats.tokens.fetch_add(new_tokens, Ordering::Relaxed);
+        // pairs with this attempt's place()/wait_for_replacement();
+        // per-worker token credit is what the worker newly streamed to
+        // the client (suppressed replay prefixes are not client tokens)
+        router.fleet.complete(idx, new_tokens);
+        match outcome {
+            RelayOutcome::Done => {
+                router.stats.routed.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            RelayOutcome::ClientGone => {
+                client_gone = true;
+                break;
+            }
+            RelayOutcome::ReplayDiverged { at, want, got } => {
+                router.stats.replay_diverged.fetch_add(1, Ordering::Relaxed);
+                obs::Event::new("session_error")
+                    .u64("worker", idx as u64)
+                    .u64("at", at as u64)
+                    .str("want", want)
+                    .str("got", got)
+                    .str("error", "replay diverged")
+                    .emit();
+                obs::flight::dump("replay diverged");
+                let _ = writeln!(writer, "ERR replay diverged");
+                break;
+            }
+            RelayOutcome::WorkerLost => {
+                // declare the corpse down right now (addr-guarded) so
+                // the replacement placement can't land back on it
+                router.note_worker_lost(idx, addr);
+                if failovers >= router.cfg.failover_retries {
+                    fail_session(router, writer, idx, delivered.len(), "retries exhausted");
+                    break;
+                }
+                let Some((ni, na)) = wait_for_replacement(router) else {
+                    fail_session(router, writer, idx, delivered.len(), "no replacement worker");
+                    break;
+                };
+                failovers += 1;
+                router.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                router
+                    .stats
+                    .replayed_tokens
+                    .lock()
+                    .unwrap()
+                    .record(delivered.len() as f64);
+                obs::Event::new("session_failover")
+                    .u64("from", idx as u64)
+                    .u64("to", ni as u64)
+                    .u64("replayed", delivered.len() as u64)
+                    .u64("attempt", failovers as u64)
+                    .emit();
+                idx = ni;
+                addr = na;
+            }
+        }
+    }
     router.admission.release(client_ip);
     if client_gone {
         anyhow::bail!("client disconnected mid-stream");
     }
     Ok(())
+}
+
+/// Terminal `ERR worker lost`: failover could not complete the session.
+fn fail_session(router: &Router, writer: &mut TcpStream, idx: usize, tokens: usize, why: &str) {
+    router.stats.worker_lost.fetch_add(1, Ordering::Relaxed);
+    obs::Event::new("session_error")
+        .u64("worker", idx as u64)
+        .u64("tokens", tokens as u64)
+        .str("why", why)
+        .str("error", "worker lost")
+        .emit();
+    // a protocol ERR is a flight-recorder dump trigger (DESIGN.md §7):
+    // the ring holds the events leading here
+    obs::flight::dump("worker lost");
+    let _ = writeln!(writer, "ERR worker lost");
 }
 
 /// One client connection: commands and sessions until QUIT/EOF/stop.

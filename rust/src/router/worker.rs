@@ -103,6 +103,9 @@ impl WorkerHandle for ProcessHandle {
 impl WorkerLauncher for ProcessLauncher {
     fn launch(&self, index: usize) -> Result<(SocketAddr, Box<dyn WorkerHandle>)> {
         use std::io::BufRead;
+        if crate::faults::spawn_failure(index) {
+            anyhow::bail!("injected spawn failure for worker {index}");
+        }
         let mut cmd = std::process::Command::new(&self.bin);
         cmd.arg("serve")
             .args(&self.args)
@@ -160,6 +163,10 @@ pub struct InProcessLauncher {
     /// `max_batch` of each worker's scheduler.
     pub max_batch: usize,
     pub fail_next_launches: std::sync::atomic::AtomicUsize,
+    /// Make the next N launches announce their address and then die
+    /// immediately — the crash-loop shape where a worker comes up just
+    /// long enough to be marked Up before exiting (backoff-reset tests).
+    die_next_launches: std::sync::atomic::AtomicUsize,
     /// Every launch ever made, for `launch_count` assertions.
     launches: std::sync::atomic::AtomicUsize,
 }
@@ -171,6 +178,7 @@ impl InProcessLauncher {
             step_delay,
             max_batch,
             fail_next_launches: std::sync::atomic::AtomicUsize::new(0),
+            die_next_launches: std::sync::atomic::AtomicUsize::new(0),
             launches: std::sync::atomic::AtomicUsize::new(0),
         }
     }
@@ -182,6 +190,13 @@ impl InProcessLauncher {
     /// Make the next `n` launch attempts fail (restart-backoff tests).
     pub fn fail_next(&self, n: usize) {
         self.fail_next_launches
+            .store(n, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    /// Make the next `n` launches succeed but die right after announcing
+    /// — a crash-looping worker.  `usize::MAX` means "die forever".
+    pub fn die_next(&self, n: usize) {
+        self.die_next_launches
             .store(n, std::sync::atomic::Ordering::SeqCst);
     }
 }
@@ -234,6 +249,9 @@ impl WorkerLauncher for InProcessLauncher {
     fn launch(&self, index: usize) -> Result<(SocketAddr, Box<dyn WorkerHandle>)> {
         use std::sync::atomic::Ordering;
         self.launches.fetch_add(1, Ordering::SeqCst);
+        if crate::faults::spawn_failure(index) {
+            anyhow::bail!("injected spawn failure for worker {index}");
+        }
         let failures = self.fail_next_launches.load(Ordering::SeqCst);
         if failures > 0 {
             self.fail_next_launches.store(failures - 1, Ordering::SeqCst);
@@ -259,14 +277,22 @@ impl WorkerLauncher for InProcessLauncher {
                     let _ = crate::coordinator::serve_on(listener, coord, stop);
                 })?
         };
-        Ok((
-            addr,
-            Box::new(InProcessHandle {
-                coord,
-                stop,
-                thread: Some(thread),
-            }),
-        ))
+        let mut handle = InProcessHandle {
+            coord,
+            stop,
+            thread: Some(thread),
+        };
+        let die = self.die_next_launches.load(Ordering::SeqCst);
+        if die > 0 {
+            if die != usize::MAX {
+                self.die_next_launches.store(die - 1, Ordering::SeqCst);
+            }
+            // Announce-then-die: the caller gets a valid (addr, handle)
+            // pair — exactly what a real crash-looping child looks like
+            // from the supervisor's side — but the worker is already gone.
+            handle.kill();
+        }
+        Ok((addr, Box::new(handle)))
     }
 }
 

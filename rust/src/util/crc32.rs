@@ -1,0 +1,74 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the artifact
+//! integrity checksum (DESIGN.md §8).
+//!
+//! The vendor set has no hashing crate, so the repo carries the standard
+//! table-driven implementation; the table is built by a `const fn`, so
+//! the 1 KiB lookup lives in rodata with zero startup cost.  CRC-32 is
+//! an *integrity* check (bit rot, truncation, torn writes), not an
+//! authenticity check — exactly the failure class a packed model on an
+//! edge device's flash is exposed to.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (matches `zlib.crc32` / `cksum -o3` semantics).
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(0, data)
+}
+
+/// Continue a running CRC-32: `crc32_update(crc32(a), b) == crc32(a ++ b)`.
+pub fn crc32_update(crc: u32, data: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical check value for "123456789", plus zlib-verified
+        // vectors for the empty string and a longer ASCII run
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn update_is_concatenation() {
+        let all = crc32(b"hello world");
+        assert_eq!(crc32_update(crc32(b"hello "), b"world"), all);
+        assert_ne!(crc32(b"hello world!"), all);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_the_checksum() {
+        let mut data = vec![0xA5u8; 4096];
+        let clean = crc32(&data);
+        for idx in [0, 1, 2048, 4095] {
+            data[idx] ^= 0x01;
+            assert_ne!(crc32(&data), clean, "flip at {idx} undetected");
+            data[idx] ^= 0x01;
+        }
+        assert_eq!(crc32(&data), clean);
+    }
+}

@@ -4,6 +4,7 @@
 //! xoshiro256++ generator ([`Rng`]) seeded via SplitMix64 — deterministic
 //! across runs, good enough for data generation and property tests.
 
+pub mod crc32;
 pub mod net;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,253 @@
+//! Chaos suite: seeded fault schedules against a live `route` stack
+//! (DESIGN.md §8).
+//!
+//! Every test drives the real router — admission, placement, relay,
+//! failover, health/restart — over hermetic in-process workers, with a
+//! deterministic fault plan installed via [`butterfly_moe::faults`].
+//! The invariants pinned here are the robustness contract:
+//!
+//! * every accepted session ends in exactly one terminal event (an
+//!   `END`/`ERR` line followed by clean EOF — never a hang, never a
+//!   second terminal);
+//! * sessions that complete through failover are bit-identical to a
+//!   fault-free run of the same request;
+//! * once the fault plan is cleared, the fleet returns to full healthy
+//!   capacity and serves again.
+//!
+//! The fault plan is process-global, so tests that install one
+//! serialize on a local mutex.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use butterfly_moe::faults::{clear, install, FaultPlan};
+use butterfly_moe::router::{worker::InProcessLauncher, Router, RouterConfig};
+
+/// Serializes the tests in this binary: the fault plan is one global.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn base_cfg() -> RouterConfig {
+    RouterConfig {
+        port: 0,
+        fleet: 2,
+        sessions_per_worker: 4,
+        max_queue: 8,
+        client_cap: 0,
+        health_interval: Duration::from_millis(30),
+        backoff_base: Duration::from_millis(20),
+        backoff_cap: Duration::from_millis(500),
+        queue_timeout: Duration::from_secs(10),
+        drain_timeout: Duration::from_secs(30),
+        failover_retries: 5,
+        failover_wait: Duration::from_secs(20),
+        ..RouterConfig::default()
+    }
+}
+
+fn start(cfg: RouterConfig, launcher: InProcessLauncher) -> (Arc<Router>, SocketAddr) {
+    let fleet = cfg.fleet;
+    let router = Router::start(cfg, Arc::new(launcher)).unwrap();
+    let (listener, addr) = butterfly_moe::util::net::listen_reuse(0).unwrap();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || router.serve(listener));
+    }
+    assert_eq!(router.fleet.healthy(), fleet, "fleet must boot fully");
+    (router, addr)
+}
+
+/// Run one session and assert the exactly-one-terminal contract: the
+/// stream is TOK lines, then ONE terminal (`END`/`ERR`), then clean EOF
+/// (a trailing QUIT closes the connection).  Returns (tokens, terminal).
+fn run_to_single_terminal(addr: SocketAddr, gen: &str) -> (Vec<i32>, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "{gen}\nQUIT\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut toks = Vec::new();
+    let terminal = loop {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).unwrap_or(0);
+        assert!(n > 0, "EOF before any terminal line (tokens so far: {toks:?})");
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            toks.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+        } else {
+            break line.trim().to_string();
+        }
+    };
+    let mut extra = String::new();
+    assert_eq!(
+        r.read_line(&mut extra).unwrap_or(0),
+        0,
+        "exactly one terminal event per session; got extra line {extra:?} after {terminal:?}"
+    );
+    (toks, terminal)
+}
+
+fn wait_full_capacity(router: &Router, fleet: usize, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router.fleet.healthy() != fleet {
+        assert!(
+            Instant::now() < deadline,
+            "{what}: fleet never returned to full capacity ({}/{fleet} healthy)",
+            router.fleet.healthy()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// A seeded kill schedule: the first three sessions each lose their
+/// placed worker mid-stream (SIGKILL after 6 relayed tokens).  Every
+/// session must still end in exactly one `END max_tokens` terminal with
+/// a token stream bit-identical to the fault-free baseline — failover
+/// absorbs every kill — and the fleet returns to full capacity once the
+/// plan is cleared.
+#[test]
+fn seeded_kill_schedule_completes_every_session_bit_identically() {
+    let _g = lock();
+    clear();
+    let cfg = RouterConfig { fleet: 3, ..base_cfg() };
+    let (router, addr) = start(cfg, InProcessLauncher::new(Duration::from_millis(5), 4));
+    let gen = "GEN 24 0 0 0 -1 1 2";
+    // fault-free baseline (CountBackend streams are deterministic in the
+    // request, so this is the bit-identity reference)
+    let (baseline, base_end) = run_to_single_terminal(addr, gen);
+    assert_eq!(baseline.len(), 24);
+    assert!(base_end.starts_with("END max_tokens 24 "), "{base_end}");
+    install(FaultPlan {
+        seed: 11,
+        kill_after: 6,
+        kill_prob: 1.0,
+        kill_limit: 3,
+        ..FaultPlan::default()
+    });
+    for i in 0..8 {
+        let (toks, end) = run_to_single_terminal(addr, gen);
+        assert_eq!(toks, baseline, "session {i}: stream must be bit-identical through faults");
+        assert!(end.starts_with("END max_tokens 24 "), "session {i}: no ERR, got {end}");
+    }
+    clear();
+    use std::sync::atomic::Ordering;
+    assert_eq!(router.stats.worker_lost.load(Ordering::Relaxed), 0, "failover absorbed kills");
+    assert_eq!(router.stats.replay_diverged.load(Ordering::Relaxed), 0);
+    assert!(
+        router.stats.failovers.load(Ordering::Relaxed) >= 3,
+        "three kills fired => at least three failovers, got {}",
+        router.stats.failovers.load(Ordering::Relaxed)
+    );
+    wait_full_capacity(&router, 3, "after kill schedule");
+    let (toks, end) = run_to_single_terminal(addr, gen);
+    assert_eq!(toks, baseline);
+    assert!(end.starts_with("END max_tokens 24 "), "{end}");
+    router.drain();
+}
+
+/// While every launch attempt fails (spawn_fail=1), a killed worker
+/// stays down — and the moment the plan clears, the health loop's next
+/// relaunch sticks and sessions flow again.
+#[test]
+fn spawn_failures_block_restart_until_the_plan_clears() {
+    let _g = lock();
+    clear();
+    let cfg = RouterConfig { fleet: 1, ..base_cfg() };
+    let (router, addr) = start(cfg, InProcessLauncher::new(Duration::ZERO, 4));
+    let (toks, _) = run_to_single_terminal(addr, "GEN 2 0 0 0 -1 1 2");
+    assert_eq!(toks.len(), 2);
+    install(FaultPlan { spawn_fail: 1.0, ..FaultPlan::default() });
+    router.kill_worker(0);
+    // the health loop notices the death and retries the launch, but
+    // every attempt is injected to fail
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.fleet.healthy() != 0 {
+        assert!(Instant::now() < deadline, "killed worker never marked down");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(router.fleet.healthy(), 0, "no launch may succeed under spawn_fail=1");
+    clear();
+    wait_full_capacity(&router, 1, "after spawn failures");
+    let (toks, end) = run_to_single_terminal(addr, "GEN 2 0 0 0 -1 1 2");
+    assert_eq!(toks.len(), 2, "{end}");
+    router.drain();
+}
+
+/// A stalled worker (answers nothing, holds its sockets) must trip the
+/// relay's read timeout and produce a bounded terminal ERR — never a
+/// hung client — and the fleet must recover once the stall clears.
+#[test]
+fn stalled_workers_give_bounded_err_and_fleet_recovers() {
+    let _g = lock();
+    clear();
+    let cfg = RouterConfig {
+        fleet: 2,
+        failover_retries: 1,
+        failover_wait: Duration::from_secs(1),
+        relay_read_timeout: Duration::from_millis(250),
+        ..base_cfg()
+    };
+    let (router, addr) = start(cfg, InProcessLauncher::new(Duration::ZERO, 4));
+    let gen = "GEN 6 0 0 0 -1 1 2";
+    let (baseline, _) = run_to_single_terminal(addr, gen);
+    assert_eq!(baseline.len(), 6);
+    // every wire line (GEN relays and STATS health polls alike) now
+    // stalls far past the relay read timeout
+    install(FaultPlan { stall_ms: 3_000, stall_prob: 1.0, ..FaultPlan::default() });
+    let t0 = Instant::now();
+    let (toks, end) = run_to_single_terminal(addr, gen);
+    assert!(toks.is_empty(), "stalled workers streamed tokens? {toks:?}");
+    assert!(end.starts_with("ERR"), "bounded terminal error, got {end}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "stall must be bounded by timeouts, took {:?}",
+        t0.elapsed()
+    );
+    clear();
+    // restarted workers answer polls again; sessions flow and match
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if router.fleet.healthy() > 0 {
+            let (toks, end) = run_to_single_terminal(addr, gen);
+            if end.starts_with("END max_tokens 6 ") {
+                assert_eq!(toks, baseline, "post-recovery stream must match baseline");
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "fleet never recovered from stalls");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    wait_full_capacity(&router, 2, "after stalls");
+    router.drain();
+}
+
+/// A corrupted inbound `GEN` line on the worker is always parse-visible
+/// (never a silently different request): the session ends in exactly
+/// one clean `ERR bad request` terminal, no tokens, and the fleet keeps
+/// serving untouched once the plan clears.
+#[test]
+fn corrupted_wire_line_is_one_clean_error_terminal() {
+    let _g = lock();
+    clear();
+    let cfg = RouterConfig { fleet: 1, ..base_cfg() };
+    let (router, addr) = start(cfg, InProcessLauncher::new(Duration::ZERO, 4));
+    let gen = "GEN 4 0 0 0 -1 1 2";
+    let (baseline, _) = run_to_single_terminal(addr, gen);
+    assert_eq!(baseline.len(), 4);
+    install(FaultPlan { seed: 9, corrupt_line: 1.0, ..FaultPlan::default() });
+    let (toks, end) = run_to_single_terminal(addr, gen);
+    assert!(toks.is_empty(), "corrupted request must stream no tokens, got {toks:?}");
+    assert!(end.starts_with("ERR"), "one clean terminal, got {end}");
+    clear();
+    use std::sync::atomic::Ordering;
+    // the worker rejected the line itself; nothing died, nothing failed over
+    assert_eq!(router.stats.worker_lost.load(Ordering::Relaxed), 0);
+    assert_eq!(router.stats.failovers.load(Ordering::Relaxed), 0);
+    assert_eq!(router.fleet.healthy(), 1, "corruption must not cost capacity");
+    let (toks, end) = run_to_single_terminal(addr, gen);
+    assert_eq!(toks, baseline, "{end}");
+    router.drain();
+}
