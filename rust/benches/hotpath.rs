@@ -20,16 +20,25 @@
 //! (median tok/s per config) so future PRs have a perf trajectory to
 //! compare against.
 //!
+//! §Perf iteration 8 adds the runtime-ISA axis: the full run measures
+//! every available kernel path (forced via `kernels::dispatch`) at the
+//! paper shape, and `BENCH_hotpath.json` records the active `isa` so
+//! curves from different CI legs (`BMOE_KERNEL_ISA` matrix) never get
+//! compared apples-to-oranges.
+//!
 //! `cargo bench --bench hotpath -- smoke` (or BMOE_BENCH_SMOKE=1) is the
 //! CI gate: a tiny 2-worker scaling check (parallel ≥ sequential) plus
 //! blocked-vs-reference kernel checks (blocked ≥ reference tok/s at the
-//! bench shape); it also emits `BENCH_hotpath.json` (mode "smoke").
+//! bench shape) plus the dispatch gate — the startup-selected ISA path
+//! must at least match the blocked-scalar reference (within a 5% noise
+//! floor; on a scalar-pinned leg the two are the same path).  It also
+//! emits `BENCH_hotpath.json` (mode "smoke").
 
 use std::sync::Arc;
 
 use butterfly_moe::bench::{black_box, Bencher, Table};
 use butterfly_moe::butterfly::Butterfly;
-use butterfly_moe::kernels::TernaryScratch;
+use butterfly_moe::kernels::{dispatch, Isa, TernaryScratch};
 use butterfly_moe::moe::{ButterflyMoeLayer, GateNetwork, MoeLayer, StandardMoeLayer};
 use butterfly_moe::parallel::WorkerPool;
 use butterfly_moe::quant::ternary_quantize;
@@ -130,9 +139,15 @@ fn ternary_gemm_tokens_per_sec(
 
 /// Machine-readable perf trajectory at the repo root: median tok/s per
 /// kernel config plus the workers curve — future PRs diff against it.
-fn write_bench_json(mode: &str, kernels: &[String], workers: &[String]) -> std::io::Result<()> {
+fn write_bench_json(
+    mode: &str,
+    isa: Isa,
+    kernels: &[String],
+    workers: &[String],
+) -> std::io::Result<()> {
     let body = format!(
         "{{\n  \"schema\": \"bmoe_hotpath_v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"isa\": \"{isa}\",\n  \
          \"kernels\": [\n{}\n  ],\n  \"workers\": [\n{}\n  ]\n}}\n",
         kernels.join(",\n"),
         workers.join(",\n"),
@@ -164,6 +179,10 @@ fn worker_json_row(workers: usize, tps: f64, speedup: f64) -> String {
 /// measured.
 fn smoke() -> anyhow::Result<()> {
     let bencher = Bencher::quick();
+    // the startup-selected path (BMOE_KERNEL_ISA in the CI matrix, else
+    // detection) — everything below runs on it unless explicitly forced
+    let active = dispatch::active();
+    println!("[smoke] kernel ISA: {active}");
     let (d, dff, e, batch) = (256usize, 1024usize, 8usize, 32usize);
     let best = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(0.0f64, f64::max);
     let seq = best(&|| forward_tokens_per_sec(&bencher, 1, d, dff, e, batch));
@@ -189,6 +208,22 @@ fn smoke() -> anyhow::Result<()> {
          blocked {gm_blk:.0} tok/s ({:.2}x)",
         gm_blk / gm_ref
     );
+    // dispatch gate: the startup-selected path must at least match the
+    // blocked-scalar reference.  5% noise floor: on a scalar-pinned leg
+    // both measurements are the same code, and best-of-3 medians on
+    // shared CI boxes still jitter a few percent.
+    dispatch::force_isa(Isa::Scalar)?;
+    let bf_s = best(&|| butterfly_batch_rows_per_sec(&bencher, bd, bdepth, brows, true));
+    let gm_s = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "blocked"));
+    let a8_s = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "blocked_a8"));
+    dispatch::force_isa(active)?;
+    let bf_d = best(&|| butterfly_batch_rows_per_sec(&bencher, bd, bdepth, brows, true));
+    let gm_d = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "blocked"));
+    let a8_d = best(&|| ternary_gemm_tokens_per_sec(&bencher, grows, gcols, gt, "blocked_a8"));
+    println!(
+        "[smoke] isa {active} vs scalar: butterfly {bf_d:.0}/{bf_s:.0} rows/s | \
+         gemm {gm_d:.0}/{gm_s:.0} tok/s | a8 {a8_d:.0}/{a8_s:.0} tok/s"
+    );
     let bcfg = format!("d{bd}_l{bdepth}_r{brows}");
     let gcfg = format!("{grows}x{gcols}_t{gt}");
     let kernel_rows = vec![
@@ -196,12 +231,18 @@ fn smoke() -> anyhow::Result<()> {
         kernel_json_row("butterfly_batch", "blocked", &bcfg, bf_blk),
         kernel_json_row("ternary_gemm", "dot_loop", &gcfg, gm_ref),
         kernel_json_row("ternary_gemm", "blocked", &gcfg, gm_blk),
+        kernel_json_row("butterfly_batch", "blocked_scalar", &bcfg, bf_s),
+        kernel_json_row("ternary_gemm", "blocked_scalar", &gcfg, gm_s),
+        kernel_json_row("ternary_gemm", "blocked_a8_scalar", &gcfg, a8_s),
+        kernel_json_row("butterfly_batch", &format!("blocked_{active}"), &bcfg, bf_d),
+        kernel_json_row("ternary_gemm", &format!("blocked_{active}"), &gcfg, gm_d),
+        kernel_json_row("ternary_gemm", &format!("blocked_a8_{active}"), &gcfg, a8_d),
     ];
     let worker_rows = vec![
         format!("    {}", worker_json_row(1, seq, 1.0)),
         format!("    {}", worker_json_row(2, par, par / seq)),
     ];
-    write_bench_json("smoke", &kernel_rows, &worker_rows)?;
+    write_bench_json("smoke", active, &kernel_rows, &worker_rows)?;
     anyhow::ensure!(
         par >= seq,
         "parallel ({par:.0} tok/s) must be >= sequential ({seq:.0} tok/s)"
@@ -213,6 +254,12 @@ fn smoke() -> anyhow::Result<()> {
     anyhow::ensure!(
         gm_blk >= gm_ref,
         "blocked gemm ({gm_blk:.0} tok/s) must be >= dot-loop ({gm_ref:.0} tok/s)"
+    );
+    anyhow::ensure!(
+        bf_d >= 0.95 * bf_s && gm_d >= 0.95 * gm_s && a8_d >= 0.95 * a8_s,
+        "dispatched ISA {active} slower than blocked-scalar: butterfly \
+         {bf_d:.0}/{bf_s:.0} rows/s, gemm {gm_d:.0}/{gm_s:.0} tok/s, \
+         a8 {a8_d:.0}/{a8_s:.0} tok/s"
     );
     Ok(())
 }
@@ -379,6 +426,45 @@ fn main() -> anyhow::Result<()> {
     t.write_csv(&out.join("hotpath_gemm_blocked.csv"))?;
 
     // ------------------------------------------------------------------
+    // per-ISA curves (§Perf iteration 8): the same blocked kernels on
+    // every available dispatch path at the paper shape.  f32 outputs
+    // are bit-identical across paths (tests/kernels.rs); only the
+    // instruction selection differs.
+    // ------------------------------------------------------------------
+    let active = dispatch::active();
+    let mut t = Table::new(
+        "Kernel ISA curves (blocked kernels, paper shape, bit-identical)",
+        &["ISA", "bfly rows/s", "gemm tok/s", "a8 tok/s"],
+    );
+    let idepth = Butterfly::max_depth(512);
+    for isa in Isa::ALL {
+        if !isa.available() {
+            println!("skipping ISA {isa}: unavailable on this machine");
+            continue;
+        }
+        dispatch::force_isa(isa)?;
+        let bf = butterfly_batch_rows_per_sec(&bencher, 512, idepth, 32, true);
+        let gm = ternary_gemm_tokens_per_sec(&bencher, dff, d, 16, "blocked");
+        let a8 = ternary_gemm_tokens_per_sec(&bencher, dff, d, 16, "blocked_a8");
+        t.row(&[
+            isa.name().to_string(),
+            format!("{bf:.0}"),
+            format!("{gm:.0}"),
+            format!("{a8:.0}"),
+        ]);
+        let bcfg = format!("d512_l{idepth}_r32");
+        let gcfg = format!("{dff}x{d}_t16");
+        let bv = format!("blocked_{isa}");
+        let av = format!("blocked_a8_{isa}");
+        kernel_rows.push(kernel_json_row("butterfly_batch", &bv, &bcfg, bf));
+        kernel_rows.push(kernel_json_row("ternary_gemm", &bv, &gcfg, gm));
+        kernel_rows.push(kernel_json_row("ternary_gemm", &av, &gcfg, a8));
+    }
+    dispatch::force_isa(active)?;
+    t.print();
+    t.write_csv(&out.join("hotpath_isa.csv"))?;
+
+    // ------------------------------------------------------------------
     // gate + full mixture, butterfly vs standard (paper layer shape)
     // ------------------------------------------------------------------
     let batch = 16usize;
@@ -465,6 +551,6 @@ fn main() -> anyhow::Result<()> {
         format!("[\n{}\n]\n", json_rows.join(",\n")),
     )?;
     println!("\nwrote runs/tables/hotpath_scaling.csv and hotpath_scaling.json");
-    write_bench_json("full", &kernel_rows, &worker_rows)?;
+    write_bench_json("full", dispatch::active(), &kernel_rows, &worker_rows)?;
     Ok(())
 }

@@ -78,7 +78,16 @@ impl Args {
 fn is_switch(name: &str) -> bool {
     matches!(
         name,
-        "quick" | "verbose" | "help" | "csv" | "paper" | "native" | "pjrt" | "no-warmup" | "verify"
+        "quick"
+            | "verbose"
+            | "help"
+            | "csv"
+            | "paper"
+            | "native"
+            | "pjrt"
+            | "no-warmup"
+            | "verify"
+            | "exact"
     )
 }
 
@@ -132,6 +141,19 @@ COMMON FLAGS:
                         working set served by a plain dense GEMM,
                         bit-identical to on-the-fly synthesis; 0 (default)
                         disables it (pure sub-linear mode)
+  --exact               serve/route (--native): opt out of the default
+                        W1.58A8 quantized substrate GEMM and use the
+                        exact f32 path — token streams bit-identical to
+                        pre-A8 releases; also re-enables the expert
+                        residency cache (bypassed under A8).  The A8
+                        default's max logit error is bounded by the
+                        accuracy-gate test (tests/determinism.rs)
+  --kernel-isa ISA      serve/route/benches: pin the kernel ISA path
+                        (scalar|avx2|neon|auto); default auto = runtime
+                        detection.  Also read from the BMOE_KERNEL_ISA
+                        env var.  All paths are bit-identical (f32) /
+                        exactly equal (i8) — pinned by the cross-ISA
+                        parity suite in tests/kernels.rs
   --no-warmup           serving: skip the pre-serve warmup pass (bucket
                         compilation + expert-cache pre-materialization)
   --workers N           serving (--native) / examples / benches: worker
@@ -244,6 +266,16 @@ mod tests {
     fn trailing_switch() {
         let a = parse("tables --csv");
         assert!(a.has_switch("csv"));
+    }
+
+    #[test]
+    fn exact_is_a_switch_kernel_isa_takes_a_value() {
+        // --exact must not swallow the following token
+        let a = parse("serve --native --exact --kernel-isa avx2 --port 8080");
+        assert!(a.has_switch("exact"));
+        assert!(a.has_switch("native"));
+        assert_eq!(a.flag("kernel-isa"), Some("avx2"));
+        assert_eq!(a.flag("port"), Some("8080"));
     }
 
     #[test]

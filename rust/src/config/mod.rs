@@ -149,6 +149,17 @@ pub struct RuntimeConfig {
     /// start), `heap` eagerly deserializes — decoded token streams are
     /// bit-identical either way (see `artifact`)
     pub load_mode: String,
+    /// serving numerics (`--exact`): the native backend defaults to the
+    /// W1.58A8 quantized substrate GEMM (`BitplaneTernary::gemm_a8`),
+    /// whose max logit error vs the exact f32 path is bounded by the
+    /// accuracy-gate test; `--exact` opts back into the f32 path
+    /// (bit-identical to pre-A8 releases) and re-enables the
+    /// expert-residency cache
+    pub exact: bool,
+    /// kernel ISA override (`--kernel-isa scalar|avx2|neon|auto`, else
+    /// the `BMOE_KERNEL_ISA` env var); empty/`auto` = detect at startup
+    /// (see `kernels::dispatch`)
+    pub kernel_isa: String,
     pub port: u16,
     /// router (`bmoe route`): worker processes to spawn and supervise
     /// (`--fleet`)
@@ -207,6 +218,8 @@ impl Default for RuntimeConfig {
             n_layers: 1,
             model_path: String::new(),
             load_mode: "mmap".into(),
+            exact: false,
+            kernel_isa: String::new(),
             port: 7070,
             fleet: 2,
             sessions_per_worker: 16,
@@ -254,6 +267,13 @@ impl RuntimeConfig {
                     "load_mode must be mmap|heap"
                 );
                 self.load_mode = value.into();
+            }
+            "exact" => self.exact = value.parse().context("exact")?,
+            "kernel_isa" => {
+                // validate eagerly: a typo'd ISA must fail at startup,
+                // not fall back to auto-detection
+                crate::kernels::Isa::parse(value)?;
+                self.kernel_isa = value.into();
             }
             "port" => self.port = value.parse().context("port")?,
             "fleet" => {
@@ -404,6 +424,21 @@ mod tests {
         assert_eq!(r.load_mode, "heap");
         assert!(r.set("n_layers", "0").is_err());
         assert!(r.set("load_mode", "floppy").is_err());
+    }
+
+    #[test]
+    fn numerics_and_isa_overrides() {
+        let mut r = RuntimeConfig::default();
+        assert!(!r.exact, "W1.58A8 serving is the default; --exact opts out");
+        assert!(r.kernel_isa.is_empty(), "kernel ISA auto-detects by default");
+        r.set("exact", "true").unwrap();
+        r.set("kernel_isa", "scalar").unwrap();
+        assert!(r.exact);
+        assert_eq!(r.kernel_isa, "scalar");
+        r.set("kernel_isa", "auto").unwrap();
+        assert_eq!(r.kernel_isa, "auto");
+        assert!(r.set("exact", "yep").is_err());
+        assert!(r.set("kernel_isa", "sse9").is_err(), "typo'd ISA fails at set time");
     }
 
     #[test]

@@ -499,10 +499,19 @@ impl NativeLmBackend {
     /// evenly (a split that rounds to zero attaches no cache), and each
     /// block learns its stack index so sampled stage timings carry a
     /// `layer` label (see `crate::obs::trace`).
+    ///
+    /// `act_quant` flips every block's substrate GEMM to the W1.58A8
+    /// path (the serving default; `--exact` opts out).  Because the a8
+    /// forward never consults the residency cache
+    /// (`ButterflyMoeLayer::experts_forward`), no cache is attached in
+    /// that mode even when a budget was requested — materializing
+    /// working sets no forward would read wastes the budget silently;
+    /// `cmd_serve` surfaces the conflict as a warning instead.
     fn attach_stack(
         layers: Vec<crate::moe::ButterflyMoeLayer>,
         pool: Option<Arc<crate::parallel::WorkerPool>>,
         cache_budget_bytes: usize,
+        act_quant: bool,
     ) -> Vec<Arc<dyn MoeLayer>> {
         let per_layer_budget = cache_budget_bytes / layers.len().max(1);
         layers
@@ -510,10 +519,11 @@ impl NativeLmBackend {
             .enumerate()
             .map(|(i, mut layer)| {
                 layer.set_trace_layer(i as u32);
+                layer.act_quant = act_quant;
                 if let Some(p) = &pool {
                     layer.attach_worker_pool(p.clone());
                 }
-                if per_layer_budget > 0 {
+                if per_layer_budget > 0 && !act_quant {
                     layer.attach_expert_cache(
                         crate::expertcache::ExpertCacheConfig::with_budget_bytes(per_layer_budget),
                     );
@@ -525,15 +535,32 @@ impl NativeLmBackend {
 
     /// Build the full stack from a loaded model artifact, attaching a
     /// worker pool (shared across layers) and an optional expert-cache
-    /// budget (split evenly across layers) to every block.
+    /// budget (split evenly across layers) to every block.  Exact (f32)
+    /// substrate GEMMs — the bit-pinned path every parity test is
+    /// defined against; serving uses [`Self::from_artifact_opts`] to
+    /// select W1.58A8 by default.
     pub fn from_artifact(
         artifact: &crate::artifact::ModelArtifact,
         max_batch: usize,
         pool: Option<Arc<crate::parallel::WorkerPool>>,
         cache_budget_bytes: usize,
     ) -> Result<Self> {
+        Self::from_artifact_opts(artifact, max_batch, pool, cache_budget_bytes, false)
+    }
+
+    /// [`Self::from_artifact`] with the activation-quantization choice
+    /// explicit: `act_quant = true` is the W1.58A8 serving default,
+    /// `false` the exact path (`--exact`).
+    pub fn from_artifact_opts(
+        artifact: &crate::artifact::ModelArtifact,
+        max_batch: usize,
+        pool: Option<Arc<crate::parallel::WorkerPool>>,
+        cache_budget_bytes: usize,
+        act_quant: bool,
+    ) -> Result<Self> {
         let m = &artifact.manifest;
-        let layers = Self::attach_stack(artifact.build_layers()?, pool, cache_budget_bytes);
+        let layers =
+            Self::attach_stack(artifact.build_layers()?, pool, cache_budget_bytes, act_quant);
         let mut b = Self::from_layers(
             layers,
             artifact.embed()?,
@@ -550,14 +577,27 @@ impl NativeLmBackend {
     /// Build from a synthesized model with the same pool/cache attach
     /// policy as [`Self::from_artifact`] — the one construction path
     /// `bmoe serve --native` (no `--model`) and the examples share.
+    /// Exact substrate GEMMs, like [`Self::from_artifact`].
     pub fn from_synth(
         model: crate::artifact::SynthModel,
         max_batch: usize,
         pool: Option<Arc<crate::parallel::WorkerPool>>,
         cache_budget_bytes: usize,
     ) -> Self {
+        Self::from_synth_opts(model, max_batch, pool, cache_budget_bytes, false)
+    }
+
+    /// [`Self::from_synth`] with the activation-quantization choice
+    /// explicit (see [`Self::from_artifact_opts`]).
+    pub fn from_synth_opts(
+        model: crate::artifact::SynthModel,
+        max_batch: usize,
+        pool: Option<Arc<crate::parallel::WorkerPool>>,
+        cache_budget_bytes: usize,
+        act_quant: bool,
+    ) -> Self {
         let (vocab, seq_len) = (model.manifest.vocab, model.manifest.seq_len);
-        let layers = Self::attach_stack(model.layers, pool, cache_budget_bytes);
+        let layers = Self::attach_stack(model.layers, pool, cache_budget_bytes, act_quant);
         Self::from_layers(
             layers,
             ShTensor::from_tensor(model.embed),

@@ -30,6 +30,15 @@
 //! bits whichever path an expert takes — parity-tested in
 //! `rust/tests/expert_cache.rs`.
 //!
+//! The cache accelerates the **exact (f32) substrate path only**.  The
+//! W1.58A8 serving default (`ButterflyMoeLayer::act_quant`, §Perf
+//! iteration 8) quantizes activations per token and runs the substrate
+//! GEMM in integer arithmetic — a resident decoded-f32 working set is
+//! the wrong operand for it, so a8 forwards keep the synthesis path
+//! unconditionally and the stack assembler attaches no cache in a8
+//! mode (`--expert-cache-mb` takes effect under `--exact`; `cmd_serve`
+//! warns about the combination instead of silently ignoring it).
+//!
 //! Because the v1 substrate is fully shared, resident decodes currently
 //! have identical *contents* across experts; residency, budgeting and
 //! eviction are still per-expert because the gating statistics, the

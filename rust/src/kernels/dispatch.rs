@@ -1,0 +1,234 @@
+//! Runtime ISA dispatch for the blocked micro-kernels (§Perf
+//! iteration 8).
+//!
+//! The kernel suite ships three implementations of every hot kernel —
+//! the blocked-scalar reference ([`super`]), explicit AVX2
+//! (`kernels::x86`, x86_64) and explicit NEON (`kernels::neon`,
+//! aarch64) — and selects one **once** at startup:
+//!
+//! 1. a programmatic [`force`] / [`force_isa`] (the `--kernel-isa`
+//!    flag, tests, benches), else
+//! 2. the `BMOE_KERNEL_ISA` env var (`scalar` | `avx2` | `neon`), else
+//! 3. [`Isa::detect`]: the widest path the CPU supports.
+//!
+//! After resolution every dispatched kernel entry is one relaxed atomic
+//! load plus a predictable match — no per-tile indirection, no
+//! allocation (pinned by `rust/tests/alloc_guard.rs`).
+//!
+//! # Why forcing is part of the design, not a debug hack
+//!
+//! The bit-identity contract (`super` module docs) is *cross-ISA*: the
+//! f32 kernels must produce the blocked-scalar reference's bits on
+//! every path, and the i8 kernels the same exact integers.  The parity
+//! suite (`rust/tests/kernels.rs`) therefore has to run every property
+//! against every ISA **on one machine**, which requires overriding
+//! detection; CI forces each leg via `BMOE_KERNEL_ISA`.  [`Isa`]
+//! deliberately exists (and parses) on every target so an unavailable
+//! path is a *reported skip*, never a silently vacuous pass.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+/// A selectable kernel instruction-set path.  `Scalar` is the blocked
+/// reference the determinism contract is defined against; the SIMD
+/// paths are pinned bit-identical (f32) / exactly-equal (i8) to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Blocked-scalar reference kernels (autovectorized by LLVM).
+    Scalar,
+    /// Explicit `std::arch` AVX2 kernels (x86_64, runtime-detected).
+    Avx2,
+    /// Explicit `std::arch` NEON kernels (aarch64 baseline).
+    Neon,
+}
+
+impl Isa {
+    /// Every path the binary knows about, availability aside — the
+    /// parity suite iterates this so unavailable ISAs surface as
+    /// explicit skips.
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Neon];
+
+    /// Canonical spelling (what `BMOE_KERNEL_ISA` / `--kernel-isa`
+    /// accept and what `BENCH_hotpath.json` records).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a spec string (case-insensitive; empty/`auto` = `None`,
+    /// meaning "use detection").
+    pub fn parse(spec: &str) -> Result<Option<Isa>> {
+        match spec.to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(None),
+            "scalar" => Ok(Some(Isa::Scalar)),
+            "avx2" => Ok(Some(Isa::Avx2)),
+            "neon" => Ok(Some(Isa::Neon)),
+            other => bail!("unknown kernel ISA {other:?} (scalar|avx2|neon|auto)"),
+        }
+    }
+
+    /// Whether this path can run on the current machine.  `Scalar` is
+    /// always available; `Avx2` needs x86_64 *and* runtime CPUID
+    /// support; `Neon` is baseline on every aarch64.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => false,
+            Isa::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Widest available path on this machine (never fails: falls back
+    /// to `Scalar`).
+    pub fn detect() -> Isa {
+        if Isa::Avx2.available() {
+            Isa::Avx2
+        } else if Isa::Neon.available() {
+            Isa::Neon
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Isa> {
+        match v {
+            1 => Some(Isa::Scalar),
+            2 => Some(Isa::Avx2),
+            3 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// 0 = unresolved; else `Isa::to_u8`.  Relaxed everywhere: resolution
+/// is idempotent and the value never coordinates other memory.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The ISA the dispatched kernel entries run on.  Resolves lazily on
+/// first use (force → `BMOE_KERNEL_ISA` → detection) and then costs one
+/// atomic load.  An invalid or unavailable env spec panics — a serving
+/// process silently falling back to a different ISA than the operator
+/// pinned would defeat the point of pinning.
+#[inline]
+pub fn active() -> Isa {
+    match Isa::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => resolve(),
+    }
+}
+
+#[cold]
+fn resolve() -> Isa {
+    let isa = match std::env::var("BMOE_KERNEL_ISA") {
+        Ok(spec) => match Isa::parse(&spec) {
+            Ok(Some(isa)) if isa.available() => isa,
+            Ok(Some(isa)) => {
+                panic!("BMOE_KERNEL_ISA={spec}: {} unavailable on this machine", isa.name())
+            }
+            Ok(None) => Isa::detect(),
+            Err(e) => panic!("BMOE_KERNEL_ISA: {e}"),
+        },
+        Err(_) => Isa::detect(),
+    };
+    ACTIVE.store(isa.to_u8(), Ordering::Relaxed);
+    isa
+}
+
+/// Force the dispatched path from a spec string (the `--kernel-isa`
+/// flag).  `""`/`"auto"` re-runs env + detection.  Errors on an unknown
+/// or unavailable ISA; re-forcing is allowed (tests and benches cycle
+/// paths within one process).
+pub fn force(spec: &str) -> Result<Isa> {
+    match Isa::parse(spec)? {
+        Some(isa) => {
+            force_isa(isa)?;
+            Ok(isa)
+        }
+        None => {
+            ACTIVE.store(0, Ordering::Relaxed);
+            Ok(active())
+        }
+    }
+}
+
+/// Force a specific [`Isa`].  Errors if the path cannot run here.
+pub fn force_isa(isa: Isa) -> Result<()> {
+    if !isa.available() {
+        bail!("kernel ISA {} unavailable on this machine", isa.name());
+    }
+    ACTIVE.store(isa.to_u8(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// How many W1.58A8 substrate GEMMs (`BitplaneTernary::gemm_a8*`) have
+/// run in this process — the non-vacuity witness for the a8-default
+/// accuracy gate (`rust/tests/determinism.rs`): a test bounding a8
+/// error must also prove the a8 path executed, or a silent fallback to
+/// the exact path would pass it trivially.
+static A8_GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-lifetime count of a8 substrate GEMM calls.
+pub fn a8_gemm_calls() -> u64 {
+    A8_GEMM_CALLS.load(Ordering::Relaxed)
+}
+
+/// Recorded by `BitplaneTernary::gemm_a8_with` (one relaxed increment
+/// per GEMM call, not per tile — unmeasurable on the hot path).
+pub(crate) fn note_a8_gemm() {
+    A8_GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), Some(isa));
+            assert_eq!(Isa::parse(&isa.name().to_uppercase()).unwrap(), Some(isa));
+        }
+        assert_eq!(Isa::parse("").unwrap(), None);
+        assert_eq!(Isa::parse("auto").unwrap(), None);
+        assert!(Isa::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_always_available_and_detect_is_available() {
+        assert!(Isa::Scalar.available());
+        assert!(Isa::detect().available());
+    }
+
+    #[test]
+    fn force_unavailable_errors_available_sticks() {
+        if let Some(unavail) = Isa::ALL.iter().find(|i| !i.available()) {
+            assert!(force_isa(*unavail).is_err());
+        }
+        force_isa(Isa::Scalar).unwrap();
+        assert_eq!(active(), Isa::Scalar);
+        // restore detection for the rest of the process
+        force("auto").unwrap();
+        assert!(active().available());
+    }
+}

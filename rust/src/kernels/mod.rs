@@ -61,6 +61,35 @@
 //! the dispatch-block gather buffers — it never counts toward Table-1
 //! expert-identity bytes (`MoeLayer::expert_bytes`); see
 //! `crate::memmodel`.
+//!
+//! # Runtime ISA dispatch (§Perf iteration 8)
+//!
+//! Each hot kernel has three implementations: the blocked-scalar
+//! reference in this file, explicit AVX2 (`x86.rs`, x86_64) and
+//! explicit NEON (`neon.rs`, aarch64).  [`dispatch::active`] selects
+//! one at startup — CPU detection, overridable by `BMOE_KERNEL_ISA` or
+//! `--kernel-isa` — and the public entry points below dispatch on it
+//! (one relaxed atomic load per call).  Every entry also has an
+//! `*_on(isa, …)` variant taking the path explicitly, which is what
+//! the cross-ISA parity suite (`rust/tests/kernels.rs`) and the
+//! per-ISA bench curves drive.
+//!
+//! Dispatch does not weaken the bit-identity contract: the SIMD f32
+//! kernels reproduce the scalar reference's bits *by construction*
+//! (one vector lane per scalar accumulator lane, unfused mul/add —
+//! never FMA — and the same scalar reduction tree and tails; see the
+//! `x86`/`neon` module docs), and the i8 kernels are exactly equal
+//! because i32 accumulation is associative.  So the ISA choice, like
+//! tile and worker-range placement, never changes decoded bits — the
+//! parity suite pins every property per force-selected ISA.
+
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use dispatch::Isa;
 
 use crate::util::dot_f32;
 
@@ -103,14 +132,125 @@ pub struct TernaryScratch {
 }
 
 // ---------------------------------------------------------------------------
-// f32 dot tiles — bit-identical to util::dot_f32 per output
+// ISA-dispatched entry points
 // ---------------------------------------------------------------------------
 
-/// `NR` dot products of contiguous weight rows against one token:
-/// `out[r] = dot_f32(w[r*cols..][..cols], x)` — the same bits, with the
-/// activation chunk loaded once per k-step instead of once per row.
+/// Soundness gate for the `*_on` entry points: the SIMD modules are
+/// `#[target_feature]` fns whose callers must guarantee the feature is
+/// present, and these entries are *safe* — so an unavailable ISA must
+/// fail loudly here, not reach an `unsafe` call.  One cached-atomic
+/// feature load; the hot path pays it once per kernel call, not per
+/// tile.
+#[inline]
+fn vouch(isa: Isa) {
+    assert!(
+        isa.available(),
+        "kernel ISA {} unavailable on this machine",
+        isa.name()
+    );
+}
+
+/// `NR` dot products of contiguous weight rows against one token on
+/// the active ISA: `out[r] = dot_f32(w[r*cols..][..cols], x)` — the
+/// same bits on every path, with the activation chunk loaded once per
+/// k-step instead of once per row.
 #[inline]
 pub fn dot_nr_x1(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
+    dot_nr_x1_on(dispatch::active(), w, cols, x)
+}
+
+/// [`dot_nr_x1`] on an explicit ISA (parity tests / per-ISA benches).
+#[inline]
+pub fn dot_nr_x1_on(isa: Isa, w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
+    vouch(isa);
+    match isa {
+        Isa::Scalar => dot_nr_x1_scalar(w, cols, x),
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_nr_x1(w, cols, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot_nr_x1(w, cols, x) },
+        #[allow(unreachable_patterns)] // ISAs of other target_archs
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+/// [`dot_nr_x2`] on an explicit ISA.
+#[inline]
+pub fn dot_nr_x2_on(isa: Isa, w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
+    vouch(isa);
+    match isa {
+        Isa::Scalar => dot_nr_x2_scalar(w, cols, x0, x1),
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_nr_x2(w, cols, x0, x1) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot_nr_x2(w, cols, x0, x1) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+/// [`crate::util::dot_f32`] on an explicit ISA — bit-identical single
+/// row dot (the GEMM row-tail primitive).
+#[inline]
+pub fn dot1_f32_on(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    vouch(isa);
+    match isa {
+        Isa::Scalar => dot_f32(a, b),
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot1_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot1_f32(a, b) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+/// [`dot_i8`] on an explicit ISA.
+#[inline]
+pub fn dot_i8_on(isa: Isa, a: &[i8], b: &[i8]) -> i32 {
+    vouch(isa);
+    debug_assert!(a.len() <= MAX_I8_DOT_LEN, "dot_i8 depth {} > 2^16", a.len());
+    match isa {
+        Isa::Scalar => dot_i8_scalar(a, b),
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot_i8(a, b) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+/// `dot_nr_x1_i8` on an explicit ISA (the i8 GEMM's row tile).
+#[inline]
+fn dot_nr_x1_i8_on(isa: Isa, w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
+    vouch(isa);
+    debug_assert!(cols <= MAX_I8_DOT_LEN, "dot_nr_x1_i8 depth {cols} > 2^16");
+    match isa {
+        Isa::Scalar => dot_nr_x1_i8_scalar(w, cols, x),
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_nr_x1_i8(w, cols, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot_nr_x1_i8(w, cols, x) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 dot tiles, blocked-scalar reference — bit-identical to
+// util::dot_f32 per output
+// ---------------------------------------------------------------------------
+
+/// Blocked-scalar [`dot_nr_x1`] — the reference the SIMD paths are
+/// pinned against.
+#[inline]
+fn dot_nr_x1_scalar(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
     debug_assert_eq!(w.len(), NR * cols);
     debug_assert_eq!(x.len(), cols);
     let nl = cols - cols % LANES;
@@ -143,6 +283,12 @@ pub fn dot_nr_x1(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
 /// `out[m][r] = dot_f32(w_row_r, x_m)`, bit-identical per output.
 #[inline]
 pub fn dot_nr_x2(w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
+    dot_nr_x2_on(dispatch::active(), w, cols, x0, x1)
+}
+
+/// Blocked-scalar [`dot_nr_x2`] reference.
+#[inline]
+fn dot_nr_x2_scalar(w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
     debug_assert_eq!(w.len(), NR * cols);
     debug_assert_eq!(x0.len(), cols);
     debug_assert_eq!(x1.len(), cols);
@@ -197,16 +343,48 @@ pub fn gemm_f32_sink(
     gamma: f32,
     y0: usize,
     y_stride: usize,
+    write: impl FnMut(usize, f32),
+) {
+    gemm_f32_sink_on(
+        dispatch::active(),
+        w,
+        nrows,
+        cols,
+        x,
+        t,
+        gamma,
+        y0,
+        y_stride,
+        write,
+    );
+}
+
+/// [`gemm_f32_sink`] on an explicit ISA.  One tile schedule for every
+/// path — only the dot tiles change, and those are bit-identical, so
+/// the ISA is as invisible in the output as a tile boundary.
+#[allow(clippy::too_many_arguments)] // see gemm_f32_sink
+pub fn gemm_f32_sink_on(
+    isa: Isa,
+    w: &[f32],
+    nrows: usize,
+    cols: usize,
+    x: &[f32],
+    t: usize,
+    gamma: f32,
+    y0: usize,
+    y_stride: usize,
     mut write: impl FnMut(usize, f32),
 ) {
     debug_assert_eq!(w.len(), nrows * cols);
     debug_assert_eq!(x.len(), t * cols);
+    vouch(isa);
     let mut r = 0;
     while r + NR <= nrows {
         let wblk = &w[r * cols..(r + NR) * cols];
         let mut i = 0;
         while i + MC <= t {
-            let tile = dot_nr_x2(
+            let tile = dot_nr_x2_on(
+                isa,
                 wblk,
                 cols,
                 &x[i * cols..(i + 1) * cols],
@@ -220,7 +398,7 @@ pub fn gemm_f32_sink(
             i += MC;
         }
         if i < t {
-            let lanes = dot_nr_x1(wblk, cols, &x[i * cols..(i + 1) * cols]);
+            let lanes = dot_nr_x1_on(isa, wblk, cols, &x[i * cols..(i + 1) * cols]);
             for (rr, &v) in lanes.iter().enumerate() {
                 write(i * y_stride + y0 + r + rr, v * gamma);
             }
@@ -232,7 +410,7 @@ pub fn gemm_f32_sink(
         for i in 0..t {
             write(
                 i * y_stride + y0 + r,
-                dot_f32(wr, &x[i * cols..(i + 1) * cols]) * gamma,
+                dot1_f32_on(isa, wr, &x[i * cols..(i + 1) * cols]) * gamma,
             );
         }
         r += 1;
@@ -255,6 +433,26 @@ pub fn gemm_f32_strided(
 ) {
     debug_assert!(t == 0 || (t - 1) * y_stride + y0 + nrows <= y.len());
     gemm_f32_sink(w, nrows, cols, x, t, gamma, y0, y_stride, |i, v| y[i] = v);
+}
+
+/// [`gemm_f32_strided`] on an explicit ISA.
+#[allow(clippy::too_many_arguments)] // see gemm_f32_sink
+pub fn gemm_f32_strided_on(
+    isa: Isa,
+    w: &[f32],
+    nrows: usize,
+    cols: usize,
+    x: &[f32],
+    t: usize,
+    gamma: f32,
+    y: &mut [f32],
+    y0: usize,
+    y_stride: usize,
+) {
+    debug_assert!(t == 0 || (t - 1) * y_stride + y0 + nrows <= y.len());
+    gemm_f32_sink_on(isa, w, nrows, cols, x, t, gamma, y0, y_stride, |i, v| {
+        y[i] = v
+    });
 }
 
 /// Dense-output convenience wrapper: `y[i*rows + r]`, token-major —
@@ -280,11 +478,39 @@ pub fn gemm_f32(
 /// i8 accumulator lanes — matches the widening [`dot_i8`] reference.
 pub const LANES_I8: usize = 16;
 
-/// Widening i8 dot with 16 lanes of i32 accumulation (§Perf iteration 5;
-/// vectorizes).  Exported as the per-row reference for the blocked i8
-/// tiles — integer accumulation is exact, so they agree bit-for-bit.
+/// Maximum supported depth (vector length) for the i8 dot kernels.
+///
+/// The i32 accumulator bound: with `|a[j]|, |b[j]| ≤ 127` every
+/// product is ≤ 127² = 16 129, so a length-`2^16` dot sums to at most
+/// 16 129 · 65 536 = 1 057 030 144 < 2³¹ − 1 — no lane or total can
+/// overflow, on any ISA path (the AVX2 `madd_epi16` pair-sums are
+/// ≤ 2·127² and each of its 8 lanes accumulates ≤ `len/16` of those:
+/// ≤ 132 M at this bound; NEON's `vpadalq_s16` lanes likewise).
+/// Beyond this length `i32` accumulation may wrap; the kernels
+/// `debug_assert!` the bound and callers gate on it
+/// (`BitplaneTernary::gemm_a8_with` — `d_model ≤ 65 536` covers every
+/// model shape this engine can serve, 32× the paper's largest).
+pub const MAX_I8_DOT_LEN: usize = 1 << 16;
+
+/// Widening i8 dot on the active ISA (§Perf iteration 5).
+///
+/// Integer accumulation is exact, so every ISA path returns the same
+/// `i32` bit-for-bit — the blocked tiles and SIMD paths are pinned
+/// exactly-equal to this reference by `rust/tests/kernels.rs`.
+///
+/// **Range contract:** `a.len() ≤ 2^16` ([`MAX_I8_DOT_LEN`]) at
+/// `|a[j]|, |b[j]| ≤ 127`; longer inputs may overflow the i32
+/// accumulation (checked by `debug_assert!`, documented at call
+/// sites).
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    dot_i8_on(dispatch::active(), a, b)
+}
+
+/// Blocked-scalar [`dot_i8`] reference: 16 lanes of i32 accumulation
+/// (autovectorizes).
+#[inline]
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let nl = n - n % LANES_I8;
@@ -304,9 +530,10 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     s
 }
 
-/// `NR` widening i8 dots sharing each activation-chunk load.
+/// Blocked-scalar `NR` widening i8 dots sharing each activation-chunk
+/// load.
 #[inline]
-fn dot_nr_x1_i8(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
+fn dot_nr_x1_i8_scalar(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
     debug_assert_eq!(w.len(), NR * cols);
     debug_assert_eq!(x.len(), cols);
     let nl = cols - cols % LANES_I8;
@@ -340,8 +567,39 @@ fn dot_nr_x1_i8(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
 /// 16-lane i32 accumulators per row already saturate the register file
 /// (see module docs); the decoded sign block is small enough to stay
 /// L1-resident across the token loop regardless.
+///
+/// Inherits [`dot_i8`]'s range contract: `cols ≤ 2^16`
+/// ([`MAX_I8_DOT_LEN`]).
 #[allow(clippy::too_many_arguments)] // see gemm_f32_strided
 pub fn gemm_i8_strided(
+    w: &[i8],
+    nrows: usize,
+    cols: usize,
+    xq: &[i8],
+    t: usize,
+    scales: &[f32],
+    y: &mut [f32],
+    y0: usize,
+    y_stride: usize,
+) {
+    gemm_i8_strided_on(
+        dispatch::active(),
+        w,
+        nrows,
+        cols,
+        xq,
+        t,
+        scales,
+        y,
+        y0,
+        y_stride,
+    );
+}
+
+/// [`gemm_i8_strided`] on an explicit ISA.
+#[allow(clippy::too_many_arguments)] // see gemm_f32_strided
+pub fn gemm_i8_strided_on(
+    isa: Isa,
     w: &[i8],
     nrows: usize,
     cols: usize,
@@ -355,11 +613,12 @@ pub fn gemm_i8_strided(
     debug_assert_eq!(w.len(), nrows * cols);
     debug_assert_eq!(xq.len(), t * cols);
     debug_assert_eq!(scales.len(), t);
+    vouch(isa);
     let mut r = 0;
     while r + NR <= nrows {
         let wblk = &w[r * cols..(r + NR) * cols];
         for i in 0..t {
-            let lanes = dot_nr_x1_i8(wblk, cols, &xq[i * cols..(i + 1) * cols]);
+            let lanes = dot_nr_x1_i8_on(isa, wblk, cols, &xq[i * cols..(i + 1) * cols]);
             let dst = &mut y[i * y_stride + y0 + r..][..NR];
             for (d, &v) in dst.iter_mut().zip(&lanes) {
                 *d = v as f32 * scales[i];
@@ -371,7 +630,7 @@ pub fn gemm_i8_strided(
         let wr = &w[r * cols..(r + 1) * cols];
         for i in 0..t {
             y[i * y_stride + y0 + r] =
-                dot_i8(wr, &xq[i * cols..(i + 1) * cols]) as f32 * scales[i];
+                dot_i8_on(isa, wr, &xq[i * cols..(i + 1) * cols]) as f32 * scales[i];
         }
         r += 1;
     }
@@ -414,6 +673,66 @@ pub fn butterfly_apply_blocked(
     x: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
+    butterfly_apply_blocked_on(dispatch::active(), cs, d, depth, transpose, x, scratch);
+}
+
+/// [`butterfly_apply_blocked`] on an explicit ISA.  The block/stage
+/// schedule is written once ([`butterfly_blocked_impl`], monomorphized
+/// per rotation kernel); only the per-pair lane rotation differs, and
+/// that is bit-identical per element on every path (unfused
+/// `c·a − s·b` / `s·a + c·b` — see the `x86`/`neon` module docs).
+pub fn butterfly_apply_blocked_on(
+    isa: Isa,
+    cs: &[f32],
+    d: usize,
+    depth: usize,
+    transpose: bool,
+    x: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    vouch(isa);
+    match isa {
+        Isa::Scalar => {
+            butterfly_blocked_impl(cs, d, depth, transpose, x, scratch, rotate_lanes_scalar)
+        }
+        // SAFETY: `vouch` proved the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => butterfly_blocked_impl(cs, d, depth, transpose, x, scratch, |c, s, lo, hi| {
+            unsafe { x86::rotate_lanes(c, s, lo, hi) }
+        }),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => butterfly_blocked_impl(cs, d, depth, transpose, x, scratch, |c, s, lo, hi| {
+            unsafe { neon::rotate_lanes(c, s, lo, hi) }
+        }),
+        #[allow(unreachable_patterns)]
+        other => unreachable!("{} not compiled for this target", other.name()),
+    }
+}
+
+/// Scalar per-pair rotation over `rb` contiguous lanes — exactly the
+/// two-FMA chain of `Butterfly::apply`, per element.
+#[inline]
+fn rotate_lanes_scalar(c: f32, s: f32, lo_lane: &mut [f32], hi_lane: &mut [f32]) {
+    for (pa, pb) in lo_lane.iter_mut().zip(hi_lane.iter_mut()) {
+        let (a, b) = (*pa, *pb);
+        *pa = c * a - s * b;
+        *pb = s * a + c * b;
+    }
+}
+
+/// The shared stage-outer block schedule (see
+/// [`butterfly_apply_blocked`] for the full contract), generic over
+/// the per-pair lane rotation so each ISA's kernel monomorphizes into
+/// the same loop structure.
+fn butterfly_blocked_impl(
+    cs: &[f32],
+    d: usize,
+    depth: usize,
+    transpose: bool,
+    x: &mut [f32],
+    scratch: &mut Vec<f32>,
+    rotate: impl Fn(f32, f32, &mut [f32], &mut [f32]) + Copy,
+) {
     debug_assert_eq!(x.len() % d, 0);
     debug_assert_eq!(cs.len(), depth * d);
     let rows = x.len() / d;
@@ -443,11 +762,7 @@ pub fn butterfly_apply_blocked(
                     let (head, tail) = scratch.split_at_mut(hi);
                     let lo_lane = &mut head[lo..lo + rb];
                     let hi_lane = &mut tail[..rb];
-                    for (pa, pb) in lo_lane.iter_mut().zip(hi_lane.iter_mut()) {
-                        let (a, b) = (*pa, *pb);
-                        *pa = c * a - s * b;
-                        *pb = s * a + c * b;
-                    }
+                    rotate(c, s, lo_lane, hi_lane);
                     j += 1;
                 }
                 base += 2 * stride;

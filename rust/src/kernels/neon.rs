@@ -1,0 +1,221 @@
+//! Explicit NEON micro-kernels (aarch64), selected at runtime by
+//! [`super::dispatch`].  NEON is baseline on aarch64, so availability
+//! is a compile-target fact — but the fns stay `unsafe` +
+//! `#[target_feature]` for symmetry with the AVX2 module and so the
+//! dispatch layer is the single place that vouches for selection.
+//!
+//! # Bit-identity discipline (f32)
+//!
+//! Same contract as `kernels::x86` (see its module docs), adapted to
+//! 128-bit registers: the scalar reference accumulates 8 f32 lanes per
+//! k-chunk, so each output row keeps **two** `float32x4_t` accumulators
+//! — `lo` holds scalar lanes 0–3, `hi` lanes 4–7 — accumulated with
+//! unfused `vaddq_f32(acc, vmulq_f32(w, x))` (never `vmlaq_f32`, which
+//! may lower to a fused `fmla`).  Reduction extracts all 8 lanes and
+//! applies the exact `dot_f32` tree; tails are scalar.  The butterfly
+//! rotation is the same unfused mul/sub/add per element.
+//!
+//! The i8 kernels use the natural NEON idiom (exact integer math needs
+//! no lane discipline): `vmull_s8` widens 8×8-bit products to i16
+//! (|p| ≤ 127² fits), `vpadalq_s16` pairwise-accumulates into i32
+//! lanes, `vaddvq_s32` sums — exactly equal to [`super::dot_i8`]
+//! within [`super::MAX_I8_DOT_LEN`].
+
+#![cfg(target_arch = "aarch64")]
+
+use std::arch::aarch64::*;
+
+use super::{LANES, LANES_I8, NR};
+
+/// Extract two 4-lane halves as scalar lanes 0–7 and reduce with the
+/// exact `dot_f32` tree.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn reduce8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+    let mut a = [0.0f32; LANES];
+    vst1q_f32(a.as_mut_ptr(), lo);
+    vst1q_f32(a.as_mut_ptr().add(4), hi);
+    (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// NEON `util::dot_f32` — bit-identical single-row dot (the GEMM row
+/// tail).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot1_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nl = n - n % LANES;
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    let mut k = 0;
+    while k < nl {
+        let a_lo = vld1q_f32(a.as_ptr().add(k));
+        let a_hi = vld1q_f32(a.as_ptr().add(k + 4));
+        let b_lo = vld1q_f32(b.as_ptr().add(k));
+        let b_hi = vld1q_f32(b.as_ptr().add(k + 4));
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, b_lo));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, b_hi));
+        k += LANES;
+    }
+    let mut s = reduce8(acc_lo, acc_hi);
+    for j in nl..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// NEON [`super::dot_nr_x1`]: `NR` rows × one token.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_nr_x1(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc_lo = [vdupq_n_f32(0.0); NR];
+    let mut acc_hi = [vdupq_n_f32(0.0); NR];
+    let mut k = 0;
+    while k < nl {
+        let x_lo = vld1q_f32(x.as_ptr().add(k));
+        let x_hi = vld1q_f32(x.as_ptr().add(k + 4));
+        for r in 0..NR {
+            let w_lo = vld1q_f32(w.as_ptr().add(r * cols + k));
+            let w_hi = vld1q_f32(w.as_ptr().add(r * cols + k + 4));
+            acc_lo[r] = vaddq_f32(acc_lo[r], vmulq_f32(w_lo, x_lo));
+            acc_hi[r] = vaddq_f32(acc_hi[r], vmulq_f32(w_hi, x_hi));
+        }
+        k += LANES;
+    }
+    let mut out = [0.0f32; NR];
+    for r in 0..NR {
+        let mut s = reduce8(acc_lo[r], acc_hi[r]);
+        for j in nl..cols {
+            s += w[r * cols + j] * x[j];
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// NEON [`super::dot_nr_x2`]: `NR` rows × two tokens sharing every
+/// weight-chunk load.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_nr_x2(w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x0.len(), cols);
+    debug_assert_eq!(x1.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc_lo = [[vdupq_n_f32(0.0); NR]; 2];
+    let mut acc_hi = [[vdupq_n_f32(0.0); NR]; 2];
+    let mut k = 0;
+    while k < nl {
+        let x0_lo = vld1q_f32(x0.as_ptr().add(k));
+        let x0_hi = vld1q_f32(x0.as_ptr().add(k + 4));
+        let x1_lo = vld1q_f32(x1.as_ptr().add(k));
+        let x1_hi = vld1q_f32(x1.as_ptr().add(k + 4));
+        for r in 0..NR {
+            let w_lo = vld1q_f32(w.as_ptr().add(r * cols + k));
+            let w_hi = vld1q_f32(w.as_ptr().add(r * cols + k + 4));
+            acc_lo[0][r] = vaddq_f32(acc_lo[0][r], vmulq_f32(w_lo, x0_lo));
+            acc_hi[0][r] = vaddq_f32(acc_hi[0][r], vmulq_f32(w_hi, x0_hi));
+            acc_lo[1][r] = vaddq_f32(acc_lo[1][r], vmulq_f32(w_lo, x1_lo));
+            acc_hi[1][r] = vaddq_f32(acc_hi[1][r], vmulq_f32(w_hi, x1_hi));
+        }
+        k += LANES;
+    }
+    let mut out = [[0.0f32; NR]; 2];
+    for (m, xm) in [x0, x1].into_iter().enumerate() {
+        for r in 0..NR {
+            let mut s = reduce8(acc_lo[m][r], acc_hi[m][r]);
+            for j in nl..cols {
+                s += w[r * cols + j] * xm[j];
+            }
+            out[m][r] = s;
+        }
+    }
+    out
+}
+
+/// Widen-multiply one 16-byte chunk and pairwise-accumulate into an
+/// i32x4 accumulator (exact integer math).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mac_i8_chunk(acc: int32x4_t, a: int8x16_t, b: int8x16_t) -> int32x4_t {
+    let p_lo = vmull_s8(vget_low_s8(a), vget_low_s8(b));
+    let p_hi = vmull_s8(vget_high_s8(a), vget_high_s8(b));
+    vpadalq_s16(vpadalq_s16(acc, p_lo), p_hi)
+}
+
+/// NEON widening i8 dot — exactly equal to [`super::dot_i8`].
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nl = n - n % LANES_I8;
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0;
+    while i < nl {
+        let av = vld1q_s8(a.as_ptr().add(i));
+        let bv = vld1q_s8(b.as_ptr().add(i));
+        acc = mac_i8_chunk(acc, av, bv);
+        i += LANES_I8;
+    }
+    let mut s = vaddvq_s32(acc);
+    for j in nl..n {
+        s += a[j] as i32 * b[j] as i32;
+    }
+    s
+}
+
+/// NEON [`super::dot_nr_x1_i8`]-equivalent: `NR` widening i8 dots
+/// sharing each activation-chunk load.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_nr_x1_i8(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES_I8;
+    let mut acc = [vdupq_n_s32(0); NR];
+    let mut k = 0;
+    while k < nl {
+        let xv = vld1q_s8(x.as_ptr().add(k));
+        for r in 0..NR {
+            let wv = vld1q_s8(w.as_ptr().add(r * cols + k));
+            acc[r] = mac_i8_chunk(acc[r], wv, xv);
+        }
+        k += LANES_I8;
+    }
+    let mut out = [0i32; NR];
+    for r in 0..NR {
+        let mut s = vaddvq_s32(acc[r]);
+        for j in nl..cols {
+            s += w[r * cols + j] as i32 * x[j] as i32;
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// NEON butterfly pair rotation over `rb` contiguous lanes:
+/// `lo' = c·lo − s·hi`, `hi' = s·lo + c·hi` — unfused mul/sub/add,
+/// bit-identical per element to the scalar rotation.
+#[target_feature(enable = "neon")]
+pub unsafe fn rotate_lanes(c: f32, s: f32, lo: &mut [f32], hi: &mut [f32]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    let n = lo.len();
+    let vc = vdupq_n_f32(c);
+    let vs = vdupq_n_f32(s);
+    let mut k = 0;
+    while k + 4 <= n {
+        let va = vld1q_f32(lo.as_ptr().add(k));
+        let vb = vld1q_f32(hi.as_ptr().add(k));
+        let na = vsubq_f32(vmulq_f32(vc, va), vmulq_f32(vs, vb));
+        let nb = vaddq_f32(vmulq_f32(vs, va), vmulq_f32(vc, vb));
+        vst1q_f32(lo.as_mut_ptr().add(k), na);
+        vst1q_f32(hi.as_mut_ptr().add(k), nb);
+        k += 4;
+    }
+    while k < n {
+        let (a, b) = (lo[k], hi[k]);
+        lo[k] = c * a - s * b;
+        hi[k] = s * a + c * b;
+        k += 1;
+    }
+}

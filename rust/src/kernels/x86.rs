@@ -1,0 +1,223 @@
+//! Explicit AVX2 micro-kernels (x86_64), selected at runtime by
+//! [`super::dispatch`].
+//!
+//! # Bit-identity discipline (f32)
+//!
+//! Every f32 kernel here must reproduce the blocked-scalar reference's
+//! bits exactly (the contract in the [`super`] module docs), which
+//! pins three choices:
+//!
+//! * **One 8-lane `__m256` accumulator per output row** — lane `l`
+//!   accumulates exactly the products scalar lane `acc[l]` does, in the
+//!   same ascending k-chunk order.
+//! * **No FMA.**  The scalar reference's `acc += w * x` is an
+//!   unfused multiply-then-add (rustc does not contract float
+//!   expressions), so these kernels use `_mm256_add_ps(_mm256_mul_ps)`
+//!   — never `_mm256_fmadd_ps`, whose single rounding would change
+//!   bits.  Same for the butterfly rotation's `c*a - s*b`.
+//! * **Scalar reduction tree + tail.**  The 8 lanes are extracted and
+//!   reduced with the exact `dot_f32` tree
+//!   `(a0+a1) + (a2+a3) + ((a4+a5) + (a6+a7))`, and the `nl..cols`
+//!   remainder runs as scalar adds — no horizontal-add instructions,
+//!   which associate differently.
+//!
+//! The i8 kernels have no such constraint (i32 accumulation is exact),
+//! so they use the natural AVX2 idiom: sign-extend 16 i8 lanes to i16
+//! and `_mm256_madd_epi16` pairs into i32 — every intermediate fits
+//! (see [`super::MAX_I8_DOT_LEN`]: |products| ≤ 127², pair sums ≤
+//! 2·127², and a lane accumulates ≤ `cols/16` of those).
+//!
+//! # Safety
+//!
+//! Every fn is `unsafe fn` + `#[target_feature(enable = "avx2")]`: the
+//! caller (the dispatch layer) must only select this module when
+//! `is_x86_feature_detected!("avx2")` held.  All loads/stores are
+//! unaligned-tolerant (`loadu`/`storeu`); indices stay inside the
+//! slices per the `debug_assert!`ed shape contracts.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::{LANES, LANES_I8, NR};
+
+/// Extract 8 lanes and reduce with the exact `dot_f32` tree.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce8(v: __m256) -> f32 {
+    let mut a = [0.0f32; LANES];
+    _mm256_storeu_ps(a.as_mut_ptr(), v);
+    (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// AVX2 `util::dot_f32` — bit-identical single-row dot (the GEMM row
+/// tail).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot1_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nl = n - n % LANES;
+    let mut acc = _mm256_setzero_ps();
+    let mut k = 0;
+    while k < nl {
+        let av = _mm256_loadu_ps(a.as_ptr().add(k));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(k));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        k += LANES;
+    }
+    let mut s = reduce8(acc);
+    for j in nl..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// AVX2 [`super::dot_nr_x1`]: `NR` rows × one token, activation chunk
+/// loaded once per k-step.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_nr_x1(w: &[f32], cols: usize, x: &[f32]) -> [f32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc = [_mm256_setzero_ps(); NR];
+    let mut k = 0;
+    while k < nl {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(k));
+        for r in 0..NR {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(r * cols + k));
+            acc[r] = _mm256_add_ps(acc[r], _mm256_mul_ps(wv, xv));
+        }
+        k += LANES;
+    }
+    let mut out = [0.0f32; NR];
+    for r in 0..NR {
+        let mut s = reduce8(acc[r]);
+        for j in nl..cols {
+            s += w[r * cols + j] * x[j];
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// AVX2 [`super::dot_nr_x2`]: `NR` rows × two tokens sharing every
+/// weight-chunk load.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_nr_x2(w: &[f32], cols: usize, x0: &[f32], x1: &[f32]) -> [[f32; NR]; 2] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x0.len(), cols);
+    debug_assert_eq!(x1.len(), cols);
+    let nl = cols - cols % LANES;
+    let mut acc = [[_mm256_setzero_ps(); NR]; 2];
+    let mut k = 0;
+    while k < nl {
+        let x0v = _mm256_loadu_ps(x0.as_ptr().add(k));
+        let x1v = _mm256_loadu_ps(x1.as_ptr().add(k));
+        for r in 0..NR {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(r * cols + k));
+            acc[0][r] = _mm256_add_ps(acc[0][r], _mm256_mul_ps(wv, x0v));
+            acc[1][r] = _mm256_add_ps(acc[1][r], _mm256_mul_ps(wv, x1v));
+        }
+        k += LANES;
+    }
+    let mut out = [[0.0f32; NR]; 2];
+    for (m, xm) in [x0, x1].into_iter().enumerate() {
+        for r in 0..NR {
+            let mut s = reduce8(acc[m][r]);
+            for j in nl..cols {
+                s += w[r * cols + j] * xm[j];
+            }
+            out[m][r] = s;
+        }
+    }
+    out
+}
+
+/// Sum a `__m256i` of 8 i32 lanes (exact, association-free).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce8_i32(v: __m256i) -> i32 {
+    let mut a = [0i32; 8];
+    _mm256_storeu_si256(a.as_mut_ptr() as *mut __m256i, v);
+    a.iter().sum()
+}
+
+/// AVX2 widening i8 dot: 16 i8 lanes sign-extended to i16,
+/// `madd_epi16` pairs into 8 i32 lanes.  Exactly equal to
+/// [`super::dot_i8`] for any input within [`super::MAX_I8_DOT_LEN`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nl = n - n % LANES_I8;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < nl {
+        let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+        i += LANES_I8;
+    }
+    let mut s = reduce8_i32(acc);
+    for j in nl..n {
+        s += a[j] as i32 * b[j] as i32;
+    }
+    s
+}
+
+/// AVX2 [`super::dot_nr_x1_i8`]-equivalent: `NR` widening i8 dots
+/// sharing each activation-chunk load.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_nr_x1_i8(w: &[i8], cols: usize, x: &[i8]) -> [i32; NR] {
+    debug_assert_eq!(w.len(), NR * cols);
+    debug_assert_eq!(x.len(), cols);
+    let nl = cols - cols % LANES_I8;
+    let mut acc = [_mm256_setzero_si256(); NR];
+    let mut k = 0;
+    while k < nl {
+        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(k) as *const __m128i));
+        for r in 0..NR {
+            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                w.as_ptr().add(r * cols + k) as *const __m128i
+            ));
+            acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(wv, xv));
+        }
+        k += LANES_I8;
+    }
+    let mut out = [0i32; NR];
+    for r in 0..NR {
+        let mut s = reduce8_i32(acc[r]);
+        for j in nl..cols {
+            s += w[r * cols + j] as i32 * x[j] as i32;
+        }
+        out[r] = s;
+    }
+    out
+}
+
+/// AVX2 butterfly pair rotation over `rb` contiguous lanes:
+/// `lo' = c·lo − s·hi`, `hi' = s·lo + c·hi` — unfused mul/sub/add,
+/// bit-identical per element to the scalar rotation.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rotate_lanes(c: f32, s: f32, lo: &mut [f32], hi: &mut [f32]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    let n = lo.len();
+    let vc = _mm256_set1_ps(c);
+    let vs = _mm256_set1_ps(s);
+    let mut k = 0;
+    while k + LANES <= n {
+        let va = _mm256_loadu_ps(lo.as_ptr().add(k));
+        let vb = _mm256_loadu_ps(hi.as_ptr().add(k));
+        let na = _mm256_sub_ps(_mm256_mul_ps(vc, va), _mm256_mul_ps(vs, vb));
+        let nb = _mm256_add_ps(_mm256_mul_ps(vs, va), _mm256_mul_ps(vc, vb));
+        _mm256_storeu_ps(lo.as_mut_ptr().add(k), na);
+        _mm256_storeu_ps(hi.as_mut_ptr().add(k), nb);
+        k += LANES;
+    }
+    while k < n {
+        let (a, b) = (lo[k], hi[k]);
+        lo[k] = c * a - s * b;
+        hi[k] = s * a + c * b;
+        k += 1;
+    }
+}

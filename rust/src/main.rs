@@ -42,6 +42,7 @@ fn main() -> Result<()> {
         ("n_layers", args.flag("layers")),
         ("model_path", args.flag("model")),
         ("load_mode", args.flag("load")),
+        ("kernel_isa", args.flag("kernel-isa")),
         ("fleet", args.flag("fleet")),
         ("sessions_per_worker", args.flag("sessions-per-worker")),
         ("route_queue", args.flag("route-queue")),
@@ -59,6 +60,9 @@ fn main() -> Result<()> {
     }
     for (k, v) in &args.overrides {
         rt.set(k, v)?;
+    }
+    if args.has_switch("exact") {
+        rt.set("exact", "true")?;
     }
 
     match args.subcommand.as_deref().unwrap() {
@@ -304,10 +308,26 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     use butterfly_moe::obs;
     obs::init(rt.trace_sample, &rt.log_json)?;
     butterfly_moe::faults::init_from(&rt.fault)?;
+    // Pin the kernel ISA before any kernel runs: --kernel-isa, else the
+    // BMOE_KERNEL_ISA env var, else runtime detection.  Every path is
+    // bit-identical (f32) / exactly equal (i8) — see kernels::dispatch.
+    let isa = butterfly_moe::kernels::dispatch::force(&rt.kernel_isa)?;
     let backend: Arc<dyn Backend> = if args.has_switch("native") {
         // pure-rust edge backend: serves without compiled artifacts (and
         // without a PJRT runtime) — a packed .bmoe model file, or the
         // seeded synthetic stand-in when no --model is given
+        let act_quant = !rt.exact;
+        obs::log(
+            "serve",
+            format!(
+                "numerics: {} | kernel ISA: {isa}",
+                if act_quant {
+                    "W1.58A8 quantized substrate GEMM (opt out: --exact)"
+                } else {
+                    "exact f32 substrate GEMM (--exact)"
+                },
+            ),
+        );
         let workers = butterfly_moe::parallel::resolve_workers(rt.workers);
         let pool = Arc::new(butterfly_moe::parallel::WorkerPool::new(workers));
         obs::log(
@@ -325,8 +345,13 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             } else {
                 ModelArtifact::load(Path::new(&rt.model_path), mode)?
             };
-            let backend =
-                NativeLmBackend::from_artifact(&artifact, rt.max_batch, Some(pool), cache_bytes)?;
+            let backend = NativeLmBackend::from_artifact_opts(
+                &artifact,
+                rt.max_batch,
+                Some(pool),
+                cache_bytes,
+                act_quant,
+            )?;
             let (borrowed, copied) = artifact.zero_copy_stats();
             obs::log(
                 "serve",
@@ -343,9 +368,27 @@ fn cmd_serve(rt: &RuntimeConfig, args: &Args) -> Result<()> {
             backend
         } else {
             let model = synthesize(&SynthSpec::serve_default(rt.n_layers, rt.seed));
-            NativeLmBackend::from_synth(model, rt.max_batch, Some(pool), cache_bytes)
+            NativeLmBackend::from_synth_opts(
+                model,
+                rt.max_batch,
+                Some(pool),
+                cache_bytes,
+                act_quant,
+            )
         };
-        if cache_bytes > 0 {
+        if cache_bytes > 0 && act_quant {
+            // the residency cache serves the exact f32 synthesis path
+            // only; under the A8 default the stack assembler attaches
+            // no cache at all (see coordinator::backend::attach_stack)
+            obs::log(
+                "serve",
+                format!(
+                    "warning: --expert-cache-mb {} is bypassed under the W1.58A8 default; \
+                     pass --exact to serve from the cache",
+                    rt.expert_cache_mb
+                ),
+            );
+        } else if cache_bytes > 0 {
             // per-layer budget: the serving dial splits evenly across
             // blocks (a split that rounds to zero attaches no cache)
             match backend.layers()[0].expert_cache() {
@@ -466,6 +509,15 @@ fn cmd_route(rt: &RuntimeConfig, args: &Args) -> Result<()> {
     }
     if rt.expert_cache_mb > 0.0 {
         wargs.extend(["--expert-cache-mb".into(), rt.expert_cache_mb.to_string()]);
+    }
+    // Numerics and kernel-ISA pins pass through: every worker must run
+    // the same substrate GEMM and the same kernel path, or failover
+    // replay verification (router::proxy) would diverge mid-stream.
+    if rt.exact {
+        wargs.push("--exact".into());
+    }
+    if !rt.kernel_isa.is_empty() {
+        wargs.extend(["--kernel-isa".into(), rt.kernel_isa.clone()]);
     }
     if args.has_switch("no-warmup") {
         wargs.push("--no-warmup".into());

@@ -205,8 +205,14 @@ pub struct ButterflyMoeLayer {
     /// layers, borrowed from the model mapping for artifact-loaded ones.
     pub w_down: ShTensor,
     /// Quantize activations to int8 in the substrate GEMM (W1.58A8, the
-    /// deployment fast path — ~2x faster, ~0.5% output error).  Default
-    /// false so the engine is bit-parity-testable against the L2 graph.
+    /// deployment fast path — ~2x faster, ≲0.5% output error).
+    /// Constructors default this to `false` so in-memory layers stay
+    /// bit-parity-testable against the L2 graph and the exact-path
+    /// determinism suite; **serving flips it to `true`** (the
+    /// `NativeLmBackend::*_opts` stack assembly, opted out by
+    /// `--exact`), gated by the fixture accuracy bound in
+    /// `rust/tests/determinism.rs`.  With it set, forwards never
+    /// consult the residency cache (see `experts_forward`).
     pub act_quant: bool,
     /// Optional residency cache of hot experts' decoded working sets
     /// (see [`crate::expertcache`]); `None` = pure sub-linear mode.

@@ -426,9 +426,21 @@ impl BitplaneTernary {
     /// register-blocked [`kernels::gemm_i8_strided`] micro-kernel.
     /// Bit-identical to [`Self::gemm_a8_ref`]: i32 accumulation is
     /// exact, and the quantization arithmetic is unchanged.
+    ///
+    /// Depth bound: `cols ≤ 2^16` ([`kernels::MAX_I8_DOT_LEN`]) keeps
+    /// the i32 dot accumulation overflow-free at `|q| ≤ 127` — asserted
+    /// here, documented on [`kernels::dot_i8`].
     pub fn gemm_a8_with(&self, x: &[f32], t: usize, y: &mut [f32], scratch: &mut TernaryScratch) {
         assert_eq!(x.len(), t * self.cols);
         assert_eq!(y.len(), t * self.rows);
+        debug_assert!(
+            self.cols <= kernels::MAX_I8_DOT_LEN,
+            "gemm_a8 depth {} exceeds the i32-accumulation bound 2^16",
+            self.cols
+        );
+        // Non-vacuity witness for the a8-default accuracy gate
+        // (rust/tests/determinism.rs asserts this counter moved).
+        kernels::dispatch::note_a8_gemm();
         let cols = self.cols;
         // quantize activations: per-token absmax -> i8 in [-127, 127]
         scratch.xq.resize(t * cols, 0);

@@ -9,15 +9,25 @@
 //! including after the token count shrinks and grows back (resize stays
 //! within capacity).
 //!
+//! §Perf iteration 8 widens the guard across the runtime ISA dispatch:
+//! the steady-state window re-runs per force-selected kernel path
+//! (scalar + whatever SIMD paths this machine has), covering the
+//! W1.58A8 serving default's decode-path GEMM (`gemm_a8_with`:
+//! quantize → sign decode → i8 tiles) on every path.  Dispatch itself
+//! is one relaxed atomic load and `force_isa` one atomic store, so
+//! path selection allocates nothing either.
+//!
 //! Lives in its own integration-test binary: `#[global_allocator]` is
-//! process-wide and the counter must not see other tests' allocations.
+//! process-wide and the counter must not see other tests' allocations
+//! (which is also why everything stays in the one test fn — parallel
+//! test threads would bleed counts into each other's windows).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use butterfly_moe::butterfly::Butterfly;
 use butterfly_moe::expertcache::DecodedExpert;
-use butterfly_moe::kernels::TernaryScratch;
+use butterfly_moe::kernels::{dispatch, Isa, TernaryScratch};
 use butterfly_moe::testutil;
 use butterfly_moe::util::Rng;
 
@@ -65,20 +75,35 @@ fn steady_state_kernel_calls_do_not_allocate() {
     dec.gemm(&x, T_MAX, &mut y);
     bf.apply_batch_with(&mut xb, &mut bscratch);
 
-    let before = ALLOCATIONS.load(Ordering::SeqCst);
-    // steady state: shrink t, grow back, mix every kernel + transpose
-    for t in [T_MAX, 5, 1, 3, T_MAX] {
-        sub.gemm_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
-        sub.gemm_a8_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
-        dec.gemm(&x[..t * COLS], t, &mut y[..t * ROWS]);
+    // the guard holds per forced kernel path: scalar plus every SIMD
+    // path this machine supports (unavailable ones are reported skips)
+    for isa in Isa::ALL {
+        if !isa.available() {
+            eprintln!("SKIP: kernel ISA '{isa}' unavailable on this machine");
+            continue;
+        }
+        // force_isa is one atomic store — no env read, no allocation —
+        // so it can sit inside the measured window too
+        dispatch::force_isa(isa).unwrap();
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        dispatch::force_isa(isa).unwrap();
+        // steady state: shrink t, grow back, mix every kernel +
+        // transpose; gemm_a8_with is the W1.58A8 serving default's
+        // decode-path GEMM (quantize -> sign decode -> i8 tiles)
+        for t in [T_MAX, 5, 1, 3, T_MAX] {
+            sub.gemm_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
+            sub.gemm_a8_with(&x[..t * COLS], t, &mut y[..t * ROWS], &mut scratch);
+            dec.gemm(&x[..t * COLS], t, &mut y[..t * ROWS]);
+        }
+        bf.apply_batch_with(&mut xb, &mut bscratch);
+        bf.apply_transpose_batch_with(&mut xb, &mut bscratch);
+        let after = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "isa={isa}: steady-state kernel calls must not allocate \
+             ({} allocations observed)",
+            after - before
+        );
     }
-    bf.apply_batch_with(&mut xb, &mut bscratch);
-    bf.apply_transpose_batch_with(&mut xb, &mut bscratch);
-    let after = ALLOCATIONS.load(Ordering::SeqCst);
-    assert_eq!(
-        after - before,
-        0,
-        "steady-state kernel calls must not allocate ({} allocations observed)",
-        after - before
-    );
 }

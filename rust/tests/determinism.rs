@@ -28,8 +28,8 @@ use std::time::Duration;
 
 use butterfly_moe::artifact::{synthesize, LoadMode, Mmap, ModelArtifact, SynthSpec};
 use butterfly_moe::coordinator::{
-    collect_stream, warm, Coordinator, GenerateRequest, NativeLmBackend, NativeMoeBackend,
-    SamplingParams, SchedulerConfig,
+    collect_stream, warm, Backend, Coordinator, GenerateRequest, InflightBatch, InflightSeq,
+    NativeLmBackend, NativeMoeBackend, SamplingParams, SchedulerConfig,
 };
 use butterfly_moe::expertcache::{decoded_expert_bytes, ExpertCacheConfig};
 use butterfly_moe::moe::{ButterflyMoeLayer, MoeLayer};
@@ -297,6 +297,156 @@ fn packed_multi_layer_streams_identical_across_loaders_workers_budgets() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// W1.58A8 serving default (§Perf iteration 8)
+// ---------------------------------------------------------------------------
+
+/// `--exact` is the compatibility contract of the A8 flip: a backend
+/// built with `act_quant = false` (what `serve --exact` requests) must
+/// decode token streams bitwise identical to the pre-A8 default
+/// constructor, across loaders {mmap, heap} × workers {1, 8}.  And the
+/// A8 default keeps the determinism story: its streams are bitwise
+/// identical to *each other* across the same matrix (quantization
+/// changes the numbers once, not per-schedule).
+#[test]
+fn exact_mode_streams_match_pre_a8_default_across_loaders_and_workers() {
+    let spec = SynthSpec {
+        d_model: 64,
+        d_ff: 256,
+        n_experts: 8,
+        top_k: 2,
+        n_layers: 2,
+        vocab: 512,
+        seq_len: 32,
+        depth: None,
+        seed: 0x9AC5,
+    };
+    let model = synthesize(&spec);
+    let dir = std::env::temp_dir().join("bmoe_determinism_a8");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lm2_a8.bmoe");
+    model.pack(&path).unwrap();
+    // the pre-A8 default: the plain constructor (exact f32 synthesis)
+    let pre_a8 = streams_of(Arc::new(NativeLmBackend::from_synth(model, 8, None, 0)), 0);
+    assert!(pre_a8.iter().all(|s| !s.is_empty()));
+    let modes = if Mmap::supported() {
+        vec![LoadMode::Heap, LoadMode::Mmap]
+    } else {
+        vec![LoadMode::Heap]
+    };
+    let mut a8_reference: Option<Vec<Vec<i32>>> = None;
+    for mode in modes {
+        for workers in [1usize, 8] {
+            for act_quant in [false, true] {
+                let artifact = ModelArtifact::load(&path, mode).unwrap();
+                let backend = NativeLmBackend::from_artifact_opts(
+                    &artifact,
+                    8,
+                    Some(Arc::new(WorkerPool::new(workers))),
+                    0,
+                    act_quant,
+                )
+                .unwrap();
+                let streams = streams_of(Arc::new(backend), 0);
+                if !act_quant {
+                    assert_eq!(
+                        streams,
+                        pre_a8,
+                        "{} load, workers={workers}: --exact streams diverged from \
+                         the pre-A8 default",
+                        mode.name()
+                    );
+                } else {
+                    match &a8_reference {
+                        Some(want) => assert_eq!(
+                            &streams,
+                            want,
+                            "{} load, workers={workers}: A8 streams not \
+                             schedule-invariant",
+                            mode.name()
+                        ),
+                        None => a8_reference = Some(streams),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The accuracy gate of the A8 serving flip: on the checked-in
+/// cross-language fixture, the W1.58A8 path's logits stay within a
+/// small relative bound of the exact f32 path's — and the test proves
+/// the quantized path actually ran (`dispatch::a8_gemm_calls`), so a
+/// silent fallback to the exact path cannot pass it vacuously.
+#[test]
+fn a8_default_logit_error_bounded_on_fixture() {
+    use butterfly_moe::kernels::dispatch;
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/tiny_model.bmoe");
+    assert!(
+        path.exists(),
+        "missing fixture {} (regenerate with python3 python/tests/make_artifact_fixture.py)",
+        path.display()
+    );
+    let artifact = ModelArtifact::load(&path, LoadMode::Heap).unwrap();
+    let vocab = artifact.manifest.vocab;
+    // rebuild the fixture's prompt set from its expected.* tensors
+    let (pshape, prompts_flat) = artifact.store().i32("expected.prompts").unwrap();
+    let (_, lens) = artifact.store().i32("expected.prompt_lens").unwrap();
+    let width = pshape[1];
+    let prompts: Vec<Vec<i32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| prompts_flat[i * width..i * width + n as usize].to_vec())
+        .collect();
+    let batch_of = |prompts: &[Vec<i32>]| {
+        let mut b = InflightBatch::new();
+        for (i, p) in prompts.iter().enumerate() {
+            b.push(InflightSeq::new(i as u64, p.clone()));
+        }
+        b
+    };
+    let logits_of = |act_quant: bool| -> Vec<Vec<f32>> {
+        let backend =
+            NativeLmBackend::from_artifact_opts(&artifact, 8, None, 0, act_quant).unwrap();
+        backend
+            .step(&mut batch_of(&prompts))
+            .unwrap()
+            .into_iter()
+            .map(|o| o.logits.expect("all-at-once prefill emits logits"))
+            .collect()
+    };
+    let calls_before_exact = dispatch::a8_gemm_calls();
+    let exact = logits_of(false);
+    let calls_after_exact = dispatch::a8_gemm_calls();
+    assert_eq!(
+        calls_after_exact, calls_before_exact,
+        "the exact path must not run A8 substrate GEMMs"
+    );
+    let a8 = logits_of(true);
+    assert!(
+        dispatch::a8_gemm_calls() > calls_after_exact,
+        "the A8 path never ran an A8 substrate GEMM — the accuracy gate is vacuous"
+    );
+    let scale = exact.iter().flatten().fold(0.0f32, |acc, v| acc.max(v.abs()));
+    assert!(scale > 0.0);
+    let mut max_rel = 0.0f32;
+    for (i, (got_row, want_row)) in a8.iter().zip(&exact).enumerate() {
+        assert_eq!(got_row.len(), vocab);
+        for (j, (&got, &want)) in got_row.iter().zip(want_row).enumerate() {
+            let rel = (got - want).abs() / scale;
+            assert!(
+                rel < 5e-2,
+                "prompt {i} logit {j}: A8 {got} vs exact {want} (rel {rel:.4} > 5e-2)"
+            );
+            max_rel = max_rel.max(rel);
+        }
+    }
+    // per-token absmax quantization perturbs every logit a little; a
+    // bitwise-identical result would mean the exact path ran instead
+    assert!(max_rel > 0.0, "A8 logits bitwise equal to exact — quantization never happened");
 }
 
 /// Find an expert the probe batch actually routes to, so poisoning it

@@ -6,12 +6,21 @@
 //! must survive the expert cache at partial budgets and worker-range
 //! sharding of the down projection, since tile boundaries move with the
 //! range splits.
+//!
+//! §Perf iteration 8 extends the contract **cross-ISA**: every property
+//! also holds per force-selected kernel path (`scalar`/`avx2`/`neon`) —
+//! bit-identical to the blocked-scalar reference for the f32 kernels,
+//! exactly equal for the i8 kernels.  The `*_across_isas` tests drive
+//! the explicit `*_on(isa, …)` entry points so they neither depend on
+//! nor perturb the process-global dispatch; unavailable ISAs are
+//! reported skips (see [`for_each_isa`]), never silently vacuous
+//! passes.
 
 use std::sync::Arc;
 
 use butterfly_moe::butterfly::Butterfly;
 use butterfly_moe::expertcache::{decoded_expert_bytes, DecodedExpert, ExpertCacheConfig};
-use butterfly_moe::kernels::{self, TernaryScratch, NR, RB};
+use butterfly_moe::kernels::{self, Isa, TernaryScratch, NR, RB};
 use butterfly_moe::moe::MoeLayer;
 use butterfly_moe::parallel::WorkerPool;
 use butterfly_moe::testutil;
@@ -153,6 +162,204 @@ fn partial_cache_budget_forward_bit_identical_with_blocked_kernels() {
     assert!(s.misses > 0, "partial budget must also miss");
     assert!(s.resident_bytes <= s.budget_bytes);
 }
+
+/// Run `check` once per *available* ISA.  Unavailable paths print a
+/// loud skip notice; the scalar reference and the detected path must
+/// always run, so a test can never pass vacuously (e.g. a typo'd cfg
+/// gate compiling the SIMD modules out would fail here, not silently
+/// shrink coverage).
+fn for_each_isa(test: &str, mut check: impl FnMut(Isa)) {
+    let mut ran = Vec::new();
+    for isa in Isa::ALL {
+        if isa.available() {
+            check(isa);
+            ran.push(isa);
+        } else {
+            eprintln!("SKIP [{test}]: kernel ISA '{isa}' unavailable on this machine");
+        }
+    }
+    assert!(ran.contains(&Isa::Scalar), "{test}: the scalar reference must run");
+    assert!(
+        ran.contains(&Isa::detect()),
+        "{test}: the detected ISA {} must run",
+        Isa::detect()
+    );
+}
+
+#[test]
+fn butterfly_blocked_bit_identical_across_isas() {
+    // odd row counts (tail blocks) x every depth x every ISA, forward
+    // and transpose, against the per-row reference apply
+    for_each_isa("butterfly", |isa| {
+        let mut scratch = Vec::new();
+        for d in [2usize, 16, 128] {
+            for depth in 1..=Butterfly::max_depth(d) {
+                let mut rng = Rng::new((d * 131 + depth) as u64);
+                let b = Butterfly::random(d, depth, 0.7, &mut rng);
+                for rows in [1usize, 3, RB - 1, RB, 2 * RB + 5] {
+                    let src = testutil::normal_vec(rows * d, (rows * d) as u64 + 9);
+                    for transpose in [false, true] {
+                        let mut want = src.clone();
+                        if transpose {
+                            b.apply_transpose_batch_per_row(&mut want);
+                        } else {
+                            b.apply_batch_per_row(&mut want);
+                        }
+                        let mut got = src.clone();
+                        kernels::butterfly_apply_blocked_on(
+                            isa,
+                            b.cs_table(),
+                            d,
+                            depth,
+                            transpose,
+                            &mut got,
+                            &mut scratch,
+                        );
+                        assert_eq!(
+                            got, want,
+                            "isa={isa} d={d} depth={depth} rows={rows} transpose={transpose}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_f32_bit_identical_across_isas() {
+    // token counts straddle the NR/MC tile edges; rows hit NR tails;
+    // every output must carry dot_f32's exact bits on every path
+    for_each_isa("gemm_f32", |isa| {
+        for (rows, cols) in [(1usize, 16usize), (NR - 1, 48), (NR, 64), (13, 100), (33, 200)] {
+            let w = testutil::normal_vec(rows * cols, (rows * cols) as u64);
+            for t in token_counts() {
+                let x = testutil::normal_vec(t * cols, (t * cols) as u64 + 3);
+                let mut y = vec![0.0f32; t * rows];
+                kernels::gemm_f32_strided_on(isa, &w, rows, cols, &x, t, 0.73, &mut y, 0, rows);
+                for i in 0..t {
+                    for r in 0..rows {
+                        let want = butterfly_moe::util::dot_f32(
+                            &w[r * cols..(r + 1) * cols],
+                            &x[i * cols..(i + 1) * cols],
+                        ) * 0.73;
+                        assert_eq!(y[i * rows + r], want, "isa={isa} ({rows},{cols}) t={t} r={r}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_f32_split_position_invariant_across_isas() {
+    // the worker-range property per ISA: non-aligned row-range splits
+    // (as chunk_ranges hands to tasks) produce the bits of one call
+    let (rows, cols, t) = (11usize, 48usize, 4usize);
+    let w = testutil::normal_vec(rows * cols, 41);
+    let x = testutil::normal_vec(t * cols, 42);
+    let mut whole = vec![0.0f32; t * rows];
+    kernels::gemm_f32_strided(&w, rows, cols, &x, t, 1.0, &mut whole, 0, rows);
+    for_each_isa("gemm_f32 splits", |isa| {
+        for split in 1..rows {
+            let mut parts = vec![0.0f32; t * rows];
+            kernels::gemm_f32_strided_on(
+                isa,
+                &w[..split * cols],
+                split,
+                cols,
+                &x,
+                t,
+                1.0,
+                &mut parts,
+                0,
+                rows,
+            );
+            kernels::gemm_f32_strided_on(
+                isa,
+                &w[split * cols..],
+                rows - split,
+                cols,
+                &x,
+                t,
+                1.0,
+                &mut parts,
+                split,
+                rows,
+            );
+            assert_eq!(parts, whole, "isa={isa} split at {split}");
+        }
+    });
+}
+
+#[test]
+fn gemm_i8_exactly_equal_across_isas() {
+    // integer accumulation is exact, so every ISA returns the same i32
+    // (and hence the same f32 after the per-token scale) — exactly
+    let mut rng = Rng::new(77);
+    for (rows, cols) in [(1usize, 15usize), (NR, 64), (NR + 1, 96), (13, 200)] {
+        let w: Vec<i8> = (0..rows * cols)
+            .map(|_| (rng.normal_f32(1.0) as i32).clamp(-1, 1) as i8)
+            .collect();
+        for t in token_counts() {
+            let xq: Vec<i8> = (0..t * cols)
+                .map(|_| (rng.normal_f32(40.0) as i32).clamp(-127, 127) as i8)
+                .collect();
+            let scales: Vec<f32> = (0..t).map(|i| 0.01 + i as f32 * 0.003).collect();
+            let mut want = vec![0.0f32; t * rows];
+            kernels::gemm_i8_strided(&w, rows, cols, &xq, t, &scales, &mut want, 0, rows);
+            for_each_isa("gemm_i8", |isa| {
+                for i in 0..t {
+                    for r in 0..rows {
+                        let d = kernels::dot_i8_on(
+                            isa,
+                            &w[r * cols..(r + 1) * cols],
+                            &xq[i * cols..(i + 1) * cols],
+                        );
+                        let ds = kernels::dot_i8_on(
+                            Isa::Scalar,
+                            &w[r * cols..(r + 1) * cols],
+                            &xq[i * cols..(i + 1) * cols],
+                        );
+                        assert_eq!(d, ds, "isa={isa} dot ({rows},{cols}) t={t} i={i} r={r}");
+                    }
+                }
+                let mut y = vec![0.0f32; t * rows];
+                kernels::gemm_i8_strided_on(isa, &w, rows, cols, &xq, t, &scales, &mut y, 0, rows);
+                assert_eq!(y, want, "isa={isa} gemm ({rows},{cols}) t={t}");
+            });
+        }
+    }
+}
+
+#[test]
+fn dot_i8_exact_at_maximum_depth() {
+    // the i32-accumulation bound (kernels::MAX_I8_DOT_LEN): a length
+    // 2^16 dot of all-(+/-)127 values is the worst case the kernel
+    // admits — 127^2 * 65536 = 1_057_030_144 < i32::MAX — and every ISA
+    // must return it exactly
+    let n = kernels::MAX_I8_DOT_LEN;
+    let a = vec![127i8; n];
+    let b: Vec<i8> = (0..n).map(|j| if j % 2 == 0 { 127 } else { -127 }).collect();
+    let same: i64 = (n as i64) * 127 * 127;
+    assert_eq!(same, 1_057_030_144, "worst case stays below i32::MAX");
+    for_each_isa("dot_i8 max depth", |isa| {
+        assert_eq!(kernels::dot_i8_on(isa, &a, &a), same as i32, "isa={isa} aligned max");
+        // alternating signs cancel exactly
+        assert_eq!(kernels::dot_i8_on(isa, &a, &b), 0, "isa={isa} alternating");
+        // one past a 16-lane boundary exercises the scalar tail at depth
+        let m = n - LANES_I8_TAIL;
+        assert_eq!(
+            kernels::dot_i8_on(isa, &a[..m], &a[..m]),
+            (m as i64 * 127 * 127) as i32,
+            "isa={isa} tail"
+        );
+    });
+}
+
+/// Shave an odd remainder off `MAX_I8_DOT_LEN` so the max-depth test
+/// also exercises the non-multiple-of-16 tail path.
+const LANES_I8_TAIL: usize = 7;
 
 #[test]
 fn down_projection_bits_survive_worker_range_splits() {
